@@ -1,0 +1,86 @@
+//! End-to-end driver: the full system composed — AOT artifacts ->
+//! NA search -> EENN solution -> distributed serving coordinator —
+//! on a real (synthetic-data) workload, proving all three layers
+//! integrate. Logs batched-request latency/throughput, exactly the
+//! serving numbers EXPERIMENTS.md records.
+//!
+//! ```sh
+//! cargo run --release --example e2e_serving [model] [rate] [n]
+//! ```
+
+use eenn_na::coordinator::{serve, ServeConfig};
+use eenn_na::data::load_split;
+use eenn_na::prelude::*;
+use eenn_na::report;
+use eenn_na::runtime::WeightStore;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let model_name = args.next().unwrap_or_else(|| "dscnn".to_string());
+    let rate: f64 = args.next().and_then(|s| s.parse().ok()).unwrap_or(20.0);
+    let n: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(400);
+
+    let engine = Engine::new()?;
+    let manifest = Manifest::load("artifacts")?;
+    let model = manifest.model(&model_name)?;
+    let platform = report::platform_for_task(&model.task);
+
+    // ---- phase 1: augmentation search --------------------------------
+    println!("[1/3] NA search on {model_name} for {}", platform.name);
+    let cfg = na::FlowConfig {
+        latency_constraint_s: report::latency_constraint_for_task(&model.task),
+        ..na::FlowConfig::default()
+    };
+    let out = na::augment(&engine, &manifest, &model_name, &platform, &cfg)?;
+    println!(
+        "      exits {:?} thresholds {:?} ({:.1}s, {} candidates)",
+        out.solution.exits, out.solution.thresholds, out.report.total_s, out.report.prune.kept
+    );
+
+    // ---- phase 2: deployment quality ----------------------------------
+    println!("[2/3] test-set deployment check");
+    let ev = report::evaluate_solution(&engine, &manifest, model, &out.solution, &platform)?;
+    println!(
+        "      acc {:.2}%, mean MACs {:.0}, early term {:.1}%",
+        ev.quality.accuracy * 100.0,
+        ev.mean_macs,
+        ev.early_term * 100.0
+    );
+
+    // ---- phase 3: distributed serving ----------------------------------
+    println!("[3/3] serving {n} requests at {rate} req/s (sim-time Poisson)");
+    let ws = WeightStore::load(&manifest, model)?;
+    let test = load_split(&manifest, model, "test")?;
+    let scfg = ServeConfig {
+        arrival_rate_hz: rate,
+        n_requests: n,
+        queue_cap: 128,
+        batch_max: 8,
+        seed: 7,
+    };
+    let m = serve(&engine, &manifest, model, &ws, &out.solution, &platform, &test, &scfg)?;
+
+    println!("\n== serving report ==");
+    println!(
+        "completed {}/{} (dropped {}), wall {:.2}s -> {:.1} req/s compute throughput",
+        m.completed, n, m.dropped, m.wall_s, m.throughput_rps
+    );
+    println!(
+        "device-clock latency: p50 {:.2} ms, p90 {:.2} ms, p99 {:.2} ms",
+        m.sim_latency.p50 * 1e3,
+        m.sim_latency.p90 * 1e3,
+        m.sim_latency.p99 * 1e3
+    );
+    println!(
+        "wall compute latency: p50 {:.2} ms, p99 {:.2} ms",
+        m.wall_latency.p50 * 1e3,
+        m.wall_latency.p99 * 1e3
+    );
+    println!(
+        "termination histogram {:?}, mean energy {:.3} mJ, accuracy {:.2}%",
+        m.term_hist,
+        m.mean_energy_mj,
+        m.quality.accuracy * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Wearable ECG monitoring (the paper's §4.2): a 1-D fully-
+//! convolutional beat classifier deployed to the PSoC6, with the
+//! always-on M0+ core screening every beat and the M4F woken only for
+//! uncertain ones.
+//!
+//! Streams beats through the *staged adaptive-inference engine* (true
+//! per-sample PJRT execution, not batch replay) and reports the
+//! battery-relevant numbers: energy per beat, wake rate of the M4F,
+//! and detection quality for the pathological classes.
+
+use eenn_na::data::load_split;
+use eenn_na::eenn::StagedRunner;
+use eenn_na::metrics::Confusion;
+use eenn_na::prelude::*;
+use eenn_na::runtime::WeightStore;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new()?;
+    let manifest = Manifest::load("artifacts")?;
+    let model = manifest.model("ecg1d")?;
+    let platform = hw::presets::psoc6();
+
+    println!("searching EENN configuration for wearable deployment...");
+    let cfg = na::FlowConfig {
+        latency_constraint_s: 2.5,
+        // healthcare: weight accuracy retention higher than the default
+        w_eff: 0.7,
+        w_acc: 0.3,
+        ..na::FlowConfig::default()
+    };
+    let out = na::augment(&engine, &manifest, "ecg1d", &platform, &cfg)?;
+    println!(
+        "exits {:?} thresholds {:?} ({}s search)\n",
+        out.solution.exits,
+        out.solution.thresholds,
+        out.report.total_s.round()
+    );
+
+    // staged per-beat inference (the deployed control flow)
+    let ws = WeightStore::load(&manifest, model)?;
+    let runner = StagedRunner::new(&engine, &manifest, model, &ws, &out.solution)?;
+    let test = load_split(&manifest, model, "test")?;
+
+    let graph = BlockGraph::from_manifest(model);
+    let mapping = Mapping { exits: out.solution.exits.clone() };
+    let sim = simulate(&graph, &mapping, &platform);
+
+    let n = 400.min(test.n);
+    let mut conf = Confusion::new(model.num_classes);
+    let mut m4f_wakes = 0usize;
+    let mut energy = 0.0;
+    let mut pathological_missed = 0usize;
+    let mut pathological = 0usize;
+    for i in 0..n {
+        let r = runner.infer(test.sample(i))?;
+        conf.add(test.y[i] as usize, r.pred as usize);
+        if r.exit_index > 0 {
+            m4f_wakes += 1;
+        }
+        energy += sim.stages[r.exit_index].cum_energy_mj;
+        // classes 1.. are pathological beats (paper: premature/block
+        // beats indicate conditions experts should investigate)
+        if test.y[i] > 0 {
+            pathological += 1;
+            if r.pred != test.y[i] {
+                pathological_missed += 1;
+            }
+        }
+    }
+
+    println!("== wearable monitoring over {n} beats ==");
+    println!("accuracy          {:.2}%", conf.accuracy() * 100.0);
+    println!(
+        "M4F wake rate     {:.1}% (early termination {:.1}%)",
+        100.0 * m4f_wakes as f64 / n as f64,
+        100.0 * (1.0 - m4f_wakes as f64 / n as f64)
+    );
+    println!("energy per beat   {:.3} mJ", energy / n as f64);
+    println!(
+        "pathological miss {:.2}% ({pathological_missed}/{pathological})",
+        100.0 * pathological_missed as f64 / pathological.max(1) as f64
+    );
+    let full = graph.total_macs() as f64 / platform.processors[1].macs_per_sec
+        * platform.processors[1].active_mw;
+    println!(
+        "battery estimate  {:.1}x life vs always-M4F ({:.3} mJ/beat)",
+        full / (energy / n as f64),
+        full
+    );
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Distributed image classification (the paper's §4.3): a CIFAR
+//! ResNet split across the RK3588's CPU cluster / Mali GPU and a
+//! cloud GPU behind a 50 Mbps uplink, comparing every calibration
+//! mode the paper evaluates (dedicated validation set vs training-set
+//! fallback with correction factors 1, 2/3, 1/2).
+
+use eenn_na::na::Calibration;
+use eenn_na::prelude::*;
+use eenn_na::report;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new()?;
+    let manifest = Manifest::load("artifacts")?;
+    let model_name = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "resnet_c10".to_string());
+    let model = manifest.model(&model_name)?;
+    let platform = hw::presets::rk3588_cloud();
+    println!(
+        "{model_name}: {} blocks, {} candidate EE locations, platform {}",
+        model.blocks.len(),
+        model.ee_locations.len(),
+        platform.name
+    );
+
+    let base = report::baseline_eval(&engine, &manifest, model, &platform)?;
+    println!(
+        "baseline (single Mali): acc {:.2}%, {:.1}M MACs, {:.2} ms\n",
+        base.quality.accuracy * 100.0,
+        base.mean_macs / 1e6,
+        base.mean_latency_s * 1e3
+    );
+
+    println!(
+        "{:<8} {:>8} {:>9} {:>9} {:>9} {:>8}",
+        "calib", "acc%", "d-acc", "MACs-red%", "lat-red%", "early%"
+    );
+    for (label, cal) in [
+        ("val", Calibration::ValSplit),
+        ("1", Calibration::TrainFallback { factor: 1.0 }),
+        ("2/3", Calibration::TrainFallback { factor: 2.0 / 3.0 }),
+        ("1/2", Calibration::TrainFallback { factor: 0.5 }),
+    ] {
+        let cfg = na::FlowConfig { calibration: cal, ..na::FlowConfig::default() };
+        let out = na::augment(&engine, &manifest, &model_name, &platform, &cfg)?;
+        let ev =
+            report::evaluate_solution(&engine, &manifest, model, &out.solution, &platform)?;
+        println!(
+            "{:<8} {:>8.2} {:>9.2} {:>9.2} {:>9.2} {:>8.1}",
+            label,
+            ev.quality.accuracy * 100.0,
+            (ev.quality.accuracy - base.quality.accuracy) * 100.0,
+            100.0 * (1.0 - ev.mean_macs / base.mean_macs),
+            100.0 * (1.0 - ev.mean_latency_s / base.mean_latency_s),
+            ev.early_term * 100.0
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Quickstart: convert a pretrained model into an EENN in a few lines.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use eenn_na::prelude::*;
+use eenn_na::report;
+
+fn main() -> anyhow::Result<()> {
+    // 1. connect to the AOT artifacts (produced once by `make artifacts`)
+    let engine = Engine::new()?;
+    let manifest = Manifest::load("artifacts")?;
+
+    // 2. describe the deployment target (here: the paper's PSoC6 —
+    //    an always-on Cortex-M0+ paired with a Cortex-M4F)
+    let platform = hw::presets::psoc6();
+
+    // 3. run the Network Augmentation flow on the pretrained ECG model
+    let cfg = na::FlowConfig {
+        latency_constraint_s: 2.5, // worst-case latency budget (s)
+        ..na::FlowConfig::default()
+    };
+    let out = na::augment(&engine, &manifest, "ecg1d", &platform, &cfg)?;
+    let sol = &out.solution;
+
+    println!("== augmentation result ==");
+    println!("exit locations : {:?}", sol.exits);
+    println!("thresholds     : {:?}", sol.thresholds);
+    println!(
+        "expected       : acc {:.2}%, {:.1}% of base MACs",
+        sol.expected_acc * 100.0,
+        sol.expected_mac_frac * 100.0
+    );
+    println!(
+        "search cost    : {:.1}s total ({} candidate architectures)",
+        out.report.total_s, out.report.prune.kept
+    );
+
+    // 4. evaluate the deployed EENN on the held-out test set
+    let model = manifest.model("ecg1d")?;
+    let eval = report::evaluate_solution(&engine, &manifest, model, sol, &platform)?;
+    let base = report::baseline_eval(&engine, &manifest, model, &platform)?;
+    println!("\n== test-set deployment ==");
+    println!(
+        "accuracy  {:.2}% (base {:.2}%)",
+        eval.quality.accuracy * 100.0,
+        base.quality.accuracy * 100.0
+    );
+    println!(
+        "mean MACs {:.0} ({:.1}% reduction)",
+        eval.mean_macs,
+        100.0 * (1.0 - eval.mean_macs / base.mean_macs)
+    );
+    println!(
+        "mean energy {:.3} mJ ({:.1}% reduction), early termination {:.1}%",
+        eval.mean_energy_mj,
+        100.0 * (1.0 - eval.mean_energy_mj / base.mean_energy_mj),
+        eval.early_term * 100.0
+    );
+    Ok(())
+}

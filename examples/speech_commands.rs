@@ -1,0 +1,81 @@
+//! Speech-command detection (the paper's §4.1): the ARM-style DS-CNN
+//! on the PSoC6 with a 2.5 s worst-case latency constraint and the
+//! paper's 0.9/0.1 efficiency/accuracy weighting.
+//!
+//! Reproduces the §4.1 narrative: search-space size, the selected
+//! exit + threshold, per-subgraph latency/energy on each core, and
+//! the worst-case latency check against the constraint.
+
+use eenn_na::prelude::*;
+use eenn_na::report;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new()?;
+    let manifest = Manifest::load("artifacts")?;
+    let model = manifest.model("dscnn")?;
+    let platform = hw::presets::psoc6();
+
+    let cfg = na::FlowConfig {
+        latency_constraint_s: 2.5,
+        w_eff: 0.9, // the paper's §4.1 parameterization
+        w_acc: 0.1,
+        ..na::FlowConfig::default()
+    };
+    let out = na::augment(&engine, &manifest, "dscnn", &platform, &cfg)?;
+    let sol = &out.solution;
+
+    println!("== search ==");
+    println!(
+        "architectures generated {} / kept {} (latency-pruned {})",
+        out.report.prune.generated, out.report.prune.kept, out.report.prune.latency_pruned
+    );
+    println!(
+        "selected exit after block {:?}, threshold {:?}",
+        sol.exits, sol.thresholds
+    );
+
+    // per-subgraph timing on the two cores (paper: 967.99 ms on the
+    // M0 subgraph + 521 ms on the M4F subgraph)
+    let graph = BlockGraph::from_manifest(model);
+    let mapping = Mapping { exits: sol.exits.clone() };
+    let sim = simulate(&graph, &mapping, &platform);
+    println!("\n== mapping onto {} ==", platform.name);
+    for (i, st) in sim.stages.iter().enumerate() {
+        let proc = &platform.processors[i];
+        println!(
+            "  subgraph {} on {:<11}: compute {:.1} ms (+{:.1} ms transfer), cum energy {:.2} mJ",
+            i,
+            proc.name,
+            st.compute_s * 1e3,
+            st.transfer_s * 1e3,
+            st.cum_energy_mj
+        );
+    }
+    println!(
+        "  worst-case latency {:.3} s (constraint 2.5 s) -> {}",
+        sim.worst_case_s,
+        if sim.worst_case_s <= 2.5 { "OK" } else { "VIOLATED" }
+    );
+
+    let eval = report::evaluate_solution(&engine, &manifest, model, sol, &platform)?;
+    let base = report::baseline_eval(&engine, &manifest, model, &platform)?;
+    println!("\n== test set ==");
+    println!(
+        "accuracy {:.2}% ({:+.2} vs single-core baseline {:.2}%)",
+        eval.quality.accuracy * 100.0,
+        (eval.quality.accuracy - base.quality.accuracy) * 100.0,
+        base.quality.accuracy * 100.0
+    );
+    println!(
+        "mean MACs/inference {:.0} ({:+.2}%)",
+        eval.mean_macs,
+        100.0 * (eval.mean_macs - base.mean_macs) / base.mean_macs
+    );
+    println!(
+        "mean energy {:.2} mJ ({:+.1}%), early termination {:.1}%",
+        eval.mean_energy_mj,
+        100.0 * (eval.mean_energy_mj - base.mean_energy_mj) / base.mean_energy_mj,
+        eval.early_term * 100.0
+    );
+    Ok(())
+}

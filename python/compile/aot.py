@@ -1,0 +1,319 @@
+"""AOT exporter: datasets + trained backbones + HLO-text artifacts.
+
+Runs ONCE at build time (``make artifacts``); afterwards the Rust
+coordinator is self-contained. For every model it emits:
+
+* ``block{i}_b{B}.hlo.txt``  — per-block forward ``(*params, ifm) ->
+  (ifm', gap)`` at serving (B=1) and evaluation (B=EVAL_B) batch sizes;
+  Rust composes *any* EENN architecture from these.
+* ``head_c{C}_b{B}.hlo.txt`` — fused Pallas EE-head ``(w, b, feats) ->
+  (probs, conf, pred)``.
+* ``head_train_c{C}.hlo.txt`` — SGD step for an EE head on frozen
+  cached features ``(w, b, X, Y, lr) -> (w', b', loss)``; zero-padded
+  label rows contribute exactly zero gradient, so partial batches are
+  handled by padding.
+* ``backbone_all_b{B}.hlo.txt`` — one pass returning GAP features at
+  every block boundary plus the final head outputs (feature-cache
+  builder + single-processor baseline).
+* ``weights.bin`` / dataset ``.bin`` blobs + a ``manifest.json`` index.
+
+Interchange is **HLO text**, not serialized HloModuleProto: jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as datagen
+from . import train as trainlib
+from .kernels import ee_head
+from .models import build_dscnn, build_ecg1d, build_resnet
+from .models.common import gap
+
+EVAL_B = 50
+TRAIN_B = 100
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _lower(fn, arg_specs):
+    return to_hlo_text(jax.jit(fn).lower(*arg_specs))
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _write(path, text):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def export_blocks(model, out_dir, rel_dir, manifest_blocks):
+    """Per-block fwd graphs at B=1 and B=EVAL_B."""
+    in_shapes = model.block_in_shapes()
+    for i, blk in enumerate(model.blocks):
+        specs = [_spec(s) for _, s in blk.param_specs()]
+
+        def fwd(*args, _blk=blk):
+            params, x = list(args[:-1]), args[-1]
+            y = _blk.apply(params, x, pallas=True)
+            return y, gap(y)
+
+        entry = manifest_blocks[i]
+        for bsz in (1, EVAL_B):
+            hlo = _lower(fwd, specs + [_spec((bsz, *in_shapes[i]))])
+            rel = f"{rel_dir}/block{i}_b{bsz}.hlo.txt"
+            _write(os.path.join(out_dir, rel), hlo)
+            entry[f"hlo_b{bsz}"] = rel
+
+        # fused block + exit-head variant (B=1 serving hot path): one
+        # PJRT dispatch per exit boundary instead of two — see
+        # EXPERIMENTS.md §Perf. Head weights stay runtime arguments
+        # (they are trained in Rust after export).
+        c = blk.out_shape(in_shapes[i])[-1]
+        k = model.num_classes
+
+        def fwd_head(*args, _blk=blk):
+            params, hw, hb, x = list(args[:-3]), args[-3], args[-2], args[-1]
+            y = _blk.apply(params, x, pallas=True)
+            g = gap(y)
+            probs, conf, pred = ee_head(g, hw, hb)
+            return y, g, probs, conf, pred
+
+        hlo = _lower(
+            fwd_head,
+            specs + [_spec((c, k)), _spec((k,)), _spec((1, *in_shapes[i]))],
+        )
+        rel = f"{rel_dir}/block{i}_head_b1.hlo.txt"
+        _write(os.path.join(out_dir, rel), hlo)
+        entry["hlo_head_b1"] = rel
+
+
+def export_heads(model, out_dir, rel_dir, manifest):
+    """Fused head fwd (Pallas) + head train step per distinct GAP width."""
+    k = model.num_classes
+    widths = sorted(set(model.gap_dims()))
+    heads = {}
+    for c in widths:
+        entry = {}
+        for bsz in (1, EVAL_B):
+            hlo = _lower(
+                lambda w, b, f: ee_head(f, w, b),
+                [_spec((c, k)), _spec((k,)), _spec((bsz, c))],
+            )
+            rel = f"{rel_dir}/head_c{c}_b{bsz}.hlo.txt"
+            _write(os.path.join(out_dir, rel), hlo)
+            entry[f"hlo_b{bsz}"] = rel
+
+        def train_step(w, b, x, y, lr):
+            def loss_fn(wb):
+                logits = x @ wb[0] + wb[1]
+                logp = jax.nn.log_softmax(logits, axis=1)
+                # normalize by the number of real (non-padding) rows
+                return -jnp.sum(y * logp) / jnp.maximum(jnp.sum(y), 1.0)
+
+            loss, g = jax.value_and_grad(loss_fn)((w, b))
+            return w - lr * g[0], b - lr * g[1], loss
+
+        hlo = _lower(
+            train_step,
+            [
+                _spec((c, k)),
+                _spec((k,)),
+                _spec((TRAIN_B, c)),
+                _spec((TRAIN_B, k)),
+                _spec(()),
+            ],
+        )
+        rel = f"{rel_dir}/head_train_c{c}.hlo.txt"
+        _write(os.path.join(out_dir, rel), hlo)
+        entry["hlo_train"] = rel
+        heads[str(c)] = entry
+    manifest["heads"] = heads
+
+
+def export_backbone_all(model, out_dir, rel_dir, manifest):
+    param_specs = []
+    for blk in model.blocks:
+        param_specs.extend(_spec(s) for _, s in blk.param_specs())
+    c, k = model.head_in_dim(), model.num_classes
+
+    def fwd(*args):
+        flat, x = list(args[:-1]), args[-1]
+        head_w, head_b = flat[-2], flat[-1]
+        gaps = []
+        i = 0
+        for blk in model.blocks:
+            n = len(blk.param_specs())
+            x = blk.apply(flat[i : i + n], x, pallas=True)
+            i += n
+            gaps.append(gap(x))
+        probs, conf, pred = ee_head(gaps[-1], head_w, head_b)
+        return (*gaps, probs, conf, pred)
+
+    specs = param_specs + [
+        _spec((c, k)),
+        _spec((k,)),
+        _spec((EVAL_B, *model.input_shape)),
+    ]
+    hlo = _lower(fwd, specs)
+    rel = f"{rel_dir}/backbone_all_b{EVAL_B}.hlo.txt"
+    _write(os.path.join(out_dir, rel), hlo)
+    manifest["backbone_all"] = rel
+
+
+def export_weights(model, params, out_dir, rel_dir, manifest):
+    tensors = {}
+    blob = bytearray()
+    names = model.tensor_names()
+    flat = model.flat_tensors(params)
+    assert len(names) == len(flat)
+    for name, arr in zip(names, flat):
+        a = np.asarray(arr, np.float32)
+        tensors[name] = {
+            "shape": list(a.shape),
+            "offset_bytes": len(blob),
+            "nbytes": a.nbytes,
+        }
+        blob.extend(a.tobytes())
+    rel = f"{rel_dir}/weights.bin"
+    path = os.path.join(out_dir, rel)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(bytes(blob))
+    manifest["weights"] = rel
+    manifest["tensors"] = tensors
+
+
+def export_data(task, splits, out_dir, manifest):
+    entry = {}
+    for split, (x, y) in splits.items():
+        xrel = f"data/{task}_{split}_x.bin"
+        yrel = f"data/{task}_{split}_y.bin"
+        os.makedirs(os.path.join(out_dir, "data"), exist_ok=True)
+        with open(os.path.join(out_dir, xrel), "wb") as f:
+            f.write(np.asarray(x, np.float32).tobytes())
+        with open(os.path.join(out_dir, yrel), "wb") as f:
+            f.write(np.asarray(y, np.int32).tobytes())
+        entry[split] = {"x": xrel, "y": yrel, "n": int(x.shape[0])}
+    manifest["data"] = entry
+
+
+def export_model(model, out_dir, *, epochs, seed=0, log=print):
+    log(f"[{model.name}] generating data + training backbone")
+    splits = datagen.generate(
+        model.task, model.num_classes, model.input_shape, seed=seed
+    )
+    params, info = trainlib.train_backbone(
+        model, splits, epochs=epochs, batch=TRAIN_B, seed=seed, log=log
+    )
+
+    manifest = {
+        "task": model.task,
+        "num_classes": model.num_classes,
+        "input_shape": list(model.input_shape),
+        "train_seconds": info["train_seconds"],
+        "val_acc": info["val_acc"],
+        "test_acc": info["test_acc"],
+        "ee_locations": model.ee_locations(),
+        "head": {
+            "c": model.head_in_dim(),
+            "k": model.num_classes,
+            "w": "head_w",
+            "b": "head_b",
+        },
+    }
+
+    in_shapes = model.block_in_shapes()
+    out_shapes = model.block_out_shapes()
+    macs = model.block_macs()
+    manifest["blocks"] = [
+        {
+            "name": blk.name,
+            "macs": int(macs[i]),
+            "param_count": int(blk.param_count()),
+            "in_shape": list(in_shapes[i]),
+            "out_shape": list(out_shapes[i]),
+            "gap_dim": int(out_shapes[i][-1]),
+            "params": blk.param_names(),
+        }
+        for i, blk in enumerate(model.blocks)
+    ]
+
+    rel_dir = model.name
+    log(f"[{model.name}] exporting HLO graphs")
+    t0 = time.time()
+    export_blocks(model, out_dir, rel_dir, manifest["blocks"])
+    export_heads(model, out_dir, rel_dir, manifest)
+    export_backbone_all(model, out_dir, rel_dir, manifest)
+    export_weights(model, params, out_dir, rel_dir, manifest)
+    export_data(model.task, splits, out_dir, manifest)
+    log(f"[{model.name}] exported in {time.time() - t0:.0f}s")
+    return manifest
+
+
+def default_models(quick=False):
+    if quick:
+        return [build_dscnn(channels=16, ds_blocks=2)]
+    return [
+        build_dscnn(),
+        build_ecg1d(),
+        build_resnet(num_classes=10),
+        build_resnet(num_classes=100),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--epochs", type=int, default=3)
+    ap.add_argument("--models", default="", help="comma-separated subset")
+    ap.add_argument("--quick", action="store_true", help="tiny smoke export")
+    args = ap.parse_args()
+
+    models = default_models(quick=args.quick)
+    if args.models:
+        want = set(args.models.split(","))
+        models = [m for m in models if m.name in want]
+
+    manifest = {
+        "version": 1,
+        "eval_batch": EVAL_B,
+        "train_batch": TRAIN_B,
+        "models": {},
+    }
+    # merge with an existing manifest so models can be exported one at a time
+    mpath = os.path.join(args.out, "manifest.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+
+    t0 = time.time()
+    for model in models:
+        manifest["models"][model.name] = export_model(
+            model, args.out, epochs=args.epochs
+        )
+        os.makedirs(args.out, exist_ok=True)
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+    print(f"artifacts complete in {time.time() - t0:.0f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

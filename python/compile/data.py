@@ -1,0 +1,124 @@
+"""Synthetic dataset generators (see DESIGN.md §Substitutions).
+
+The paper evaluates on Google Speech Commands, MIT-BIH ECG and
+CIFAR-10/100 — none of which are available in this offline environment.
+The NA flow only consumes per-sample confidences/logits, so what must be
+preserved is the *difficulty structure*: a mixture of easy samples (that
+a shallow exit classifies confidently) and hard samples (that need the
+full backbone). Each generator draws per-class smooth templates and
+perturbs them with a per-sample noise level drawn from an easy/medium/
+hard mixture calibrated per task to the termination regime the paper
+reports (ECG ≈ 100% early, GSC ≈ 83%, CIFAR-10 ≈ 37% val-calibrated).
+
+For CIFAR-100 the 100 class templates are built as 20 coarse
+"superclass" patterns plus low-magnitude fine detail, so shallow
+features separate superclasses but only deep layers resolve fine
+classes — mirroring why the paper's early exits contribute little
+there.
+"""
+
+import numpy as np
+
+# (easy, medium, hard) noise std and mixture weights per task.
+_PROFILES = {
+    "speech": dict(levels=(0.35, 0.9, 1.7), mix=(0.70, 0.20, 0.10)),
+    "ecg": dict(levels=(0.25, 0.6, 1.2), mix=(0.90, 0.09, 0.01)),
+    "cifar10": dict(levels=(0.45, 0.9, 1.6), mix=(0.40, 0.40, 0.20)),
+    "cifar100": dict(levels=(0.50, 0.9, 1.6), mix=(0.30, 0.45, 0.25)),
+}
+
+_SPLITS = {
+    # (train, val/calibration, test)
+    "speech": (6000, 1500, 1500),
+    "ecg": (6000, 1500, 1500),
+    "cifar10": (6000, 1500, 1500),
+    "cifar100": (8000, 2000, 2000),
+}
+
+
+def _smooth(a, axis, passes=2):
+    """Cheap box smoothing along one axis."""
+    for _ in range(passes):
+        a = (np.roll(a, 1, axis) + a + np.roll(a, -1, axis)) / 3.0
+    return a
+
+
+def _smooth_field(rng, shape):
+    """Low-frequency random field: white noise box-blurred over every
+    non-channel axis."""
+    a = rng.normal(size=shape).astype(np.float32)
+    for ax in range(len(shape) - 1):
+        a = _smooth(a, ax, passes=3)
+    # renormalize after smoothing squashed the variance
+    a = a / (np.std(a) + 1e-6)
+    return a.astype(np.float32)
+
+
+def _texture(rng, shape):
+    """High-frequency class signature: zero-mean white pattern. GAP
+    over shallow features averages it away, so early exits see mostly
+    the coarse component — only deeper layers can classify on it."""
+    t = rng.normal(size=shape).astype(np.float32)
+    return (t - t.mean()) / (t.std() + 1e-6)
+
+
+def _templates(rng, num_classes, shape, task):
+    if task == "cifar10":
+        # weak shared low-frequency context + strong per-class texture
+        coarse = [_smooth_field(rng, shape) for _ in range(3)]
+        return np.stack(
+            [
+                0.35 * coarse[c % 3] + 0.8 * _texture(rng, shape)
+                for c in range(num_classes)
+            ]
+        )
+    if task == "cifar100":
+        # 20 coarse superclasses + fine per-class texture: shallow
+        # features separate superclasses only (the paper's early exits
+        # contribute little on CIFAR-100)
+        coarse = [_smooth_field(rng, shape) for _ in range(20)]
+        return np.stack(
+            [
+                0.5 * coarse[c // 5] + 0.7 * _texture(rng, shape)
+                for c in range(num_classes)
+            ]
+        )
+    if task == "ecg":
+        # Beat-like morphology: a shared sinus base plus a class-specific
+        # spike (position/width/sign vary per class) — strongly separable,
+        # matching the near-perfect MIT-BIH backbone the paper uses.
+        length = shape[0]
+        t = np.linspace(0, 1, length, dtype=np.float32)
+        base = 0.6 * np.sin(2 * np.pi * 1.5 * t) * np.exp(-3 * t)
+        temps = []
+        for c in range(num_classes):
+            pos = 0.15 + 0.7 * c / max(num_classes - 1, 1)
+            width = 0.02 + 0.015 * (c % 3)
+            sign = 1.0 if c % 2 == 0 else -1.0
+            spike = sign * 2.5 * np.exp(-((t - pos) ** 2) / (2 * width**2))
+            temps.append((base + spike)[:, None].astype(np.float32))
+        return np.stack(temps)
+    return np.stack([_smooth_field(rng, shape) for _ in range(num_classes)])
+
+
+def generate(task, num_classes, shape, seed=0):
+    """-> dict split -> (x float32 (N,*shape), y int32 (N,))."""
+    rng = np.random.default_rng(seed)
+    temps = _templates(rng, num_classes, shape, task)
+    prof = _PROFILES[task]
+    levels = np.asarray(prof["levels"], np.float32)
+    mix = np.asarray(prof["mix"], np.float64)
+
+    out = {}
+    for split, n in zip(("train", "val", "test"), _SPLITS[task]):
+        y = rng.integers(0, num_classes, size=n).astype(np.int32)
+        tier = rng.choice(3, size=n, p=mix)
+        alpha = levels[tier].reshape(n, *([1] * len(shape)))
+        noise = rng.normal(size=(n, *shape)).astype(np.float32)
+        # smooth the noise too, so it confuses classes rather than
+        # averaging out under GAP
+        for ax in range(1, len(shape)):
+            noise = _smooth(noise, ax, passes=1)
+        x = temps[y] + alpha * noise
+        out[split] = (x.astype(np.float32), y)
+    return out

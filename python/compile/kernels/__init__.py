@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels.
+
+Every kernel is lowered with ``interpret=True``: real-TPU lowering emits
+Mosaic custom-calls that the CPU PJRT plugin (xla_extension 0.5.1)
+cannot execute. Correctness is validated on CPU against the pure-jnp
+oracles in :mod:`compile.kernels.ref`; real-TPU performance is estimated
+analytically in DESIGN.md §Perf from VMEM footprint + MXU utilization.
+"""
+
+from .conv2d import conv2d
+from .depthwise import depthwise_conv2d
+from .conv1d import conv1d
+from .dense import dense
+from .ee_head import ee_head
+
+__all__ = ["conv2d", "depthwise_conv2d", "conv1d", "dense", "ee_head"]

@@ -1,0 +1,53 @@
+"""1-D convolution Pallas kernel (+ fused bias / ReLU) for the ECG
+fully-convolutional backbone. Layout (B, L, C)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, k, s, lo, relu):
+    x = x_ref[...]  # (1, LP, Cin)
+    w = w_ref[...]  # (k, Cin, Cout)
+    b = b_ref[...]  # (Cout,)
+    cin = x.shape[2]
+    cout = w.shape[2]
+    acc = jnp.zeros((lo, cout), jnp.float32)
+    for i in range(k):
+        patch = jax.lax.slice(
+            x, (0, i, 0), (1, i + (lo - 1) * s + 1, cin), (1, s, 1)
+        )  # (1, lo, Cin)
+        acc = acc + jnp.dot(
+            patch.reshape(lo, cin), w[i], preferred_element_type=jnp.float32
+        )
+    acc = acc + b[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.reshape(1, lo, cout)
+
+
+def conv1d(x, w, b, *, stride=1, padding=0, relu=True):
+    """Convolve ``x`` (B,L,Cin) with ``w`` (K,Cin,Cout), add bias,
+    optionally ReLU. ``padding`` is symmetric zero-padding."""
+    if padding:
+        x = jnp.pad(x, ((0, 0), (padding, padding), (0, 0)))
+    bsz, lp, cin = x.shape
+    k, wcin, cout = w.shape
+    assert wcin == cin, f"Cin mismatch: {wcin} vs {cin}"
+    lo = (lp - k) // stride + 1
+
+    kernel = functools.partial(_kernel, k=k, s=stride, lo=lo, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, lp, cin), lambda n: (n, 0, 0)),
+            pl.BlockSpec((k, cin, cout), lambda n: (0, 0, 0)),
+            pl.BlockSpec((cout,), lambda n: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, lo, cout), lambda n: (n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, lo, cout), jnp.float32),
+        interpret=True,
+    )(x, w, b)

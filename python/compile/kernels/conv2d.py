@@ -1,0 +1,80 @@
+"""Tiled NHWC 2-D convolution Pallas kernel (+ fused bias / ReLU).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates over
+(batch, output-channel tile); each program instance keeps one padded
+input sample and one weight tile VMEM-resident and feeds the MXU with an
+(HO*WO, Cin) x (Cin, Cout_tile) contraction per kernel tap — an
+output-stationary schedule expressed through BlockSpec rather than
+threadblocks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sh, sw, ho, wo, relu):
+    x = x_ref[...]  # (1, HP, WP, Cin) — padded input sample
+    w = w_ref[...]  # (kh, kw, Cin, CT) — one output-channel tile
+    b = b_ref[...]  # (CT,)
+    cin = x.shape[3]
+    ct = w.shape[3]
+    acc = jnp.zeros((ho * wo, ct), jnp.float32)
+    # Unrolled kernel taps: each tap is one MXU-shaped contraction.
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                x,
+                (0, i, j, 0),
+                (1, i + (ho - 1) * sh + 1, j + (wo - 1) * sw + 1, cin),
+                (1, sh, sw, 1),
+            )  # (1, ho, wo, Cin)
+            acc = acc + jnp.dot(
+                patch.reshape(ho * wo, cin),
+                w[i, j],
+                preferred_element_type=jnp.float32,
+            )
+    acc = acc + b[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.reshape(1, ho, wo, ct)
+
+
+def conv2d(x, w, b, *, stride=(1, 1), padding=(0, 0), relu=True, cout_tile=None):
+    """Convolve ``x`` (B,H,W,Cin) with ``w`` (KH,KW,Cin,Cout), add bias,
+    optionally apply ReLU.
+
+    ``padding`` is symmetric spatial zero-padding applied before the
+    kernel (the kernel itself computes a VALID convolution).
+    ``cout_tile`` selects the output-channel tile width (perf knob; must
+    divide Cout). Defaults to full Cout for the small-IoT regime.
+    """
+    ph, pw = padding
+    if ph or pw:
+        x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    bsz, hp, wp, cin = x.shape
+    kh, kw, wcin, cout = w.shape
+    assert wcin == cin, f"Cin mismatch: {wcin} vs {cin}"
+    sh, sw = stride
+    ho = (hp - kh) // sh + 1
+    wo = (wp - kw) // sw + 1
+    ct = cout_tile or cout
+    assert cout % ct == 0, f"cout_tile {ct} must divide Cout {cout}"
+
+    kernel = functools.partial(
+        _kernel, kh=kh, kw=kw, sh=sh, sw=sw, ho=ho, wo=wo, relu=relu
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, cout // ct),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, cin), lambda n, c: (n, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, ct), lambda n, c: (0, 0, 0, c)),
+            pl.BlockSpec((ct,), lambda n, c: (c,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, ct), lambda n, c: (n, 0, 0, c)),
+        out_shape=jax.ShapeDtypeStruct((bsz, ho, wo, cout), jnp.float32),
+        interpret=True,
+    )(x, w, b)

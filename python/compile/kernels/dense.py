@@ -1,0 +1,50 @@
+"""Blocked dense (matmul + bias + optional ReLU) Pallas kernel.
+
+Used for the pointwise half of depthwise-separable blocks and for
+classifier heads when they are not fused into :mod:`ee_head`. The grid
+tiles the M dimension in MXU-shaped rows; K and N stay resident (small
+in the IoT regime this paper targets)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, relu):
+    x = x_ref[...]  # (MT, K)
+    w = w_ref[...]  # (K, N)
+    b = b_ref[...]  # (N,)
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def dense(x, w, b, *, relu=False, m_tile=128):
+    """``x`` (M,K) @ ``w`` (K,N) + ``b`` (N,), optional ReLU.
+
+    ``m_tile`` is the M-dimension tile (perf knob); it is clamped to M
+    and M is required to be divisible by the effective tile.
+    """
+    m, k = x.shape
+    wk, n = w.shape
+    assert wk == k, f"K mismatch: {wk} vs {k}"
+    mt = min(m_tile, m)
+    while m % mt != 0:  # fall back to the largest divisor <= m_tile
+        mt -= 1
+
+    kernel = functools.partial(_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // mt,),
+        in_specs=[
+            pl.BlockSpec((mt, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((mt, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,64 @@
+"""Depthwise NHWC 2-D convolution Pallas kernel (+ fused bias / ReLU).
+
+The depthwise half of the depthwise-separable blocks used by the ARM
+DS-CNN keyword-spotting backbone. The pointwise (1x1) half is the
+:mod:`compile.kernels.dense` kernel applied per pixel. Depthwise convs
+are VPU work on TPU (elementwise multiply-accumulate, no contraction),
+so the kernel keeps the whole channel vector in-lane and unrolls taps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sh, sw, ho, wo, relu):
+    x = x_ref[...]  # (1, HP, WP, C)
+    w = w_ref[...]  # (kh, kw, C)
+    b = b_ref[...]  # (C,)
+    c = x.shape[3]
+    acc = jnp.zeros((1, ho, wo, c), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            patch = jax.lax.slice(
+                x,
+                (0, i, j, 0),
+                (1, i + (ho - 1) * sh + 1, j + (wo - 1) * sw + 1, c),
+                (1, sh, sw, 1),
+            )
+            acc = acc + patch * w[i, j][None, None, None, :]
+    acc = acc + b[None, None, None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def depthwise_conv2d(x, w, b, *, stride=(1, 1), padding=(0, 0), relu=True):
+    """Depthwise-convolve ``x`` (B,H,W,C) with ``w`` (KH,KW,C)."""
+    ph, pw = padding
+    if ph or pw:
+        x = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    bsz, hp, wp, c = x.shape
+    kh, kw, wc = w.shape
+    assert wc == c, f"channel mismatch: {wc} vs {c}"
+    sh, sw = stride
+    ho = (hp - kh) // sh + 1
+    wo = (wp - kw) // sw + 1
+
+    kernel = functools.partial(
+        _kernel, kh=kh, kw=kw, sh=sh, sw=sw, ho=ho, wo=wo, relu=relu
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, c), lambda n: (n, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, c), lambda n: (0, 0, 0)),
+            pl.BlockSpec((c,), lambda n: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, ho, wo, c), lambda n: (n, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, ho, wo, c), jnp.float32),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,62 @@
+"""Fused early-exit head Pallas kernel: dense -> softmax -> confidence.
+
+This is the at-runtime decision hot path of the EENN: after each
+backbone subgraph the coordinator evaluates the attached classifier and
+compares its confidence (max softmax probability) against the exit
+threshold. Fusing logits, softmax, confidence and argmax into a single
+VMEM-resident block means one kernel dispatch per decision.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(f_ref, w_ref, b_ref, p_ref, c_ref, y_ref):
+    f = f_ref[...]  # (B, C) GAP features
+    w = w_ref[...]  # (C, K)
+    b = b_ref[...]  # (K,)
+    logits = jnp.dot(f, w, preferred_element_type=jnp.float32) + b[None, :]
+    m = jnp.max(logits, axis=1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / jnp.sum(e, axis=1, keepdims=True)
+    p_ref[...] = probs
+    c_ref[...] = jnp.max(probs, axis=1)
+    y_ref[...] = jnp.argmax(logits, axis=1).astype(jnp.int32)
+
+
+def ee_head(feats, w, b):
+    """Evaluate a classifier head on GAP features.
+
+    Args:
+      feats: (B, C) pooled features.
+      w: (C, K) head weights.
+      b: (K,) head bias.
+    Returns:
+      (probs (B,K) f32, confidence (B,) f32, prediction (B,) i32).
+    """
+    bsz, c = feats.shape
+    wc, k = w.shape
+    assert wc == c, f"C mismatch: {wc} vs {c}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((bsz, c), lambda i: (0, 0)),
+            pl.BlockSpec((c, k), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bsz, k), lambda i: (0, 0)),
+            pl.BlockSpec((bsz,), lambda i: (0,)),
+            pl.BlockSpec((bsz,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, k), jnp.float32),
+            jax.ShapeDtypeStruct((bsz,), jnp.float32),
+            jax.ShapeDtypeStruct((bsz,), jnp.int32),
+        ],
+        interpret=True,
+    )(feats, w, b)

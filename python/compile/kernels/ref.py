@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest asserts
+``allclose(kernel(x), ref(x))`` over hypothesis-swept shapes/values.
+They are also the *fast path* used for build-time backbone training
+(XLA-native convs), which is sound because the equivalence is proven by
+the tests — weights trained on the ref path transfer to the Pallas
+graphs unchanged.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d(x, w, b, *, stride=(1, 1), padding=(0, 0), relu=True):
+    """NHWC conv oracle via lax.conv_general_dilated."""
+    ph, pw = padding
+    out = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=stride,
+        padding=((ph, ph), (pw, pw)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    out = out + b[None, None, None, :]
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def depthwise_conv2d(x, w, b, *, stride=(1, 1), padding=(0, 0), relu=True):
+    """Depthwise NHWC conv oracle (feature_group_count = C)."""
+    c = x.shape[3]
+    kh, kw, wc = w.shape
+    assert wc == c
+    # HWIO with I=1, O=C and feature_group_count=C.
+    wr = w.reshape(kh, kw, 1, c)
+    ph, pw = padding
+    out = jax.lax.conv_general_dilated(
+        x,
+        wr,
+        window_strides=stride,
+        padding=((ph, ph), (pw, pw)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    out = out + b[None, None, None, :]
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def conv1d(x, w, b, *, stride=1, padding=0, relu=True):
+    """(B,L,C) conv oracle via a width-1 2-D conv."""
+    x4 = x[:, :, None, :]  # (B, L, 1, Cin)
+    w4 = w[:, None, :, :]  # (K, 1, Cin, Cout)
+    out = jax.lax.conv_general_dilated(
+        x4,
+        w4,
+        window_strides=(stride, 1),
+        padding=((padding, padding), (0, 0)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )[:, :, 0, :]
+    out = out + b[None, None, :]
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def dense(x, w, b, *, relu=False):
+    out = x @ w + b[None, :]
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def ee_head(feats, w, b):
+    """Head oracle: logits -> (softmax probs, max-prob confidence, argmax)."""
+    logits = feats @ w + b[None, :]
+    probs = jax.nn.softmax(logits, axis=1)
+    conf = jnp.max(probs, axis=1)
+    pred = jnp.argmax(logits, axis=1).astype(jnp.int32)
+    return probs, conf, pred

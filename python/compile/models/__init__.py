@@ -1,0 +1,27 @@
+"""Layer-2 model definitions (build-time only).
+
+Each backbone is expressed as an ordered list of blocks — the coarse
+block-level graph of the paper's §3.1 — plus a GAP->dense classifier
+head. Every block can execute on two proven-equivalent paths:
+
+* ``pallas=True``  — Layer-1 Pallas kernels; the path that gets
+  AOT-lowered into the deployed HLO artifacts.
+* ``pallas=False`` — pure-jnp oracle path; the fast path used for
+  build-time backbone training.
+"""
+
+from .common import Model, Conv2dBlock, DsConvBlock, Conv1dBlock, ResidualBlock
+from .dscnn import build_dscnn
+from .ecg1d import build_ecg1d
+from .resnet import build_resnet
+
+__all__ = [
+    "Model",
+    "Conv2dBlock",
+    "DsConvBlock",
+    "Conv1dBlock",
+    "ResidualBlock",
+    "build_dscnn",
+    "build_ecg1d",
+    "build_resnet",
+]

@@ -1,0 +1,328 @@
+"""Block abstraction shared by all backbones.
+
+A block is a node of the coarse-grained graph representation from the
+paper's §3.1: residual blocks are collapsed into single nodes and
+post-processing (bias/activation) is fused into the compute node. Every
+block reports its analytic cost (MACs, params, IFM size) — the same
+simple approximations the paper uses instead of accurate performance
+models — which the Rust graph IR consumes via the manifest.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import kernels
+from ..kernels import ref
+
+
+def _init_conv(key, shape, fan_in):
+    std = math.sqrt(2.0 / fan_in)
+    return jax.random.normal(key, shape, jnp.float32) * std
+
+
+class Block:
+    """Base class. Subclasses define params / apply / cost."""
+
+    name: str
+
+    def param_specs(self):
+        """-> list of (suffix, shape) in deterministic order."""
+        raise NotImplementedError
+
+    def init(self, key):
+        raise NotImplementedError
+
+    def apply(self, params, x, pallas=False):
+        raise NotImplementedError
+
+    def out_shape(self, in_shape):
+        raise NotImplementedError
+
+    def macs(self, in_shape):
+        raise NotImplementedError
+
+    def param_count(self):
+        return sum(int(np.prod(s)) for _, s in self.param_specs())
+
+    def param_names(self):
+        return [f"{self.name}/{suffix}" for suffix, _ in self.param_specs()]
+
+
+def _conv_out(h, k, s, p):
+    return (h + 2 * p - k) // s + 1
+
+
+class Conv2dBlock(Block):
+    """Standard conv + bias + ReLU."""
+
+    def __init__(self, name, cin, cout, kh, kw, stride=(1, 1), padding=(0, 0)):
+        self.name = name
+        self.cin, self.cout = cin, cout
+        self.kh, self.kw = kh, kw
+        self.stride, self.padding = stride, padding
+
+    def param_specs(self):
+        return [("w", (self.kh, self.kw, self.cin, self.cout)), ("b", (self.cout,))]
+
+    def init(self, key):
+        fan_in = self.kh * self.kw * self.cin
+        return [
+            _init_conv(key, (self.kh, self.kw, self.cin, self.cout), fan_in),
+            jnp.zeros((self.cout,), jnp.float32),
+        ]
+
+    def apply(self, params, x, pallas=False):
+        w, b = params
+        fn = kernels.conv2d if pallas else ref.conv2d
+        return fn(x, w, b, stride=self.stride, padding=self.padding, relu=True)
+
+    def out_shape(self, in_shape):
+        h, w, _ = in_shape
+        return (
+            _conv_out(h, self.kh, self.stride[0], self.padding[0]),
+            _conv_out(w, self.kw, self.stride[1], self.padding[1]),
+            self.cout,
+        )
+
+    def macs(self, in_shape):
+        ho, wo, _ = self.out_shape(in_shape)
+        return ho * wo * self.kh * self.kw * self.cin * self.cout
+
+
+class DsConvBlock(Block):
+    """Depthwise-separable block: depthwise 2-D conv then pointwise 1x1."""
+
+    def __init__(self, name, cin, cout, kh=3, kw=3, stride=(1, 1), padding=(1, 1)):
+        self.name = name
+        self.cin, self.cout = cin, cout
+        self.kh, self.kw = kh, kw
+        self.stride, self.padding = stride, padding
+
+    def param_specs(self):
+        return [
+            ("wd", (self.kh, self.kw, self.cin)),
+            ("bd", (self.cin,)),
+            ("wp", (self.cin, self.cout)),
+            ("bp", (self.cout,)),
+        ]
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return [
+            _init_conv(k1, (self.kh, self.kw, self.cin), self.kh * self.kw),
+            jnp.zeros((self.cin,), jnp.float32),
+            _init_conv(k2, (self.cin, self.cout), self.cin),
+            jnp.zeros((self.cout,), jnp.float32),
+        ]
+
+    def apply(self, params, x, pallas=False):
+        wd, bd, wp, bp = params
+        if pallas:
+            y = kernels.depthwise_conv2d(
+                x, wd, bd, stride=self.stride, padding=self.padding, relu=True
+            )
+            b, h, w, c = y.shape
+            flat = kernels.dense(y.reshape(b * h * w, c), wp, bp, relu=True)
+            return flat.reshape(b, h, w, self.cout)
+        y = ref.depthwise_conv2d(
+            x, wd, bd, stride=self.stride, padding=self.padding, relu=True
+        )
+        b, h, w, c = y.shape
+        return ref.dense(y.reshape(b * h * w, c), wp, bp, relu=True).reshape(
+            b, h, w, self.cout
+        )
+
+    def out_shape(self, in_shape):
+        h, w, _ = in_shape
+        return (
+            _conv_out(h, self.kh, self.stride[0], self.padding[0]),
+            _conv_out(w, self.kw, self.stride[1], self.padding[1]),
+            self.cout,
+        )
+
+    def macs(self, in_shape):
+        ho, wo, _ = self.out_shape(in_shape)
+        return ho * wo * (self.kh * self.kw * self.cin + self.cin * self.cout)
+
+
+class Conv1dBlock(Block):
+    """1-D conv + bias + ReLU (layout (L, C))."""
+
+    def __init__(self, name, cin, cout, k, stride=1, padding=0):
+        self.name = name
+        self.cin, self.cout = cin, cout
+        self.k, self.stride, self.padding = k, stride, padding
+
+    def param_specs(self):
+        return [("w", (self.k, self.cin, self.cout)), ("b", (self.cout,))]
+
+    def init(self, key):
+        return [
+            _init_conv(key, (self.k, self.cin, self.cout), self.k * self.cin),
+            jnp.zeros((self.cout,), jnp.float32),
+        ]
+
+    def apply(self, params, x, pallas=False):
+        w, b = params
+        fn = kernels.conv1d if pallas else ref.conv1d
+        return fn(x, w, b, stride=self.stride, padding=self.padding, relu=True)
+
+    def out_shape(self, in_shape):
+        l, _ = in_shape
+        return (_conv_out(l, self.k, self.stride, self.padding), self.cout)
+
+    def macs(self, in_shape):
+        lo, _ = self.out_shape(in_shape)
+        return lo * self.k * self.cin * self.cout
+
+
+class ResidualBlock(Block):
+    """Two 3x3 convs with identity (or strided 1x1 projection) skip,
+    collapsed into one coarse-graph node."""
+
+    def __init__(self, name, cin, cout, stride=1):
+        self.name = name
+        self.cin, self.cout = cin, cout
+        self.stride = stride
+        self.project = stride != 1 or cin != cout
+
+    def param_specs(self):
+        specs = [
+            ("w1", (3, 3, self.cin, self.cout)),
+            ("b1", (self.cout,)),
+            ("w2", (3, 3, self.cout, self.cout)),
+            ("b2", (self.cout,)),
+        ]
+        if self.project:
+            specs += [("wp", (1, 1, self.cin, self.cout)), ("bp", (self.cout,))]
+        return specs
+
+    def init(self, key):
+        keys = jax.random.split(key, 3)
+        params = [
+            _init_conv(keys[0], (3, 3, self.cin, self.cout), 9 * self.cin),
+            jnp.zeros((self.cout,), jnp.float32),
+            _init_conv(keys[1], (3, 3, self.cout, self.cout), 9 * self.cout),
+            jnp.zeros((self.cout,), jnp.float32),
+        ]
+        if self.project:
+            params += [
+                _init_conv(keys[2], (1, 1, self.cin, self.cout), self.cin),
+                jnp.zeros((self.cout,), jnp.float32),
+            ]
+        return params
+
+    def apply(self, params, x, pallas=False):
+        fn = kernels.conv2d if pallas else ref.conv2d
+        s = (self.stride, self.stride)
+        y = fn(x, params[0], params[1], stride=s, padding=(1, 1), relu=True)
+        y = fn(y, params[2], params[3], stride=(1, 1), padding=(1, 1), relu=False)
+        skip = x
+        if self.project:
+            skip = fn(x, params[4], params[5], stride=s, padding=(0, 0), relu=False)
+        return jnp.maximum(y + skip, 0.0)
+
+    def out_shape(self, in_shape):
+        h, w, _ = in_shape
+        return (
+            _conv_out(h, 3, self.stride, 1),
+            _conv_out(w, 3, self.stride, 1),
+            self.cout,
+        )
+
+    def macs(self, in_shape):
+        ho, wo, _ = self.out_shape(in_shape)
+        m = ho * wo * 9 * self.cin * self.cout + ho * wo * 9 * self.cout * self.cout
+        if self.project:
+            m += ho * wo * self.cin * self.cout
+        return m
+
+
+def gap(x):
+    """Global average pooling over all non-(batch, channel) axes —
+    the aggressive rule-based downsampling the paper applies before EE
+    classifiers in the IoT regime."""
+    axes = tuple(range(1, x.ndim - 1))
+    return jnp.mean(x, axis=axes)
+
+
+class Model:
+    """A backbone: ordered blocks + GAP->dense classifier head.
+
+    Candidate EE locations are the block boundaries 0..n_blocks-2 (a
+    classifier at the last boundary would duplicate the final head).
+    """
+
+    def __init__(self, name, task, input_shape, num_classes, blocks):
+        self.name = name
+        self.task = task
+        self.input_shape = tuple(input_shape)
+        self.num_classes = num_classes
+        self.blocks = blocks
+
+    # --- shapes / costs -------------------------------------------------
+    def block_in_shapes(self):
+        shapes = [self.input_shape]
+        for blk in self.blocks[:-1]:
+            shapes.append(blk.out_shape(shapes[-1]))
+        return shapes
+
+    def block_out_shapes(self):
+        ins = self.block_in_shapes()
+        return [b.out_shape(s) for b, s in zip(self.blocks, ins)]
+
+    def gap_dims(self):
+        return [s[-1] for s in self.block_out_shapes()]
+
+    def block_macs(self):
+        ins = self.block_in_shapes()
+        return [b.macs(s) for b, s in zip(self.blocks, ins)]
+
+    def head_in_dim(self):
+        return self.gap_dims()[-1]
+
+    def head_macs(self, c=None):
+        return (c or self.head_in_dim()) * self.num_classes
+
+    def ee_locations(self):
+        return list(range(len(self.blocks) - 1))
+
+    # --- params ---------------------------------------------------------
+    def init(self, key):
+        keys = jax.random.split(key, len(self.blocks) + 1)
+        params = {"blocks": [b.init(k) for b, k in zip(self.blocks, keys)]}
+        c, k = self.head_in_dim(), self.num_classes
+        std = math.sqrt(1.0 / c)
+        params["head_w"] = jax.random.normal(keys[-1], (c, k), jnp.float32) * std
+        params["head_b"] = jnp.zeros((k,), jnp.float32)
+        return params
+
+    def tensor_names(self):
+        names = []
+        for blk in self.blocks:
+            names.extend(blk.param_names())
+        names += ["head_w", "head_b"]
+        return names
+
+    def flat_tensors(self, params):
+        flat = []
+        for bp in params["blocks"]:
+            flat.extend(bp)
+        flat += [params["head_w"], params["head_b"]]
+        return flat
+
+    # --- forward --------------------------------------------------------
+    def features(self, params, x, pallas=False):
+        """Run all blocks; return (gap features per block, final logits)."""
+        gaps = []
+        for blk, bp in zip(self.blocks, params["blocks"]):
+            x = blk.apply(bp, x, pallas=pallas)
+            gaps.append(gap(x))
+        logits = gaps[-1] @ params["head_w"] + params["head_b"]
+        return gaps, logits
+
+    def logits(self, params, x, pallas=False):
+        return self.features(params, x, pallas=pallas)[1]

@@ -1,0 +1,17 @@
+"""ARM-style depthwise-separable CNN for keyword spotting (the paper's
+GSC / speech-command backbone, scaled to this testbed — see DESIGN.md
+§Substitutions). Input: 49x10 MFCC-like features, 11 classes."""
+
+from .common import Model, Conv2dBlock, DsConvBlock
+
+INPUT_SHAPE = (49, 10, 1)
+NUM_CLASSES = 11
+
+
+def build_dscnn(channels=32, ds_blocks=4):
+    blocks = [
+        Conv2dBlock("b0_conv", 1, channels, 5, 3, stride=(2, 1), padding=(2, 1))
+    ]
+    for i in range(ds_blocks):
+        blocks.append(DsConvBlock(f"b{i + 1}_ds", channels, channels))
+    return Model("dscnn", "speech", INPUT_SHAPE, NUM_CLASSES, blocks)

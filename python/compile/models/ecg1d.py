@@ -1,0 +1,18 @@
+"""Fully-convolutional 1-D network for single-lead ECG beat
+classification (the paper's MIT-BIH backbone, cf. Issa et al.).
+Input: 187-sample beat window, 6 classes."""
+
+from .common import Model, Conv1dBlock
+
+INPUT_SHAPE = (187, 1)
+NUM_CLASSES = 6
+
+
+def build_ecg1d():
+    blocks = [
+        Conv1dBlock("b0_conv", 1, 16, 7, stride=2, padding=3),
+        Conv1dBlock("b1_conv", 16, 32, 5, stride=2, padding=2),
+        Conv1dBlock("b2_conv", 32, 32, 5, stride=2, padding=2),
+        Conv1dBlock("b3_conv", 32, 64, 3, stride=2, padding=1),
+    ]
+    return Model("ecg1d", "ecg", INPUT_SHAPE, NUM_CLASSES, blocks)

@@ -1,0 +1,25 @@
+"""CIFAR-style ResNet (He et al.), depth 6n+2 with three stages of n
+residual blocks at 16/32/64 channels.
+
+The paper converts ResNet-152; on this single-core testbed we train a
+shallower depth (default n=2, i.e. ResNet-14-class) and reproduce the
+ResNet-152-scale *search-space* experiment on a cost graph (see
+DESIGN.md §Substitutions and the search_cost bench). Depth stays
+configurable so larger variants can be produced where compute allows.
+"""
+
+from .common import Model, Conv2dBlock, ResidualBlock
+
+INPUT_SHAPE = (32, 32, 3)
+
+
+def build_resnet(num_classes=10, n=2, widths=(16, 32, 64)):
+    blocks = [Conv2dBlock("stem", 3, widths[0], 3, 3, stride=(1, 1), padding=(1, 1))]
+    cin = widths[0]
+    for si, w in enumerate(widths):
+        for bi in range(n):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            blocks.append(ResidualBlock(f"s{si}b{bi}", cin, w, stride=stride))
+            cin = w
+    name = f"resnet_c{num_classes}"
+    return Model(name, f"cifar{num_classes}", INPUT_SHAPE, num_classes, blocks)

@@ -1,0 +1,90 @@
+"""Build-time backbone training (pure-jnp fast path).
+
+The paper's NA flow takes a *pretrained* model as input; this module
+produces those pretrained backbones at artifact-build time. Training
+runs on the ref-kernel path (XLA-native convs) — proven equivalent to
+the Pallas path by the kernel tests — with a minimal Adam implementation
+(no optax in the offline environment).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params), jnp.zeros(())
+
+
+def _adam_update(params, grads, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = t + 1
+    m = jax.tree_util.tree_map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree_util.tree_map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    mhat = jax.tree_util.tree_map(lambda a: a / (1 - b1**t), m)
+    vhat = jax.tree_util.tree_map(lambda a: a / (1 - b2**t), v)
+    params = jax.tree_util.tree_map(
+        lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps), params, mhat, vhat
+    )
+    return params, m, v, t
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def train_backbone(model, data, *, epochs=3, batch=100, lr=2e-3, seed=0, log=print):
+    """Train `model` on data['train'], report val/test accuracy.
+
+    Returns (params, info dict with accs + wall time)."""
+    xtr, ytr = data["train"]
+    n = xtr.shape[0]
+    assert n % batch == 0, f"batch {batch} must divide n {n}"
+    params = model.init(jax.random.PRNGKey(seed))
+
+    @jax.jit
+    def step(params, m, v, t, xb, yb):
+        def loss_fn(p):
+            return cross_entropy(model.logits(p, xb), yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, m, v, t = _adam_update(params, grads, m, v, t, lr)
+        return params, m, v, t, loss
+
+    m, v, t = _adam_init(params)
+    rng = np.random.default_rng(seed)
+    t0 = time.time()
+    for ep in range(epochs):
+        order = rng.permutation(n)
+        losses = []
+        for i in range(0, n, batch):
+            idx = order[i : i + batch]
+            params, m, v, t, loss = step(
+                params, m, v, t, jnp.asarray(xtr[idx]), jnp.asarray(ytr[idx])
+            )
+            losses.append(float(loss))
+        log(f"  [{model.name}] epoch {ep + 1}/{epochs} loss={np.mean(losses):.4f}")
+    wall = time.time() - t0
+
+    info = {"train_seconds": wall}
+    for split in ("val", "test"):
+        info[f"{split}_acc"] = float(evaluate(model, params, data[split]))
+    log(
+        f"  [{model.name}] trained in {wall:.0f}s  val={info['val_acc']:.4f} "
+        f"test={info['test_acc']:.4f}"
+    )
+    return params, info
+
+
+def evaluate(model, params, split, batch=250):
+    x, y = split
+    n = x.shape[0]
+    fwd = jax.jit(lambda p, xb: jnp.argmax(model.logits(p, xb), axis=1))
+    correct = 0
+    for i in range(0, n, batch):
+        pred = fwd(params, jnp.asarray(x[i : i + batch]))
+        correct += int(jnp.sum(pred == jnp.asarray(y[i : i + batch])))
+    return correct / n

@@ -1,0 +1,167 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, with
+hypothesis sweeping shapes/strides/padding/values. This is the CORE
+correctness signal of the AOT stack: weights trained on the ref path
+are valid for the deployed Pallas graphs only because these pass."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+ATOL = 2e-4
+
+
+def arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(4, 12),
+    w=st.integers(4, 10),
+    cin=st.integers(1, 5),
+    cout=st.integers(1, 8),
+    kh=st.integers(1, 3),
+    kw=st.integers(1, 3),
+    sh=st.integers(1, 2),
+    sw=st.integers(1, 2),
+    ph=st.integers(0, 2),
+    pw=st.integers(0, 2),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**31),
+)
+def test_conv2d_matches_ref(b, h, w, cin, cout, kh, kw, sh, sw, ph, pw, relu, seed):
+    if h + 2 * ph < kh or w + 2 * pw < kw:
+        return  # invalid geometry
+    rng = np.random.default_rng(seed)
+    x = arr(rng, b, h, w, cin)
+    wt = arr(rng, kh, kw, cin, cout)
+    bias = arr(rng, cout)
+    got = kernels.conv2d(x, wt, bias, stride=(sh, sw), padding=(ph, pw), relu=relu)
+    want = ref.conv2d(x, wt, bias, stride=(sh, sw), padding=(ph, pw), relu=relu)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.integers(4, 12),
+    w=st.integers(4, 10),
+    c=st.integers(1, 8),
+    k=st.integers(1, 3),
+    s=st.integers(1, 2),
+    p=st.integers(0, 1),
+    seed=st.integers(0, 2**31),
+)
+def test_depthwise_matches_ref(b, h, w, c, k, s, p, seed):
+    if h + 2 * p < k or w + 2 * p < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = arr(rng, b, h, w, c)
+    wt = arr(rng, k, k, c)
+    bias = arr(rng, c)
+    got = kernels.depthwise_conv2d(x, wt, bias, stride=(s, s), padding=(p, p))
+    want = ref.depthwise_conv2d(x, wt, bias, stride=(s, s), padding=(p, p))
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    length=st.integers(5, 40),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 8),
+    k=st.integers(1, 7),
+    s=st.integers(1, 3),
+    p=st.integers(0, 3),
+    seed=st.integers(0, 2**31),
+)
+def test_conv1d_matches_ref(b, length, cin, cout, k, s, p, seed):
+    if length + 2 * p < k:
+        return
+    rng = np.random.default_rng(seed)
+    x = arr(rng, b, length, cin)
+    wt = arr(rng, k, cin, cout)
+    bias = arr(rng, cout)
+    got = kernels.conv1d(x, wt, bias, stride=s, padding=p)
+    want = ref.conv1d(x, wt, bias, stride=s, padding=p)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 32),
+    n=st.integers(1, 16),
+    relu=st.booleans(),
+    mt=st.sampled_from([1, 8, 128]),
+    seed=st.integers(0, 2**31),
+)
+def test_dense_matches_ref(m, k, n, relu, mt, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, m, k)
+    w = arr(rng, k, n)
+    b = arr(rng, n)
+    got = kernels.dense(x, w, b, relu=relu, m_tile=mt)
+    want = ref.dense(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, atol=ATOL, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    c=st.integers(2, 64),
+    k=st.integers(2, 100),
+    seed=st.integers(0, 2**31),
+)
+def test_ee_head_matches_ref(b, c, k, seed):
+    rng = np.random.default_rng(seed)
+    f = arr(rng, b, c)
+    w = arr(rng, c, k)
+    bias = arr(rng, k)
+    gp, gc, gy = kernels.ee_head(f, w, bias)
+    rp, rc, ry = ref.ee_head(f, w, bias)
+    np.testing.assert_allclose(gp, rp, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(gc, rc, atol=1e-5, rtol=1e-5)
+    np.testing.assert_array_equal(gy, ry)
+
+
+def test_ee_head_outputs_are_consistent():
+    rng = np.random.default_rng(0)
+    f = arr(rng, 16, 8)
+    w = arr(rng, 8, 5)
+    b = arr(rng, 5)
+    probs, conf, pred = kernels.ee_head(f, w, b)
+    # probs are a distribution
+    np.testing.assert_allclose(np.sum(probs, axis=1), 1.0, atol=1e-5)
+    assert np.all(probs >= 0)
+    # confidence is the max prob and pred its argmax
+    np.testing.assert_allclose(conf, np.max(probs, axis=1), atol=1e-6)
+    np.testing.assert_array_equal(pred, np.argmax(probs, axis=1))
+
+
+def test_conv2d_cout_tiling_equivalent():
+    rng = np.random.default_rng(1)
+    x = arr(rng, 2, 8, 8, 4)
+    w = arr(rng, 3, 3, 4, 8)
+    b = arr(rng, 8)
+    full = kernels.conv2d(x, w, b, padding=(1, 1))
+    tiled = kernels.conv2d(x, w, b, padding=(1, 1), cout_tile=4)
+    np.testing.assert_allclose(full, tiled, atol=1e-5)
+
+
+def test_kernels_are_jittable():
+    """The kernels must trace under jit (the AOT export path)."""
+    rng = np.random.default_rng(2)
+    x = arr(rng, 1, 6, 6, 3)
+    w = arr(rng, 3, 3, 3, 4)
+    b = arr(rng, 4)
+    jitted = jax.jit(lambda x, w, b: kernels.conv2d(x, w, b, padding=(1, 1)))
+    np.testing.assert_allclose(
+        jitted(x, w, b), ref.conv2d(x, w, b, padding=(1, 1)), atol=ATOL
+    )

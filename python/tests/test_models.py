@@ -1,0 +1,81 @@
+"""L2 model checks: pallas/ref path equivalence for every backbone,
+shape bookkeeping (analytic out_shape vs traced shapes), and MAC
+accounting sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.models import build_dscnn, build_ecg1d, build_resnet
+
+
+MODELS = {
+    "dscnn": build_dscnn,
+    "ecg1d": build_ecg1d,
+    "resnet_c10": lambda: build_resnet(10),
+}
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_pallas_equals_ref(name, rng):
+    m = MODELS[name]()
+    p = m.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.normal(size=(2, *m.input_shape)).astype(np.float32))
+    g_ref, l_ref = m.features(p, x, pallas=False)
+    g_pal, l_pal = m.features(p, x, pallas=True)
+    for a, b in zip(g_ref, g_pal):
+        np.testing.assert_allclose(a, b, atol=3e-4, rtol=1e-3)
+    np.testing.assert_allclose(l_ref, l_pal, atol=3e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_analytic_shapes_match_traced(name, rng):
+    m = MODELS[name]()
+    p = m.init(jax.random.PRNGKey(1))
+    x = jnp.asarray(rng.normal(size=(1, *m.input_shape)).astype(np.float32))
+    shapes = m.block_out_shapes()
+    cur = x
+    for blk, params, expect in zip(m.blocks, p["blocks"], shapes):
+        cur = blk.apply(params, cur, pallas=False)
+        assert tuple(cur.shape[1:]) == tuple(expect), blk.name
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_mac_counts_positive_and_monotone(name):
+    m = MODELS[name]()
+    macs = m.block_macs()
+    assert all(v > 0 for v in macs)
+    # head is tiny relative to the backbone (the paper's <0.5% rule)
+    assert m.head_macs() < 0.01 * sum(macs)
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_param_specs_match_init(name):
+    m = MODELS[name]()
+    p = m.init(jax.random.PRNGKey(2))
+    for blk, params in zip(m.blocks, p["blocks"]):
+        specs = blk.param_specs()
+        assert len(specs) == len(params)
+        for (suffix, shape), tensor in zip(specs, params):
+            assert tuple(tensor.shape) == tuple(shape), f"{blk.name}/{suffix}"
+
+
+def test_ee_locations_exclude_final():
+    m = build_resnet(10)
+    locs = m.ee_locations()
+    assert locs == list(range(len(m.blocks) - 1))
+
+
+def test_tensor_names_unique_and_ordered():
+    m = build_dscnn()
+    names = m.tensor_names()
+    assert len(names) == len(set(names))
+    assert names[-2:] == ["head_w", "head_b"]
+    flat = m.flat_tensors(m.init(jax.random.PRNGKey(3)))
+    assert len(flat) == len(names)

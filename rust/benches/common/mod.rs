@@ -1,0 +1,73 @@
+//! Shared bench harness (criterion is not in the offline vendor set):
+//! warmup + repeated timing with mean/std reporting, and helpers to
+//! generate the synthetic calibration profiles used by the
+//! paper-scale experiments.
+
+use eenn_na::na::ExitProfile;
+use eenn_na::util::rng::Rng;
+use eenn_na::util::stats::summarize;
+
+/// Time `f` over `iters` iterations after `warmup` runs; prints a
+/// criterion-like line and returns mean seconds.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let s = summarize(&times);
+    println!(
+        "{name:<44} {:>10.3} ms/iter  (p50 {:.3}, p99 {:.3}, n={})",
+        s.mean * 1e3,
+        s.p50 * 1e3,
+        s.p99 * 1e3,
+        iters
+    );
+    s.mean
+}
+
+/// Synthetic calibration profile of an exit whose accuracy grows with
+/// depth: correct samples are more confident. Mirrors the regime the
+/// trained exits show on the real artifacts.
+pub fn synth_profile(rng: &mut Rng, n: usize, acc: f64) -> ExitProfile {
+    let mut conf = Vec::with_capacity(n);
+    let mut correct = Vec::with_capacity(n);
+    for _ in 0..n {
+        let ok = rng.f64() < acc;
+        let c = if ok {
+            0.45 + 0.55 * rng.f64()
+        } else {
+            0.2 + 0.45 * rng.f64()
+        };
+        conf.push(c.min(0.999) as f32);
+        correct.push(ok);
+    }
+    ExitProfile { location: 0, conf, pred: vec![0; n], correct }
+}
+
+/// Depth-indexed profile family for a graph with `n_locs` EE sites:
+/// accuracy ramps from `acc_lo` at the shallowest exit to `acc_hi`.
+pub fn profile_family(
+    seed: u64,
+    n_locs: usize,
+    n_samples: usize,
+    acc_lo: f64,
+    acc_hi: f64,
+) -> Vec<ExitProfile> {
+    let mut rng = Rng::seeded(seed);
+    (0..n_locs)
+        .map(|i| {
+            let t = if n_locs <= 1 { 1.0 } else { i as f64 / (n_locs - 1) as f64 };
+            synth_profile(&mut rng, n_samples, acc_lo + (acc_hi - acc_lo) * t)
+        })
+        .collect()
+}
+
+/// Artifacts present? (Benches degrade to the synthetic path without.)
+pub fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}

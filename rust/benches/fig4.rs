@@ -1,0 +1,63 @@
+//! Regenerates **Fig. 4** of the paper: MAC-reduction vs accuracy-
+//! delta comparison of the NA flow against fixed-threshold
+//! (BranchyNet-style) baselines on every base model. The paper plots
+//! its framework against prior NAS frameworks; those are proprietary
+//! search stacks, so the comparison series here are the no-search
+//! baselines the NA flow must dominate (same EENN architecture, naive
+//! global thresholds) plus the unaugmented model.
+//!
+//! Run: `cargo bench --bench fig4`
+
+mod common;
+
+use eenn_na::report;
+use eenn_na::runtime::{Engine, Manifest};
+use eenn_na::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    if !common::have_artifacts() {
+        println!("fig4: skipping (no artifacts; run `make artifacts`)");
+        return Ok(());
+    }
+    let args = Args::parse(std::env::args().skip(1));
+    let man = Manifest::load(args.str("artifacts", "artifacts"))?;
+    let engine = Engine::new()?;
+
+    // default to the fast MCU workloads; pass --all (or --model) for
+    // the CIFAR models (several minutes each on one core)
+    let models: Vec<String> = match args.opt("model") {
+        Some(m) => vec![m.to_string()],
+        None if args.bool("all") => man.models.keys().cloned().collect(),
+        None => ["dscnn", "ecg1d"]
+            .iter()
+            .filter(|m| man.models.contains_key(**m))
+            .map(|s| s.to_string())
+            .collect(),
+    };
+
+    println!("=== Fig 4: efficiency/quality frontier per base model ===");
+    println!(
+        "{:<30} {:>10} {:>10} {:>10}",
+        "series", "mac-red%", "acc-delta", "early%"
+    );
+    for name in models {
+        match report::fig4_series(&engine, &man, &name) {
+            Ok(points) => {
+                for p in points {
+                    println!(
+                        "{:<30} {:>10.2} {:>10.2} {:>10.2}",
+                        format!("{name}/{}", p.label),
+                        p.mac_reduction_pct,
+                        p.acc_delta_pct,
+                        p.early_term_pct
+                    );
+                }
+            }
+            Err(e) => println!("{name}: FAILED: {e:#}"),
+        }
+        println!();
+    }
+    println!("(na-flow should dominate fixed-threshold points: more MAC");
+    println!(" reduction at equal or better accuracy delta)");
+    Ok(())
+}

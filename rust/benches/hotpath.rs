@@ -1,0 +1,116 @@
+//! Hot-path micro-benchmarks: the per-request serving loop.
+//!
+//! * staged adaptive inference (block exec -> fused decision kernel)
+//!   per sample, per model;
+//! * engine dispatch overhead (channel round-trip + literal
+//!   conversion) vs pure PJRT execute time;
+//! * batched vs single-sample execution on the escalation path.
+//!
+//! These are the numbers the §Perf pass optimizes; EXPERIMENTS.md
+//! records before/after.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+mod common;
+
+use eenn_na::data::load_split;
+use eenn_na::eenn::StagedRunner;
+use eenn_na::na::{self, FlowConfig};
+use eenn_na::report;
+use eenn_na::runtime::{Engine, HostTensor, Manifest, WeightStore};
+
+fn main() -> anyhow::Result<()> {
+    if !common::have_artifacts() {
+        println!("hotpath: skipping (no artifacts; run `make artifacts`)");
+        return Ok(());
+    }
+    let man = Manifest::load("artifacts")?;
+    let engine = Engine::new()?;
+
+    for name in ["ecg1d", "dscnn"] {
+        let Ok(model) = man.model(name) else { continue };
+        let platform = report::platform_for_task(&model.task);
+        let ws = WeightStore::load(&man, model)?;
+        let test = load_split(&man, model, "test")?;
+
+        // a solution to serve (quick search)
+        let out = na::augment(&engine, &man, name, &platform, &FlowConfig::default())?;
+        let runner = StagedRunner::new(&engine, &man, model, &ws, &out.solution)?;
+
+        println!("\n=== {name}: exits {:?} ===", out.solution.exits);
+
+        // full adaptive inference per sample
+        let mut i = 0usize;
+        common::bench(&format!("{name} staged infer (adaptive)"), 20, 200, || {
+            let r = runner.infer(test.sample(i % test.n)).expect("infer");
+            std::hint::black_box(r);
+            i += 1;
+        });
+
+        // single block exec (the dominant dispatch)
+        let blk = &model.blocks[0];
+        let exec = engine.compile(man.path(&blk.hlo_b1))?;
+        let bound = engine.bind(exec, ws.block_args(blk)?)?;
+        let mut shape = vec![1usize];
+        shape.extend(&model.input_shape);
+        let x = HostTensor::f32(&shape, test.sample(0));
+        common::bench(&format!("{name} block0 exec b1 (bound)"), 20, 500, || {
+            let o = engine.run_bound(bound, vec![x.clone()]).expect("run");
+            std::hint::black_box(o);
+        });
+
+        // same through the unbound path (weights re-converted per call)
+        let args: Vec<HostTensor> = ws
+            .block_args(blk)?
+            .into_iter()
+            .chain(std::iter::once(x.clone()))
+            .collect();
+        common::bench(&format!("{name} block0 exec b1 (unbound)"), 20, 500, || {
+            let o = engine.run(exec, args.clone()).expect("run");
+            std::hint::black_box(o);
+        });
+
+        // batched eval-batch execution (cloud escalation path)
+        let eb = man.eval_batch;
+        let exec_eb = engine.compile(man.path(&blk.hlo_beval))?;
+        let bound_eb = engine.bind(exec_eb, ws.block_args(blk)?)?;
+        let mut bshape = vec![eb];
+        bshape.extend(&model.input_shape);
+        let xb: Vec<f32> = (0..eb).flat_map(|j| test.sample(j).to_vec()).collect();
+        let xb = HostTensor::f32(&bshape, &xb);
+        let mean = common::bench(&format!("{name} block0 exec b{eb} (bound)"), 10, 100, || {
+            let o = engine.run_bound(bound_eb, vec![xb.clone()]).expect("run");
+            std::hint::black_box(o);
+        });
+        println!(
+            "{:<44} {:>10.3} ms/sample amortized",
+            format!("{name} block0 b{eb} per-sample"),
+            mean * 1e3 / eb as f64
+        );
+
+        // decision kernel alone (fused Pallas head)
+        let h = &out.solution.heads.first();
+        if let Some(h) = h {
+            let hexec = engine.compile(man.path(&model.heads[&h.c].hlo_b1))?;
+            let hb = engine.bind(
+                hexec,
+                vec![
+                    HostTensor::f32(&[h.c, h.k], &h.w),
+                    HostTensor::f32(&[h.k], &h.b),
+                ],
+            )?;
+            let feats = HostTensor::f32(&[1, h.c], &vec![0.1; h.c]);
+            common::bench(&format!("{name} decision kernel (head b1)"), 20, 500, || {
+                let o = engine.run_bound(hb, vec![feats.clone()]).expect("run");
+                std::hint::black_box(o);
+            });
+        }
+    }
+
+    let st = engine.stats();
+    println!(
+        "\nengine: {} executables, {} executions, {:.3}s total PJRT exec time",
+        st.compiled, st.executions, st.exec_seconds
+    );
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Regenerates **Table 2** of the paper: the full NA flow + test-set
+//! evaluation for every model x calibration configuration, printed in
+//! the paper's row structure (quality deltas, mean MACs/latency/
+//! energy vs the single-processor baseline, early-termination rate,
+//! search time).
+//!
+//! Run: `cargo bench --bench table2 [-- --model NAME]`
+
+mod common;
+
+use eenn_na::report;
+use eenn_na::runtime::{Engine, Manifest};
+use eenn_na::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    if !common::have_artifacts() {
+        println!("table2: skipping (no artifacts; run `make artifacts`)");
+        return Ok(());
+    }
+    let args = Args::parse(std::env::args().skip(1));
+    let man = Manifest::load(args.str("artifacts", "artifacts"))?;
+    let engine = Engine::new()?;
+
+    let models: Vec<String> = match args.opt("model") {
+        Some(m) => vec![m.to_string()],
+        None => man.models.keys().cloned().collect(),
+    };
+
+    println!("=== Table 2: created EENNs vs single-processor baseline ===\n");
+    for name in models {
+        let model = man.model(&name)?;
+        let platform = report::platform_for_task(&model.task);
+        let base = report::baseline_eval(&engine, &man, model, &platform)?;
+        for (label, cal) in report::calibrations_for_task(&model.task) {
+            let t0 = std::time::Instant::now();
+            match report::table2_row_with_base(&engine, &man, &name, &label, cal, false, &base)
+            {
+                Ok(row) => {
+                    row.print();
+                    println!("  (row regenerated in {:.1}s)\n", t0.elapsed().as_secs_f64());
+                }
+                Err(e) => println!("  {name}/{label}: FAILED: {e:#}\n"),
+            }
+        }
+    }
+    Ok(())
+}

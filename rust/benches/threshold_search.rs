@@ -1,0 +1,127 @@
+//! **§3.2 mechanics bench**: the threshold-graph search itself.
+//!
+//! * Bellman-Ford vs Dijkstra on the 28-node graph (paper: "the
+//!   difference in cost compared to Dijkstra is negligible").
+//! * Solution quality of the graph search (pairwise and independence
+//!   edge models) against the exhaustive exact-replay oracle — the
+//!   ablation quantifying the paper's independence assumption.
+//! * Scaling in the number of exits and grid density.
+//!
+//! Run: `cargo bench --bench threshold_search`
+
+mod common;
+
+use eenn_na::na::{
+    bellman_ford, dijkstra, exhaustive, threshold_grid, EdgeModel, ExitMasks, SearchInput,
+};
+use eenn_na::util::rng::Rng;
+
+fn make_input<'a>(
+    masks: &'a [ExitMasks],
+    fin: &'a ExitMasks,
+    grid: &[f64],
+) -> SearchInput<'a> {
+    let k = masks.len();
+    SearchInput {
+        exits: masks.iter().collect(),
+        fin,
+        mac_frac: (0..k).map(|i| 0.15 + 0.7 * i as f64 / k.max(1) as f64).collect(),
+        final_mac_frac: 1.0,
+        w_eff: 0.9,
+        w_acc: 0.1,
+        grid: grid.to_vec(),
+    }
+}
+
+fn main() {
+    let n = 1500;
+    let grid = threshold_grid(10);
+
+    println!("=== threshold-graph search mechanics ===\n");
+
+    // --- timing: BF vs Dijkstra vs exhaustive, k = 1..3 ------------------
+    for k in 1..=3usize {
+        let profs = common::profile_family(100 + k as u64, k, n, 0.5, 0.9);
+        let masks: Vec<ExitMasks> =
+            profs.iter().map(|p| ExitMasks::build(p, &grid)).collect();
+        let fp = common::profile_family(200, 1, n, 0.97, 0.97).remove(0);
+        let fin = ExitMasks::build(&fp, &grid);
+        let input = make_input(&masks, &fin, &grid);
+
+        common::bench(&format!("bellman-ford  k={k}"), 20, 300, || {
+            std::hint::black_box(bellman_ford(&input, EdgeModel::Pairwise));
+        });
+        common::bench(&format!("dijkstra      k={k}"), 20, 300, || {
+            std::hint::black_box(dijkstra(&input, EdgeModel::Pairwise));
+        });
+        common::bench(&format!("exhaustive    k={k} (13^{k})"), 5, 50, || {
+            std::hint::black_box(exhaustive(&input));
+        });
+    }
+
+    // --- quality: approximation gap vs the oracle -------------------------
+    println!("\n--- solution quality vs exhaustive oracle (100 random cascades) ---");
+    let mut rng = Rng::seeded(7);
+    for k in 1..=3usize {
+        let mut gap_pair = Vec::new();
+        let mut gap_ind = Vec::new();
+        let mut hit_pair = 0usize;
+        let mut hit_ind = 0usize;
+        let trials = 100;
+        for t in 0..trials {
+            let profs =
+                common::profile_family(rng.next_u64() ^ t as u64, k, 400, 0.45, 0.93);
+            let masks: Vec<ExitMasks> =
+                profs.iter().map(|p| ExitMasks::build(p, &grid)).collect();
+            let fp = common::profile_family(rng.next_u64(), 1, 400, 0.96, 0.96).remove(0);
+            let fin = ExitMasks::build(&fp, &grid);
+            let input = make_input(&masks, &fin, &grid);
+
+            let oracle = exhaustive(&input);
+            for (model, gaps, hits) in [
+                (EdgeModel::Pairwise, &mut gap_pair, &mut hit_pair),
+                (EdgeModel::Independent, &mut gap_ind, &mut hit_ind),
+            ] {
+                let c = bellman_ford(&input, model);
+                let cost = input.exact_cost(&c.indices);
+                gaps.push((cost - oracle.cost) / oracle.cost.max(1e-9));
+                if c.indices == oracle.indices {
+                    *hits += 1;
+                }
+            }
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let max = |v: &[f64]| v.iter().cloned().fold(0.0f64, f64::max);
+        println!(
+            "k={k}: pairwise  mean-gap {:+.3}% max {:+.3}% exact-hit {}/{}",
+            mean(&gap_pair) * 100.0,
+            max(&gap_pair) * 100.0,
+            hit_pair,
+            trials
+        );
+        println!(
+            "k={k}: independ. mean-gap {:+.3}% max {:+.3}% exact-hit {}/{}",
+            mean(&gap_ind) * 100.0,
+            max(&gap_ind) * 100.0,
+            hit_ind,
+            trials
+        );
+    }
+
+    // --- grid-density scaling (the optional second search) ---------------
+    println!("\n--- grid density (second-search regime) ---");
+    for g in [13usize, 39, 169] {
+        let dense: Vec<f64> = (0..g)
+            .map(|i| 0.3 + (0.95 - 0.3) * i as f64 / (g - 1) as f64)
+            .collect();
+        let profs = common::profile_family(55, 2, n, 0.5, 0.9);
+        let masks: Vec<ExitMasks> =
+            profs.iter().map(|p| ExitMasks::build(p, &dense)).collect();
+        let fp = common::profile_family(56, 1, n, 0.97, 0.97).remove(0);
+        let fin = ExitMasks::build(&fp, &dense);
+        let input = make_input(&masks, &fin, &dense);
+        common::bench(&format!("exhaustive k=2 grid={g}"), 3, 20, || {
+            std::hint::black_box(exhaustive(&input));
+        });
+    }
+}

@@ -1,0 +1,72 @@
+//! Dataset loading: raw little-endian blobs written by python aot.py
+//! (x: f32 row-major, y: i32), indexed by the manifest.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::{Manifest, ModelInfo};
+
+#[derive(Debug, Clone)]
+pub struct Split {
+    /// (n, feature...) flattened row-major.
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub n: usize,
+    /// per-sample feature element count
+    pub feat: usize,
+}
+
+impl Split {
+    pub fn sample(&self, i: usize) -> &[f32] {
+        &self.x[i * self.feat..(i + 1) * self.feat]
+    }
+}
+
+pub fn load_split(man: &Manifest, model: &ModelInfo, split: &str) -> Result<Split> {
+    let info = model
+        .data
+        .get(split)
+        .ok_or_else(|| anyhow!("model {} has no split {split:?}", model.name))?;
+    let xp = man.path(&info.x);
+    let yp = man.path(&info.y);
+    let xb = std::fs::read(&xp).with_context(|| format!("read {}", xp.display()))?;
+    let yb = std::fs::read(&yp).with_context(|| format!("read {}", yp.display()))?;
+
+    let feat: usize = model.input_shape.iter().product();
+    let expect_x = info.n * feat * 4;
+    if xb.len() != expect_x {
+        return Err(anyhow!(
+            "{split} x: expected {expect_x} bytes (n={} feat={feat}), got {}",
+            info.n,
+            xb.len()
+        ));
+    }
+    if yb.len() != info.n * 4 {
+        return Err(anyhow!("{split} y: expected {} bytes, got {}", info.n * 4, yb.len()));
+    }
+
+    let x = xb
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let y = yb
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Split { x, y, n: info.n, feat })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_slicing() {
+        let s = Split {
+            x: (0..12).map(|i| i as f32).collect(),
+            y: vec![0, 1, 2],
+            n: 3,
+            feat: 4,
+        };
+        assert_eq!(s.sample(1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+}

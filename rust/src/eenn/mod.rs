@@ -1,0 +1,412 @@
+//! The produced EENN artifact and its adaptive inference engine.
+//!
+//! An [`EennSolution`] is what the NA flow emits: chosen exit
+//! locations, trained head weights, configured thresholds and the
+//! platform mapping. It serializes to JSON so the CLI can hand it
+//! from `augment` to `eval`/`serve`.
+//!
+//! [`StagedRunner`] executes the solution sample-by-sample through
+//! the per-block B=1 artifacts: run a subgraph, evaluate its exit
+//! head (the fused Pallas decision kernel), compare confidence
+//! against the threshold, terminate or continue — the runtime loop
+//! the paper deploys across processors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::{BoundHandle, Engine, HostTensor, Manifest, ModelInfo, WeightStore};
+use crate::util::json::Json;
+
+/// One early-exit classifier head (GAP -> dense, from the blueprint).
+#[derive(Debug, Clone)]
+pub struct ExitHead {
+    pub location: usize,
+    pub c: usize,
+    pub k: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// A fully-configured EENN: the NA flow's output.
+#[derive(Debug, Clone)]
+pub struct EennSolution {
+    pub model: String,
+    pub platform: String,
+    /// EE block boundaries, ascending.
+    pub exits: Vec<usize>,
+    /// Deployed thresholds (after any correction factor).
+    pub thresholds: Vec<f64>,
+    /// Thresholds as found by the search (before correction).
+    pub raw_thresholds: Vec<f64>,
+    pub correction_factor: f64,
+    pub heads: Vec<ExitHead>,
+    /// Expected termination mass per classifier (EEs then final) on
+    /// the calibration set.
+    pub expected_term_rates: Vec<f64>,
+    pub expected_acc: f64,
+    pub expected_mac_frac: f64,
+    /// Scalarized search score of this solution.
+    pub score: f64,
+}
+
+impl EennSolution {
+    pub fn to_json(&self) -> Json {
+        fn farr(v: &[f64]) -> Json {
+            Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+        }
+        fn f32arr(v: &[f32]) -> Json {
+            Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+        }
+        let mut m = BTreeMap::new();
+        m.insert("model".into(), Json::Str(self.model.clone()));
+        m.insert("platform".into(), Json::Str(self.platform.clone()));
+        m.insert(
+            "exits".into(),
+            Json::Arr(self.exits.iter().map(|&e| Json::Num(e as f64)).collect()),
+        );
+        m.insert("thresholds".into(), farr(&self.thresholds));
+        m.insert("raw_thresholds".into(), farr(&self.raw_thresholds));
+        m.insert("correction_factor".into(), Json::Num(self.correction_factor));
+        m.insert(
+            "heads".into(),
+            Json::Arr(
+                self.heads
+                    .iter()
+                    .map(|h| {
+                        let mut hm = BTreeMap::new();
+                        hm.insert("location".into(), Json::Num(h.location as f64));
+                        hm.insert("c".into(), Json::Num(h.c as f64));
+                        hm.insert("k".into(), Json::Num(h.k as f64));
+                        hm.insert("w".into(), f32arr(&h.w));
+                        hm.insert("b".into(), f32arr(&h.b));
+                        Json::Obj(hm)
+                    })
+                    .collect(),
+            ),
+        );
+        m.insert("expected_term_rates".into(), farr(&self.expected_term_rates));
+        m.insert("expected_acc".into(), Json::Num(self.expected_acc));
+        m.insert("expected_mac_frac".into(), Json::Num(self.expected_mac_frac));
+        m.insert("score".into(), Json::Num(self.score));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let f64s = |key: &str| -> Result<Vec<f64>> {
+            Ok(j.req(key)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("{key} not array"))?
+                .iter()
+                .filter_map(|v| v.as_f64())
+                .collect())
+        };
+        let mut heads = Vec::new();
+        for h in j
+            .req("heads")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("heads not array"))?
+        {
+            let fv = |key: &str| -> Result<Vec<f32>> {
+                Ok(h.req(key)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{key} not array"))?
+                    .iter()
+                    .filter_map(|v| v.as_f64().map(|x| x as f32))
+                    .collect())
+            };
+            heads.push(ExitHead {
+                location: h.req("location")?.as_usize().unwrap_or(0),
+                c: h.req("c")?.as_usize().unwrap_or(0),
+                k: h.req("k")?.as_usize().unwrap_or(0),
+                w: fv("w")?,
+                b: fv("b")?,
+            });
+        }
+        Ok(EennSolution {
+            model: j.req("model")?.as_str().unwrap_or_default().to_string(),
+            platform: j.req("platform")?.as_str().unwrap_or_default().to_string(),
+            exits: j.req("exits")?.usize_arr().unwrap_or_default(),
+            thresholds: f64s("thresholds")?,
+            raw_thresholds: f64s("raw_thresholds")?,
+            correction_factor: j.req("correction_factor")?.as_f64().unwrap_or(1.0),
+            heads,
+            expected_term_rates: f64s("expected_term_rates")?,
+            expected_acc: j.req("expected_acc")?.as_f64().unwrap_or(0.0),
+            expected_mac_frac: j.req("expected_mac_frac")?.as_f64().unwrap_or(1.0),
+            score: j.req("score")?.as_f64().unwrap_or(0.0),
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        std::fs::write(path.as_ref(), self.to_json().to_string())
+            .with_context(|| format!("write {}", path.as_ref().display()))
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read {}", path.as_ref().display()))?;
+        Self::from_json(&Json::parse(&text).map_err(|e| anyhow!("{e}"))?)
+    }
+}
+
+/// Per-sample adaptive inference outcome.
+#[derive(Debug, Clone)]
+pub struct InferResult {
+    /// Which classifier terminated: 0..exits.len() are EEs,
+    /// exits.len() is the final head.
+    pub exit_index: usize,
+    pub pred: i32,
+    pub conf: f32,
+    /// Blocks actually executed.
+    pub blocks_run: usize,
+    /// MACs actually spent (backbone through the terminating block +
+    /// every head evaluated on the way).
+    pub macs: u64,
+}
+
+/// Staged adaptive-inference engine over B=1 block/head artifacts.
+///
+/// Weights are uploaded to device buffers once (`Engine::bind`); the
+/// per-request path only moves the sample and the tiny GAP features.
+pub struct StagedRunner {
+    engine: Engine,
+    blocks: Vec<BoundHandle>,
+    /// Fused block+head executable at decision blocks (§Perf: one
+    /// PJRT dispatch per boundary instead of two). Indexed by block.
+    fused: Vec<Option<BoundHandle>>,
+    ee_heads: Vec<BoundHandle>,
+    final_head: BoundHandle,
+    pub solution: EennSolution,
+    input_shape: Vec<usize>,
+    block_macs: Vec<u64>,
+    head_macs: Vec<u64>,
+    final_head_macs: u64,
+    num_blocks: usize,
+}
+
+impl StagedRunner {
+    pub fn new(
+        engine: &Engine,
+        man: &Manifest,
+        model: &ModelInfo,
+        ws: &WeightStore,
+        solution: &EennSolution,
+    ) -> Result<Self> {
+        let mut blocks = Vec::with_capacity(model.blocks.len());
+        for blk in &model.blocks {
+            let exec = engine.compile(man.path(&blk.hlo_b1))?;
+            blocks.push(engine.bind(exec, ws.block_args(blk)?)?);
+        }
+        // fused block+head executables at the blocks where a
+        // classifier fires (EE boundaries + the final block)
+        let mut fused: Vec<Option<BoundHandle>> = vec![None; model.blocks.len()];
+        let mut decision_blocks: Vec<(usize, Vec<f32>, Vec<f32>, usize, usize)> = solution
+            .heads
+            .iter()
+            .map(|h| (h.location, h.w.clone(), h.b.clone(), h.c, h.k))
+            .collect();
+        decision_blocks.push((
+            model.blocks.len() - 1,
+            ws.get(&model.head_w)?.to_f32(),
+            ws.get(&model.head_b)?.to_f32(),
+            model.head_c,
+            model.num_classes,
+        ));
+        for (loc, w, b, c, k) in decision_blocks {
+            if let Some(path) = &model.blocks[loc].hlo_head_b1 {
+                let exec = engine.compile(man.path(path))?;
+                let mut consts = ws.block_args(&model.blocks[loc])?;
+                consts.push(HostTensor::f32(&[c, k], &w));
+                consts.push(HostTensor::f32(&[k], &b));
+                fused[loc] = Some(engine.bind(exec, consts)?);
+            }
+        }
+        let mut ee_heads = Vec::with_capacity(solution.heads.len());
+        for h in &solution.heads {
+            let exec = engine.compile(man.path(&model.heads[&h.c].hlo_b1))?;
+            let w = HostTensor::f32(&[h.c, h.k], &h.w);
+            let b = HostTensor::f32(&[h.k], &h.b);
+            ee_heads.push(engine.bind(exec, vec![w, b])?);
+        }
+        let final_exec = engine.compile(man.path(&model.heads[&model.head_c].hlo_b1))?;
+        let final_head = engine.bind(
+            final_exec,
+            vec![ws.get(&model.head_w)?.clone(), ws.get(&model.head_b)?.clone()],
+        )?;
+        Ok(StagedRunner {
+            engine: engine.clone(),
+            blocks,
+            fused,
+            ee_heads,
+            final_head,
+            solution: solution.clone(),
+            input_shape: model.input_shape.clone(),
+            block_macs: model.blocks.iter().map(|b| b.macs).collect(),
+            head_macs: solution.heads.iter().map(|h| (h.c * h.k) as u64).collect(),
+            final_head_macs: (model.head_c * model.num_classes) as u64,
+            num_blocks: model.blocks.len(),
+        })
+    }
+
+    /// Run one sample through the cascade.
+    pub fn infer(&self, x: &[f32]) -> Result<InferResult> {
+        let mut shape = vec![1usize];
+        shape.extend(&self.input_shape);
+        let mut ifm = HostTensor::f32(&shape, x);
+        let mut macs = 0u64;
+        let mut next_exit = 0usize;
+
+        for bi in 0..self.num_blocks {
+            let is_exit = next_exit < self.solution.exits.len()
+                && self.solution.exits[next_exit] == bi;
+            let is_final = bi == self.num_blocks - 1;
+
+            // fused single-dispatch path at decision blocks (§Perf)
+            if (is_exit || is_final) && self.fused[bi].is_some() {
+                let out = self
+                    .engine
+                    .run_bound(self.fused[bi].unwrap(), vec![ifm])?;
+                macs += self.block_macs[bi];
+                let conf = out[3].to_f32()[0];
+                let pred = out[4].to_i32()[0];
+                if is_exit {
+                    macs += self.head_macs[next_exit];
+                    if conf as f64 >= self.solution.thresholds[next_exit] {
+                        return Ok(InferResult {
+                            exit_index: next_exit,
+                            pred,
+                            conf,
+                            blocks_run: bi + 1,
+                            macs,
+                        });
+                    }
+                    next_exit += 1;
+                    if is_final {
+                        // decision head said continue, but there is no
+                        // deeper block: fall through to the final head
+                        let gap = &out[1];
+                        let hout =
+                            self.engine.run_bound(self.final_head, vec![gap.clone()])?;
+                        macs += self.final_head_macs;
+                        return Ok(InferResult {
+                            exit_index: self.solution.exits.len(),
+                            pred: hout[2].to_i32()[0],
+                            conf: hout[1].to_f32()[0],
+                            blocks_run: self.num_blocks,
+                            macs,
+                        });
+                    }
+                    ifm = out[0].clone();
+                    continue;
+                }
+                // final block with the backbone head fused in
+                macs += self.final_head_macs;
+                return Ok(InferResult {
+                    exit_index: self.solution.exits.len(),
+                    pred,
+                    conf,
+                    blocks_run: self.num_blocks,
+                    macs,
+                });
+            }
+
+            // two-dispatch fallback (artifacts without fused graphs)
+            let out = self.engine.run_bound(self.blocks[bi], vec![ifm])?;
+            macs += self.block_macs[bi];
+            ifm = out[0].clone();
+            let gap = &out[1];
+
+            if is_exit {
+                let hout = self
+                    .engine
+                    .run_bound(self.ee_heads[next_exit], vec![gap.clone()])?;
+                macs += self.head_macs[next_exit];
+                let conf = hout[1].to_f32()[0];
+                if conf as f64 >= self.solution.thresholds[next_exit] {
+                    return Ok(InferResult {
+                        exit_index: next_exit,
+                        pred: hout[2].to_i32()[0],
+                        conf,
+                        blocks_run: bi + 1,
+                        macs,
+                    });
+                }
+                next_exit += 1;
+            }
+
+            if is_final {
+                let hout = self.engine.run_bound(self.final_head, vec![gap.clone()])?;
+                macs += self.final_head_macs;
+                return Ok(InferResult {
+                    exit_index: self.solution.exits.len(),
+                    pred: hout[2].to_i32()[0],
+                    conf: hout[1].to_f32()[0],
+                    blocks_run: self.num_blocks,
+                    macs,
+                });
+            }
+        }
+        unreachable!("loop always returns at the final block")
+    }
+
+    /// Blocks (lo..=hi inclusive) of segment `seg` under the solution's
+    /// processor mapping.
+    pub fn segment(&self, seg: usize) -> (usize, usize) {
+        crate::sim::Mapping { exits: self.solution.exits.clone() }
+            .segment(seg, self.num_blocks)
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.num_blocks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_solution() -> EennSolution {
+        EennSolution {
+            model: "m".into(),
+            platform: "p".into(),
+            exits: vec![1, 3],
+            thresholds: vec![0.6, 0.7],
+            raw_thresholds: vec![0.6, 0.7],
+            correction_factor: 1.0,
+            heads: vec![ExitHead {
+                location: 1,
+                c: 2,
+                k: 3,
+                w: vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6],
+                b: vec![0.0, 0.1, 0.2],
+            }],
+            expected_term_rates: vec![0.5, 0.3, 0.2],
+            expected_acc: 0.9,
+            expected_mac_frac: 0.55,
+            score: 0.51,
+        }
+    }
+
+    #[test]
+    fn solution_json_roundtrip() {
+        let s = sample_solution();
+        let j = s.to_json();
+        let r = EennSolution::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(r.exits, s.exits);
+        assert_eq!(r.thresholds, s.thresholds);
+        assert_eq!(r.heads.len(), 1);
+        assert_eq!(r.heads[0].w, s.heads[0].w);
+        assert!((r.expected_acc - s.expected_acc).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solution_file_roundtrip() {
+        let s = sample_solution();
+        let p = std::env::temp_dir().join("eenn_sol_test.json");
+        s.save(&p).unwrap();
+        let r = EennSolution::load(&p).unwrap();
+        assert_eq!(r.exits, s.exits);
+        assert_eq!(r.correction_factor, 1.0);
+    }
+}

@@ -1,0 +1,391 @@
+//! Fine-grained, layer-level graph representation (paper §3.1).
+//!
+//! The NA flow uses two views of the input model: this layer-level
+//! graph — used to estimate inference cost and to extract the
+//! classifier blueprint the EE branches are derived from — and the
+//! coarse block-level graph ([`super::BlockGraph`]) obtained by a
+//! **fusion pass** that collapses residual bodies into single nodes
+//! and folds post-processing (bias/activation) into their compute
+//! layers. The paper's claim that fusion "reduces the number of
+//! locations that need to be evaluated without impacting the quality
+//! of the found architectures" is checked by the tests: fused costs
+//! must equal the sum of the fine costs they absorb.
+
+use super::{BlockCost, BlockGraph};
+
+/// One fine-grained layer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    /// 2-D convolution: kernel (kh, kw), stride, padding, channels.
+    Conv2d { kh: usize, kw: usize, stride: usize, cin: usize, cout: usize },
+    /// Depthwise 2-D convolution.
+    DwConv2d { k: usize, stride: usize, c: usize },
+    /// 1-D convolution.
+    Conv1d { k: usize, stride: usize, cin: usize, cout: usize },
+    /// Dense (pointwise / classifier) layer.
+    Dense { cin: usize, cout: usize },
+    /// Bias add (post-processing; fused into the preceding compute).
+    Bias { c: usize },
+    /// Activation (post-processing; fused into the preceding compute).
+    Relu,
+    /// Residual add joining a skip edge.
+    Add,
+    /// Global average pooling.
+    Gap,
+    /// Softmax (classifier post-processing).
+    Softmax,
+}
+
+/// A node of the fine graph: a layer plus its input spatial extent.
+#[derive(Debug, Clone)]
+pub struct FineNode {
+    pub layer: Layer,
+    /// Spatial element count at the node input (H*W for 2-D, L for 1-D,
+    /// 1 for dense-on-features).
+    pub spatial_in: usize,
+    /// Marks the *end* of a coarse block (residual join or block
+    /// boundary) — where the fusion pass may cut.
+    pub block_end: bool,
+    pub name: String,
+}
+
+impl FineNode {
+    /// Analytic MAC cost of this layer (the paper's simple
+    /// approximation; bias/activation/pooling are counted as zero-MAC
+    /// post-processing, as in the paper's cost model).
+    pub fn macs(&self) -> u64 {
+        let spatial_out = |stride: usize| self.spatial_in / (stride * stride).max(1);
+        match &self.layer {
+            Layer::Conv2d { kh, kw, stride, cin, cout } => {
+                (spatial_out(*stride) * kh * kw * cin * cout) as u64
+            }
+            Layer::DwConv2d { k, stride, c } => (spatial_out(*stride) * k * k * c) as u64,
+            Layer::Conv1d { k, stride, cin, cout } => {
+                ((self.spatial_in / stride.max(&1)) * k * cin * cout) as u64
+            }
+            Layer::Dense { cin, cout } => (self.spatial_in * cin * cout) as u64,
+            Layer::Bias { .. }
+            | Layer::Relu
+            | Layer::Add
+            | Layer::Gap
+            | Layer::Softmax => 0,
+        }
+    }
+
+    pub fn param_count(&self) -> u64 {
+        match &self.layer {
+            Layer::Conv2d { kh, kw, cin, cout, .. } => (kh * kw * cin * cout) as u64,
+            Layer::DwConv2d { k, c, .. } => (k * k * c) as u64,
+            Layer::Conv1d { k, cin, cout, .. } => (k * cin * cout) as u64,
+            Layer::Dense { cin, cout } => (cin * cout) as u64,
+            Layer::Bias { c } => *c as u64,
+            _ => 0,
+        }
+    }
+
+    fn out_channels(&self) -> Option<usize> {
+        match &self.layer {
+            Layer::Conv2d { cout, .. }
+            | Layer::Conv1d { cout, .. }
+            | Layer::Dense { cout, .. } => Some(*cout),
+            Layer::DwConv2d { c, .. } | Layer::Bias { c } => Some(*c),
+            _ => None,
+        }
+    }
+}
+
+/// The fine graph: a layer chain with skip edges implied by `Add`
+/// nodes (sufficient for the sequential-with-residuals models the
+/// paper converts).
+#[derive(Debug, Clone)]
+pub struct FineGraph {
+    pub model: String,
+    pub num_classes: usize,
+    pub nodes: Vec<FineNode>,
+}
+
+/// The classifier blueprint extracted from the fine graph: the
+/// trailing GAP -> dense(-> softmax) chain that every EE branch is
+/// derived from (paper: "the architecture of each EE is based on the
+/// classifier blueprint extracted from the backbone model").
+#[derive(Debug, Clone, PartialEq)]
+pub struct Blueprint {
+    pub pooled: bool,
+    pub hidden: Vec<usize>,
+    pub num_classes: usize,
+}
+
+impl FineGraph {
+    /// A CIFAR-style ResNet fine graph (depth 6n+2), mirroring
+    /// `BlockGraph::synthetic_resnet` at layer granularity.
+    pub fn synthetic_resnet(num_classes: usize, n: usize) -> Self {
+        let widths = [16usize, 32, 64];
+        let mut nodes = Vec::new();
+        let mut hw = 32usize;
+        let mut cin = 3usize;
+        // stem: conv + bias + relu
+        nodes.push(FineNode {
+            layer: Layer::Conv2d { kh: 3, kw: 3, stride: 1, cin, cout: widths[0] },
+            spatial_in: hw * hw,
+            block_end: false,
+            name: "stem.conv".into(),
+        });
+        nodes.push(FineNode {
+            layer: Layer::Bias { c: widths[0] },
+            spatial_in: hw * hw,
+            block_end: false,
+            name: "stem.bias".into(),
+        });
+        nodes.push(FineNode {
+            layer: Layer::Relu,
+            spatial_in: hw * hw,
+            block_end: true,
+            name: "stem.relu".into(),
+        });
+        cin = widths[0];
+        for (si, &w) in widths.iter().enumerate() {
+            for bi in 0..n {
+                let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+                let in_hw = hw;
+                if stride == 2 {
+                    hw /= 2;
+                }
+                let base = format!("s{si}b{bi}");
+                nodes.push(FineNode {
+                    layer: Layer::Conv2d { kh: 3, kw: 3, stride, cin, cout: w },
+                    spatial_in: in_hw * in_hw,
+                    block_end: false,
+                    name: format!("{base}.conv1"),
+                });
+                nodes.push(FineNode {
+                    layer: Layer::Bias { c: w },
+                    spatial_in: hw * hw,
+                    block_end: false,
+                    name: format!("{base}.bias1"),
+                });
+                nodes.push(FineNode {
+                    layer: Layer::Relu,
+                    spatial_in: hw * hw,
+                    block_end: false,
+                    name: format!("{base}.relu1"),
+                });
+                nodes.push(FineNode {
+                    layer: Layer::Conv2d { kh: 3, kw: 3, stride: 1, cin: w, cout: w },
+                    spatial_in: hw * hw,
+                    block_end: false,
+                    name: format!("{base}.conv2"),
+                });
+                nodes.push(FineNode {
+                    layer: Layer::Bias { c: w },
+                    spatial_in: hw * hw,
+                    block_end: false,
+                    name: format!("{base}.bias2"),
+                });
+                if stride == 2 || cin != w {
+                    nodes.push(FineNode {
+                        layer: Layer::Conv2d { kh: 1, kw: 1, stride, cin, cout: w },
+                        spatial_in: in_hw * in_hw,
+                        block_end: false,
+                        name: format!("{base}.proj"),
+                    });
+                    nodes.push(FineNode {
+                        layer: Layer::Bias { c: w },
+                        spatial_in: hw * hw,
+                        block_end: false,
+                        name: format!("{base}.projbias"),
+                    });
+                }
+                nodes.push(FineNode {
+                    layer: Layer::Add,
+                    spatial_in: hw * hw,
+                    block_end: false,
+                    name: format!("{base}.add"),
+                });
+                nodes.push(FineNode {
+                    layer: Layer::Relu,
+                    spatial_in: hw * hw,
+                    block_end: true,
+                    name: format!("{base}.relu"),
+                });
+                cin = w;
+            }
+        }
+        // classifier: gap + dense + bias + softmax
+        nodes.push(FineNode {
+            layer: Layer::Gap,
+            spatial_in: hw * hw,
+            block_end: false,
+            name: "head.gap".into(),
+        });
+        nodes.push(FineNode {
+            layer: Layer::Dense { cin, cout: num_classes },
+            spatial_in: 1,
+            block_end: false,
+            name: "head.dense".into(),
+        });
+        nodes.push(FineNode {
+            layer: Layer::Bias { c: num_classes },
+            spatial_in: 1,
+            block_end: false,
+            name: "head.bias".into(),
+        });
+        nodes.push(FineNode {
+            layer: Layer::Softmax,
+            spatial_in: 1,
+            block_end: true,
+            name: "head.softmax".into(),
+        });
+        FineGraph { model: format!("fine_resnet_{}", 6 * n + 2), num_classes, nodes }
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(|n| n.macs()).sum()
+    }
+
+    /// Extract the classifier blueprint: the trailing GAP->dense chain.
+    pub fn blueprint(&self) -> Blueprint {
+        let mut pooled = false;
+        let mut hidden = Vec::new();
+        for node in &self.nodes {
+            match &node.layer {
+                Layer::Gap => {
+                    pooled = true;
+                    hidden.clear();
+                }
+                Layer::Dense { cout, .. } if pooled => hidden.push(*cout),
+                _ => {}
+            }
+        }
+        // the last dense width is the class count, not a hidden layer
+        let num_classes = hidden.pop().unwrap_or(self.num_classes);
+        Blueprint { pooled, hidden, num_classes }
+    }
+
+    /// The fusion pass: fine graph -> coarse block graph. Cuts at
+    /// `block_end` markers; each coarse node absorbs the MACs/params
+    /// of all fused fine layers. The classifier tail (after the last
+    /// backbone boundary) is not a block — it is the blueprint.
+    pub fn fuse(&self) -> BlockGraph {
+        let mut blocks = Vec::new();
+        let mut macs = 0u64;
+        let mut params = 0u64;
+        let mut last_c = 0usize;
+        let mut last_spatial;
+        let mut first = None::<usize>;
+        for (i, node) in self.nodes.iter().enumerate() {
+            if matches!(node.layer, Layer::Gap) {
+                break; // classifier tail
+            }
+            first.get_or_insert(i);
+            macs += node.macs();
+            params += node.param_count();
+            if let Some(c) = node.out_channels() {
+                last_c = c;
+            }
+            last_spatial = match &node.layer {
+                Layer::Conv2d { stride, .. } | Layer::DwConv2d { stride, .. } => {
+                    node.spatial_in / (stride * stride).max(1)
+                }
+                Layer::Conv1d { stride, .. } => node.spatial_in / stride.max(&1),
+                _ => node.spatial_in,
+            };
+            if node.block_end {
+                let ifm = (last_spatial * last_c * 4) as u64;
+                blocks.push(BlockCost {
+                    name: self.nodes[first.unwrap()]
+                        .name
+                        .split('.')
+                        .next()
+                        .unwrap_or("blk")
+                        .to_string(),
+                    macs,
+                    param_bytes: params * 4,
+                    ifm_bytes: ifm,
+                    // input+output activation footprint of the block
+                    act_bytes: ifm * 2,
+                    gap_dim: last_c,
+                });
+                macs = 0;
+                params = 0;
+                first = None;
+            }
+        }
+        let ee_locations = (1..blocks.len().saturating_sub(1)).collect();
+        BlockGraph {
+            model: self.model.clone(),
+            num_classes: self.num_classes,
+            blocks,
+            ee_locations,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fused_blocks_preserve_total_cost() {
+        // the paper's fusion claim: collapsing layers into blocks must
+        // not change the estimated inference cost
+        for n in [2usize, 3, 25] {
+            let fine = FineGraph::synthetic_resnet(10, n);
+            let coarse = fine.fuse();
+            let fine_backbone: u64 = fine
+                .nodes
+                .iter()
+                .take_while(|nd| !matches!(nd.layer, Layer::Gap))
+                .map(|nd| nd.macs())
+                .sum();
+            let coarse_backbone: u64 = coarse.blocks.iter().map(|b| b.macs).sum();
+            assert_eq!(fine_backbone, coarse_backbone, "n={n}");
+        }
+    }
+
+    #[test]
+    fn fused_graph_matches_synthetic_block_graph() {
+        // the fusion pass must reproduce the hand-built coarse graph
+        let fine = FineGraph::synthetic_resnet(10, 25).fuse();
+        let coarse = BlockGraph::synthetic_resnet(10, 25);
+        assert_eq!(fine.blocks.len(), coarse.blocks.len());
+        assert_eq!(fine.ee_locations.len(), coarse.ee_locations.len());
+        for (a, b) in fine.blocks.iter().zip(&coarse.blocks) {
+            assert_eq!(a.macs, b.macs, "{}", a.name);
+            assert_eq!(a.gap_dim, b.gap_dim, "{}", a.name);
+            // params: the fine view additionally counts bias vectors,
+            // which the hand-built coarse graph omits
+            assert!(a.param_bytes >= b.param_bytes, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn fusion_reduces_search_locations() {
+        // 76 blocks worth of ~8 layers each collapse to 74 EE sites
+        let fine = FineGraph::synthetic_resnet(10, 25);
+        let coarse = fine.fuse();
+        assert!(fine.nodes.len() > 500);
+        assert_eq!(coarse.ee_locations.len(), 74);
+    }
+
+    #[test]
+    fn blueprint_is_gap_dense() {
+        let fine = FineGraph::synthetic_resnet(100, 3);
+        let bp = fine.blueprint();
+        assert!(bp.pooled);
+        assert!(bp.hidden.is_empty());
+        assert_eq!(bp.num_classes, 100);
+    }
+
+    #[test]
+    fn post_processing_layers_are_zero_mac() {
+        let fine = FineGraph::synthetic_resnet(10, 2);
+        for nd in &fine.nodes {
+            if matches!(
+                nd.layer,
+                Layer::Bias { .. } | Layer::Relu | Layer::Add | Layer::Gap | Layer::Softmax
+            ) {
+                assert_eq!(nd.macs(), 0, "{}", nd.name);
+            }
+        }
+    }
+}

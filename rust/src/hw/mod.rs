@@ -1,0 +1,218 @@
+//! Hardware description consumed by the NA flow (the paper's "simple
+//! hardware description for each processor": MAC throughput, memory,
+//! interconnect speed, power states) plus platform presets modeling
+//! the paper's testbeds.
+//!
+//! These are *analytic device models*, not cycle simulators — exactly
+//! the level of fidelity the paper itself uses (its energy numbers are
+//! datasheet-power × measured-runtime estimates, and its search-time
+//! cost model is MACs / MACs-per-second).
+
+/// One processing target, in platform usage order.
+#[derive(Debug, Clone)]
+pub struct Processor {
+    pub name: String,
+    /// Sustained multiply-accumulate throughput.
+    pub macs_per_sec: f64,
+    /// Power while executing, milliwatts.
+    pub active_mw: f64,
+    /// Power while parked in its sleep state, milliwatts.
+    pub sleep_mw: f64,
+    /// Memory budget for parameters + peak activations, bytes.
+    pub mem_bytes: u64,
+}
+
+/// Connection from processor i to processor i+1.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub name: String,
+    pub bandwidth_bps: f64,
+    pub latency_s: f64,
+    /// Power drawn while transferring, milliwatts.
+    pub active_mw: f64,
+}
+
+impl Link {
+    pub fn transfer_s(&self, bytes: u64) -> f64 {
+        self.latency_s + (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: String,
+    pub processors: Vec<Processor>,
+    /// links[i] connects processors[i] -> processors[i+1].
+    pub links: Vec<Link>,
+    /// Single-ported shared memory: only one processor may be active
+    /// at a time (the PSoC6 constraint from the paper's §4).
+    pub exclusive_memory: bool,
+}
+
+impl Platform {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.processors.is_empty() {
+            anyhow::bail!("platform has no processors");
+        }
+        if self.links.len() + 1 != self.processors.len() {
+            anyhow::bail!(
+                "platform {}: {} processors need {} links, have {}",
+                self.name,
+                self.processors.len(),
+                self.processors.len() - 1,
+                self.links.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Maximum classifier count the paper permits: one per processor.
+    pub fn max_classifiers(&self) -> usize {
+        self.processors.len()
+    }
+}
+
+pub mod presets {
+    use super::*;
+
+    /// Infineon PSoC6 (CY8C624A): Cortex-M0+ @100 MHz always-on +
+    /// Cortex-M4F @150 MHz, 1 MB single-ported SRAM, 2 MB flash.
+    ///
+    /// MAC rates are the paper's own estimates (10 / 75 MMAC/s).
+    /// Active powers are back-derived from the paper's measured
+    /// runtime/energy pairs (M0: 18.53 mJ / 967.99 ms = 19.1 mW;
+    /// M4F: 16.65 mJ / 521 ms = 32.0 mW); sleep power from the
+    /// datasheet's deep-sleep figures.
+    pub fn psoc6() -> Platform {
+        Platform {
+            name: "psoc6".into(),
+            processors: vec![
+                Processor {
+                    name: "cortex-m0p".into(),
+                    macs_per_sec: 10e6,
+                    active_mw: 19.1,
+                    sleep_mw: 0.02,
+                    mem_bytes: 288 * 1024, // M0 share of SRAM + flash budget
+                },
+                Processor {
+                    name: "cortex-m4f".into(),
+                    macs_per_sec: 75e6,
+                    active_mw: 32.0,
+                    sleep_mw: 0.02,
+                    mem_bytes: 736 * 1024,
+                },
+            ],
+            links: vec![Link {
+                name: "sram".into(),
+                // single-ported SRAM moved at its theoretical speed
+                // (the paper's choice of interconnect estimate)
+                bandwidth_bps: 3.2e9,
+                latency_s: 0.0,
+                active_mw: 5.0,
+            }],
+            exclusive_memory: true,
+        }
+    }
+
+    /// Rockchip RK3588 (CPU cluster treated as one target + Mali G610)
+    /// with a 50 Mbps LTE uplink to an RTX-3090-Ti-class workstation.
+    ///
+    /// Mali throughput back-derived from the paper's single-processor
+    /// baseline (358.7 MMAC in 16.2 ms ≈ 22 GMAC/s); CPU cluster set
+    /// to a conservative fraction; cloud GPU effective small-batch
+    /// throughput rather than peak.
+    pub fn rk3588_cloud() -> Platform {
+        Platform {
+            name: "rk3588+cloud".into(),
+            processors: vec![
+                Processor {
+                    name: "a76x4+a55x4".into(),
+                    macs_per_sec: 8e9,
+                    active_mw: 4800.0,
+                    sleep_mw: 150.0,
+                    mem_bytes: 8 * 1024 * 1024 * 1024,
+                },
+                Processor {
+                    name: "mali-g610".into(),
+                    macs_per_sec: 22e9,
+                    active_mw: 6000.0,
+                    sleep_mw: 80.0,
+                    mem_bytes: 8 * 1024 * 1024 * 1024,
+                },
+                Processor {
+                    name: "rtx3090ti".into(),
+                    macs_per_sec: 2e12,
+                    active_mw: 350_000.0,
+                    sleep_mw: 0.0, // remote: not in the device energy budget
+                    mem_bytes: 24 * 1024 * 1024 * 1024,
+                },
+            ],
+            links: vec![
+                Link {
+                    name: "dram".into(),
+                    bandwidth_bps: 100e9,
+                    latency_s: 0.0,
+                    active_mw: 200.0,
+                },
+                Link {
+                    name: "lte-50mbps".into(),
+                    bandwidth_bps: 50e6,
+                    latency_s: 0.010,
+                    active_mw: 2500.0,
+                },
+            ],
+            exclusive_memory: false,
+        }
+    }
+
+    /// Single-processor platform wrapping one device (baseline target).
+    pub fn single(proc: Processor) -> Platform {
+        Platform {
+            name: format!("single-{}", proc.name),
+            processors: vec![proc],
+            links: vec![],
+            exclusive_memory: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        presets::psoc6().validate().unwrap();
+        presets::rk3588_cloud().validate().unwrap();
+    }
+
+    #[test]
+    fn psoc6_matches_paper_regime() {
+        let p = presets::psoc6();
+        // M4F ~7.5x faster than M0 (75 vs 10 MMAC/s)
+        let r = p.processors[1].macs_per_sec / p.processors[0].macs_per_sec;
+        assert!((r - 7.5).abs() < 1e-9);
+        assert!(p.exclusive_memory);
+        assert_eq!(p.max_classifiers(), 2);
+    }
+
+    #[test]
+    fn link_transfer_time() {
+        let l = Link {
+            name: "t".into(),
+            bandwidth_bps: 50e6,
+            latency_s: 0.01,
+            active_mw: 0.0,
+        };
+        // 625 kB over 50 Mbps = 100 ms + 10 ms latency
+        let s = l.transfer_s(625_000);
+        assert!((s - 0.11).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn invalid_platform_rejected() {
+        let mut p = presets::psoc6();
+        p.links.clear();
+        assert!(p.validate().is_err());
+    }
+}

@@ -1,0 +1,47 @@
+//! # eenn-na — Post-Training Augmentation for Adaptive Inference
+//!
+//! Reproduction of *"Efficient Post-Training Augmentation for Adaptive
+//! Inference in Heterogeneous and Distributed IoT Environments"*
+//! (Sponner et al., 2024) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The library converts an AOT-exported pretrained model into an
+//! Early-Exit Neural Network: it enumerates EE architectures on the
+//! coarse block graph, trains candidate exits on frozen backbone
+//! features via PJRT-executed train-step artifacts, configures the
+//! exit-wise confidence thresholds by shortest-path search on a
+//! threshold graph (Bellman-Ford), maps subgraphs onto a heterogeneous
+//! or distributed platform, and serves adaptive inference through a
+//! distributed coordinator — with Python never on the search or
+//! request path.
+//!
+//! ```no_run
+//! use eenn_na::prelude::*;
+//!
+//! let engine = Engine::new().unwrap();
+//! let manifest = Manifest::load("artifacts").unwrap();
+//! let platform = hw::presets::psoc6();
+//! let cfg = na::FlowConfig::default();
+//! let out = na::augment(&engine, &manifest, "dscnn", &platform, &cfg).unwrap();
+//! println!("exits at {:?}, thresholds {:?}", out.solution.exits, out.solution.thresholds);
+//! ```
+
+pub mod coordinator;
+pub mod data;
+pub mod eenn;
+pub mod graph;
+pub mod hw;
+pub mod metrics;
+pub mod na;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub mod prelude {
+    pub use crate::eenn::EennSolution;
+    pub use crate::graph::BlockGraph;
+    pub use crate::hw::{self, Platform};
+    pub use crate::na;
+    pub use crate::runtime::{Engine, HostTensor, Manifest};
+    pub use crate::sim::{simulate, Mapping};
+}

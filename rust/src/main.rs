@@ -1,0 +1,259 @@
+//! `repro` — CLI for the eenn-na reproduction.
+//!
+//! Subcommands:
+//!   info                         manifest + artifact summary
+//!   augment --model M            run the NA flow, save the solution
+//!   eval    --model M --solution S   Table-2-style evaluation
+//!   serve   --model M --solution S   distributed serving simulation
+//!   report table2|fig4           regenerate paper artifacts
+
+use anyhow::{anyhow, Result};
+
+use eenn_na::coordinator::{serve, ServeConfig};
+use eenn_na::data::load_split;
+use eenn_na::eenn::EennSolution;
+use eenn_na::na::{self, Calibration, EdgeModel, FlowConfig, Solver};
+use eenn_na::report;
+use eenn_na::runtime::{Engine, Manifest, WeightStore};
+use eenn_na::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.str("artifacts", "artifacts")
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("help");
+    match cmd {
+        "info" => info(&args),
+        "augment" => augment(&args),
+        "eval" => eval(&args),
+        "serve" => serve_cmd(&args),
+        "report" => report_cmd(&args),
+        _ => {
+            println!(
+                "usage: repro <info|augment|eval|serve|report> [--artifacts DIR]\n\
+                 \n\
+                 repro augment --model dscnn [--calibration val|train --factor 1.0]\n\
+                 \x20             [--w-eff 0.9 --w-acc 0.1 --latency 2.5]\n\
+                 \x20             [--solver bf|dijkstra|exhaustive] [--out sol.json]\n\
+                 repro eval    --model dscnn --solution sol.json\n\
+                 repro serve   --model dscnn --solution sol.json [--rate 10 --n 200]\n\
+                 repro report  table2|fig4 [--model NAME]"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    let man = Manifest::load(artifacts_dir(args))?;
+    println!("artifacts: {} (eval batch {})", man.root.display(), man.eval_batch);
+    for (name, m) in &man.models {
+        println!(
+            "  {name}: task={} K={} blocks={} ee_locs={:?} total={} test_acc={:.4}",
+            m.task,
+            m.num_classes,
+            m.blocks.len(),
+            m.ee_locations,
+            eenn_na::util::stats::eng(m.total_macs() as f64),
+            m.test_acc
+        );
+    }
+    Ok(())
+}
+
+fn flow_config(args: &Args, task: &str) -> FlowConfig {
+    let calibration = match args.str("calibration", "val").as_str() {
+        "train" => Calibration::TrainFallback { factor: args.f64("factor", 1.0) },
+        _ => Calibration::ValSplit,
+    };
+    let solver = match args.str("solver", "bf").as_str() {
+        "dijkstra" => Solver::Dijkstra,
+        "exhaustive" => Solver::Exhaustive,
+        _ => Solver::BellmanFord,
+    };
+    let edge_model = match args.str("edge-model", "pairwise").as_str() {
+        "independent" => EdgeModel::Independent,
+        _ => EdgeModel::Pairwise,
+    };
+    FlowConfig {
+        calibration,
+        latency_constraint_s: args
+            .f64("latency", report::latency_constraint_for_task(task)),
+        w_eff: args.f64("w-eff", 0.9),
+        w_acc: args.f64("w-acc", 0.1),
+        solver,
+        edge_model,
+        refine: !args.bool("no-refine"),
+        finetune_epochs: args.usize("finetune", 0),
+        verbose: args.bool("verbose"),
+        ..FlowConfig::default()
+    }
+}
+
+fn augment(args: &Args) -> Result<()> {
+    let man = Manifest::load(artifacts_dir(args))?;
+    let model_name = args
+        .opt("model")
+        .ok_or_else(|| anyhow!("--model required"))?;
+    let model = man.model(model_name)?;
+    let platform = report::platform_for_task(&model.task);
+    let cfg = flow_config(args, &model.task);
+    let engine = Engine::new()?;
+    let out = na::augment(&engine, &man, model_name, &platform, &cfg)?;
+    println!(
+        "solution: exits {:?} thresholds {:?} (score {:.4})",
+        out.solution.exits, out.solution.thresholds, out.solution.score
+    );
+    println!(
+        "search: {:.1}s total ({:.1}s features, {:.1}s exit training, {:.2}s thresholds); \
+         {} candidates, {} configs covered",
+        out.report.total_s,
+        out.report.feature_cache_s,
+        out.report.exit_training_s,
+        out.report.threshold_search_s,
+        out.report.prune.kept,
+        out.report.evaluated_configs
+    );
+    let path = args.str("out", &format!("{model_name}_solution.json"));
+    out.solution.save(&path)?;
+    println!("saved -> {path}");
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let man = Manifest::load(artifacts_dir(args))?;
+    let model_name = args
+        .opt("model")
+        .ok_or_else(|| anyhow!("--model required"))?;
+    let model = man.model(model_name)?;
+    let sol = EennSolution::load(args.str(
+        "solution",
+        &format!("{model_name}_solution.json"),
+    ))?;
+    let platform = report::platform_for_task(&model.task);
+    let engine = Engine::new()?;
+    let eenn = report::evaluate_solution(&engine, &man, model, &sol, &platform)?;
+    let base = report::baseline_eval(&engine, &man, model, &platform)?;
+    report::Table2Row {
+        model: model_name.into(),
+        calibration: format!("file({})", sol.correction_factor),
+        exits: sol.exits.clone(),
+        thresholds: sol.thresholds.clone(),
+        search_s: 0.0,
+        train_s: model.train_seconds,
+        eenn,
+        base,
+    }
+    .print();
+    Ok(())
+}
+
+fn serve_cmd(args: &Args) -> Result<()> {
+    let man = Manifest::load(artifacts_dir(args))?;
+    let model_name = args
+        .opt("model")
+        .ok_or_else(|| anyhow!("--model required"))?;
+    let model = man.model(model_name)?;
+    let sol = EennSolution::load(args.str(
+        "solution",
+        &format!("{model_name}_solution.json"),
+    ))?;
+    let platform = report::platform_for_task(&model.task);
+    let engine = Engine::new()?;
+    let ws = WeightStore::load(&man, model)?;
+    let test = load_split(&man, model, "test")?;
+    let cfg = ServeConfig {
+        arrival_rate_hz: args.f64("rate", 10.0),
+        n_requests: args.usize("n", 200),
+        queue_cap: args.usize("queue", 64),
+        batch_max: args.usize("batch", 8),
+        seed: args.usize("seed", 0) as u64,
+    };
+    let m = serve(&engine, &man, model, &ws, &sol, &platform, &test, &cfg)?;
+    println!(
+        "completed {}/{} (dropped {}), wall {:.2}s, {:.1} req/s",
+        m.completed,
+        cfg.n_requests,
+        m.dropped,
+        m.wall_s,
+        m.throughput_rps
+    );
+    println!(
+        "sim latency  p50 {:.4}s p90 {:.4}s p99 {:.4}s",
+        m.sim_latency.p50, m.sim_latency.p90, m.sim_latency.p99
+    );
+    println!(
+        "wall latency p50 {:.4}s p99 {:.4}s",
+        m.wall_latency.p50, m.wall_latency.p99
+    );
+    println!(
+        "mean energy {:.2}mJ, term hist {:?}, acc {:.4}",
+        m.mean_energy_mj, m.term_hist, m.quality.accuracy
+    );
+    Ok(())
+}
+
+fn report_cmd(args: &Args) -> Result<()> {
+    let what = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("report <table2|fig4>"))?;
+    let man = Manifest::load(artifacts_dir(args))?;
+    let engine = Engine::new()?;
+    match what {
+        "table2" => {
+            let models: Vec<String> = match args.opt("model") {
+                Some(m) => vec![m.to_string()],
+                None => man.models.keys().cloned().collect(),
+            };
+            for name in models {
+                let model = man.model(&name)?;
+                for (label, cal) in report::calibrations_for_task(&model.task) {
+                    let row = report::table2_row(
+                        &engine,
+                        &man,
+                        &name,
+                        &label,
+                        cal,
+                        args.bool("verbose"),
+                    )?;
+                    row.print();
+                }
+            }
+        }
+        "fig4" => {
+            let models: Vec<String> = match args.opt("model") {
+                Some(m) => vec![m.to_string()],
+                None => man.models.keys().cloned().collect(),
+            };
+            println!("{:<24} {:>10} {:>10} {:>10}", "series", "mac-red%", "acc-delta", "early%");
+            for name in models {
+                for p in report::fig4_series(&engine, &man, &name)? {
+                    println!(
+                        "{:<24} {:>10.2} {:>10.2} {:>10.2}",
+                        format!("{name}/{}", p.label),
+                        p.mac_reduction_pct,
+                        p.acc_delta_pct,
+                        p.early_term_pct
+                    );
+                }
+            }
+        }
+        other => return Err(anyhow!("unknown report {other:?}")),
+    }
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! Classification metrics: accuracy, macro precision/recall, confusion
+//! matrix — the quantities Table 2 reports per created EENN.
+
+#[derive(Debug, Clone)]
+pub struct Confusion {
+    pub k: usize,
+    /// m[actual * k + predicted]
+    pub m: Vec<u64>,
+}
+
+impl Confusion {
+    pub fn new(k: usize) -> Self {
+        Confusion { k, m: vec![0; k * k] }
+    }
+
+    pub fn add(&mut self, actual: usize, predicted: usize) {
+        assert!(actual < self.k && predicted < self.k);
+        self.m[actual * self.k + predicted] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.m.iter().sum()
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let correct: u64 = (0..self.k).map(|i| self.m[i * self.k + i]).sum();
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        correct as f64 / total as f64
+    }
+
+    /// Macro-averaged precision over classes that were ever predicted
+    /// or present (absent classes are skipped, matching scikit's
+    /// zero_division behaviour closely enough for trend comparison).
+    pub fn macro_precision(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut cnt = 0usize;
+        for c in 0..self.k {
+            let tp = self.m[c * self.k + c] as f64;
+            let pred: u64 = (0..self.k).map(|a| self.m[a * self.k + c]).sum();
+            let actual: u64 = (0..self.k).map(|p| self.m[c * self.k + p]).sum();
+            if pred == 0 && actual == 0 {
+                continue;
+            }
+            sum += if pred == 0 { 0.0 } else { tp / pred as f64 };
+            cnt += 1;
+        }
+        if cnt == 0 {
+            0.0
+        } else {
+            sum / cnt as f64
+        }
+    }
+
+    pub fn macro_recall(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut cnt = 0usize;
+        for c in 0..self.k {
+            let tp = self.m[c * self.k + c] as f64;
+            let actual: u64 = (0..self.k).map(|p| self.m[c * self.k + p]).sum();
+            if actual == 0 {
+                continue;
+            }
+            sum += tp / actual as f64;
+            cnt += 1;
+        }
+        if cnt == 0 {
+            0.0
+        } else {
+            sum / cnt as f64
+        }
+    }
+}
+
+/// Full quality metrics of an evaluated (E)ENN on a test set.
+#[derive(Debug, Clone, Default)]
+pub struct Quality {
+    pub accuracy: f64,
+    pub precision: f64,
+    pub recall: f64,
+}
+
+impl Quality {
+    pub fn from_confusion(c: &Confusion) -> Self {
+        Quality {
+            accuracy: c.accuracy(),
+            precision: c.macro_precision(),
+            recall: c.macro_recall(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_classifier() {
+        let mut c = Confusion::new(3);
+        for i in 0..3 {
+            for _ in 0..10 {
+                c.add(i, i);
+            }
+        }
+        assert_eq!(c.accuracy(), 1.0);
+        assert_eq!(c.macro_precision(), 1.0);
+        assert_eq!(c.macro_recall(), 1.0);
+    }
+
+    #[test]
+    fn known_confusion() {
+        // class 0: 8 right, 2 -> 1 ; class 1: 10 right ; class 2: 5 right, 5 -> 0
+        let mut c = Confusion::new(3);
+        for _ in 0..8 {
+            c.add(0, 0);
+        }
+        for _ in 0..2 {
+            c.add(0, 1);
+        }
+        for _ in 0..10 {
+            c.add(1, 1);
+        }
+        for _ in 0..5 {
+            c.add(2, 2);
+        }
+        for _ in 0..5 {
+            c.add(2, 0);
+        }
+        assert!((c.accuracy() - 23.0 / 30.0).abs() < 1e-12);
+        // precision: c0 8/13, c1 10/12, c2 5/5
+        let p = (8.0 / 13.0 + 10.0 / 12.0 + 1.0) / 3.0;
+        assert!((c.macro_precision() - p).abs() < 1e-12);
+        // recall: 8/10, 10/10, 5/10
+        let r = (0.8 + 1.0 + 0.5) / 3.0;
+        assert!((c.macro_recall() - r).abs() < 1e-12);
+    }
+
+    #[test]
+    fn absent_class_skipped() {
+        let mut c = Confusion::new(5);
+        c.add(0, 0);
+        c.add(1, 1);
+        assert_eq!(c.accuracy(), 1.0);
+        assert_eq!(c.macro_precision(), 1.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Architecture search-space construction (the paper's §3.1):
+//! enumerate every EENN version of the base model — subsets of EE
+//! locations up to one classifier per target processor — and prune
+//! those predicted to violate the worst-case latency constraint or
+//! the per-processor memory budgets.
+
+use crate::graph::BlockGraph;
+use crate::hw::Platform;
+use crate::sim::{simulate, Mapping};
+
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// EE block boundaries, ascending. Empty = unaugmented base model
+    /// on processor 0.
+    pub exits: Vec<usize>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct PruneStats {
+    pub generated: usize,
+    pub latency_pruned: usize,
+    pub memory_pruned: usize,
+    pub kept: usize,
+}
+
+/// Enumerate subsets of `locations` of size 0..=max_ee in ascending
+/// order, invoking `f` on each.
+fn for_each_subset(locations: &[usize], max_ee: usize, mut f: impl FnMut(&[usize])) {
+    let n = locations.len();
+    let mut stack: Vec<usize> = Vec::new();
+    f(&[]); // the 0-EE architecture
+    fn rec(
+        locations: &[usize],
+        start: usize,
+        left: usize,
+        stack: &mut Vec<usize>,
+        f: &mut impl FnMut(&[usize]),
+    ) {
+        if left == 0 {
+            return;
+        }
+        for i in start..locations.len() {
+            stack.push(locations[i]);
+            f(stack);
+            rec(locations, i + 1, left - 1, stack, f);
+            stack.pop();
+        }
+    }
+    rec(locations, 0, max_ee.min(n), &mut stack, &mut f);
+}
+
+/// Generate + prune the candidate set.
+pub fn enumerate(
+    graph: &BlockGraph,
+    platform: &Platform,
+    latency_constraint_s: f64,
+) -> (Vec<Candidate>, PruneStats) {
+    let max_ee = platform.max_classifiers().saturating_sub(1);
+    let mut stats = PruneStats::default();
+    let mut kept = Vec::new();
+    for_each_subset(&graph.ee_locations, max_ee, |exits| {
+        stats.generated += 1;
+        let mapping = Mapping { exits: exits.to_vec() };
+        let report = simulate(graph, &mapping, platform);
+        if report.worst_case_s > latency_constraint_s {
+            stats.latency_pruned += 1;
+            return;
+        }
+        if report.memory_ok.iter().any(|&ok| !ok) {
+            stats.memory_pruned += 1;
+            return;
+        }
+        kept.push(Candidate { exits: exits.to_vec() });
+    });
+    stats.kept = kept.len();
+    (kept, stats)
+}
+
+/// Count-only variant (used by the paper-scale search-space bench).
+pub fn count_search_space(n_locations: usize, max_ee: usize) -> u64 {
+    // sum_{k=0..max_ee} C(n, k)
+    let mut total = 0u64;
+    for k in 0..=max_ee {
+        let mut c = 1u64;
+        for i in 0..k {
+            c = c * (n_locations - i) as u64 / (i + 1) as u64;
+        }
+        total += c;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    #[test]
+    fn paper_resnet152_search_space_is_2776() {
+        // 74 EE locations, 3 local/remote processors => up to 2 EEs
+        assert_eq!(count_search_space(74, 2), 2776);
+        let g = BlockGraph::synthetic_resnet(10, 25);
+        let p = presets::rk3588_cloud();
+        let (cands, stats) = enumerate(&g, &p, f64::INFINITY);
+        assert_eq!(stats.generated, 2776);
+        assert_eq!(cands.len(), 2776);
+    }
+
+    #[test]
+    fn psoc6_limits_to_one_ee() {
+        // IoT-scale graph that fits the PSoC6 memory budget
+        let mut g = BlockGraph::synthetic_resnet(10, 2); // 7 blocks, 5 locations
+        for b in &mut g.blocks {
+            b.param_bytes = 8 * 1024;
+            b.act_bytes = 16 * 1024;
+        }
+        let p = presets::psoc6();
+        let (cands, _) = enumerate(&g, &p, f64::INFINITY);
+        // 1 + 5 = 6 architectures — matching the paper's "search space
+        // consists of six possible architectures" for the GSC case
+        // when five locations are considered.
+        assert_eq!(cands.len(), 6);
+        assert!(cands.iter().all(|c| c.exits.len() <= 1));
+    }
+
+    #[test]
+    fn memory_budget_prunes_oversized_segments() {
+        let g = BlockGraph::synthetic_resnet(10, 2); // ~1 MB of params
+        let p = presets::psoc6(); // 288 KB + 736 KB budgets
+        let (_, stats) = enumerate(&g, &p, f64::INFINITY);
+        assert!(stats.memory_pruned > 0);
+    }
+
+    #[test]
+    fn latency_constraint_prunes() {
+        let g = BlockGraph::synthetic_resnet(10, 2);
+        let p = presets::psoc6(); // 10 MMAC/s first core, graph ~27 MMAC
+        let (all, _) = enumerate(&g, &p, f64::INFINITY);
+        let (tight, stats) = enumerate(&g, &p, 1.0); // 1 s worst-case
+        assert!(tight.len() < all.len());
+        assert_eq!(stats.latency_pruned + stats.memory_pruned + stats.kept, stats.generated);
+    }
+
+    #[test]
+    fn exits_sorted_distinct() {
+        let g = BlockGraph::synthetic_resnet(10, 3);
+        let p = presets::rk3588_cloud();
+        let (cands, _) = enumerate(&g, &p, f64::INFINITY);
+        for c in &cands {
+            assert!(c.exits.windows(2).all(|w| w[0] < w[1]), "{:?}", c.exits);
+        }
+    }
+}

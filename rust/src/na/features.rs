@@ -1,0 +1,112 @@
+//! Frozen-backbone feature cache.
+//!
+//! The paper's central cost-reduction trick: every candidate EE is
+//! trained and evaluated on the *frozen* backbone, so the expensive
+//! backbone passes are shared across the entire search space. We run
+//! the `backbone_all` artifact once per split and cache the GAP
+//! features at every block boundary plus the final classifier's
+//! outputs; all EE training/evaluation afterwards touches only these
+//! tiny cached vectors.
+
+use anyhow::{anyhow, Result};
+
+use super::profile::ExitProfile;
+use crate::data::Split;
+use crate::runtime::{Engine, HostTensor, Manifest, ModelInfo, WeightStore};
+
+/// Final-classifier pseudo-location marker.
+pub const FINAL_LOC: usize = usize::MAX;
+
+#[derive(Debug, Clone)]
+pub struct FeatureCache {
+    /// gaps[block][i * gap_dim ..][..gap_dim] — GAP features of sample
+    /// i at the boundary after `block`.
+    pub gaps: Vec<Vec<f32>>,
+    pub gap_dims: Vec<usize>,
+    pub final_conf: Vec<f32>,
+    pub final_pred: Vec<i32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+}
+
+impl FeatureCache {
+    /// Run the backbone over a split and cache every boundary.
+    pub fn build(
+        engine: &Engine,
+        man: &Manifest,
+        model: &ModelInfo,
+        ws: &WeightStore,
+        split: &Split,
+    ) -> Result<Self> {
+        let eb = man.eval_batch;
+        if split.n % eb != 0 {
+            return Err(anyhow!("split size {} not divisible by eval batch {eb}", split.n));
+        }
+        let exec = engine.compile(man.path(&model.backbone_all))?;
+
+        // constant args: all block params + head
+        let mut consts: Vec<HostTensor> = Vec::new();
+        for blk in &model.blocks {
+            consts.extend(ws.block_args(blk)?);
+        }
+        consts.push(ws.get(&model.head_w)?.clone());
+        consts.push(ws.get(&model.head_b)?.clone());
+        let bound = engine.bind(exec, consts)?;
+
+        let nb = model.blocks.len();
+        let gap_dims: Vec<usize> = model.blocks.iter().map(|b| b.gap_dim).collect();
+        let mut gaps: Vec<Vec<f32>> = gap_dims
+            .iter()
+            .map(|&d| Vec::with_capacity(split.n * d))
+            .collect();
+        let mut final_conf = Vec::with_capacity(split.n);
+        let mut final_pred = Vec::with_capacity(split.n);
+
+        let mut shape = vec![eb];
+        shape.extend(&model.input_shape);
+        for start in (0..split.n).step_by(eb) {
+            let xs: Vec<f32> = (start..start + eb)
+                .flat_map(|i| split.sample(i).iter().copied())
+                .collect();
+            let out = engine.run_bound(bound, vec![HostTensor::f32(&shape, &xs)])?;
+            if out.len() != nb + 3 {
+                return Err(anyhow!("backbone_all returned {} outputs, want {}", out.len(), nb + 3));
+            }
+            for (bi, g) in gaps.iter_mut().enumerate() {
+                g.extend(out[bi].to_f32());
+            }
+            final_conf.extend(out[nb + 1].to_f32());
+            final_pred.extend(out[nb + 2].to_i32());
+        }
+
+        Ok(FeatureCache {
+            gaps,
+            gap_dims,
+            final_conf,
+            final_pred,
+            labels: split.y.clone(),
+            n: split.n,
+        })
+    }
+
+    /// GAP feature row of sample `i` at boundary `block`.
+    pub fn feat(&self, block: usize, i: usize) -> &[f32] {
+        let d = self.gap_dims[block];
+        &self.gaps[block][i * d..(i + 1) * d]
+    }
+
+    /// Profile of the final (backbone) classifier on this split.
+    pub fn final_profile(&self) -> ExitProfile {
+        ExitProfile {
+            location: FINAL_LOC,
+            conf: self.final_conf.clone(),
+            pred: self.final_pred.clone(),
+            correct: self
+                .final_pred
+                .iter()
+                .zip(&self.labels)
+                .map(|(p, y)| p == y)
+                .collect(),
+        }
+    }
+}

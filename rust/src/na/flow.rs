@@ -1,0 +1,366 @@
+//! The end-to-end Network Augmentation flow (the paper's §3):
+//!
+//! 1. build the coarse block graph of the pretrained model;
+//! 2. cache frozen-backbone features for the train + calibration sets;
+//! 3. train every candidate EE once (frozen backbone, early
+//!    termination after epoch 1 for hopeless exits) — results are
+//!    reused across all architectures containing the exit;
+//! 4. enumerate EENN architectures within the platform's classifier
+//!    budget, pruned by worst-case latency and memory;
+//! 5. configure each architecture's decision mechanism by
+//!    shortest-path search on its threshold graph, and score it by
+//!    the expected scalarized cost with its *best* configuration;
+//! 6. return the lowest-cost solution (optionally re-searched on a
+//!    denser threshold grid — the paper's "second search step").
+//!
+//! Calibration uses the validation set when available; otherwise the
+//! flow falls back to the training set and scales the found
+//! thresholds by a correction factor to compensate for training-set
+//! overconfidence (the paper's §3.2 fallback).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::candidates::{enumerate, PruneStats};
+use super::features::FeatureCache;
+use super::profile::{threshold_grid, ExitMasks, GRID_POINTS};
+use super::threshold::{solve, EdgeModel, SearchInput, Solver};
+use super::trainer::{train_exit, TrainedExit, TrainerConfig};
+use crate::data::load_split;
+use crate::eenn::{EennSolution, ExitHead};
+use crate::graph::BlockGraph;
+use crate::hw::Platform;
+use crate::runtime::{Engine, Manifest, WeightStore};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Calibration {
+    /// Dedicated calibration/validation split.
+    ValSplit,
+    /// No validation data: calibrate on the training set, then scale
+    /// thresholds by `factor` (the paper evaluates 1, 2/3, 1/2).
+    TrainFallback { factor: f64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct FlowConfig {
+    pub calibration: Calibration,
+    /// Worst-case latency constraint, seconds.
+    pub latency_constraint_s: f64,
+    /// Scalarization: weight on inference-cost reduction...
+    pub w_eff: f64,
+    /// ...and on prediction-quality retention.
+    pub w_acc: f64,
+    pub trainer: TrainerConfig,
+    pub solver: Solver,
+    pub edge_model: EdgeModel,
+    /// Run the denser second threshold search on the chosen solution.
+    pub refine: bool,
+    /// Post-selection fine-tuning epochs for the chosen exits (the
+    /// paper's optional step; 0 = off). Heads-only on the frozen
+    /// backbone — see trainer::finetune_exit.
+    pub finetune_epochs: usize,
+    pub verbose: bool,
+}
+
+impl Default for FlowConfig {
+    fn default() -> Self {
+        FlowConfig {
+            calibration: Calibration::ValSplit,
+            latency_constraint_s: f64::INFINITY,
+            w_eff: 0.9,
+            w_acc: 0.1,
+            trainer: TrainerConfig::default(),
+            solver: Solver::BellmanFord,
+            edge_model: EdgeModel::Pairwise,
+            refine: true,
+            finetune_epochs: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// Everything the search measured, for reporting and the benches.
+#[derive(Debug, Clone)]
+pub struct SearchReport {
+    pub n_locations: usize,
+    pub prune: PruneStats,
+    /// calibration accuracy of each trained exit
+    pub exit_accs: BTreeMap<usize, f64>,
+    pub nonviable: Vec<usize>,
+    pub feature_cache_s: f64,
+    pub exit_training_s: f64,
+    pub threshold_search_s: f64,
+    pub total_s: f64,
+    /// total (architecture, threshold-vector) configurations covered
+    pub evaluated_configs: u64,
+}
+
+pub struct AugmentOutcome {
+    pub solution: EennSolution,
+    pub report: SearchReport,
+}
+
+/// Run the NA flow on one manifest model for one platform.
+pub fn augment(
+    engine: &Engine,
+    man: &Manifest,
+    model_name: &str,
+    platform: &Platform,
+    cfg: &FlowConfig,
+) -> Result<AugmentOutcome> {
+    platform.validate()?;
+    let model = man.model(model_name)?;
+    let ws = WeightStore::load(man, model)?;
+    let graph = BlockGraph::from_manifest(model);
+    let grid = threshold_grid(model.num_classes);
+    macro_rules! log {
+        ($($t:tt)*) => { if cfg.verbose { eprintln!("[na] {}", format!($($t)*)); } }
+    }
+    let t_total = Instant::now();
+
+    // 1-2. feature caches -------------------------------------------------
+    let t0 = Instant::now();
+    let train_split = load_split(man, model, "train")?;
+    let train_cache = FeatureCache::build(engine, man, model, &ws, &train_split)?;
+    let cal_cache = match cfg.calibration {
+        Calibration::ValSplit => {
+            let val_split = load_split(man, model, "val")?;
+            FeatureCache::build(engine, man, model, &ws, &val_split)?
+        }
+        Calibration::TrainFallback { .. } => train_cache.clone(),
+    };
+    let feature_cache_s = t0.elapsed().as_secs_f64();
+    log!("feature caches built in {feature_cache_s:.1}s (n_train={})", train_cache.n);
+
+    // 3. train every candidate exit once ----------------------------------
+    let t0 = Instant::now();
+    let mut exits: BTreeMap<usize, TrainedExit> = BTreeMap::new();
+    let mut exit_accs = BTreeMap::new();
+    let mut nonviable = Vec::new();
+    for &loc in &model.ee_locations {
+        let ex = train_exit(engine, man, model, &train_cache, &cal_cache, loc, &cfg.trainer)?;
+        exit_accs.insert(loc, ex.calibration_acc);
+        if !ex.viable {
+            nonviable.push(loc);
+        }
+        log!(
+            "exit@{loc}: cal_acc={:.3} first_epoch={:.3} viable={} ({} epochs)",
+            ex.calibration_acc,
+            ex.first_epoch_acc,
+            ex.viable,
+            ex.epochs_run
+        );
+        exits.insert(loc, ex);
+    }
+    let exit_training_s = t0.elapsed().as_secs_f64();
+
+    // calibration profiles + masks per exit, plus the final classifier
+    let mut masks: BTreeMap<usize, ExitMasks> = BTreeMap::new();
+    for (&loc, ex) in &exits {
+        let prof = super::trainer::profile_exit(engine, man, model, &cal_cache, ex)?;
+        masks.insert(loc, ExitMasks::build(&prof, &grid));
+    }
+    let final_masks = ExitMasks::build(&cal_cache.final_profile(), &grid);
+
+    // 4. architecture enumeration + pruning -------------------------------
+    let (cands, prune) = enumerate(&graph, platform, cfg.latency_constraint_s);
+    log!(
+        "{} candidates ({} latency-pruned, {} memory-pruned)",
+        prune.kept,
+        prune.latency_pruned,
+        prune.memory_pruned
+    );
+
+    // 5. per-candidate threshold search + scoring --------------------------
+    let t0 = Instant::now();
+    let mut evaluated_configs = 0u64;
+    let mut best: Option<(f64, Vec<usize>, super::threshold::Choice)> = None;
+    for cand in &cands {
+        // skip candidates that include an exit declared hopeless after
+        // its first epoch: the paper stops evaluating those classifiers
+        if cand.exits.iter().any(|e| nonviable.contains(e)) {
+            continue;
+        }
+        let input = search_input(&graph, &cand.exits, &masks, &final_masks, &grid, cfg);
+        let choice = solve(&input, cfg.solver, cfg.edge_model);
+        evaluated_configs += (grid.len() as u64).pow(cand.exits.len() as u32);
+        // score the architecture with its best decision configuration,
+        // by exact replay (the ranking signal across architectures)
+        let score = input.exact_cost(&choice.indices);
+        if best.as_ref().map(|(s, ..)| score < *s).unwrap_or(true) {
+            best = Some((score, cand.exits.clone(), choice));
+        }
+    }
+    let (mut score, exits_chosen, mut choice) =
+        best.ok_or_else(|| anyhow::anyhow!("no feasible architecture"))?;
+    log!("chosen exits {exits_chosen:?} score {score:.4}");
+
+    // 6. optional denser second search on the chosen architecture ---------
+    if cfg.refine && !exits_chosen.is_empty() {
+        let dense_grid = dense_grid_around(&grid, &choice.thresholds);
+        let mut dense_masks: BTreeMap<usize, ExitMasks> = BTreeMap::new();
+        for &loc in &exits_chosen {
+            let ex = &exits[&loc];
+            let prof = super::trainer::profile_exit(engine, man, model, &cal_cache, ex)?;
+            dense_masks.insert(loc, ExitMasks::build(&prof, &dense_grid));
+        }
+        let final_dense = ExitMasks::build(&cal_cache.final_profile(), &dense_grid);
+        let input =
+            search_input(&graph, &exits_chosen, &dense_masks, &final_dense, &dense_grid, cfg);
+        let refined = solve(&input, Solver::Exhaustive, cfg.edge_model);
+        evaluated_configs += (dense_grid.len() as u64).pow(exits_chosen.len() as u32);
+        if refined.cost <= score {
+            score = refined.cost;
+            choice = refined;
+            log!("refined thresholds {:?} score {score:.4}", choice.thresholds);
+        }
+    }
+    // 6b. optional fine-tuning of the selected EENN, followed by a
+    // fresh threshold search (the paper's "if this optional step is
+    // applied, another search for the threshold configuration is
+    // performed afterward")
+    if cfg.finetune_epochs > 0 && !exits_chosen.is_empty() {
+        for &loc in &exits_chosen {
+            let refreshed = super::trainer::finetune_exit(
+                engine,
+                man,
+                model,
+                &train_cache,
+                &cal_cache,
+                &exits[&loc],
+                cfg.finetune_epochs,
+                cfg.trainer.lr * 0.2,
+            )?;
+            log!("finetuned exit@{loc}: cal_acc {:.3}", refreshed.calibration_acc);
+            masks.insert(
+                loc,
+                ExitMasks::build(
+                    &super::trainer::profile_exit(engine, man, model, &cal_cache, &refreshed)?,
+                    &grid,
+                ),
+            );
+            exits.insert(loc, refreshed);
+        }
+        let input = search_input(&graph, &exits_chosen, &masks, &final_masks, &grid, cfg);
+        let re = solve(&input, cfg.solver, cfg.edge_model);
+        evaluated_configs += (grid.len() as u64).pow(exits_chosen.len() as u32);
+        score = input.exact_cost(&re.indices);
+        choice = re;
+        log!("post-finetune thresholds {:?} score {score:.4}", choice.thresholds);
+    }
+    let threshold_search_s = t0.elapsed().as_secs_f64();
+
+    // expected cascade behaviour at the chosen configuration
+    let input = {
+        // rebuild masks on whichever grid the winning choice used
+        let use_grid: Vec<f64> = choice.thresholds.clone();
+        let mut m: BTreeMap<usize, ExitMasks> = BTreeMap::new();
+        for &loc in &exits_chosen {
+            let prof =
+                super::trainer::profile_exit(engine, man, model, &cal_cache, &exits[&loc])?;
+            m.insert(loc, ExitMasks::build(&prof, &use_grid));
+        }
+        let f = ExitMasks::build(&cal_cache.final_profile(), &use_grid);
+        OwnedInput { masks: m, fin: f, grid: use_grid }
+    };
+    let si = search_input(
+        &graph,
+        &exits_chosen,
+        &input.masks,
+        &input.fin,
+        &input.grid,
+        cfg,
+    );
+    let identity: Vec<usize> = (0..exits_chosen.len()).collect();
+    let expected = si.cascade_metrics(&identity);
+
+    // 7. correction factor for training-set calibration -------------------
+    let factor = match cfg.calibration {
+        Calibration::ValSplit => 1.0,
+        Calibration::TrainFallback { factor } => factor,
+    };
+    let thresholds: Vec<f64> = choice.thresholds.iter().map(|t| t * factor).collect();
+
+    let heads: Vec<ExitHead> = exits_chosen
+        .iter()
+        .map(|&loc| {
+            let ex = &exits[&loc];
+            ExitHead {
+                location: loc,
+                c: ex.c,
+                k: ex.k,
+                w: ex.w.clone(),
+                b: ex.b.clone(),
+            }
+        })
+        .collect();
+
+    let solution = EennSolution {
+        model: model_name.to_string(),
+        platform: platform.name.clone(),
+        exits: exits_chosen,
+        thresholds,
+        raw_thresholds: choice.thresholds.clone(),
+        correction_factor: factor,
+        heads,
+        expected_term_rates: expected.term_rates.clone(),
+        expected_acc: expected.expected_acc,
+        expected_mac_frac: expected.expected_mac_frac,
+        score,
+    };
+
+    let report = SearchReport {
+        n_locations: model.ee_locations.len(),
+        prune,
+        exit_accs,
+        nonviable,
+        feature_cache_s,
+        exit_training_s,
+        threshold_search_s,
+        total_s: t_total.elapsed().as_secs_f64(),
+        evaluated_configs,
+    };
+    Ok(AugmentOutcome { solution, report })
+}
+
+struct OwnedInput {
+    masks: BTreeMap<usize, ExitMasks>,
+    fin: ExitMasks,
+    grid: Vec<f64>,
+}
+
+fn search_input<'a>(
+    graph: &BlockGraph,
+    exits: &[usize],
+    masks: &'a BTreeMap<usize, ExitMasks>,
+    final_masks: &'a ExitMasks,
+    grid: &[f64],
+    cfg: &FlowConfig,
+) -> SearchInput<'a> {
+    let total = graph.total_macs() as f64;
+    SearchInput {
+        exits: exits.iter().map(|e| &masks[e]).collect(),
+        fin: final_masks,
+        mac_frac: exits
+            .iter()
+            .map(|&e| graph.macs_to_exit(exits, e) as f64 / total)
+            .collect(),
+        final_mac_frac: graph.macs_to_exit(exits, graph.blocks.len() - 1) as f64 / total,
+        w_eff: cfg.w_eff,
+        w_acc: cfg.w_acc,
+        grid: grid.to_vec(),
+    }
+}
+
+/// Denser grid for the second search: GRID_POINTS^2 values spanning
+/// the original range at 1/GRID_POINTS of the original spacing.
+fn dense_grid_around(grid: &[f64], _chosen: &[f64]) -> Vec<f64> {
+    let lo = grid[0];
+    let hi = grid[grid.len() - 1];
+    let n = GRID_POINTS * GRID_POINTS;
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f64 / (n - 1) as f64)
+        .collect()
+}

@@ -1,0 +1,23 @@
+//! Network Augmentation: the paper's contribution.
+//!
+//! Converts a pretrained, AOT-exported model into an Early-Exit
+//! Neural Network, maps it to a heterogeneous/distributed platform
+//! and configures its confidence-threshold decision mechanism — all
+//! in Rust, executing training and evaluation through PJRT artifacts.
+
+pub mod candidates;
+pub mod features;
+pub mod flow;
+pub mod profile;
+pub mod threshold;
+pub mod trainer;
+
+pub use candidates::{count_search_space, enumerate, Candidate, PruneStats};
+pub use features::{FeatureCache, FINAL_LOC};
+pub use flow::{augment, AugmentOutcome, Calibration, FlowConfig, SearchReport};
+pub use profile::{threshold_grid, Bitset, ExitMasks, ExitProfile, GRID_POINTS};
+pub use threshold::{
+    bellman_ford, dijkstra, exhaustive, solve, CascadeMetrics, Choice, EdgeModel,
+    SearchInput, Solver,
+};
+pub use trainer::{profile_exit, train_exit, TrainedExit, TrainerConfig};

@@ -1,0 +1,273 @@
+//! Per-exit confidence profiles and the bitset machinery the threshold
+//! search runs on.
+//!
+//! For every candidate exit (and the final classifier) we record, per
+//! calibration sample, its confidence and whether its prediction was
+//! correct. Threshold-graph edge weights then reduce to popcounts over
+//! precomputed bitsets: for exit i at threshold t, the set of samples
+//! it would terminate is `!ge[i-1][t'] & ge[i][t]`, and both the
+//! efficiency term (count x MAC fraction) and the accuracy term
+//! (count of wrong terminated) are AND+popcount operations.
+
+/// Fixed-size bitset over calibration samples.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bitset {
+    pub words: Vec<u64>,
+    pub len: usize,
+}
+
+impl Bitset {
+    pub fn zeros(len: usize) -> Self {
+        Bitset { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    pub fn ones(len: usize) -> Self {
+        let mut b = Self::zeros(len);
+        for w in &mut b.words {
+            *w = u64::MAX;
+        }
+        b.trim();
+        b
+    }
+
+    fn trim(&mut self) {
+        let extra = self.words.len() * 64 - self.len;
+        if extra > 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= u64::MAX >> extra;
+            }
+        }
+    }
+
+    pub fn set(&mut self, i: usize) {
+        self.words[i / 64] |= 1 << (i % 64);
+    }
+
+    pub fn get(&self, i: usize) -> bool {
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// popcount(self & other)
+    pub fn and_count(&self, other: &Bitset) -> usize {
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+
+    /// popcount(self & !other)
+    pub fn andnot_count(&self, other: &Bitset) -> usize {
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a & !b).count_ones() as usize)
+            .sum()
+    }
+
+    /// popcount(self & a & b)
+    pub fn and3_count(&self, a: &Bitset, b: &Bitset) -> usize {
+        self.words
+            .iter()
+            .zip(&a.words)
+            .zip(&b.words)
+            .map(|((s, a), b)| (s & a & b).count_ones() as usize)
+            .sum()
+    }
+
+    /// popcount(self & a & !b)
+    pub fn and_andnot_count(&self, a: &Bitset, b: &Bitset) -> usize {
+        self.words
+            .iter()
+            .zip(&a.words)
+            .zip(&b.words)
+            .map(|((s, a), b)| (s & a & !b).count_ones() as usize)
+            .sum()
+    }
+
+    pub fn and_assign(&mut self, other: &Bitset) {
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    pub fn andnot_assign(&mut self, other: &Bitset) {
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= !b;
+        }
+    }
+}
+
+/// Profile of one classifier on one dataset split.
+#[derive(Debug, Clone)]
+pub struct ExitProfile {
+    /// Block boundary this classifier sits at (usize::MAX = final head).
+    pub location: usize,
+    pub conf: Vec<f32>,
+    pub pred: Vec<i32>,
+    pub correct: Vec<bool>,
+}
+
+impl ExitProfile {
+    pub fn accuracy(&self) -> f64 {
+        if self.correct.is_empty() {
+            return 0.0;
+        }
+        self.correct.iter().filter(|&&c| c).count() as f64 / self.correct.len() as f64
+    }
+
+    /// Bitset of samples with conf >= t.
+    pub fn ge_mask(&self, t: f64) -> Bitset {
+        let mut b = Bitset::zeros(self.conf.len());
+        for (i, &c) in self.conf.iter().enumerate() {
+            if c as f64 >= t {
+                b.set(i);
+            }
+        }
+        b
+    }
+
+    /// Bitset of wrongly-predicted samples.
+    pub fn err_mask(&self) -> Bitset {
+        let mut b = Bitset::zeros(self.correct.len());
+        for (i, &c) in self.correct.iter().enumerate() {
+            if !c {
+                b.set(i);
+            }
+        }
+        b
+    }
+
+    /// Termination rate and accuracy-if-terminated at threshold t
+    /// (the paper's per-exit marginals under the independence
+    /// assumption).
+    pub fn marginals(&self, t: f64) -> (f64, f64) {
+        let n = self.conf.len();
+        let mut term = 0usize;
+        let mut ok = 0usize;
+        for i in 0..n {
+            if self.conf[i] as f64 >= t {
+                term += 1;
+                if self.correct[i] {
+                    ok += 1;
+                }
+            }
+        }
+        let p = term as f64 / n as f64;
+        let a = if term == 0 { 0.0 } else { ok as f64 / term as f64 };
+        (p, a)
+    }
+}
+
+/// The paper's discretized threshold range: thirteen nodes per exit.
+pub const GRID_POINTS: usize = 13;
+
+/// Threshold grid for a K-class task. The lower bound stays at the
+/// embedded-targeted 0.3 floor regardless of K — the design decision
+/// the paper calls out as limiting CIFAR-100 quality.
+pub fn threshold_grid(num_classes: usize) -> Vec<f64> {
+    let lo = (1.0 / num_classes as f64 + 0.05).max(0.30);
+    let hi = 0.95;
+    (0..GRID_POINTS)
+        .map(|i| lo + (hi - lo) * i as f64 / (GRID_POINTS - 1) as f64)
+        .collect()
+}
+
+/// Precomputed bitsets of one exit over the whole grid.
+#[derive(Debug, Clone)]
+pub struct ExitMasks {
+    pub ge: Vec<Bitset>,
+    pub err: Bitset,
+    pub n: usize,
+}
+
+impl ExitMasks {
+    pub fn build(profile: &ExitProfile, grid: &[f64]) -> Self {
+        ExitMasks {
+            ge: grid.iter().map(|&t| profile.ge_mask(t)).collect(),
+            err: profile.err_mask(),
+            n: profile.conf.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile(conf: &[f32], correct: &[bool]) -> ExitProfile {
+        ExitProfile {
+            location: 0,
+            conf: conf.to_vec(),
+            pred: vec![0; conf.len()],
+            correct: correct.to_vec(),
+        }
+    }
+
+    #[test]
+    fn bitset_ops() {
+        let mut a = Bitset::zeros(100);
+        let mut b = Bitset::zeros(100);
+        a.set(3);
+        a.set(70);
+        a.set(99);
+        b.set(70);
+        b.set(5);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.and_count(&b), 1);
+        assert_eq!(a.andnot_count(&b), 2);
+        assert!(a.get(70) && !a.get(4));
+        let ones = Bitset::ones(100);
+        assert_eq!(ones.count(), 100);
+        assert_eq!(ones.and_count(&a), 3);
+    }
+
+    #[test]
+    fn and_andnot() {
+        let mut s = Bitset::zeros(10);
+        let mut a = Bitset::zeros(10);
+        let mut b = Bitset::zeros(10);
+        for i in 0..10 {
+            s.set(i);
+        }
+        a.set(1);
+        a.set(2);
+        a.set(3);
+        b.set(2);
+        assert_eq!(s.and_andnot_count(&a, &b), 2); // {1,3}
+    }
+
+    #[test]
+    fn marginals_match_definition() {
+        let p = profile(&[0.9, 0.5, 0.7, 0.2], &[true, false, false, true]);
+        let (term, acc) = p.marginals(0.6);
+        assert!((term - 0.5).abs() < 1e-12); // 0.9, 0.7
+        assert!((acc - 0.5).abs() < 1e-12); // one of two correct
+    }
+
+    #[test]
+    fn grid_has_13_points_within_bounds() {
+        for k in [2, 6, 10, 11, 100] {
+            let g = threshold_grid(k);
+            assert_eq!(g.len(), GRID_POINTS);
+            assert!(g[0] >= 0.30 - 1e-12);
+            assert!((g[GRID_POINTS - 1] - 0.95).abs() < 1e-12);
+            assert!(g.windows(2).all(|w| w[1] > w[0]));
+        }
+    }
+
+    #[test]
+    fn ge_mask_monotone_in_threshold() {
+        let p = profile(&[0.1, 0.4, 0.6, 0.8, 0.95], &[true; 5]);
+        let g = threshold_grid(10);
+        let masks = ExitMasks::build(&p, &g);
+        for w in masks.ge.windows(2) {
+            // higher threshold terminates a subset
+            assert!(w[1].andnot_count(&w[0]) == 0);
+        }
+    }
+}

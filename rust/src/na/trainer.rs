@@ -1,0 +1,259 @@
+//! EE classifier training on the frozen backbone, executed entirely
+//! through AOT train-step artifacts (Python never runs here).
+//!
+//! Each candidate exit is a GAP -> dense head derived from the base
+//! model's classifier blueprint. It is trained individually on cached
+//! features (the independence assumption keeps exits decoupled), and
+//! results are *reused across every architecture* containing the exit
+//! — the paper's key search-cost reduction. A calibration check after
+//! the first epoch terminates training of exits that cannot reach a
+//! meaningful prediction quality (the paper's early termination).
+
+use anyhow::Result;
+
+use super::features::FeatureCache;
+use super::profile::ExitProfile;
+use crate::runtime::{Engine, HostTensor, Manifest, ModelInfo};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    /// Calibration accuracy below which an exit is declared non-viable
+    /// after its first epoch, as a multiple of chance (1/K).
+    pub early_term_chance_mult: f64,
+    pub seed: u64,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig { epochs: 10, lr: 0.5, early_term_chance_mult: 1.5, seed: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainedExit {
+    pub location: usize,
+    pub c: usize,
+    pub k: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub first_epoch_acc: f64,
+    pub calibration_acc: f64,
+    pub viable: bool,
+    pub epochs_run: usize,
+}
+
+/// Train the exit head at `location` on cached train features;
+/// calibration accuracy is checked on `cal` after the first epoch.
+pub fn train_exit(
+    engine: &Engine,
+    man: &Manifest,
+    model: &ModelInfo,
+    train: &FeatureCache,
+    cal: &FeatureCache,
+    location: usize,
+    cfg: &TrainerConfig,
+) -> Result<TrainedExit> {
+    let c = train.gap_dims[location];
+    let k = model.num_classes;
+    let tb = man.train_batch;
+    let exec = engine.compile(man.path(&model.heads[&c].hlo_train))?;
+
+    let mut w = HostTensor::f32(&[c, k], &vec![0.0; c * k]);
+    let mut b = HostTensor::f32(&[k], &vec![0.0; k]);
+    let mut rng = Rng::seeded(cfg.seed ^ (location as u64).wrapping_mul(0x9E37));
+    let mut order: Vec<usize> = (0..train.n).collect();
+
+    let mut first_epoch_acc = 0.0;
+    let mut viable = true;
+    let mut epochs_run = 0;
+    let min_acc = cfg.early_term_chance_mult / k as f64;
+
+    'outer: for epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(tb) {
+            if chunk.len() < tb {
+                break; // drop ragged tail (padding handled by zero-row grads otherwise)
+            }
+            let mut xs = Vec::with_capacity(tb * c);
+            let mut ys = vec![0.0f32; tb * k];
+            for (row, &i) in chunk.iter().enumerate() {
+                xs.extend_from_slice(train.feat(location, i));
+                ys[row * k + train.labels[i] as usize] = 1.0;
+            }
+            let out = engine.run(
+                exec,
+                vec![
+                    w,
+                    b,
+                    HostTensor::f32(&[tb, c], &xs),
+                    HostTensor::f32(&[tb, k], &ys),
+                    HostTensor::scalar_f32(cfg.lr),
+                ],
+            )?;
+            w = out[0].clone();
+            b = out[1].clone();
+        }
+        epochs_run = epoch + 1;
+        if epoch == 0 {
+            let prof = profile_from_weights(engine, man, model, cal, location, &w, &b)?;
+            first_epoch_acc = prof.accuracy();
+            if first_epoch_acc < min_acc {
+                viable = false;
+                break 'outer;
+            }
+        }
+    }
+
+    let prof = profile_from_weights(engine, man, model, cal, location, &w, &b)?;
+    Ok(TrainedExit {
+        location,
+        c,
+        k,
+        w: w.to_f32(),
+        b: b.to_f32(),
+        first_epoch_acc,
+        calibration_acc: prof.accuracy(),
+        viable,
+        epochs_run,
+    })
+}
+
+/// Continue training an already-trained exit (the paper's optional
+/// post-selection fine-tuning step, applied to the found solution
+/// only). The backbone stays frozen — the AOT train-step artifacts
+/// operate on cached features — so this is the heads-only variant of
+/// the paper's joint step (deviation documented in DESIGN.md): it
+/// refreshes the exit classifiers at a reduced learning rate, after
+/// which the flow re-runs the threshold search.
+pub fn finetune_exit(
+    engine: &Engine,
+    man: &Manifest,
+    model: &ModelInfo,
+    train: &FeatureCache,
+    cal: &FeatureCache,
+    exit: &TrainedExit,
+    epochs: usize,
+    lr: f32,
+) -> Result<TrainedExit> {
+    let (c, k) = (exit.c, exit.k);
+    let tb = man.train_batch;
+    let exec = engine.compile(man.path(&model.heads[&c].hlo_train))?;
+    let mut w = HostTensor::f32(&[c, k], &exit.w);
+    let mut b = HostTensor::f32(&[k], &exit.b);
+    let mut rng = Rng::seeded(0x5EED ^ (exit.location as u64) << 8);
+    let mut order: Vec<usize> = (0..train.n).collect();
+    for _ in 0..epochs {
+        rng.shuffle(&mut order);
+        for chunk in order.chunks(tb) {
+            if chunk.len() < tb {
+                break;
+            }
+            let mut xs = Vec::with_capacity(tb * c);
+            let mut ys = vec![0.0f32; tb * k];
+            for (row, &i) in chunk.iter().enumerate() {
+                xs.extend_from_slice(train.feat(exit.location, i));
+                ys[row * k + train.labels[i] as usize] = 1.0;
+            }
+            let out = engine.run(
+                exec,
+                vec![
+                    w,
+                    b,
+                    HostTensor::f32(&[tb, c], &xs),
+                    HostTensor::f32(&[tb, k], &ys),
+                    HostTensor::scalar_f32(lr),
+                ],
+            )?;
+            w = out[0].clone();
+            b = out[1].clone();
+        }
+    }
+    let prof = profile_from_weights(engine, man, model, cal, exit.location, &w, &b)?;
+    Ok(TrainedExit {
+        location: exit.location,
+        c,
+        k,
+        w: w.to_f32(),
+        b: b.to_f32(),
+        first_epoch_acc: exit.first_epoch_acc,
+        calibration_acc: prof.accuracy(),
+        viable: exit.viable,
+        epochs_run: exit.epochs_run + epochs,
+    })
+}
+
+fn profile_from_weights(
+    engine: &Engine,
+    man: &Manifest,
+    model: &ModelInfo,
+    cache: &FeatureCache,
+    location: usize,
+    w: &HostTensor,
+    b: &HostTensor,
+) -> Result<ExitProfile> {
+    let c = cache.gap_dims[location];
+    let eb = man.eval_batch;
+    let exec = engine.compile(man.path(&model.heads[&c].hlo_beval))?;
+    let mut conf = Vec::with_capacity(cache.n);
+    let mut pred = Vec::with_capacity(cache.n);
+    for start in (0..cache.n).step_by(eb) {
+        let take = eb.min(cache.n - start);
+        let mut xs = Vec::with_capacity(eb * c);
+        for i in start..start + take {
+            xs.extend_from_slice(cache.feat(location, i));
+        }
+        // pad ragged tail by repeating the last row
+        for _ in take..eb {
+            xs.extend_from_slice(cache.feat(location, start + take - 1));
+        }
+        let out = engine.run(
+            exec,
+            vec![w.clone(), b.clone(), HostTensor::f32(&[eb, c], &xs)],
+        )?;
+        conf.extend(out[1].to_f32()[..take].iter().copied());
+        pred.extend(out[2].to_i32()[..take].iter().copied());
+    }
+    Ok(ExitProfile {
+        location,
+        correct: pred
+            .iter()
+            .zip(&cache.labels)
+            .map(|(p, y)| p == y)
+            .collect(),
+        conf,
+        pred,
+    })
+}
+
+/// Profile an arbitrary head (weights as slices) on a cached split.
+pub fn profile_head(
+    engine: &Engine,
+    man: &Manifest,
+    model: &ModelInfo,
+    cache: &FeatureCache,
+    location: usize,
+    w: &[f32],
+    b: &[f32],
+) -> Result<ExitProfile> {
+    let c = cache.gap_dims[location];
+    let k = model.num_classes;
+    let wt = HostTensor::f32(&[c, k], w);
+    let bt = HostTensor::f32(&[k], b);
+    profile_from_weights(engine, man, model, cache, location, &wt, &bt)
+}
+
+/// Evaluate a trained exit on another split (test-time profile).
+pub fn profile_exit(
+    engine: &Engine,
+    man: &Manifest,
+    model: &ModelInfo,
+    cache: &FeatureCache,
+    exit: &TrainedExit,
+) -> Result<ExitProfile> {
+    let w = HostTensor::f32(&[exit.c, exit.k], &exit.w);
+    let b = HostTensor::f32(&[exit.k], &exit.b);
+    profile_from_weights(engine, man, model, cache, exit.location, &w, &b)
+}

@@ -1,0 +1,349 @@
+//! Experiment regeneration: every table and figure of the paper's
+//! evaluation section (see DESIGN.md §3 for the index).
+
+use anyhow::Result;
+
+use crate::data::load_split;
+use crate::eenn::EennSolution;
+use crate::graph::BlockGraph;
+use crate::hw::{presets, Platform};
+use crate::metrics::{Confusion, Quality};
+use crate::na::{self, Calibration, FeatureCache, FlowConfig};
+use crate::runtime::{Engine, Manifest, ModelInfo, WeightStore};
+use crate::sim::{simulate, Mapping};
+
+/// Test-set evaluation of a solution (exact replay over cached
+/// features + analytic latency/energy on the platform).
+#[derive(Debug, Clone)]
+pub struct TestEval {
+    pub quality: Quality,
+    pub mean_macs: f64,
+    pub mean_latency_s: f64,
+    pub mean_energy_mj: f64,
+    /// Termination mass per classifier (EEs then final).
+    pub term_rates: Vec<f64>,
+    /// Share of samples that terminated before the final classifier.
+    pub early_term: f64,
+    pub worst_case_s: f64,
+}
+
+/// Evaluate an EENN solution on the test split.
+pub fn evaluate_solution(
+    engine: &Engine,
+    man: &Manifest,
+    model: &ModelInfo,
+    solution: &EennSolution,
+    platform: &Platform,
+) -> Result<TestEval> {
+    let ws = WeightStore::load(man, model)?;
+    let test = load_split(man, model, "test")?;
+    let cache = FeatureCache::build(engine, man, model, &ws, &test)?;
+    evaluate_on_cache(engine, man, model, solution, platform, &cache)
+}
+
+/// Same, over an already-built feature cache.
+pub fn evaluate_on_cache(
+    engine: &Engine,
+    man: &Manifest,
+    model: &ModelInfo,
+    solution: &EennSolution,
+    platform: &Platform,
+    cache: &FeatureCache,
+) -> Result<TestEval> {
+    let graph = BlockGraph::from_manifest(model);
+    let mapping = Mapping { exits: solution.exits.clone() };
+    let sim = simulate(&graph, &mapping, platform);
+
+    // per-exit test profiles from the solution's head weights
+    let mut profiles = Vec::new();
+    for h in &solution.heads {
+        profiles.push(na::trainer::profile_head(
+            engine, man, model, cache, h.location, &h.w, &h.b,
+        )?);
+    }
+    let final_prof = cache.final_profile();
+
+    let n = cache.n;
+    let k_exits = solution.exits.len();
+    let mut conf = Confusion::new(model.num_classes);
+    let mut term = vec![0usize; k_exits + 1];
+    let mut macs = 0.0f64;
+    let mut lat = 0.0f64;
+    let mut energy = 0.0f64;
+
+    for i in 0..n {
+        let mut exit = k_exits; // default: final classifier
+        for (e, prof) in profiles.iter().enumerate() {
+            if prof.conf[i] as f64 >= solution.thresholds[e] {
+                exit = e;
+                break;
+            }
+        }
+        let pred = if exit == k_exits {
+            final_prof.pred[i]
+        } else {
+            profiles[exit].pred[i]
+        };
+        conf.add(cache.labels[i] as usize, pred as usize);
+        term[exit] += 1;
+        let loc = if exit == k_exits {
+            graph.blocks.len() - 1
+        } else {
+            solution.exits[exit]
+        };
+        macs += graph.macs_to_exit(&solution.exits, loc) as f64;
+        lat += sim.stages[exit].cum_latency_s;
+        energy += sim.stages[exit].cum_energy_mj;
+    }
+
+    let term_rates: Vec<f64> = term.iter().map(|&t| t as f64 / n as f64).collect();
+    Ok(TestEval {
+        quality: Quality::from_confusion(&conf),
+        mean_macs: macs / n as f64,
+        mean_latency_s: lat / n as f64,
+        mean_energy_mj: energy / n as f64,
+        early_term: 1.0 - term_rates[k_exits],
+        term_rates,
+        worst_case_s: sim.worst_case_s,
+    })
+}
+
+/// Baseline: the unaugmented model on one processor of the platform
+/// (the paper compares against the M4F / Mali single-processor
+/// deployment — i.e. the most capable *local* device).
+pub fn baseline_eval(
+    engine: &Engine,
+    man: &Manifest,
+    model: &ModelInfo,
+    platform: &Platform,
+) -> Result<TestEval> {
+    let graph = BlockGraph::from_manifest(model);
+    // most capable local processor (exclude remote: sleep_mw == 0 marker)
+    let local: Vec<_> = platform
+        .processors
+        .iter()
+        .filter(|p| p.sleep_mw > 0.0 || platform.processors.len() == 1)
+        .cloned()
+        .collect();
+    let best = local
+        .into_iter()
+        .max_by(|a, b| a.macs_per_sec.total_cmp(&b.macs_per_sec))
+        .unwrap_or_else(|| platform.processors[0].clone());
+    let single = presets::single(best);
+
+    let ws = WeightStore::load(man, model)?;
+    let test = load_split(man, model, "test")?;
+    let cache = FeatureCache::build(engine, man, model, &ws, &test)?;
+    let sim = simulate(&graph, &Mapping { exits: vec![] }, &single);
+
+    let final_prof = cache.final_profile();
+    let mut conf = Confusion::new(model.num_classes);
+    for i in 0..cache.n {
+        conf.add(cache.labels[i] as usize, final_prof.pred[i] as usize);
+    }
+    let total = graph.total_macs() as f64;
+    Ok(TestEval {
+        quality: Quality::from_confusion(&conf),
+        mean_macs: total,
+        mean_latency_s: sim.stages[0].cum_latency_s,
+        mean_energy_mj: sim.stages[0].cum_energy_mj,
+        term_rates: vec![1.0],
+        early_term: 0.0,
+        worst_case_s: sim.worst_case_s,
+    })
+}
+
+/// One Table-2 column: a model x calibration-mode configuration.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub model: String,
+    pub calibration: String,
+    pub exits: Vec<usize>,
+    pub thresholds: Vec<f64>,
+    pub search_s: f64,
+    pub train_s: f64,
+    pub eenn: TestEval,
+    pub base: TestEval,
+}
+
+impl Table2Row {
+    pub fn print(&self) {
+        let e = &self.eenn;
+        let b = &self.base;
+        let pct = |new: f64, old: f64| 100.0 * (new - old) / old;
+        println!("── {} [calib {}] ──", self.model, self.calibration);
+        println!(
+            "  exits {:?}  thresholds {:?}",
+            self.exits,
+            self.thresholds.iter().map(|t| (t * 100.0).round() / 100.0).collect::<Vec<_>>()
+        );
+        println!(
+            "  train {:.0}s  search {:.0}s",
+            self.train_s, self.search_s
+        );
+        println!(
+            "  acc    {:>7.2}%  ({:+.2} vs base {:.2}%)",
+            e.quality.accuracy * 100.0,
+            (e.quality.accuracy - b.quality.accuracy) * 100.0,
+            b.quality.accuracy * 100.0
+        );
+        println!(
+            "  prec   {:>7.2}%  ({:+.2})",
+            e.quality.precision * 100.0,
+            (e.quality.precision - b.quality.precision) * 100.0
+        );
+        println!(
+            "  recall {:>7.2}%  ({:+.2})",
+            e.quality.recall * 100.0,
+            (e.quality.recall - b.quality.recall) * 100.0
+        );
+        println!(
+            "  mean MACs    {}  ({:+.2}%)",
+            crate::util::stats::eng(e.mean_macs),
+            pct(e.mean_macs, b.mean_macs)
+        );
+        println!(
+            "  mean latency {:.4}s  ({:+.2}%)  worst-case {:.4}s",
+            e.mean_latency_s,
+            pct(e.mean_latency_s, b.mean_latency_s),
+            e.worst_case_s
+        );
+        println!(
+            "  mean energy  {:.2}mJ  ({:+.2}%)",
+            e.mean_energy_mj,
+            pct(e.mean_energy_mj, b.mean_energy_mj)
+        );
+        println!("  early term   {:.2}%", e.early_term * 100.0);
+    }
+}
+
+/// Which platform a task deploys to (the paper's assignments).
+pub fn platform_for_task(task: &str) -> Platform {
+    match task {
+        "speech" | "ecg" => presets::psoc6(),
+        _ => presets::rk3588_cloud(),
+    }
+}
+
+/// Table-2 calibration variants for a model (paper: val for the MCU
+/// tasks; val + train-fallback corrections 1, 2/3, 1/2 for CIFAR).
+pub fn calibrations_for_task(task: &str) -> Vec<(String, Calibration)> {
+    match task {
+        "speech" | "ecg" => vec![("val".into(), Calibration::ValSplit)],
+        _ => vec![
+            ("1".into(), Calibration::TrainFallback { factor: 1.0 }),
+            ("2/3".into(), Calibration::TrainFallback { factor: 2.0 / 3.0 }),
+            ("1/2".into(), Calibration::TrainFallback { factor: 0.5 }),
+            ("val".into(), Calibration::ValSplit),
+        ],
+    }
+}
+
+/// Latency constraints per task (paper: 2.5 s worst-case for GSC; the
+/// ECG experiment reuses the speech configuration; CIFAR unconstrained).
+pub fn latency_constraint_for_task(task: &str) -> f64 {
+    match task {
+        "speech" => 2.5,
+        "ecg" => 2.5,
+        _ => f64::INFINITY,
+    }
+}
+
+/// Run one full Table-2 configuration.
+pub fn table2_row(
+    engine: &Engine,
+    man: &Manifest,
+    model_name: &str,
+    label: &str,
+    calibration: Calibration,
+    verbose: bool,
+) -> Result<Table2Row> {
+    let model = man.model(model_name)?;
+    let platform = platform_for_task(&model.task);
+    let base = baseline_eval(engine, man, model, &platform)?;
+    table2_row_with_base(engine, man, model_name, label, calibration, verbose, &base)
+}
+
+/// Same, reusing a precomputed baseline (and its test-set feature
+/// cache) across the calibration variants of one model.
+pub fn table2_row_with_base(
+    engine: &Engine,
+    man: &Manifest,
+    model_name: &str,
+    label: &str,
+    calibration: Calibration,
+    verbose: bool,
+    base: &TestEval,
+) -> Result<Table2Row> {
+    let model = man.model(model_name)?;
+    let platform = platform_for_task(&model.task);
+    let cfg = FlowConfig {
+        calibration,
+        latency_constraint_s: latency_constraint_for_task(&model.task),
+        verbose,
+        ..FlowConfig::default()
+    };
+    let out = na::augment(engine, man, model_name, &platform, &cfg)?;
+    let eenn = evaluate_solution(engine, man, model, &out.solution, &platform)?;
+    Ok(Table2Row {
+        model: model_name.to_string(),
+        calibration: label.to_string(),
+        exits: out.solution.exits.clone(),
+        thresholds: out.solution.thresholds.clone(),
+        search_s: out.report.total_s,
+        train_s: model.train_seconds,
+        eenn,
+        base: base.clone(),
+    })
+}
+
+/// Fig-4-style comparison series: MAC reduction vs accuracy delta for
+/// our NA flow against naive fixed-threshold (BranchyNet-style)
+/// baselines on the same model.
+#[derive(Debug, Clone)]
+pub struct Fig4Point {
+    pub label: String,
+    pub mac_reduction_pct: f64,
+    pub acc_delta_pct: f64,
+    pub early_term_pct: f64,
+}
+
+pub fn fig4_series(
+    engine: &Engine,
+    man: &Manifest,
+    model_name: &str,
+) -> Result<Vec<Fig4Point>> {
+    let model = man.model(model_name)?;
+    let platform = platform_for_task(&model.task);
+    let base = baseline_eval(engine, man, model, &platform)?;
+    let mut points = Vec::new();
+
+    let mut push = |label: String, ev: &TestEval| {
+        points.push(Fig4Point {
+            label,
+            mac_reduction_pct: 100.0 * (1.0 - ev.mean_macs / base.mean_macs),
+            acc_delta_pct: (ev.quality.accuracy - base.quality.accuracy) * 100.0,
+            early_term_pct: ev.early_term * 100.0,
+        });
+    };
+
+    // ours
+    let cfg = FlowConfig {
+        latency_constraint_s: latency_constraint_for_task(&model.task),
+        ..FlowConfig::default()
+    };
+    let ours = na::augment(engine, man, model_name, &platform, &cfg)?;
+    let ev = evaluate_solution(engine, man, model, &ours.solution, &platform)?;
+    push("na-flow".into(), &ev);
+
+    // BranchyNet-style: same architecture, fixed global threshold
+    for t in [0.5, 0.7, 0.9] {
+        let mut fixed = ours.solution.clone();
+        for th in fixed.thresholds.iter_mut() {
+            *th = t;
+        }
+        let ev = evaluate_solution(engine, man, model, &fixed, &platform)?;
+        push(format!("fixed-{t}"), &ev);
+    }
+    Ok(points)
+}

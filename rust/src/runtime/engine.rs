@@ -1,0 +1,279 @@
+//! Engine service thread owning every PJRT object.
+//!
+//! Protocol: `Engine` (cheaply cloneable) sends `Req` over a channel;
+//! the service thread compiles HLO-text files into cached executables
+//! and runs them. Two execution modes:
+//!
+//! * `run` — all arguments are host tensors, converted per call.
+//! * `bind` + `run_bound` — constant arguments (model weights) are
+//!   converted to PJRT literals once at bind time; per-call arguments
+//!   join them at execute. This is the hot-path mode (see
+//!   EXPERIMENTS.md §Perf; true device-resident buffers via
+//!   `execute_b` segfault in this xla_extension 0.5.1 CPU build).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::tensor::{Dtype, HostTensor};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ExecHandle(usize);
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BoundHandle(usize);
+
+enum Req {
+    Compile(PathBuf, mpsc::Sender<Result<ExecHandle>>),
+    Run(ExecHandle, Vec<HostTensor>, mpsc::Sender<Result<Vec<HostTensor>>>),
+    /// Bind constant leading args as device buffers.
+    Bind(ExecHandle, Vec<HostTensor>, mpsc::Sender<Result<BoundHandle>>),
+    /// Run with bound constants + dynamic trailing args.
+    RunBound(BoundHandle, Vec<HostTensor>, mpsc::Sender<Result<Vec<HostTensor>>>),
+    Stats(mpsc::Sender<EngineStats>),
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub compiled: usize,
+    pub executions: u64,
+    pub exec_seconds: f64,
+}
+
+/// Cloneable, thread-safe handle to the engine service thread.
+#[derive(Clone)]
+pub struct Engine {
+    tx: mpsc::Sender<Req>,
+    _thread: Arc<JoinOnDrop>,
+}
+
+struct JoinOnDrop(Option<std::thread::JoinHandle<()>>);
+
+impl Drop for JoinOnDrop {
+    fn drop(&mut self) {
+        if let Some(h) = self.0.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Engine {
+    pub fn new() -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || service(rx, ready_tx))
+            .context("spawn engine thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died during init"))??;
+        Ok(Engine { tx, _thread: Arc::new(JoinOnDrop(Some(thread))) })
+    }
+
+    pub fn compile(&self, hlo_path: impl AsRef<Path>) -> Result<ExecHandle> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Compile(hlo_path.as_ref().to_path_buf(), tx))
+            .map_err(|_| anyhow!("engine gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine gone"))?
+    }
+
+    pub fn run(&self, exec: ExecHandle, args: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Run(exec, args, tx))
+            .map_err(|_| anyhow!("engine gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine gone"))?
+    }
+
+    /// Upload `consts` once; subsequent `run_bound` calls pass only the
+    /// remaining (trailing) arguments.
+    pub fn bind(&self, exec: ExecHandle, consts: Vec<HostTensor>) -> Result<BoundHandle> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Req::Bind(exec, consts, tx))
+            .map_err(|_| anyhow!("engine gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine gone"))?
+    }
+
+    pub fn run_bound(
+        &self,
+        bound: BoundHandle,
+        args: Vec<HostTensor>,
+    ) -> Result<Vec<HostTensor>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Req::RunBound(bound, args, tx))
+            .map_err(|_| anyhow!("engine gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine gone"))?
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        let (tx, rx) = mpsc::channel();
+        if self.tx.send(Req::Stats(tx)).is_err() {
+            return EngineStats::default();
+        }
+        rx.recv().unwrap_or_default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// service thread
+// ---------------------------------------------------------------------------
+
+fn literal_of(t: &HostTensor) -> Result<xla::Literal> {
+    let ty = match t.dtype {
+        Dtype::F32 => xla::ElementType::F32,
+        Dtype::I32 => xla::ElementType::S32,
+    };
+    let lit = xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, &t.data)
+        .map_err(|e| anyhow!("literal create: {e:?}"))?;
+    Ok(lit)
+}
+
+fn host_of(lit: &xla::Literal) -> Result<HostTensor> {
+    let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let (dtype, data) = match shape.primitive_type() {
+        xla::PrimitiveType::F32 => {
+            let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            (Dtype::F32, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        xla::PrimitiveType::S32 => {
+            let v: Vec<i32> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            (Dtype::I32, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        }
+        other => return Err(anyhow!("unsupported output dtype {other:?}")),
+    };
+    Ok(HostTensor { shape: dims, dtype, data })
+}
+
+struct Service {
+    client: xla::PjRtClient,
+    execs: Vec<xla::PjRtLoadedExecutable>,
+    by_path: HashMap<PathBuf, ExecHandle>,
+    bounds: Vec<(ExecHandle, Vec<xla::Literal>)>,
+    stats: EngineStats,
+}
+
+impl Service {
+    fn compile(&mut self, path: &Path) -> Result<ExecHandle> {
+        if let Some(&h) = self.by_path.get(path) {
+            return Ok(h);
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        let h = ExecHandle(self.execs.len());
+        self.execs.push(exe);
+        self.by_path.insert(path.to_path_buf(), h);
+        self.stats.compiled += 1;
+        Ok(h)
+    }
+
+    fn unpack(&mut self, results: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+        let buf = &results[0][0];
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        parts.iter().map(host_of).collect()
+    }
+
+    fn run(&mut self, h: ExecHandle, args: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let lits: Vec<xla::Literal> =
+            args.iter().map(literal_of).collect::<Result<_>>()?;
+        let t0 = std::time::Instant::now();
+        let exe = self.execs.get(h.0).ok_or_else(|| anyhow!("bad handle"))?;
+        let results = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        self.stats.executions += 1;
+        self.stats.exec_seconds += t0.elapsed().as_secs_f64();
+        self.unpack(results)
+    }
+
+    fn bind(&mut self, h: ExecHandle, consts: Vec<HostTensor>) -> Result<BoundHandle> {
+        // NOTE: device-resident binding via buffer_from_host_literal +
+        // execute_b segfaults in this xla_extension 0.5.1 CPU build, so
+        // the constants are pre-converted to PJRT *literals* once (the
+        // HostTensor -> Literal conversion is the measurable per-call
+        // cost; see EXPERIMENTS.md §Perf) and joined with the dynamic
+        // arguments through the proven `execute` path.
+        let lits: Vec<xla::Literal> =
+            consts.iter().map(literal_of).collect::<Result<_>>()?;
+        let b = BoundHandle(self.bounds.len());
+        self.bounds.push((h, lits));
+        Ok(b)
+    }
+
+    fn run_bound(&mut self, b: BoundHandle, args: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        let h = self
+            .bounds
+            .get(b.0)
+            .ok_or_else(|| anyhow!("bad bound handle"))?
+            .0;
+        let dyn_lits: Vec<xla::Literal> =
+            args.iter().map(literal_of).collect::<Result<_>>()?;
+        let t0 = std::time::Instant::now();
+        let results = {
+            let const_lits = &self.bounds[b.0].1;
+            let all: Vec<&xla::Literal> =
+                const_lits.iter().chain(dyn_lits.iter()).collect();
+            let exe = self.execs.get(h.0).ok_or_else(|| anyhow!("bad handle"))?;
+            exe.execute::<&xla::Literal>(&all)
+                .map_err(|e| anyhow!("execute: {e:?}"))?
+        };
+        self.stats.executions += 1;
+        self.stats.exec_seconds += t0.elapsed().as_secs_f64();
+        self.unpack(results)
+    }
+}
+
+fn service(rx: mpsc::Receiver<Req>, ready: mpsc::Sender<Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PjRtClient::cpu: {e:?}")));
+            return;
+        }
+    };
+    let mut svc = Service {
+        client,
+        execs: Vec::new(),
+        by_path: HashMap::new(),
+        bounds: Vec::new(),
+        stats: EngineStats::default(),
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Compile(path, tx) => {
+                let _ = tx.send(svc.compile(&path));
+            }
+            Req::Run(h, args, tx) => {
+                let _ = tx.send(svc.run(h, args));
+            }
+            Req::Bind(h, consts, tx) => {
+                let _ = tx.send(svc.bind(h, consts));
+            }
+            Req::RunBound(b, args, tx) => {
+                let _ = tx.send(svc.run_bound(b, args));
+            }
+            Req::Stats(tx) => {
+                let _ = tx.send(svc.stats.clone());
+            }
+        }
+    }
+}

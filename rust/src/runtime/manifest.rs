@@ -1,0 +1,300 @@
+//! Typed view of `artifacts/manifest.json` (written by python aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub shape: Vec<usize>,
+    pub offset_bytes: usize,
+    pub nbytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct BlockInfo {
+    pub name: String,
+    pub macs: u64,
+    pub param_count: u64,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub gap_dim: usize,
+    /// tensor names in argument order
+    pub params: Vec<String>,
+    pub hlo_b1: String,
+    pub hlo_beval: String,
+    /// Fused block+exit-head serving graph (hot-path optimization;
+    /// absent in artifacts exported before the §Perf pass).
+    pub hlo_head_b1: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct HeadGraphs {
+    pub hlo_b1: String,
+    pub hlo_beval: String,
+    pub hlo_train: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct SplitInfo {
+    pub x: String,
+    pub y: String,
+    pub n: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub task: String,
+    pub num_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub train_seconds: f64,
+    pub val_acc: f64,
+    pub test_acc: f64,
+    pub ee_locations: Vec<usize>,
+    pub blocks: Vec<BlockInfo>,
+    /// gap width -> head graph set
+    pub heads: BTreeMap<usize, HeadGraphs>,
+    pub head_c: usize,
+    pub head_w: String,
+    pub head_b: String,
+    pub backbone_all: String,
+    pub weights: String,
+    pub tensors: BTreeMap<String, TensorInfo>,
+    pub data: BTreeMap<String, SplitInfo>,
+}
+
+impl ModelInfo {
+    pub fn total_macs(&self) -> u64 {
+        self.blocks.iter().map(|b| b.macs).sum::<u64>()
+            + (self.head_c * self.num_classes) as u64
+    }
+
+    /// Cumulative MACs through block `loc` inclusive, plus a head there.
+    pub fn macs_through(&self, loc: usize) -> u64 {
+        self.blocks[..=loc].iter().map(|b| b.macs).sum::<u64>()
+            + (self.blocks[loc].gap_dim * self.num_classes) as u64
+    }
+
+    /// Parameter bytes of blocks `lo..=hi` (f32).
+    pub fn param_bytes(&self, lo: usize, hi: usize) -> u64 {
+        self.blocks[lo..=hi].iter().map(|b| b.param_count * 4).sum()
+    }
+
+    /// Peak activation bytes (in+out, f32, batch 1) over blocks lo..=hi.
+    pub fn peak_activation_bytes(&self, lo: usize, hi: usize) -> u64 {
+        self.blocks[lo..=hi]
+            .iter()
+            .map(|b| {
+                let i: usize = b.in_shape.iter().product();
+                let o: usize = b.out_shape.iter().product();
+                ((i + o) * 4) as u64
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// IFM transfer bytes at the boundary after block `loc` (f32, batch 1).
+    pub fn ifm_bytes(&self, loc: usize) -> u64 {
+        (self.blocks[loc].out_shape.iter().product::<usize>() * 4) as u64
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub eval_batch: usize,
+    pub train_batch: usize,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+fn usizes(j: &Json) -> Vec<usize> {
+    j.usize_arr().unwrap_or_default()
+}
+
+fn s(j: &Json, key: &str) -> Result<String> {
+    Ok(j.req(key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("{key} not a string"))?
+        .to_string())
+}
+
+fn n(j: &Json, key: &str) -> Result<f64> {
+    j.req(key)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("{key} not a number"))
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let eval_batch = n(&j, "eval_batch")? as usize;
+        let train_batch = n(&j, "train_batch")? as usize;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j
+            .req("models")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("models not an object"))?
+        {
+            models.insert(name.clone(), parse_model(name, m, eval_batch)?);
+        }
+        Ok(Manifest { root, eval_batch, train_batch, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+}
+
+fn parse_model(name: &str, m: &Json, eval_batch: usize) -> Result<ModelInfo> {
+    let mut blocks = Vec::new();
+    for b in m
+        .req("blocks")?
+        .as_arr()
+        .ok_or_else(|| anyhow!("blocks not an array"))?
+    {
+        blocks.push(BlockInfo {
+            name: s(b, "name")?,
+            macs: n(b, "macs")? as u64,
+            param_count: n(b, "param_count")? as u64,
+            in_shape: usizes(b.req("in_shape")?),
+            out_shape: usizes(b.req("out_shape")?),
+            gap_dim: n(b, "gap_dim")? as usize,
+            params: b
+                .req("params")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("params not an array"))?
+                .iter()
+                .filter_map(|p| p.as_str().map(String::from))
+                .collect(),
+            hlo_b1: s(b, "hlo_b1")?,
+            hlo_beval: s(b, &format!("hlo_b{eval_batch}"))?,
+            hlo_head_b1: b
+                .get("hlo_head_b1")
+                .and_then(|v| v.as_str())
+                .map(String::from),
+        });
+    }
+
+    let mut heads = BTreeMap::new();
+    for (c, h) in m
+        .req("heads")?
+        .as_obj()
+        .ok_or_else(|| anyhow!("heads not an object"))?
+    {
+        heads.insert(
+            c.parse::<usize>().context("head width key")?,
+            HeadGraphs {
+                hlo_b1: s(h, "hlo_b1")?,
+                hlo_beval: s(h, &format!("hlo_b{eval_batch}"))?,
+                hlo_train: s(h, "hlo_train")?,
+            },
+        );
+    }
+
+    let mut tensors = BTreeMap::new();
+    for (tname, t) in m
+        .req("tensors")?
+        .as_obj()
+        .ok_or_else(|| anyhow!("tensors not an object"))?
+    {
+        tensors.insert(
+            tname.clone(),
+            TensorInfo {
+                shape: usizes(t.req("shape")?),
+                offset_bytes: n(t, "offset_bytes")? as usize,
+                nbytes: n(t, "nbytes")? as usize,
+            },
+        );
+    }
+
+    let mut data = BTreeMap::new();
+    for (split, d) in m
+        .req("data")?
+        .as_obj()
+        .ok_or_else(|| anyhow!("data not an object"))?
+    {
+        data.insert(
+            split.clone(),
+            SplitInfo { x: s(d, "x")?, y: s(d, "y")?, n: n(d, "n")? as usize },
+        );
+    }
+
+    let head = m.req("head")?;
+    Ok(ModelInfo {
+        name: name.to_string(),
+        task: s(m, "task")?,
+        num_classes: n(m, "num_classes")? as usize,
+        input_shape: usizes(m.req("input_shape")?),
+        train_seconds: n(m, "train_seconds")?,
+        val_acc: n(m, "val_acc")?,
+        test_acc: n(m, "test_acc")?,
+        ee_locations: usizes(m.req("ee_locations")?),
+        blocks,
+        heads,
+        head_c: n(head, "c")? as usize,
+        head_w: s(head, "w")?,
+        head_b: s(head, "b")?,
+        backbone_all: s(m, "backbone_all")?,
+        weights: s(m, "weights")?,
+        tensors,
+        data,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("eenn_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let src = r#"{
+          "version": 1, "eval_batch": 50, "train_batch": 100,
+          "models": {"m": {
+            "task": "t", "num_classes": 3, "input_shape": [8, 1],
+            "train_seconds": 1.5, "val_acc": 0.9, "test_acc": 0.89,
+            "ee_locations": [0],
+            "blocks": [
+              {"name": "b0", "macs": 100, "param_count": 10,
+               "in_shape": [8,1], "out_shape": [4,2], "gap_dim": 2,
+               "params": ["b0/w"], "hlo_b1": "m/b0_1.txt", "hlo_b50": "m/b0_50.txt"}
+            ],
+            "head": {"c": 2, "k": 3, "w": "head_w", "b": "head_b"},
+            "heads": {"2": {"hlo_b1": "m/h1.txt", "hlo_b50": "m/h50.txt",
+                            "hlo_train": "m/ht.txt"}},
+            "backbone_all": "m/all.txt",
+            "weights": "m/weights.bin",
+            "tensors": {"b0/w": {"shape": [10], "offset_bytes": 0, "nbytes": 40}},
+            "data": {"train": {"x": "x.bin", "y": "y.bin", "n": 5}}
+          }}}"#;
+        std::fs::write(dir.join("manifest.json"), src).unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        let m = man.model("m").unwrap();
+        assert_eq!(m.num_classes, 3);
+        assert_eq!(m.blocks.len(), 1);
+        assert_eq!(m.blocks[0].gap_dim, 2);
+        assert_eq!(m.heads[&2].hlo_train, "m/ht.txt");
+        // total = block macs + head (2*3)
+        assert_eq!(m.total_macs(), 106);
+        assert_eq!(m.macs_through(0), 106);
+        assert_eq!(m.ifm_bytes(0), 32);
+        assert!(man.model("nope").is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! Runtime: load + execute AOT artifacts via the PJRT CPU client.
+//!
+//! All PJRT objects (client, executables, literals, device buffers)
+//! live on a single dedicated **engine service thread**; the rest of
+//! the system talks to it through a channel API exchanging plain host
+//! tensors. This keeps the `xla` crate's raw pointers off every other
+//! thread (they are not `Send`), gives the coordinator a `Clone +
+//! Send + Sync` handle, and — on this single-core testbed — costs
+//! nothing, since PJRT CPU execution is serialized anyway.
+
+mod engine;
+mod manifest;
+mod tensor;
+mod weights;
+
+pub use engine::{BoundHandle, Engine, ExecHandle};
+pub use manifest::{BlockInfo, HeadGraphs, Manifest, ModelInfo, SplitInfo, TensorInfo};
+pub use tensor::{Dtype, HostTensor};
+pub use weights::WeightStore;

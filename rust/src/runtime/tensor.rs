@@ -1,0 +1,87 @@
+//! Plain host tensor exchanged with the engine service thread.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+#[derive(Debug, Clone)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    /// Raw little-endian bytes, row-major.
+    pub data: Vec<u8>,
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], values: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { shape: shape.to_vec(), dtype: Dtype::F32, data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self::f32(&[], &[v])
+    }
+
+    pub fn i32(shape: &[usize], values: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        HostTensor { shape: shape.to_vec(), dtype: Dtype::I32, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, Dtype::F32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn to_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, Dtype::I32);
+        self.data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = HostTensor::f32(&[2, 3], &[1.0, -2.5, 3.0, 0.0, 5.5, -6.25]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.to_f32(), vec![1.0, -2.5, 3.0, 0.0, 5.5, -6.25]);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = HostTensor::i32(&[4], &[1, -2, 3, i32::MAX]);
+        assert_eq!(t.to_i32(), vec![1, -2, 3, i32::MAX]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::f32(&[2, 2], &[1.0]);
+    }
+}

@@ -1,0 +1,69 @@
+//! Loads `weights.bin` blobs according to the manifest tensor index.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::{Manifest, ModelInfo};
+use super::tensor::HostTensor;
+
+/// All weight tensors of one model, keyed by manifest tensor name.
+#[derive(Debug, Clone)]
+pub struct WeightStore {
+    tensors: BTreeMap<String, HostTensor>,
+}
+
+impl WeightStore {
+    pub fn load(man: &Manifest, model: &ModelInfo) -> Result<Self> {
+        let path = man.path(&model.weights);
+        let blob = std::fs::read(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let mut tensors = BTreeMap::new();
+        for (name, info) in &model.tensors {
+            let end = info.offset_bytes + info.nbytes;
+            if end > blob.len() {
+                return Err(anyhow!(
+                    "tensor {name} [{}..{end}] beyond blob ({} bytes)",
+                    info.offset_bytes,
+                    blob.len()
+                ));
+            }
+            let expect: usize = info.shape.iter().product::<usize>() * 4;
+            if expect != info.nbytes {
+                return Err(anyhow!(
+                    "tensor {name}: shape {:?} needs {expect} bytes, manifest says {}",
+                    info.shape,
+                    info.nbytes
+                ));
+            }
+            tensors.insert(
+                name.clone(),
+                HostTensor {
+                    shape: info.shape.clone(),
+                    dtype: super::tensor::Dtype::F32,
+                    data: blob[info.offset_bytes..end].to_vec(),
+                },
+            );
+        }
+        Ok(WeightStore { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow!("weight tensor {name:?} not found"))
+    }
+
+    /// Tensors for a block, in the manifest's argument order.
+    pub fn block_args(&self, block: &super::manifest::BlockInfo) -> Result<Vec<HostTensor>> {
+        block.params.iter().map(|p| self.get(p).cloned()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}

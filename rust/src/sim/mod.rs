@@ -1,0 +1,239 @@
+//! Analytic execution simulator: maps an EENN partition onto a
+//! platform and produces per-exit latency/energy, worst-case latency,
+//! and expectation under a termination distribution.
+//!
+//! The model mirrors the paper's §4 methodology: segment time =
+//! MACs / processor throughput; transfer time = IFM bytes over the
+//! link; energy = active-power × time on the executing core plus
+//! sleep-power × time on the parked cores (single-ported-memory
+//! platforms like the PSoC6 cannot overlap cores at all, which is
+//! also why the paper's subgraphs execute strictly in sequence).
+
+use crate::graph::BlockGraph;
+use crate::hw::Platform;
+
+/// An EENN architecture mapped onto a platform: exits after blocks
+/// `exits[i]`, subgraph i (blocks between consecutive boundaries) on
+/// processor i, final classifier on processor `exits.len()`.
+#[derive(Debug, Clone)]
+pub struct Mapping {
+    /// EE boundaries in ascending block order (may be empty: the
+    /// whole backbone on processor 0).
+    pub exits: Vec<usize>,
+}
+
+impl Mapping {
+    /// Block range (inclusive) of subgraph `seg`.
+    pub fn segment(&self, seg: usize, n_blocks: usize) -> (usize, usize) {
+        let lo = if seg == 0 { 0 } else { self.exits[seg - 1] + 1 };
+        let hi = if seg < self.exits.len() {
+            self.exits[seg]
+        } else {
+            n_blocks - 1
+        };
+        (lo, hi)
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.exits.len() + 1
+    }
+}
+
+/// Timing/energy of one classifier stage (exit i or the final head).
+#[derive(Debug, Clone, Default)]
+pub struct StageCost {
+    /// Compute time of this subgraph (+ its classifier head), seconds.
+    pub compute_s: f64,
+    /// Transfer time of the incoming IFM boundary, seconds (0 for seg 0).
+    pub transfer_s: f64,
+    /// Cumulative latency from sample arrival to this classifier's
+    /// verdict, seconds.
+    pub cum_latency_s: f64,
+    /// Cumulative energy through this verdict, millijoules.
+    pub cum_energy_mj: f64,
+    /// Cumulative MACs through this verdict.
+    pub cum_macs: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// One entry per classifier (EEs in order, then the final head).
+    pub stages: Vec<StageCost>,
+    /// Worst-case latency: every classifier evaluated (paper's
+    /// deployment constraint).
+    pub worst_case_s: f64,
+    /// Memory feasibility per processor (params + peak act <= budget).
+    pub memory_ok: Vec<bool>,
+}
+
+impl SimReport {
+    pub fn feasible(&self, latency_constraint_s: f64) -> bool {
+        self.worst_case_s <= latency_constraint_s && self.memory_ok.iter().all(|&b| b)
+    }
+
+    /// Expectation of (latency, energy, macs) under a per-classifier
+    /// termination distribution (must sum to 1).
+    pub fn expected(&self, term: &[f64]) -> (f64, f64, f64) {
+        assert_eq!(term.len(), self.stages.len());
+        let mut l = 0.0;
+        let mut e = 0.0;
+        let mut m = 0.0;
+        for (p, st) in term.iter().zip(&self.stages) {
+            l += p * st.cum_latency_s;
+            e += p * st.cum_energy_mj;
+            m += p * st.cum_macs as f64;
+        }
+        (l, e, m)
+    }
+}
+
+/// Simulate a mapped EENN on a platform.
+///
+/// Panics if the mapping has more segments than the platform has
+/// processors (the paper's architecture generation never produces
+/// such mappings; the candidate generator enforces it).
+pub fn simulate(graph: &BlockGraph, mapping: &Mapping, platform: &Platform) -> SimReport {
+    let nseg = mapping.n_segments();
+    assert!(
+        nseg <= platform.processors.len(),
+        "{nseg} segments > {} processors",
+        platform.processors.len()
+    );
+    let nb = graph.blocks.len();
+
+    let mut stages = Vec::with_capacity(nseg);
+    let mut cum_lat = 0.0;
+    let mut cum_e = 0.0;
+    let mut cum_macs = 0u64;
+
+    for seg in 0..nseg {
+        let (lo, hi) = mapping.segment(seg, nb);
+        let proc = &platform.processors[seg];
+
+        // incoming transfer (boundary IFM over links[seg-1])
+        let mut transfer_s = 0.0;
+        if seg > 0 {
+            let link = &platform.links[seg - 1];
+            let bytes = graph.blocks[lo - 1].ifm_bytes;
+            transfer_s = link.transfer_s(bytes);
+            cum_e += transfer_s * link.active_mw * 1e-3 * 1e3; // mW*s = mJ
+            cum_lat += transfer_s;
+        }
+
+        // subgraph compute + classifier head at this boundary
+        let seg_macs: u64 = graph.blocks[lo..=hi].iter().map(|b| b.macs).sum();
+        let head_macs = graph.head_macs(hi);
+        let compute_s = (seg_macs + head_macs) as f64 / proc.macs_per_sec;
+        cum_lat += compute_s;
+        cum_macs += seg_macs + head_macs;
+
+        // energy: executing core active; the other *local* cores asleep.
+        cum_e += compute_s * proc.active_mw;
+        for (pi, other) in platform.processors.iter().enumerate() {
+            if pi != seg {
+                cum_e += compute_s * other.sleep_mw;
+            }
+        }
+
+        stages.push(StageCost {
+            compute_s,
+            transfer_s,
+            cum_latency_s: cum_lat,
+            cum_energy_mj: cum_e,
+            cum_macs,
+        });
+    }
+
+    // memory feasibility per used processor
+    let mut memory_ok = Vec::with_capacity(nseg);
+    for seg in 0..nseg {
+        let (lo, hi) = mapping.segment(seg, nb);
+        let params: u64 = graph.blocks[lo..=hi].iter().map(|b| b.param_bytes).sum();
+        let head = graph.head_param_bytes(hi);
+        let act: u64 = graph.blocks[lo..=hi]
+            .iter()
+            .map(|b| b.act_bytes)
+            .max()
+            .unwrap_or(0);
+        memory_ok.push(params + head + act <= platform.processors[seg].mem_bytes);
+    }
+
+    let worst_case_s = stages.last().map(|s| s.cum_latency_s).unwrap_or(0.0);
+    SimReport { stages, worst_case_s, memory_ok }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    fn tiny_graph() -> BlockGraph {
+        BlockGraph::synthetic_resnet(10, 2)
+    }
+
+    #[test]
+    fn segment_ranges() {
+        let m = Mapping { exits: vec![2, 4] };
+        assert_eq!(m.segment(0, 7), (0, 2));
+        assert_eq!(m.segment(1, 7), (3, 4));
+        assert_eq!(m.segment(2, 7), (5, 6));
+        assert_eq!(m.n_segments(), 3);
+    }
+
+    #[test]
+    fn empty_mapping_single_segment() {
+        let m = Mapping { exits: vec![] };
+        assert_eq!(m.segment(0, 7), (0, 6));
+        assert_eq!(m.n_segments(), 1);
+    }
+
+    #[test]
+    fn cumulative_latency_monotone() {
+        let g = tiny_graph();
+        let p = presets::rk3588_cloud();
+        let r = simulate(&g, &Mapping { exits: vec![1, 4] }, &p);
+        assert_eq!(r.stages.len(), 3);
+        let mut prev = 0.0;
+        for s in &r.stages {
+            assert!(s.cum_latency_s > prev);
+            prev = s.cum_latency_s;
+        }
+        assert!((r.worst_case_s - prev).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expected_interpolates() {
+        let g = tiny_graph();
+        let p = presets::rk3588_cloud();
+        let r = simulate(&g, &Mapping { exits: vec![1] }, &p);
+        let (l_all_first, ..) = r.expected(&[1.0, 0.0]);
+        let (l_all_last, ..) = r.expected(&[0.0, 1.0]);
+        assert!(l_all_first < l_all_last);
+        let (l_mid, ..) = r.expected(&[0.5, 0.5]);
+        assert!((l_mid - 0.5 * (l_all_first + l_all_last)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exclusive_platform_psoc6_speech_regime() {
+        // Roughly re-derive the paper's GSC numbers: 11.8M-MAC model,
+        // EE after ~30% of MACs on the M0 at 10 MMAC/s should land in
+        // the hundreds-of-ms regime the paper reports (967.99 ms M0).
+        let mut g = tiny_graph();
+        let per_block = 11_800_000 / g.blocks.len() as u64;
+        for b in &mut g.blocks {
+            b.macs = per_block;
+        }
+        let p = presets::psoc6();
+        let r = simulate(&g, &Mapping { exits: vec![2] }, &p);
+        let m0_time = r.stages[0].cum_latency_s;
+        assert!(m0_time > 0.2 && m0_time < 1.5, "{m0_time}");
+    }
+
+    #[test]
+    #[should_panic(expected = "segments")]
+    fn too_many_segments_panics() {
+        let g = tiny_graph();
+        let p = presets::psoc6(); // 2 processors
+        simulate(&g, &Mapping { exits: vec![0, 1, 2] }, &p);
+    }
+}

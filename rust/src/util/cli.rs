@@ -1,0 +1,105 @@
+//! Tiny CLI argument parser (no clap in the offline vendor set).
+//!
+//! Supports `--key value`, `--key=value`, bare `--flag`, and
+//! positional arguments, with typed getters and defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags
+            .get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true" | "1" | "yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("search --model dscnn --lambda=0.9 --verbose --n 5 out.json");
+        assert_eq!(a.positional, vec!["search", "out.json"]);
+        assert_eq!(a.str("model", ""), "dscnn");
+        assert_eq!(a.f64("lambda", 0.0), 0.9);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.usize("n", 0), 5);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.str("missing", "dflt"), "dflt");
+        assert_eq!(a.usize("missing", 7), 7);
+        assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        // a bare flag followed by a positional consumes it as a value;
+        // `--flag` followed by another --flag stays boolean
+        let a = parse("--x --y val pos");
+        assert!(a.bool("x"));
+        assert_eq!(a.str("y", ""), "val");
+        assert_eq!(a.positional, vec!["pos"]);
+    }
+}

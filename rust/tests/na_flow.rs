@@ -1,0 +1,228 @@
+//! Integration: the full NA flow on real artifacts — search,
+//! training reuse, decision configuration, correction factors — and
+//! the invariants the paper claims for the produced solutions.
+
+use eenn_na::hw::presets;
+use eenn_na::na::{self, Calibration, EdgeModel, FlowConfig, Solver};
+use eenn_na::report;
+use eenn_na::runtime::{Engine, Manifest};
+
+fn setup() -> Option<(Engine, Manifest)> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return None;
+    }
+    Some((Engine::new().unwrap(), Manifest::load(dir).unwrap()))
+}
+
+#[test]
+fn ecg_flow_produces_feasible_solution() {
+    let Some((engine, man)) = setup() else { return };
+    let platform = presets::psoc6();
+    let cfg = FlowConfig { latency_constraint_s: 2.5, ..FlowConfig::default() };
+    let out = na::augment(&engine, &man, "ecg1d", &platform, &cfg).unwrap();
+    let sol = &out.solution;
+
+    // structure: at most one EE on a 2-processor platform
+    assert!(sol.exits.len() <= 1);
+    assert_eq!(sol.exits.len(), sol.thresholds.len());
+    assert_eq!(sol.exits.len(), sol.heads.len());
+    // expected termination mass is a distribution
+    let total: f64 = sol.expected_term_rates.iter().sum();
+    assert!((total - 1.0).abs() < 1e-9, "{total}");
+    assert!(sol.expected_mac_frac <= 1.0 + 1e-9);
+    // report covers the whole space: 3 locations -> 4 candidates
+    assert_eq!(out.report.prune.generated, 4);
+}
+
+#[test]
+fn solution_roundtrips_through_file() {
+    let Some((engine, man)) = setup() else { return };
+    let platform = presets::psoc6();
+    let out =
+        na::augment(&engine, &man, "ecg1d", &platform, &FlowConfig::default()).unwrap();
+    let p = std::env::temp_dir().join("na_flow_sol.json");
+    out.solution.save(&p).unwrap();
+    let loaded = eenn_na::eenn::EennSolution::load(&p).unwrap();
+    assert_eq!(loaded.exits, out.solution.exits);
+    assert_eq!(loaded.thresholds, out.solution.thresholds);
+    assert_eq!(loaded.heads.len(), out.solution.heads.len());
+}
+
+#[test]
+fn correction_factor_scales_thresholds_and_raises_termination() {
+    let Some((engine, man)) = setup() else { return };
+    let platform = presets::psoc6();
+    let model = man.model("ecg1d").unwrap();
+
+    let run = |factor: f64| {
+        let cfg = FlowConfig {
+            calibration: Calibration::TrainFallback { factor },
+            ..FlowConfig::default()
+        };
+        let out = na::augment(&engine, &man, "ecg1d", &platform, &cfg).unwrap();
+        let ev = report::evaluate_solution(&engine, &man, model, &out.solution, &platform)
+            .unwrap();
+        (out.solution, ev)
+    };
+    let (sol_1, ev_1) = run(1.0);
+    let (sol_h, ev_h) = run(0.5);
+
+    // factor scales deployed thresholds relative to the raw search result
+    for (t, r) in sol_h.thresholds.iter().zip(&sol_h.raw_thresholds) {
+        assert!((t - r * 0.5).abs() < 1e-12);
+    }
+    // lower thresholds can only terminate earlier (paper: higher
+    // efficiency gains + larger quality drop)
+    if sol_1.exits == sol_h.exits {
+        assert!(ev_h.early_term >= ev_1.early_term - 1e-9);
+        assert!(ev_h.mean_macs <= ev_1.mean_macs + 1e-6);
+    }
+}
+
+#[test]
+fn accuracy_weight_tradeoff_is_monotone() {
+    let Some((engine, man)) = setup() else { return };
+    let platform = presets::psoc6();
+    let model = man.model("dscnn").unwrap();
+
+    let run = |w_eff: f64, w_acc: f64| {
+        let cfg = FlowConfig { w_eff, w_acc, ..FlowConfig::default() };
+        let out = na::augment(&engine, &man, "dscnn", &platform, &cfg).unwrap();
+        report::evaluate_solution(&engine, &man, model, &out.solution, &platform).unwrap()
+    };
+    let eff = run(0.95, 0.05);
+    let acc = run(0.05, 0.95);
+    // an accuracy-weighted search must not lose more accuracy than the
+    // efficiency-weighted one, which in turn must not use more compute
+    assert!(acc.quality.accuracy >= eff.quality.accuracy - 1e-9);
+    assert!(eff.mean_macs <= acc.mean_macs + 1e-6);
+}
+
+#[test]
+fn solvers_agree_on_real_profiles() {
+    let Some((engine, man)) = setup() else { return };
+    let platform = presets::psoc6();
+    let mut results = Vec::new();
+    for solver in [Solver::BellmanFord, Solver::Dijkstra, Solver::Exhaustive] {
+        let cfg = FlowConfig { solver, refine: false, ..FlowConfig::default() };
+        let out = na::augment(&engine, &man, "ecg1d", &platform, &cfg).unwrap();
+        results.push(out.solution);
+    }
+    // BF and Dijkstra search the same graph: identical choice
+    assert_eq!(results[0].exits, results[1].exits);
+    assert_eq!(results[0].thresholds, results[1].thresholds);
+    // exhaustive may differ in thresholds but must agree on architecture
+    assert_eq!(results[0].exits, results[2].exits);
+}
+
+#[test]
+fn edge_models_both_viable() {
+    let Some((engine, man)) = setup() else { return };
+    let platform = presets::psoc6();
+    let model = man.model("ecg1d").unwrap();
+    for em in [EdgeModel::Pairwise, EdgeModel::Independent] {
+        let cfg = FlowConfig { edge_model: em, ..FlowConfig::default() };
+        let out = na::augment(&engine, &man, "ecg1d", &platform, &cfg).unwrap();
+        let ev = report::evaluate_solution(&engine, &man, model, &out.solution, &platform)
+            .unwrap();
+        // both models must find solutions that actually save compute
+        // without collapsing accuracy on this separable task
+        assert!(ev.mean_macs < model.total_macs() as f64);
+        assert!(ev.quality.accuracy > 0.85, "{em:?}: {}", ev.quality.accuracy);
+    }
+}
+
+#[test]
+fn latency_constraint_is_respected() {
+    let Some((engine, man)) = setup() else { return };
+    let platform = presets::psoc6();
+    let model = man.model("dscnn").unwrap();
+    let cfg = FlowConfig { latency_constraint_s: 2.5, ..FlowConfig::default() };
+    let out = na::augment(&engine, &man, "dscnn", &platform, &cfg).unwrap();
+    let ev =
+        report::evaluate_solution(&engine, &man, model, &out.solution, &platform).unwrap();
+    assert!(ev.worst_case_s <= 2.5, "worst case {} > 2.5", ev.worst_case_s);
+}
+
+#[test]
+fn finetune_refreshes_exits_without_quality_loss() {
+    let Some((engine, man)) = setup() else { return };
+    let model = man.model("ecg1d").unwrap();
+    let ws = eenn_na::runtime::WeightStore::load(&man, model).unwrap();
+    let train = eenn_na::data::load_split(&man, model, "train").unwrap();
+    let val = eenn_na::data::load_split(&man, model, "val").unwrap();
+    let tc = na::FeatureCache::build(&engine, &man, model, &ws, &train).unwrap();
+    let cc = na::FeatureCache::build(&engine, &man, model, &ws, &val).unwrap();
+
+    let short = na::TrainerConfig { epochs: 2, ..na::TrainerConfig::default() };
+    let ex = na::train_exit(&engine, &man, model, &tc, &cc, 0, &short).unwrap();
+    let ft =
+        na::trainer::finetune_exit(&engine, &man, model, &tc, &cc, &ex, 4, 0.1).unwrap();
+    assert_eq!(ft.epochs_run, ex.epochs_run + 4);
+    // more training on frozen features must not collapse quality
+    assert!(
+        ft.calibration_acc >= ex.calibration_acc - 0.02,
+        "{} vs {}",
+        ft.calibration_acc,
+        ex.calibration_acc
+    );
+    // weights actually moved
+    assert_ne!(ft.w, ex.w);
+}
+
+#[test]
+fn flow_with_finetune_produces_valid_solution() {
+    let Some((engine, man)) = setup() else { return };
+    let platform = presets::psoc6();
+    let cfg = FlowConfig { finetune_epochs: 2, ..FlowConfig::default() };
+    let out = na::augment(&engine, &man, "ecg1d", &platform, &cfg).unwrap();
+    let total: f64 = out.solution.expected_term_rates.iter().sum();
+    assert!((total - 1.0).abs() < 1e-9);
+    assert_eq!(out.solution.exits.len(), out.solution.thresholds.len());
+}
+
+#[test]
+fn staged_runner_agrees_with_batch_replay() {
+    // the per-sample staged engine and the cached-feature replay are
+    // two implementations of the same cascade: they must agree.
+    let Some((engine, man)) = setup() else { return };
+    let platform = presets::psoc6();
+    let model = man.model("ecg1d").unwrap();
+    let ws = eenn_na::runtime::WeightStore::load(&man, model).unwrap();
+    let out =
+        na::augment(&engine, &man, "ecg1d", &platform, &FlowConfig::default()).unwrap();
+    let runner =
+        eenn_na::eenn::StagedRunner::new(&engine, &man, model, &ws, &out.solution).unwrap();
+
+    let test = eenn_na::data::load_split(&man, model, "test").unwrap();
+    let cache = na::FeatureCache::build(&engine, &man, model, &ws, &test).unwrap();
+    let mut prof = Vec::new();
+    for h in &out.solution.heads {
+        prof.push(
+            na::trainer::profile_head(&engine, &man, model, &cache, h.location, &h.w, &h.b)
+                .unwrap(),
+        );
+    }
+    let fin = cache.final_profile();
+
+    for i in (0..200).step_by(7) {
+        let r = runner.infer(test.sample(i)).unwrap();
+        // replay the same sample through cached profiles
+        let mut exit = out.solution.exits.len();
+        for (e, p) in prof.iter().enumerate() {
+            if p.conf[i] as f64 >= out.solution.thresholds[e] {
+                exit = e;
+                break;
+            }
+        }
+        let pred = if exit == out.solution.exits.len() {
+            fin.pred[i]
+        } else {
+            prof[exit].pred[i]
+        };
+        assert_eq!(r.exit_index, exit, "sample {i}");
+        assert_eq!(r.pred, pred, "sample {i}");
+    }
+}

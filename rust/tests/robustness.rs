@@ -1,0 +1,117 @@
+//! Failure injection: the runtime must reject corrupt or inconsistent
+//! artifacts with errors, not UB — truncated weight blobs, missing
+//! HLO files, malformed manifests, undersized data blobs, and
+//! inconsistent solutions.
+
+use eenn_na::data::load_split;
+use eenn_na::runtime::{Engine, Manifest, WeightStore};
+use eenn_na::util::json::Json;
+
+fn artifacts() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    Some(Manifest::load(dir).unwrap())
+}
+
+fn scratch(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("eenn_robust_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_manifest_is_an_error() {
+    let dir = scratch("nomanifest");
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn malformed_manifest_is_an_error() {
+    let dir = scratch("badjson");
+    std::fs::write(dir.join("manifest.json"), "{ not json").unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn manifest_missing_required_keys_is_an_error() {
+    let dir = scratch("missingkeys");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"version":1,"eval_batch":50,"train_batch":100,
+            "models":{"m":{"task":"t"}}}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn truncated_weight_blob_is_an_error() {
+    let Some(man) = artifacts() else { return };
+    let model = man.model("ecg1d").unwrap();
+    // copy the manifest to a scratch dir with a truncated blob
+    let dir = scratch("truncweights");
+    let text = std::fs::read_to_string(man.root.join("manifest.json")).unwrap();
+    std::fs::write(dir.join("manifest.json"), text).unwrap();
+    let wpath = dir.join(&model.weights);
+    std::fs::create_dir_all(wpath.parent().unwrap()).unwrap();
+    let full = std::fs::read(man.path(&model.weights)).unwrap();
+    std::fs::write(&wpath, &full[..full.len() / 2]).unwrap();
+
+    let man2 = Manifest::load(&dir).unwrap();
+    let model2 = man2.model("ecg1d").unwrap();
+    assert!(WeightStore::load(&man2, model2).is_err());
+}
+
+#[test]
+fn undersized_data_blob_is_an_error() {
+    let Some(man) = artifacts() else { return };
+    let model = man.model("ecg1d").unwrap();
+    let dir = scratch("truncdata");
+    let text = std::fs::read_to_string(man.root.join("manifest.json")).unwrap();
+    std::fs::write(dir.join("manifest.json"), text).unwrap();
+    let split = model.data.get("test").unwrap();
+    for rel in [&split.x, &split.y] {
+        let p = dir.join(rel);
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(&p, [0u8; 16]).unwrap();
+    }
+    let man2 = Manifest::load(&dir).unwrap();
+    let model2 = man2.model("ecg1d").unwrap();
+    assert!(load_split(&man2, model2, "test").is_err());
+}
+
+#[test]
+fn compiling_missing_hlo_is_an_error_not_a_crash() {
+    let Some(_) = artifacts() else { return };
+    let engine = Engine::new().unwrap();
+    assert!(engine.compile("/does/not/exist.hlo.txt").is_err());
+    // the engine must stay usable after a failed compile
+    let man = artifacts().unwrap();
+    let model = man.model("ecg1d").unwrap();
+    let ok = engine.compile(man.path(&model.blocks[0].hlo_b1));
+    assert!(ok.is_ok());
+}
+
+#[test]
+fn garbage_hlo_text_is_an_error() {
+    let Some(_) = artifacts() else { return };
+    let engine = Engine::new().unwrap();
+    let p = std::env::temp_dir().join("garbage.hlo.txt");
+    std::fs::write(&p, "HloModule garbage\nthis is not hlo").unwrap();
+    assert!(engine.compile(&p).is_err());
+}
+
+#[test]
+fn solution_from_wrong_json_shape_is_an_error() {
+    let j = Json::parse(r#"{"model": "m"}"#).unwrap();
+    assert!(eenn_na::eenn::EennSolution::from_json(&j).is_err());
+}
+
+#[test]
+fn unknown_model_lookup_is_an_error() {
+    let Some(man) = artifacts() else { return };
+    assert!(man.model("does_not_exist").is_err());
+}

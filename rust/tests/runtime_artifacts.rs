@@ -1,0 +1,148 @@
+//! Integration: load real artifacts, execute block / head / train-step
+//! graphs through PJRT, and check numerics end-to-end against the
+//! manifest's recorded backbone accuracy.
+//!
+//! Requires `make artifacts` to have run (skipped otherwise).
+
+use eenn_na::data::load_split;
+use eenn_na::runtime::{Dtype, Engine, HostTensor, Manifest, WeightStore};
+
+fn artifacts() -> Option<Manifest> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest parses"))
+}
+
+#[test]
+fn block_graph_executes_with_expected_shapes() {
+    let Some(man) = artifacts() else { return };
+    let engine = Engine::new().expect("engine");
+    let model = man.model("ecg1d").expect("ecg1d exported");
+    let ws = WeightStore::load(&man, model).expect("weights");
+
+    let blk = &model.blocks[0];
+    let exec = engine.compile(man.path(&blk.hlo_b1)).expect("compile");
+    let mut args = ws.block_args(blk).expect("block args");
+    let feat: usize = model.input_shape.iter().product();
+    args.push(HostTensor::f32(
+        &[1, model.input_shape[0], model.input_shape[1]],
+        &vec![0.1; feat],
+    ));
+    let out = engine.run(exec, args).expect("run");
+    assert_eq!(out.len(), 2, "block returns (ifm, gap)");
+    let mut expect_ifm = vec![1usize];
+    expect_ifm.extend(&blk.out_shape);
+    assert_eq!(out[0].shape, expect_ifm);
+    assert_eq!(out[1].shape, vec![1, blk.gap_dim]);
+}
+
+#[test]
+fn head_graph_probs_sum_to_one() {
+    let Some(man) = artifacts() else { return };
+    let engine = Engine::new().expect("engine");
+    let model = man.model("ecg1d").expect("ecg1d exported");
+    let c = model.blocks[0].gap_dim;
+    let k = model.num_classes;
+    let head = &model.heads[&c];
+    let exec = engine.compile(man.path(&head.hlo_b1)).expect("compile");
+
+    let w = HostTensor::f32(&[c, k], &(0..c * k).map(|i| (i % 7) as f32 * 0.1).collect::<Vec<_>>());
+    let b = HostTensor::f32(&[k], &vec![0.0; k]);
+    let f = HostTensor::f32(&[1, c], &(0..c).map(|i| i as f32 * 0.05).collect::<Vec<_>>());
+    let out = engine.run(exec, vec![w, b, f]).expect("run");
+    assert_eq!(out.len(), 3, "(probs, conf, pred)");
+    let probs = out[0].to_f32();
+    let total: f32 = probs.iter().sum();
+    assert!((total - 1.0).abs() < 1e-4, "probs sum {total}");
+    let conf = out[1].to_f32()[0];
+    let max = probs.iter().cloned().fold(f32::MIN, f32::max);
+    assert!((conf - max).abs() < 1e-5);
+    assert_eq!(out[2].dtype, Dtype::I32);
+}
+
+#[test]
+fn train_step_reduces_loss_on_separable_data() {
+    let Some(man) = artifacts() else { return };
+    let engine = Engine::new().expect("engine");
+    let model = man.model("ecg1d").expect("ecg1d exported");
+    let c = model.blocks[0].gap_dim;
+    let k = model.num_classes;
+    let tb = man.train_batch;
+    let exec = engine
+        .compile(man.path(&model.heads[&c].hlo_train))
+        .expect("compile");
+
+    // linearly separable toy features: class = argmax of first k dims
+    let mut x = vec![0.0f32; tb * c];
+    let mut y = vec![0.0f32; tb * k];
+    for i in 0..tb {
+        let cls = i % k;
+        x[i * c + cls] = 1.0;
+        y[i * k + cls] = 1.0;
+    }
+    let mut w = HostTensor::f32(&[c, k], &vec![0.0; c * k]);
+    let mut b = HostTensor::f32(&[k], &vec![0.0; k]);
+    let xs = HostTensor::f32(&[tb, c], &x);
+    let ys = HostTensor::f32(&[tb, k], &y);
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        let out = engine
+            .run(exec, vec![w, b, xs.clone(), ys.clone(), HostTensor::scalar_f32(0.5)])
+            .expect("train step");
+        w = out[0].clone();
+        b = out[1].clone();
+        losses.push(out[2].to_f32()[0]);
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.5),
+        "loss did not halve: {losses:?}"
+    );
+}
+
+#[test]
+fn backbone_all_matches_manifest_accuracy() {
+    let Some(man) = artifacts() else { return };
+    let engine = Engine::new().expect("engine");
+    let model = man.model("ecg1d").expect("ecg1d exported");
+    let ws = WeightStore::load(&man, model).expect("weights");
+    let test = load_split(&man, model, "test").expect("test split");
+
+    let exec = engine.compile(man.path(&model.backbone_all)).expect("compile");
+    let eb = man.eval_batch;
+    let mut base_args: Vec<HostTensor> = Vec::new();
+    for blk in &model.blocks {
+        base_args.extend(ws.block_args(blk).expect("args"));
+    }
+    base_args.push(ws.get(&model.head_w).unwrap().clone());
+    base_args.push(ws.get(&model.head_b).unwrap().clone());
+
+    let n_batches = 6; // 300 samples is enough for a tight check
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for bi in 0..n_batches {
+        let lo = bi * eb;
+        let mut args = base_args.clone();
+        let mut shape = vec![eb];
+        shape.extend(&model.input_shape);
+        let xs: Vec<f32> = (lo..lo + eb).flat_map(|i| test.sample(i).to_vec()).collect();
+        args.push(HostTensor::f32(&shape, &xs));
+        let out = engine.run(exec, args).expect("run");
+        // outputs: gap per block ... probs, conf, pred
+        let pred = out.last().unwrap().to_i32();
+        for (j, p) in pred.iter().enumerate() {
+            total += 1;
+            if *p == test.y[lo + j] {
+                correct += 1;
+            }
+        }
+    }
+    let acc = correct as f64 / total as f64;
+    assert!(
+        (acc - model.test_acc).abs() < 0.05,
+        "rust-side acc {acc} vs manifest {}",
+        model.test_acc
+    );
+}

@@ -1,0 +1,126 @@
+//! Integration: the distributed serving coordinator on real
+//! artifacts — completion, quality, backpressure, batching, and
+//! sim-clock sanity.
+
+use eenn_na::coordinator::{serve, ServeConfig};
+use eenn_na::data::load_split;
+use eenn_na::hw::presets;
+use eenn_na::na::{self, FlowConfig};
+use eenn_na::runtime::{Engine, Manifest, WeightStore};
+
+fn setup() -> Option<(Engine, Manifest)> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return None;
+    }
+    Some((Engine::new().unwrap(), Manifest::load(dir).unwrap()))
+}
+
+#[test]
+fn serves_all_requests_with_replay_quality() {
+    let Some((engine, man)) = setup() else { return };
+    let platform = presets::psoc6();
+    let model = man.model("ecg1d").unwrap();
+    let ws = WeightStore::load(&man, model).unwrap();
+    let sol = na::augment(&engine, &man, "ecg1d", &platform, &FlowConfig::default())
+        .unwrap()
+        .solution;
+    let test = load_split(&man, model, "test").unwrap();
+
+    let cfg = ServeConfig {
+        arrival_rate_hz: 50.0,
+        n_requests: 120,
+        queue_cap: 256,
+        batch_max: 4,
+        seed: 3,
+    };
+    let m = serve(&engine, &man, model, &ws, &sol, &platform, &test, &cfg).unwrap();
+
+    assert_eq!(m.completed + m.dropped, cfg.n_requests);
+    assert!(m.dropped < cfg.n_requests / 10, "dropped {}", m.dropped);
+    assert!(m.quality.accuracy > 0.85, "acc {}", m.quality.accuracy);
+    // termination histogram covers all classifiers and sums to completed
+    assert_eq!(m.term_hist.iter().sum::<usize>(), m.completed);
+    assert_eq!(m.term_hist.len(), sol.exits.len() + 1);
+    assert!(m.sim_latency.min > 0.0);
+    assert!(m.mean_energy_mj > 0.0);
+}
+
+#[test]
+fn backpressure_drops_when_overloaded() {
+    let Some((engine, man)) = setup() else { return };
+    let platform = presets::psoc6();
+    let model = man.model("ecg1d").unwrap();
+    let ws = WeightStore::load(&man, model).unwrap();
+    let sol = na::augment(&engine, &man, "ecg1d", &platform, &FlowConfig::default())
+        .unwrap()
+        .solution;
+    let test = load_split(&man, model, "test").unwrap();
+
+    // tiny queue + burst arrivals: the generator must shed load
+    // rather than block the always-on core
+    let cfg = ServeConfig {
+        arrival_rate_hz: 1e6,
+        n_requests: 500,
+        queue_cap: 2,
+        batch_max: 1,
+        seed: 1,
+    };
+    let m = serve(&engine, &man, model, &ws, &sol, &platform, &test, &cfg).unwrap();
+    assert!(m.dropped > 0, "expected drops under overload");
+    assert_eq!(m.completed + m.dropped, cfg.n_requests);
+}
+
+#[test]
+fn queueing_increases_sim_latency_under_load() {
+    let Some((engine, man)) = setup() else { return };
+    let platform = presets::psoc6();
+    let model = man.model("ecg1d").unwrap();
+    let ws = WeightStore::load(&man, model).unwrap();
+    let sol = na::augment(&engine, &man, "ecg1d", &platform, &FlowConfig::default())
+        .unwrap()
+        .solution;
+    let test = load_split(&man, model, "test").unwrap();
+
+    let run = |rate: f64| {
+        let cfg = ServeConfig {
+            arrival_rate_hz: rate,
+            n_requests: 100,
+            queue_cap: 4096,
+            batch_max: 1,
+            seed: 9,
+        };
+        serve(&engine, &man, model, &ws, &sol, &platform, &test, &cfg).unwrap()
+    };
+    let light = run(1.0); // well under device capacity
+    let heavy = run(10_000.0); // far over capacity: queueing dominates
+    assert!(
+        heavy.sim_latency.p99 > light.sim_latency.p99,
+        "p99 {} !> {}",
+        heavy.sim_latency.p99,
+        light.sim_latency.p99
+    );
+}
+
+#[test]
+fn cloud_batching_on_distributed_platform() {
+    let Some((engine, man)) = setup() else { return };
+    let Ok(model) = man.model("resnet_c10") else { return };
+    let platform = presets::rk3588_cloud();
+    let ws = WeightStore::load(&man, model).unwrap();
+    let sol = na::augment(&engine, &man, "resnet_c10", &platform, &FlowConfig::default())
+        .unwrap()
+        .solution;
+    let test = load_split(&man, model, "test").unwrap();
+    let scfg = ServeConfig {
+        arrival_rate_hz: 100.0,
+        n_requests: 60,
+        queue_cap: 128,
+        batch_max: 8,
+        seed: 2,
+    };
+    let m = serve(&engine, &man, model, &ws, &sol, &platform, &test, &scfg).unwrap();
+    assert_eq!(m.completed + m.dropped, scfg.n_requests);
+    assert!(m.quality.accuracy > 0.5);
+}
