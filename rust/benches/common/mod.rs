@@ -3,6 +3,9 @@
 //! generate the synthetic calibration profiles used by the
 //! paper-scale experiments.
 
+// each bench target uses a different subset of these helpers
+#![allow(dead_code)]
+
 use eenn_na::na::ExitProfile;
 use eenn_na::util::rng::Rng;
 use eenn_na::util::stats::summarize;

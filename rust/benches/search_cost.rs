@@ -101,7 +101,7 @@ fn main() {
     println!("best architecture: exits {exits:?} (score {score:.4})");
 
     // --- worst-case latency of the winner on the platform ---------------
-    let rep = simulate(&graph, &Mapping { exits: exits.clone() }, &platform);
+    let rep = simulate(&graph, &Mapping::chain(exits.clone()), &platform);
     println!("winner worst-case latency: {:.2} ms", rep.worst_case_s * 1e3);
 
     // --- the paper's exhaustive-training extrapolation ------------------

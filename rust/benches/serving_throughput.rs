@@ -1,0 +1,127 @@
+//! Coordinator throughput: requests/sec through the stage-graph
+//! serving executor on the paper's two platform presets, with the
+//! synthetic stage backend (hermetic: no artifacts, no PJRT), so the
+//! executor's own overhead — queues, escalation routing, device
+//! clocks, micro-batching, tracing — is what gets measured.
+//!
+//! Results are printed and written to `BENCH_serving_throughput.json`
+//! so mapping/executor changes stay trackable across PRs.
+//!
+//! Run: `cargo bench --bench serving_throughput`
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use eenn_na::coordinator::{serve_synthetic, ServeConfig};
+use eenn_na::eenn::EennSolution;
+use eenn_na::graph::BlockGraph;
+use eenn_na::hw::{presets, Platform};
+use eenn_na::mapping::{co_search, MappingObjective};
+use eenn_na::util::json::Json;
+
+fn synth_solution(exits: Vec<usize>, assignment: Vec<usize>, term: Vec<f64>) -> EennSolution {
+    let k = exits.len();
+    EennSolution {
+        model: "synthetic".into(),
+        platform: "bench".into(),
+        exits,
+        assignment,
+        thresholds: vec![0.6; k],
+        raw_thresholds: vec![0.6; k],
+        correction_factor: 1.0,
+        heads: vec![],
+        expected_term_rates: term,
+        expected_acc: 0.9,
+        expected_mac_frac: 0.5,
+        score: 0.0,
+    }
+}
+
+/// One serving scenario: returns sustained requests/sec (wall clock).
+fn run_scenario(
+    graph: &BlockGraph,
+    platform: &Platform,
+    sol: &EennSolution,
+    batch_max: usize,
+    n_requests: usize,
+) -> f64 {
+    let cfg = ServeConfig {
+        arrival_rate_hz: 1e5, // sim-time arrivals; wall throughput is measured
+        n_requests,
+        queue_cap: n_requests.max(1024),
+        batch_max,
+        seed: 42,
+    };
+    let m = serve_synthetic(graph, sol, platform, &cfg).expect("serve");
+    assert_eq!(
+        m.completed + m.dropped,
+        n_requests,
+        "request accounting must balance"
+    );
+    assert_eq!(m.dropped, 0, "roomy queues must not shed");
+    m.throughput_rps
+}
+
+fn main() {
+    let graph = BlockGraph::synthetic_resnet(10, 2);
+    let n = 20_000;
+    println!("=== serving throughput (stage-graph executor, synthetic backend) ===");
+    println!("graph: {} blocks | {} requests per scenario\n", graph.blocks.len(), n);
+
+    let mut results: BTreeMap<String, Json> = BTreeMap::new();
+    let mut record = |name: &str, rps: f64| {
+        println!("{name:<44} {rps:>12.0} req/s");
+        results.insert(name.to_string(), Json::Num(rps));
+    };
+
+    // --- psoc6 (2 cores, exclusive memory), identity chain ------------
+    let psoc6 = presets::psoc6();
+    let sol = synth_solution(vec![2], vec![0, 1], vec![0.6, 0.4]);
+    // warmup
+    run_scenario(&graph, &psoc6, &sol, 1, 2_000);
+    record("psoc6 chain b=1", run_scenario(&graph, &psoc6, &sol, 1, n));
+    record("psoc6 chain b=8", run_scenario(&graph, &psoc6, &sol, 8, n));
+
+    // --- rk3588+cloud (3 targets), identity chain ----------------------
+    let rk = presets::rk3588_cloud();
+    let sol = synth_solution(vec![2], vec![0, 1], vec![0.6, 0.4]);
+    run_scenario(&graph, &rk, &sol, 1, 2_000);
+    record("rk3588+cloud chain b=1", run_scenario(&graph, &rk, &sol, 1, n));
+    record("rk3588+cloud chain b=8", run_scenario(&graph, &rk, &sol, 8, n));
+
+    // --- rk3588+cloud, co-searched mapping -----------------------------
+    let choice = co_search(
+        &graph,
+        &[2],
+        &rk,
+        &[0.6, 0.4],
+        f64::INFINITY,
+        &MappingObjective::default(),
+    )
+    .expect("feasible mapping");
+    println!(
+        "\nco-searched mapping {:?} (cost {:.4} vs chain {:.4})",
+        choice.mapping.assignment, choice.expected_cost, choice.chain_cost
+    );
+    let sol = synth_solution(vec![2], choice.mapping.assignment.clone(), vec![0.6, 0.4]);
+    record(
+        "rk3588+cloud co-searched b=8",
+        run_scenario(&graph, &rk, &sol, 8, n),
+    );
+
+    // artifacts note: the PJRT-backed serving path is exercised by
+    // `cargo bench --bench hotpath` / the serving tests when artifacts
+    // are exported; this bench isolates executor overhead.
+    if common::have_artifacts() {
+        println!("\n(artifacts present: see `--bench hotpath` for PJRT per-request numbers)");
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("serving_throughput".to_string()));
+    top.insert("unit".to_string(), Json::Str("requests_per_sec".to_string()));
+    top.insert("results".to_string(), Json::Obj(results));
+    let path = "BENCH_serving_throughput.json";
+    std::fs::write(path, Json::Obj(top).to_string()).expect("write bench json");
+    println!("\nwrote {path}");
+}

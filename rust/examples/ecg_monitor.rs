@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     let test = load_split(&manifest, model, "test")?;
 
     let graph = BlockGraph::from_manifest(model);
-    let mapping = Mapping { exits: out.solution.exits.clone() };
+    let mapping = out.solution.mapping();
     let sim = simulate(&graph, &mapping, &platform);
 
     let n = 400.min(test.n);

@@ -37,11 +37,11 @@ fn main() -> anyhow::Result<()> {
     // per-subgraph timing on the two cores (paper: 967.99 ms on the
     // M0 subgraph + 521 ms on the M4F subgraph)
     let graph = BlockGraph::from_manifest(model);
-    let mapping = Mapping { exits: sol.exits.clone() };
+    let mapping = sol.mapping();
     let sim = simulate(&graph, &mapping, &platform);
     println!("\n== mapping onto {} ==", platform.name);
     for (i, st) in sim.stages.iter().enumerate() {
-        let proc = &platform.processors[i];
+        let proc = &platform.processors[mapping.proc_of(i)];
         println!(
             "  subgraph {} on {:<11}: compute {:.1} ms (+{:.1} ms transfer), cum energy {:.2} mJ",
             i,

@@ -1,21 +1,42 @@
 //! Distributed serving coordinator: the deployment runtime for an
 //! augmented EENN on a (simulated) heterogeneous platform.
 //!
-//! One worker thread per processor executes its mapped subgraph
-//! through PJRT B=1 artifacts and the exit head at its boundary.
-//! Samples that fail the confidence test escalate over the simulated
-//! interconnect to the next processor's bounded queue (backpressure:
-//! arrivals are dropped when the first queue is full — the always-on
-//!-monitoring regime of the paper's IoT scenarios). The last
-//! processor (e.g. the cloud GPU) batches escalated samples up to the
-//! evaluation batch size and runs the batched artifacts.
+//! The executor is a **stage graph built from the solution's
+//! [`Mapping`]**: one stage per segment, each with a bounded queue
+//! (backpressure: arrivals are shed when the first queue is full — the
+//! always-on-monitoring regime of the paper's IoT scenarios) and a
+//! worker thread driving a [`StageExec`] backend. Samples that fail
+//! the confidence test escalate along the mapping's `assignment`:
+//! the device clock routes the boundary IFM over the interconnect
+//! between the two segments' processors, and two segments sharing a
+//! processor serialize on its single device timeline (all stages
+//! share one timeline on single-ported-memory platforms). Every
+//! stage micro-batches up to `batch_max` queued samples per wake; a
+//! micro-batch occupies its processor once, scaled by the processor's
+//! batch-serialization fraction (GPUs amortize, scalar cores do not).
+//!
+//! Two interchangeable stage backends:
+//! * [`serve`] — real PJRT compute through B=1 / batched artifacts
+//!   (needs exported artifacts and the `pjrt` feature);
+//! * [`serve_synthetic`] — a calibrated stochastic stand-in drawing
+//!   per-stage termination from the solution's expected rates, which
+//!   exercises the full executor (queues, escalation, clocks, traces)
+//!   hermetically for tests and benches.
 //!
 //! Two clocks:
-//! * **wall** — actual PJRT compute on this machine (hot-path perf);
+//! * **wall** — actual compute on this machine (hot-path perf);
 //! * **sim**  — the platform's analytic device clock (per-processor
 //!   busy-until, single-ported-memory exclusivity, link delays),
 //!   which produces the latency/energy numbers comparable to the
 //!   paper's testbeds.
+//!
+//! Known limitation: when two stages share a device timeline (a
+//! shared-processor mapping, or any exclusive-memory platform), the
+//! *order* in which they reserve it follows the OS thread schedule,
+//! so seeded runs reproduce aggregate behaviour (counts, routing,
+//! busy totals) but individual sim-latency percentiles can vary
+//! slightly across runs. Fully deterministic replay would need a
+//! discrete-event scheduler instead of free-running stage threads.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -28,9 +49,10 @@ use crate::data::Split;
 use crate::eenn::EennSolution;
 use crate::graph::BlockGraph;
 use crate::hw::Platform;
-use crate::metrics::Confusion;
+use crate::mapping::Mapping;
+use crate::metrics::{Confusion, Quality};
 use crate::runtime::{BoundHandle, Engine, HostTensor, Manifest, ModelInfo, WeightStore};
-use crate::sim::{simulate, Mapping, SimReport};
+use crate::sim::{simulate, SimReport};
 use crate::util::rng::Rng;
 use crate::util::stats::{summarize, Summary};
 
@@ -41,7 +63,7 @@ pub struct ServeConfig {
     pub n_requests: usize,
     /// Per-queue capacity (backpressure bound).
     pub queue_cap: usize,
-    /// Batch up to this many samples on the last processor (cloud).
+    /// Micro-batch bound per stage wake (1 = strictly per-sample).
     pub batch_max: usize,
     pub seed: u64,
 }
@@ -58,6 +80,18 @@ impl Default for ServeConfig {
     }
 }
 
+/// Per-request record (wired from `Job.id` through the pipeline).
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    pub id: usize,
+    /// Terminating classifier (== segment index; EEs then final).
+    pub exit_index: usize,
+    /// Processors visited, in escalation order (assignment prefix).
+    pub procs: Vec<usize>,
+    pub sim_latency_s: f64,
+    pub wall_latency_s: f64,
+}
+
 #[derive(Debug)]
 pub struct ServeMetrics {
     pub completed: usize,
@@ -71,120 +105,120 @@ pub struct ServeMetrics {
     pub mean_energy_mj: f64,
     /// Termination count per classifier (EEs then final).
     pub term_hist: Vec<usize>,
-    pub quality: crate::metrics::Quality,
+    pub quality: Quality,
+    /// Per-request traces, ordered by request id.
+    pub traces: Vec<RequestTrace>,
+    /// Total reserved device time per processor on the sim clock —
+    /// which cores the escalation path actually exercised.
+    pub proc_busy_s: Vec<f64>,
+}
+
+/// One sample's outcome at a stage: the boundary IFM to escalate with,
+/// the decision confidence and the predicted class.
+pub struct StageOutput {
+    pub ifm: HostTensor,
+    pub conf: f64,
+    pub pred: i32,
+}
+
+/// Per-segment execution backend, moved onto the stage's worker
+/// thread. `label` is threaded through for backends that synthesize
+/// predictions (the PJRT backend ignores it).
+pub trait StageExec: Send {
+    fn run_single(&mut self, ifm: &HostTensor, label: i32) -> StageOutput;
+
+    /// Micro-batched execution; the default runs samples one by one.
+    fn run_batch(&mut self, jobs: &[(&HostTensor, i32)]) -> Vec<StageOutput> {
+        jobs.iter().map(|&(x, y)| self.run_single(x, y)).collect()
+    }
 }
 
 struct Job {
-    /// Request id (diagnostics; carried through the pipeline).
-    #[allow(dead_code)]
+    /// Request id, carried through the pipeline into [`RequestTrace`].
     id: usize,
     ifm: HostTensor,
     label: i32,
     sim_arrival: f64,
     sim_ready: f64, // sim time when the sample became available at this queue
     wall_start: Instant,
-    next_exit: usize,
 }
 
 struct Done {
+    id: usize,
     exit_index: usize,
-    correct: (usize, usize), // (label, pred)
+    label: i32,
+    pred: i32,
     sim_latency: f64,
     wall_latency: f64,
 }
 
-/// Shared per-processor sim clocks (index 0 shared by all processors
-/// on exclusive-memory platforms).
+/// Shared device timelines. Non-exclusive platforms keep one timeline
+/// per processor (so two segments mapped to the same processor
+/// serialize on it); exclusive-memory platforms share a single
+/// timeline across all processors. `busy_total` is always tracked per
+/// processor for utilization reporting.
 struct SimClock {
-    busy_until: Mutex<Vec<f64>>,
+    state: Mutex<ClockState>,
     exclusive: bool,
+}
+
+struct ClockState {
+    timeline: Vec<f64>,
+    busy_total: Vec<f64>,
 }
 
 impl SimClock {
     fn reserve(&self, proc: usize, ready: f64, duration: f64) -> f64 {
+        let mut st = self.state.lock().unwrap();
         let idx = if self.exclusive { 0 } else { proc };
-        let mut b = self.busy_until.lock().unwrap();
-        let start = b[idx].max(ready);
-        b[idx] = start + duration;
+        let start = st.timeline[idx].max(ready);
+        st.timeline[idx] = start + duration;
+        st.busy_total[proc] += duration;
         start + duration
     }
-}
 
-/// Per-segment execution resources.
-struct SegmentExec {
-    blocks: Vec<BoundHandle>,       // B=1
-    blocks_eval: Vec<BoundHandle>,  // B=eval_batch (batched path)
-    head: BoundHandle,              // B=1 head at this boundary
-    head_eval: BoundHandle,         // batched head
-    threshold: Option<f64>,         // None for the final segment
-    compute_s: f64,                 // sim compute time of this stage
-    transfer_s: f64,                // sim transfer time into this stage
-}
-
-pub fn serve(
-    engine: &Engine,
-    man: &Manifest,
-    model: &ModelInfo,
-    ws: &WeightStore,
-    solution: &EennSolution,
-    platform: &Platform,
-    test: &Split,
-    cfg: &ServeConfig,
-) -> Result<ServeMetrics> {
-    platform.validate()?;
-    let graph = BlockGraph::from_manifest(model);
-    let mapping = Mapping { exits: solution.exits.clone() };
-    let sim_report: SimReport = simulate(&graph, &mapping, platform);
-    let nseg = mapping.n_segments();
-    let eb = man.eval_batch;
-
-    // --- compile + bind all segment resources --------------------------
-    let mut segments: Vec<SegmentExec> = Vec::with_capacity(nseg);
-    for seg in 0..nseg {
-        let (lo, hi) = mapping.segment(seg, model.blocks.len());
-        let mut blocks = Vec::new();
-        let mut blocks_eval = Vec::new();
-        for bi in lo..=hi {
-            let blk = &model.blocks[bi];
-            let e1 = engine.compile(man.path(&blk.hlo_b1))?;
-            blocks.push(engine.bind(e1, ws.block_args(blk)?)?);
-            let eb_exec = engine.compile(man.path(&blk.hlo_beval))?;
-            blocks_eval.push(engine.bind(eb_exec, ws.block_args(blk)?)?);
-        }
-        let (head, head_eval, threshold) = if seg < solution.exits.len() {
-            let h = &solution.heads[seg];
-            let w = HostTensor::f32(&[h.c, h.k], &h.w);
-            let b = HostTensor::f32(&[h.k], &h.b);
-            let e1 = engine.compile(man.path(&model.heads[&h.c].hlo_b1))?;
-            let ee = engine.compile(man.path(&model.heads[&h.c].hlo_beval))?;
-            (
-                engine.bind(e1, vec![w.clone(), b.clone()])?,
-                engine.bind(ee, vec![w, b])?,
-                Some(solution.thresholds[seg]),
-            )
-        } else {
-            let w = ws.get(&model.head_w)?.clone();
-            let b = ws.get(&model.head_b)?.clone();
-            let e1 = engine.compile(man.path(&model.heads[&model.head_c].hlo_b1))?;
-            let ee = engine.compile(man.path(&model.heads[&model.head_c].hlo_beval))?;
-            (
-                engine.bind(e1, vec![w.clone(), b.clone()])?,
-                engine.bind(ee, vec![w, b])?,
-                None,
-            )
-        };
-        segments.push(SegmentExec {
-            blocks,
-            blocks_eval,
-            head,
-            head_eval,
-            threshold,
-            compute_s: sim_report.stages[seg].compute_s,
-            transfer_s: sim_report.stages[seg].transfer_s,
-        });
+    fn busy_totals(&self) -> Vec<f64> {
+        self.state.lock().unwrap().busy_total.clone()
     }
+}
 
-    // --- channels -------------------------------------------------------
+/// Everything a stage worker needs besides its backend.
+struct StageCtx {
+    seg: usize,
+    proc: usize,
+    is_last: bool,
+    threshold: Option<f64>,
+    compute_s: f64,
+    transfer_s: f64,
+    batch_serial_frac: f64,
+    batch_max: usize,
+}
+
+/// The executor's static inputs, derived from a solution + platform.
+struct StagePlan {
+    mapping: Mapping,
+    /// Per segment; `None` = final stage (always terminates).
+    thresholds: Vec<Option<f64>>,
+    sim: SimReport,
+}
+
+// ---------------------------------------------------------------------------
+// executor core
+// ---------------------------------------------------------------------------
+
+fn run_executor(
+    stages: Vec<Box<dyn StageExec>>,
+    plan: &StagePlan,
+    platform: &Platform,
+    num_classes: usize,
+    cfg: &ServeConfig,
+    mut next_job: impl FnMut(usize, &mut Rng) -> (HostTensor, i32),
+) -> Result<ServeMetrics> {
+    let nseg = plan.mapping.n_segments();
+    assert_eq!(stages.len(), nseg, "one stage per segment");
+    let nproc = platform.processors.len();
+
+    // --- channels ---------------------------------------------------------
     let mut senders: Vec<mpsc::SyncSender<Job>> = Vec::new();
     let mut receivers: Vec<mpsc::Receiver<Job>> = Vec::new();
     for _ in 0..nseg {
@@ -195,27 +229,34 @@ pub fn serve(
     let (done_tx, done_rx) = mpsc::channel::<Done>();
 
     let clock = Arc::new(SimClock {
-        busy_until: Mutex::new(vec![0.0; platform.processors.len()]),
+        state: Mutex::new(ClockState {
+            timeline: vec![0.0; nproc],
+            busy_total: vec![0.0; nproc],
+        }),
         exclusive: platform.exclusive_memory,
     });
     let dropped = Arc::new(AtomicUsize::new(0));
 
-    // --- workers ----------------------------------------------------------
+    // --- stage workers ----------------------------------------------------
     let mut handles = Vec::new();
-    let n_exits = solution.exits.len();
-    for (seg, (rx, seg_exec)) in receivers.into_iter().zip(segments).enumerate() {
-        let engine = engine.clone();
+    for (seg, (rx, exec)) in receivers.into_iter().zip(stages).enumerate() {
+        let proc = plan.mapping.proc_of(seg);
+        let ctx = StageCtx {
+            seg,
+            proc,
+            is_last: seg == nseg - 1,
+            threshold: plan.thresholds[seg],
+            compute_s: plan.sim.stages[seg].compute_s,
+            transfer_s: plan.sim.stages[seg].transfer_s,
+            batch_serial_frac: platform.processors[proc].batch_serial_frac,
+            batch_max: cfg.batch_max.max(1),
+        };
         let next_tx = senders.get(seg + 1).cloned();
         let done_tx = done_tx.clone();
         let clock = Arc::clone(&clock);
         let dropped = Arc::clone(&dropped);
-        let is_last = seg == nseg - 1;
-        let batch_max = if is_last { cfg.batch_max.min(eb) } else { 1 };
         handles.push(std::thread::spawn(move || {
-            worker(
-                engine, seg, seg_exec, rx, next_tx, done_tx, clock, dropped, n_exits,
-                is_last, batch_max, eb,
-            )
+            stage_worker(exec, ctx, rx, next_tx, done_tx, clock, dropped)
         }));
     }
     drop(done_tx);
@@ -226,20 +267,17 @@ pub fn serve(
     let mut rng = Rng::seeded(cfg.seed);
     let mut sim_now = 0.0;
     let wall0 = Instant::now();
-    let mut input_shape = vec![1usize];
-    input_shape.extend(&model.input_shape);
     let mut emitted = 0usize;
     for i in 0..cfg.n_requests {
         sim_now += rng.exp(cfg.arrival_rate_hz);
-        let idx = rng.below(test.n);
+        let (ifm, label) = next_job(i, &mut rng);
         let job = Job {
             id: i,
-            ifm: HostTensor::f32(&input_shape, test.sample(idx)),
-            label: test.y[idx],
+            ifm,
+            label,
             sim_arrival: sim_now,
             sim_ready: sim_now,
             wall_start: Instant::now(),
-            next_exit: 0,
         };
         // arrival-side shedding is accounted via (n_requests - emitted);
         // the atomic counter tracks mid-pipeline escalation drops only
@@ -252,23 +290,32 @@ pub fn serve(
     drop(gen_tx);
 
     // --- collect ----------------------------------------------------------
-    let mut term_hist = vec![0usize; n_exits + 1];
+    let mut term_hist = vec![0usize; nseg];
     let mut sim_lat = Vec::new();
     let mut wall_lat = Vec::new();
-    let mut conf = Confusion::new(model.num_classes);
+    let mut conf = Confusion::new(num_classes);
     let mut energy = 0.0;
+    let mut traces = Vec::new();
     for d in done_rx {
         term_hist[d.exit_index] += 1;
         sim_lat.push(d.sim_latency);
         wall_lat.push(d.wall_latency);
-        conf.add(d.correct.0, d.correct.1);
-        energy += sim_report.stages[d.exit_index].cum_energy_mj;
+        conf.add(d.label as usize, d.pred as usize);
+        energy += plan.sim.stages[d.exit_index].cum_energy_mj;
+        traces.push(RequestTrace {
+            id: d.id,
+            exit_index: d.exit_index,
+            procs: plan.mapping.assignment[..=d.exit_index].to_vec(),
+            sim_latency_s: d.sim_latency,
+            wall_latency_s: d.wall_latency,
+        });
     }
     for h in handles {
-        h.join().expect("worker panicked");
+        h.join().expect("stage worker panicked");
     }
     let wall_s = wall0.elapsed().as_secs_f64();
     let completed = sim_lat.len();
+    traces.sort_by_key(|t| t.id);
 
     Ok(ServeMetrics {
         completed,
@@ -279,24 +326,20 @@ pub fn serve(
         wall_latency: summarize(&wall_lat),
         mean_energy_mj: if completed > 0 { energy / completed as f64 } else { 0.0 },
         term_hist,
-        quality: crate::metrics::Quality::from_confusion(&conf),
+        quality: Quality::from_confusion(&conf),
+        traces,
+        proc_busy_s: clock.busy_totals(),
     })
 }
 
-#[allow(clippy::too_many_arguments)]
-fn worker(
-    engine: Engine,
-    seg: usize,
-    exec: SegmentExec,
+fn stage_worker(
+    mut exec: Box<dyn StageExec>,
+    ctx: StageCtx,
     rx: mpsc::Receiver<Job>,
     next_tx: Option<mpsc::SyncSender<Job>>,
     done_tx: mpsc::Sender<Done>,
     clock: Arc<SimClock>,
     dropped: Arc<AtomicUsize>,
-    n_exits: usize,
-    is_last: bool,
-    batch_max: usize,
-    eval_batch: usize,
 ) {
     let mut pending: Vec<Job> = Vec::new();
     loop {
@@ -307,127 +350,309 @@ fn worker(
                 Err(_) => break,
             }
         }
-        while pending.len() < batch_max {
+        while pending.len() < ctx.batch_max {
             match rx.try_recv() {
                 Ok(j) => pending.push(j),
                 Err(_) => break,
             }
         }
         let batch: Vec<Job> = pending.drain(..).collect();
-        if batch.len() > 1 {
-            run_batched(&engine, &exec, batch, &done_tx, &clock, seg, n_exits, eval_batch);
+        let k = batch.len();
+
+        // device clock: samples are ready after their incoming (routed)
+        // transfer. A serial core (batch_serial_frac == 1) gains nothing
+        // from device-side batching, so its samples are charged
+        // individually — identical to unbatched accounting even when the
+        // wall side micro-batches to amortize dispatch overhead. A
+        // batch-capable device is occupied once for the whole batch,
+        // scaled by its serialization fraction.
+        let sim_dones: Vec<f64> = if ctx.batch_serial_frac >= 1.0 - 1e-9 {
+            batch
+                .iter()
+                .map(|j| clock.reserve(ctx.proc, j.sim_ready + ctx.transfer_s, ctx.compute_s))
+                .collect()
         } else {
-            for job in batch {
-                run_single(
-                    &engine, &exec, job, &next_tx, &done_tx, &clock, &dropped, seg, is_last,
-                    n_exits,
-                );
+            let ready = batch
+                .iter()
+                .map(|j| j.sim_ready + ctx.transfer_s)
+                .fold(0.0f64, f64::max);
+            let duration = ctx.compute_s
+                * ((1.0 - ctx.batch_serial_frac) + ctx.batch_serial_frac * k as f64);
+            vec![clock.reserve(ctx.proc, ready, duration); k]
+        };
+
+        // wall clock: the backend decides how to execute the batch
+        let outs = if k == 1 {
+            vec![exec.run_single(&batch[0].ifm, batch[0].label)]
+        } else {
+            let refs: Vec<(&HostTensor, i32)> =
+                batch.iter().map(|j| (&j.ifm, j.label)).collect();
+            exec.run_batch(&refs)
+        };
+        debug_assert_eq!(outs.len(), k);
+
+        for ((mut job, out), sim_done) in batch.into_iter().zip(outs).zip(sim_dones) {
+            let terminate =
+                ctx.is_last || out.conf >= ctx.threshold.unwrap_or(f64::NEG_INFINITY);
+            if terminate {
+                let _ = done_tx.send(Done {
+                    id: job.id,
+                    exit_index: ctx.seg,
+                    label: job.label,
+                    pred: out.pred,
+                    sim_latency: sim_done - job.sim_arrival,
+                    wall_latency: job.wall_start.elapsed().as_secs_f64(),
+                });
+            } else if let Some(tx) = &next_tx {
+                // escalate along the assignment: the next stage adds its
+                // own incoming (routed) transfer time
+                job.ifm = out.ifm;
+                job.sim_ready = sim_done;
+                if tx.try_send(job).is_err() {
+                    dropped.fetch_add(1, Ordering::Relaxed);
+                }
             }
         }
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn run_single(
-    engine: &Engine,
-    exec: &SegmentExec,
-    mut job: Job,
-    next_tx: &Option<mpsc::SyncSender<Job>>,
-    done_tx: &mpsc::Sender<Done>,
-    clock: &Arc<SimClock>,
-    dropped: &Arc<AtomicUsize>,
-    seg: usize,
-    is_last: bool,
-    n_exits: usize,
-) {
-    // real compute through PJRT
-    let mut ifm = job.ifm;
-    let mut gap = None;
-    for b in &exec.blocks {
-        let out = engine.run_bound(*b, vec![ifm]).expect("block exec");
-        ifm = out[0].clone();
-        gap = Some(out[1].clone());
-    }
-    let gap = gap.expect("segment has blocks");
-    let hout = engine.run_bound(exec.head, vec![gap]).expect("head exec");
-    let conf = hout[1].to_f32()[0] as f64;
-    let pred = hout[2].to_i32()[0];
+// ---------------------------------------------------------------------------
+// PJRT stage backend
+// ---------------------------------------------------------------------------
 
-    // sim clock: incoming link transfer, then reserve the device for
-    // this stage's compute
-    let ready = job.sim_ready + exec.transfer_s;
-    let sim_done = clock.reserve(seg, ready, exec.compute_s);
+struct PjrtStageExec {
+    engine: Engine,
+    blocks: Vec<BoundHandle>,      // B=1
+    blocks_eval: Vec<BoundHandle>, // B=eval_batch (batched path)
+    head: BoundHandle,             // B=1 head at this boundary
+    head_eval: BoundHandle,        // batched head
+    eval_batch: usize,
+}
 
-    let terminate = is_last || conf >= exec.threshold.unwrap_or(0.0);
-    if terminate {
-        let exit_index = if is_last { n_exits } else { seg };
-        let _ = done_tx.send(Done {
-            exit_index,
-            correct: (job.label as usize, pred as usize),
-            sim_latency: sim_done - job.sim_arrival,
-            wall_latency: job.wall_start.elapsed().as_secs_f64(),
-        });
-    } else if let Some(tx) = next_tx {
-        // escalate: the next stage adds its own incoming transfer time
-        job.ifm = ifm;
-        job.sim_ready = sim_done;
-        job.next_exit += 1;
-        if tx.try_send(job).is_err() {
-            dropped.fetch_add(1, Ordering::Relaxed);
+impl StageExec for PjrtStageExec {
+    fn run_single(&mut self, ifm: &HostTensor, _label: i32) -> StageOutput {
+        let mut x = ifm.clone();
+        let mut gap = None;
+        for b in &self.blocks {
+            let out = self.engine.run_bound(*b, vec![x]).expect("block exec");
+            x = out[0].clone();
+            gap = Some(out[1].clone());
         }
+        let gap = gap.expect("segment has blocks");
+        let hout = self.engine.run_bound(self.head, vec![gap]).expect("head exec");
+        StageOutput {
+            ifm: x,
+            conf: hout[1].to_f32()[0] as f64,
+            pred: hout[2].to_i32()[0],
+        }
+    }
+
+    fn run_batch(&mut self, jobs: &[(&HostTensor, i32)]) -> Vec<StageOutput> {
+        let real = jobs.len();
+        // the batched artifact always executes at the full eval batch
+        // width: fall back to B=1 when padding would dominate
+        if real <= 1 || real > self.eval_batch || real * 2 < self.eval_batch {
+            return jobs.iter().map(|&(x, y)| self.run_single(x, y)).collect();
+        }
+        let feat: usize = jobs[0].0.len();
+        let mut shape = vec![self.eval_batch];
+        shape.extend(jobs[0].0.shape.iter().skip(1));
+        let mut xs: Vec<f32> = Vec::with_capacity(self.eval_batch * feat);
+        for &(x, _) in jobs {
+            xs.extend(x.to_f32());
+        }
+        for _ in real..self.eval_batch {
+            xs.extend(std::iter::repeat(0.0f32).take(feat));
+        }
+        let mut x = HostTensor::f32(&shape, &xs);
+        let mut gap = None;
+        for b in &self.blocks_eval {
+            let out = self.engine.run_bound(*b, vec![x]).expect("batched block");
+            x = out[0].clone();
+            gap = Some(out[1].clone());
+        }
+        let hout = self
+            .engine
+            .run_bound(self.head_eval, vec![gap.expect("segment has blocks")])
+            .expect("batched head");
+        let confs = hout[1].to_f32();
+        let preds = hout[2].to_i32();
+
+        // slice per-sample boundary IFM rows so non-terminating samples
+        // can escalate individually
+        let flat = x.to_f32();
+        let row = flat.len() / self.eval_batch;
+        let mut row_shape = vec![1usize];
+        row_shape.extend(x.shape.iter().skip(1));
+        (0..real)
+            .map(|i| StageOutput {
+                ifm: HostTensor::f32(&row_shape, &flat[i * row..(i + 1) * row]),
+                conf: confs[i] as f64,
+                pred: preds[i],
+            })
+            .collect()
     }
 }
 
+// ---------------------------------------------------------------------------
+// synthetic stage backend
+// ---------------------------------------------------------------------------
+
+/// Calibrated stochastic stand-in for a segment: terminates with the
+/// solution's conditional termination probability and predicts the
+/// sample's label with the solution's expected accuracy. Lets the
+/// full executor (queues, escalation, device clocks, traces) run
+/// without artifacts or a PJRT build.
+struct SynthStageExec {
+    rng: Rng,
+    /// P(terminate here | reached here); the final stage ignores it.
+    p_term: f64,
+    acc: f64,
+    threshold: f64,
+    num_classes: usize,
+}
+
+impl StageExec for SynthStageExec {
+    fn run_single(&mut self, ifm: &HostTensor, label: i32) -> StageOutput {
+        let terminate = self.rng.f64() < self.p_term;
+        let conf = if terminate {
+            // in [threshold, 1)
+            self.threshold + (1.0 - self.threshold).max(1e-6) * 0.999 * self.rng.f64()
+        } else {
+            // strictly below threshold
+            self.threshold * self.rng.f64() - 1e-9
+        };
+        let pred = if self.rng.f64() < self.acc {
+            label
+        } else {
+            (label + 1).rem_euclid(self.num_classes.max(2) as i32)
+        };
+        StageOutput { ifm: ifm.clone(), conf, pred }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// public entry points
+// ---------------------------------------------------------------------------
+
+/// Serve `cfg.n_requests` Poisson arrivals from the test split through
+/// the solution's mapped stage graph with real PJRT compute.
 #[allow(clippy::too_many_arguments)]
-fn run_batched(
+pub fn serve(
     engine: &Engine,
-    exec: &SegmentExec,
-    batch: Vec<Job>,
-    done_tx: &mpsc::Sender<Done>,
-    clock: &Arc<SimClock>,
-    seg: usize,
-    n_exits: usize,
-    eval_batch: usize,
-) {
-    // assemble padded batch
-    let real = batch.len();
-    let feat: usize = batch[0].ifm.len();
-    let mut shape = vec![eval_batch];
-    shape.extend(batch[0].ifm.shape.iter().skip(1));
-    let mut xs: Vec<f32> = Vec::with_capacity(eval_batch * feat);
-    for j in &batch {
-        xs.extend(j.ifm.to_f32());
-    }
-    for _ in real..eval_batch {
-        xs.extend(std::iter::repeat(0.0f32).take(feat));
-    }
-    let mut ifm = HostTensor::f32(&shape, &xs);
-    let mut gap = None;
-    for b in &exec.blocks_eval {
-        let out = engine.run_bound(*b, vec![ifm]).expect("batched block");
-        ifm = out[0].clone();
-        gap = Some(out[1].clone());
-    }
-    let hout = engine
-        .run_bound(exec.head_eval, vec![gap.expect("blocks")])
-        .expect("batched head");
-    let preds = hout[2].to_i32();
+    man: &Manifest,
+    model: &ModelInfo,
+    ws: &WeightStore,
+    solution: &EennSolution,
+    platform: &Platform,
+    test: &Split,
+    cfg: &ServeConfig,
+) -> Result<ServeMetrics> {
+    platform.validate()?;
+    let graph = BlockGraph::from_manifest(model);
+    let mapping = solution.mapping();
+    mapping.validate(platform)?;
+    let sim_report = simulate(&graph, &mapping, platform);
+    let nseg = mapping.n_segments();
+    let eb = man.eval_batch;
 
-    // sim: the batch occupies the device once; account transfer per job
-    // (already folded into sim_ready upstream); batched compute time is
-    // amortized — the analytic model charges one stage compute per batch.
-    let ready = batch
-        .iter()
-        .map(|j| j.sim_ready + exec.transfer_s)
-        .fold(0.0f64, f64::max);
-    let sim_done = clock.reserve(seg, ready, exec.compute_s);
-
-    for (bi, job) in batch.into_iter().enumerate() {
-        let _ = done_tx.send(Done {
-            exit_index: n_exits,
-            correct: (job.label as usize, preds[bi] as usize),
-            sim_latency: sim_done - job.sim_arrival,
-            wall_latency: job.wall_start.elapsed().as_secs_f64(),
-        });
+    // --- compile + bind all stage resources ----------------------------
+    let mut stages: Vec<Box<dyn StageExec>> = Vec::with_capacity(nseg);
+    for seg in 0..nseg {
+        let (lo, hi) = mapping.segment(seg, model.blocks.len());
+        let mut blocks = Vec::new();
+        let mut blocks_eval = Vec::new();
+        for bi in lo..=hi {
+            let blk = &model.blocks[bi];
+            let e1 = engine.compile(man.path(&blk.hlo_b1))?;
+            blocks.push(engine.bind(e1, ws.block_args(blk)?)?);
+            let eb_exec = engine.compile(man.path(&blk.hlo_beval))?;
+            blocks_eval.push(engine.bind(eb_exec, ws.block_args(blk)?)?);
+        }
+        let (head, head_eval) = if seg < solution.exits.len() {
+            let h = &solution.heads[seg];
+            let w = HostTensor::f32(&[h.c, h.k], &h.w);
+            let b = HostTensor::f32(&[h.k], &h.b);
+            let e1 = engine.compile(man.path(&model.heads[&h.c].hlo_b1))?;
+            let ee = engine.compile(man.path(&model.heads[&h.c].hlo_beval))?;
+            (engine.bind(e1, vec![w.clone(), b.clone()])?, engine.bind(ee, vec![w, b])?)
+        } else {
+            let w = ws.get(&model.head_w)?.clone();
+            let b = ws.get(&model.head_b)?.clone();
+            let e1 = engine.compile(man.path(&model.heads[&model.head_c].hlo_b1))?;
+            let ee = engine.compile(man.path(&model.heads[&model.head_c].hlo_beval))?;
+            (engine.bind(e1, vec![w.clone(), b.clone()])?, engine.bind(ee, vec![w, b])?)
+        };
+        stages.push(Box::new(PjrtStageExec {
+            engine: engine.clone(),
+            blocks,
+            blocks_eval,
+            head,
+            head_eval,
+            eval_batch: eb,
+        }));
     }
+
+    let thresholds: Vec<Option<f64>> = (0..nseg)
+        .map(|s| solution.thresholds.get(s).copied())
+        .collect();
+    let plan = StagePlan { mapping, thresholds, sim: sim_report };
+
+    let mut input_shape = vec![1usize];
+    input_shape.extend(&model.input_shape);
+    run_executor(stages, &plan, platform, model.num_classes, cfg, |_, rng| {
+        let idx = rng.below(test.n);
+        (HostTensor::f32(&input_shape, test.sample(idx)), test.y[idx])
+    })
+}
+
+/// Serve through the same stage-graph executor with the calibrated
+/// synthetic backend: no artifacts, no PJRT — the executor's queues,
+/// escalation routing, device clocks and tracing all run for real,
+/// while each stage's verdicts are drawn from the solution's expected
+/// termination rates and accuracy. Labels are sampled uniformly.
+pub fn serve_synthetic(
+    graph: &BlockGraph,
+    solution: &EennSolution,
+    platform: &Platform,
+    cfg: &ServeConfig,
+) -> Result<ServeMetrics> {
+    platform.validate()?;
+    let mapping = solution.mapping();
+    mapping.validate(platform)?;
+    let sim_report = simulate(graph, &mapping, platform);
+    let nseg = mapping.n_segments();
+    let num_classes = graph.num_classes.max(2);
+
+    // conditional per-stage termination probabilities from the
+    // solution's (unconditional) expected termination masses
+    let rates = if solution.expected_term_rates.len() == nseg {
+        solution.expected_term_rates.clone()
+    } else {
+        vec![1.0 / nseg as f64; nseg]
+    };
+    let mut stages: Vec<Box<dyn StageExec>> = Vec::with_capacity(nseg);
+    let mut remaining = 1.0f64;
+    for (seg, &rate) in rates.iter().enumerate() {
+        let p_term = if remaining > 1e-12 { (rate / remaining).clamp(0.0, 1.0) } else { 1.0 };
+        remaining -= rate;
+        let threshold = solution.thresholds.get(seg).copied().unwrap_or(0.5);
+        stages.push(Box::new(SynthStageExec {
+            rng: Rng::seeded(cfg.seed ^ (0x5eed_0000 + seg as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            p_term,
+            acc: solution.expected_acc.clamp(0.0, 1.0),
+            threshold,
+            num_classes,
+        }));
+    }
+
+    let thresholds: Vec<Option<f64>> = (0..nseg)
+        .map(|s| solution.thresholds.get(s).copied())
+        .collect();
+    let plan = StagePlan { mapping, thresholds, sim: sim_report };
+
+    let ifm = HostTensor::f32(&[1, 1], &[0.0]);
+    run_executor(stages, &plan, platform, num_classes, cfg, move |_, rng| {
+        (ifm.clone(), rng.below(num_classes) as i32)
+    })
 }

@@ -35,6 +35,9 @@ pub struct EennSolution {
     pub platform: String,
     /// EE block boundaries, ascending.
     pub exits: Vec<usize>,
+    /// Segment→processor assignment chosen by the mapping co-search
+    /// (`exits.len() + 1` entries; `[0, 1, ..]` is the identity chain).
+    pub assignment: Vec<usize>,
     /// Deployed thresholds (after any correction factor).
     pub thresholds: Vec<f64>,
     /// Thresholds as found by the search (before correction).
@@ -64,6 +67,10 @@ impl EennSolution {
         m.insert(
             "exits".into(),
             Json::Arr(self.exits.iter().map(|&e| Json::Num(e as f64)).collect()),
+        );
+        m.insert(
+            "assignment".into(),
+            Json::Arr(self.assignment.iter().map(|&p| Json::Num(p as f64)).collect()),
         );
         m.insert("thresholds".into(), farr(&self.thresholds));
         m.insert("raw_thresholds".into(), farr(&self.raw_thresholds));
@@ -123,10 +130,18 @@ impl EennSolution {
                 b: fv("b")?,
             });
         }
+        let exits = j.req("exits")?.usize_arr().unwrap_or_default();
+        // solutions written before the mapping layer carry no
+        // assignment: default to the identity chain they were built for
+        let assignment = j
+            .get("assignment")
+            .and_then(|a| a.usize_arr())
+            .unwrap_or_else(|| (0..=exits.len()).collect());
         Ok(EennSolution {
             model: j.req("model")?.as_str().unwrap_or_default().to_string(),
             platform: j.req("platform")?.as_str().unwrap_or_default().to_string(),
-            exits: j.req("exits")?.usize_arr().unwrap_or_default(),
+            exits,
+            assignment,
             thresholds: f64s("thresholds")?,
             raw_thresholds: f64s("raw_thresholds")?,
             correction_factor: j.req("correction_factor")?.as_f64().unwrap_or(1.0),
@@ -147,6 +162,20 @@ impl EennSolution {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("read {}", path.as_ref().display()))?;
         Self::from_json(&Json::parse(&text).map_err(|e| anyhow!("{e}"))?)
+    }
+
+    /// The solution's segment→processor mapping. Falls back to the
+    /// identity chain when the assignment is missing or malformed
+    /// (pre-mapping solution files).
+    pub fn mapping(&self) -> crate::mapping::Mapping {
+        if self.assignment.len() == self.exits.len() + 1 {
+            crate::mapping::Mapping {
+                exits: self.exits.clone(),
+                assignment: self.assignment.clone(),
+            }
+        } else {
+            crate::mapping::Mapping::chain(self.exits.clone())
+        }
     }
 }
 
@@ -353,8 +382,7 @@ impl StagedRunner {
     /// Blocks (lo..=hi inclusive) of segment `seg` under the solution's
     /// processor mapping.
     pub fn segment(&self, seg: usize) -> (usize, usize) {
-        crate::sim::Mapping { exits: self.solution.exits.clone() }
-            .segment(seg, self.num_blocks)
+        self.solution.mapping().segment(seg, self.num_blocks)
     }
 
     pub fn num_blocks(&self) -> usize {
@@ -371,6 +399,7 @@ mod tests {
             model: "m".into(),
             platform: "p".into(),
             exits: vec![1, 3],
+            assignment: vec![0, 1, 1],
             thresholds: vec![0.6, 0.7],
             raw_thresholds: vec![0.6, 0.7],
             correction_factor: 1.0,
@@ -394,10 +423,25 @@ mod tests {
         let j = s.to_json();
         let r = EennSolution::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(r.exits, s.exits);
+        assert_eq!(r.assignment, s.assignment);
         assert_eq!(r.thresholds, s.thresholds);
         assert_eq!(r.heads.len(), 1);
         assert_eq!(r.heads[0].w, s.heads[0].w);
         assert!((r.expected_acc - s.expected_acc).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pre_mapping_solution_defaults_to_chain() {
+        // strip the assignment key, as solution files written before
+        // the mapping layer would look
+        let s = sample_solution();
+        let mut j = s.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("assignment");
+        }
+        let r = EennSolution::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(r.assignment, vec![0, 1, 2]);
+        assert!(r.mapping().is_chain());
     }
 
     #[test]

@@ -20,6 +20,11 @@ pub struct Processor {
     pub sleep_mw: f64,
     /// Memory budget for parameters + peak activations, bytes.
     pub mem_bytes: u64,
+    /// How a micro-batch of k samples scales device time:
+    /// `t(k) = t(1) * ((1 - f) + f * k)`. Scalar in-order cores
+    /// process batches serially (f = 1); accelerators with enough
+    /// parallelism amortize the batch fully (f = 0).
+    pub batch_serial_frac: f64,
 }
 
 /// Connection from processor i to processor i+1.
@@ -70,6 +75,24 @@ impl Platform {
     pub fn max_classifiers(&self) -> usize {
         self.processors.len()
     }
+
+    /// Transfer time for `bytes` moved between two processors,
+    /// store-and-forward along the chain interconnect (links[i]
+    /// connects processors i and i+1; zero when `from == to`).
+    pub fn route_transfer_s(&self, from: usize, to: usize, bytes: u64) -> f64 {
+        let (lo, hi) = if from <= to { (from, to) } else { (to, from) };
+        self.links[lo..hi].iter().map(|l| l.transfer_s(bytes)).sum()
+    }
+
+    /// Energy of the same routed transfer, millijoules (each hop draws
+    /// its link's active power for its hop duration).
+    pub fn route_transfer_energy_mj(&self, from: usize, to: usize, bytes: u64) -> f64 {
+        let (lo, hi) = if from <= to { (from, to) } else { (to, from) };
+        self.links[lo..hi]
+            .iter()
+            .map(|l| l.transfer_s(bytes) * l.active_mw)
+            .sum()
+    }
 }
 
 pub mod presets {
@@ -93,6 +116,7 @@ pub mod presets {
                     active_mw: 19.1,
                     sleep_mw: 0.02,
                     mem_bytes: 288 * 1024, // M0 share of SRAM + flash budget
+                    batch_serial_frac: 1.0,
                 },
                 Processor {
                     name: "cortex-m4f".into(),
@@ -100,6 +124,7 @@ pub mod presets {
                     active_mw: 32.0,
                     sleep_mw: 0.02,
                     mem_bytes: 736 * 1024,
+                    batch_serial_frac: 1.0,
                 },
             ],
             links: vec![Link {
@@ -131,6 +156,7 @@ pub mod presets {
                     active_mw: 4800.0,
                     sleep_mw: 150.0,
                     mem_bytes: 8 * 1024 * 1024 * 1024,
+                    batch_serial_frac: 1.0,
                 },
                 Processor {
                     name: "mali-g610".into(),
@@ -138,6 +164,7 @@ pub mod presets {
                     active_mw: 6000.0,
                     sleep_mw: 80.0,
                     mem_bytes: 8 * 1024 * 1024 * 1024,
+                    batch_serial_frac: 0.0,
                 },
                 Processor {
                     name: "rtx3090ti".into(),
@@ -145,6 +172,7 @@ pub mod presets {
                     active_mw: 350_000.0,
                     sleep_mw: 0.0, // remote: not in the device energy budget
                     mem_bytes: 24 * 1024 * 1024 * 1024,
+                    batch_serial_frac: 0.0,
                 },
             ],
             links: vec![

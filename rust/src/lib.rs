@@ -14,6 +14,16 @@
 //! distributed coordinator — with Python never on the search or
 //! request path.
 //!
+//! The segment→processor mapping is a first-class artifact handed
+//! through all three layers: the [`mapping`] module defines
+//! `Mapping { exits, assignment }` and its co-search, [`sim`] prices
+//! a mapping on a platform (routed transfers, shared-processor
+//! memory), the search keeps architectures feasible under *some*
+//! assignment and ships the cheapest one inside [`eenn::EennSolution`],
+//! and the [`coordinator`]'s stage-graph executor serves it —
+//! escalation follows the assignment, segments sharing a processor
+//! serialize on its device timeline, and every stage micro-batches.
+//!
 //! ```no_run
 //! use eenn_na::prelude::*;
 //!
@@ -30,6 +40,7 @@ pub mod data;
 pub mod eenn;
 pub mod graph;
 pub mod hw;
+pub mod mapping;
 pub mod metrics;
 pub mod na;
 pub mod report;
@@ -41,7 +52,8 @@ pub mod prelude {
     pub use crate::eenn::EennSolution;
     pub use crate::graph::BlockGraph;
     pub use crate::hw::{self, Platform};
+    pub use crate::mapping::Mapping;
     pub use crate::na;
     pub use crate::runtime::{Engine, HostTensor, Manifest};
-    pub use crate::sim::{simulate, Mapping};
+    pub use crate::sim::simulate;
 }

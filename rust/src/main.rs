@@ -114,18 +114,19 @@ fn augment(args: &Args) -> Result<()> {
     let engine = Engine::new()?;
     let out = na::augment(&engine, &man, model_name, &platform, &cfg)?;
     println!(
-        "solution: exits {:?} thresholds {:?} (score {:.4})",
-        out.solution.exits, out.solution.thresholds, out.solution.score
+        "solution: exits {:?} -> procs {:?} thresholds {:?} (score {:.4})",
+        out.solution.exits, out.solution.assignment, out.solution.thresholds, out.solution.score
     );
     println!(
         "search: {:.1}s total ({:.1}s features, {:.1}s exit training, {:.2}s thresholds); \
-         {} candidates, {} configs covered",
+         {} candidates, {} configs covered, {} mappings",
         out.report.total_s,
         out.report.feature_cache_s,
         out.report.exit_training_s,
         out.report.threshold_search_s,
         out.report.prune.kept,
-        out.report.evaluated_configs
+        out.report.evaluated_configs,
+        out.report.mapping_candidates
     );
     let path = args.str("out", &format!("{model_name}_solution.json"));
     out.solution.save(&path)?;
@@ -151,6 +152,7 @@ fn eval(args: &Args) -> Result<()> {
         model: model_name.into(),
         calibration: format!("file({})", sol.correction_factor),
         exits: sol.exits.clone(),
+        assignment: sol.assignment.clone(),
         thresholds: sol.thresholds.clone(),
         search_s: 0.0,
         train_s: model.train_seconds,
@@ -202,6 +204,11 @@ fn serve_cmd(args: &Args) -> Result<()> {
     println!(
         "mean energy {:.2}mJ, term hist {:?}, acc {:.4}",
         m.mean_energy_mj, m.term_hist, m.quality.accuracy
+    );
+    println!(
+        "mapping {:?}, per-proc busy {:?}s",
+        sol.assignment,
+        m.proc_busy_s.iter().map(|s| (s * 100.0).round() / 100.0).collect::<Vec<_>>()
     );
     Ok(())
 }

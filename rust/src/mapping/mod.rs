@@ -1,0 +1,431 @@
+//! First-class segment→processor mapping (the paper's "maps its
+//! subgraphs to the hardware targets" step, promoted from an implicit
+//! identity to a searched design dimension).
+//!
+//! A [`Mapping`] pairs the EENN's exit boundaries (which partition the
+//! block graph into segments) with an explicit `assignment`: one
+//! processor id per segment. The seed behaviour — subgraph *i* runs on
+//! processor *i* — is preserved as [`Mapping::chain`]; everything else
+//! (several segments sharing a processor, a later exit on an earlier
+//! core, skipping a weak core entirely) becomes expressible and
+//! searchable.
+//!
+//! Two search entry points feed the NA flow:
+//!
+//! * [`sweep_assignments`] — enumeration-time feasibility: does *any*
+//!   assignment of this architecture satisfy the platform's memory
+//!   budgets and the worst-case latency constraint, and which feasible
+//!   assignment minimizes worst-case latency? Used by
+//!   `na::candidates::enumerate` to keep/prune candidates.
+//! * [`co_search`] — deployment-time co-search: once the decision
+//!   mechanism is configured and a termination distribution is known,
+//!   score every feasible assignment through the analytic simulator
+//!   (`sim::simulate` + `SimReport::expected`) and pick the one with
+//!   the lowest scalarized expected latency/energy cost. The identity
+//!   chain is always part of the search space, so the chosen mapping
+//!   never costs more than the seed behaviour.
+//!
+//! The search space is `nproc^nseg` assignments; platforms stay small
+//! (the paper's testbeds have 2–3 targets and at most one classifier
+//! per processor), so exhaustive enumeration is cheap. Past
+//! [`MAX_ASSIGNMENTS`] the space is restricted to pipeline-ordered
+//! (non-decreasing) assignments as a tractable fallback.
+
+use anyhow::{bail, Result};
+
+use crate::graph::BlockGraph;
+use crate::hw::Platform;
+use crate::sim::{simulate, SimReport};
+
+/// Index into `Platform::processors`.
+pub type ProcId = usize;
+
+/// An EENN partition plus its segment→processor assignment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mapping {
+    /// EE boundaries in ascending block order (may be empty: the
+    /// whole backbone is one segment).
+    pub exits: Vec<usize>,
+    /// Processor of each segment; `assignment.len() == exits.len() + 1`.
+    pub assignment: Vec<ProcId>,
+}
+
+impl Mapping {
+    /// The seed's identity mapping: segment `i` on processor `i`.
+    pub fn chain(exits: Vec<usize>) -> Self {
+        let assignment = (0..=exits.len()).collect();
+        Mapping { exits, assignment }
+    }
+
+    /// Explicit mapping, validated for internal consistency (platform
+    /// validity is checked separately by [`Mapping::validate`]).
+    pub fn with_assignment(exits: Vec<usize>, assignment: Vec<ProcId>) -> Result<Self> {
+        if assignment.len() != exits.len() + 1 {
+            bail!(
+                "mapping needs {} processor assignments (one per segment), got {}",
+                exits.len() + 1,
+                assignment.len()
+            );
+        }
+        if !exits.windows(2).all(|w| w[0] < w[1]) {
+            bail!("exit boundaries must be strictly ascending: {exits:?}");
+        }
+        Ok(Mapping { exits, assignment })
+    }
+
+    /// Does this mapping reproduce the seed's identity chain?
+    pub fn is_chain(&self) -> bool {
+        self.assignment.iter().enumerate().all(|(i, &p)| p == i)
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.exits.len() + 1
+    }
+
+    /// Processor executing segment `seg`.
+    pub fn proc_of(&self, seg: usize) -> ProcId {
+        self.assignment[seg]
+    }
+
+    /// Block range (inclusive) of subgraph `seg`.
+    pub fn segment(&self, seg: usize, n_blocks: usize) -> (usize, usize) {
+        let lo = if seg == 0 { 0 } else { self.exits[seg - 1] + 1 };
+        let hi = if seg < self.exits.len() {
+            self.exits[seg]
+        } else {
+            n_blocks - 1
+        };
+        (lo, hi)
+    }
+
+    /// Check the assignment against a platform: one processor id per
+    /// segment, every id in range.
+    pub fn validate(&self, platform: &Platform) -> Result<()> {
+        let nproc = platform.processors.len();
+        if self.assignment.len() != self.n_segments() {
+            bail!(
+                "mapping has {} segments but {} processor assignments",
+                self.n_segments(),
+                self.assignment.len()
+            );
+        }
+        for (seg, &p) in self.assignment.iter().enumerate() {
+            if p >= nproc {
+                bail!(
+                    "{} segments: segment {seg} assigned to processor {p}, but \
+                     platform {} has only {nproc} processors",
+                    self.n_segments(),
+                    platform.name
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Above this many assignments, enumeration falls back to
+/// pipeline-ordered (non-decreasing) assignments only.
+pub const MAX_ASSIGNMENTS: usize = 4096;
+
+/// Every segment→processor assignment for `nseg` segments on `nproc`
+/// processors, in lexicographic order. Full `nproc^nseg` enumeration
+/// while it stays under [`MAX_ASSIGNMENTS`]; non-decreasing
+/// assignments only beyond that.
+pub fn enumerate_assignments(nseg: usize, nproc: usize) -> Vec<Vec<ProcId>> {
+    if nseg == 0 || nproc == 0 {
+        return Vec::new();
+    }
+    let full_size = (nproc as u64).checked_pow(nseg as u32);
+    if full_size.map(|s| s <= MAX_ASSIGNMENTS as u64).unwrap_or(false) {
+        let mut out = Vec::with_capacity(full_size.unwrap() as usize);
+        let mut cur = vec![0usize; nseg];
+        loop {
+            out.push(cur.clone());
+            // lexicographic odometer, most-significant digit first
+            let mut i = nseg;
+            loop {
+                if i == 0 {
+                    return out;
+                }
+                i -= 1;
+                cur[i] += 1;
+                if cur[i] < nproc {
+                    break;
+                }
+                cur[i] = 0;
+            }
+        }
+    }
+    // fallback: non-decreasing assignments (C(nseg + nproc - 1, nseg))
+    let mut out = Vec::new();
+    let mut cur = vec![0usize; nseg];
+    fn rec(cur: &mut Vec<usize>, pos: usize, min_proc: usize, nproc: usize, out: &mut Vec<Vec<usize>>) {
+        if pos == cur.len() {
+            out.push(cur.clone());
+            return;
+        }
+        for p in min_proc..nproc {
+            cur[pos] = p;
+            rec(cur, pos + 1, p, nproc, out);
+        }
+    }
+    rec(&mut cur, 0, 0, nproc, &mut out);
+    out
+}
+
+/// Feasibility sweep over every assignment of one architecture.
+#[derive(Debug, Clone)]
+pub struct FeasibilitySweep {
+    /// Feasible assignment with the lowest worst-case latency (the
+    /// identity chain wins ties), with its simulation report.
+    pub best: Option<(Mapping, SimReport)>,
+    /// Did any assignment satisfy the memory budgets (regardless of
+    /// latency)? Distinguishes latency- from memory-pruning.
+    pub any_memory_ok: bool,
+    /// Assignments simulated.
+    pub evaluated: usize,
+}
+
+/// Shared enumerate-simulate-filter pass: every assignment of `exits`
+/// onto `platform`, keeping the feasible ones with their reports.
+struct AssignmentSweep {
+    feasible: Vec<(Mapping, SimReport)>,
+    any_memory_ok: bool,
+    evaluated: usize,
+}
+
+fn feasible_assignments(
+    graph: &BlockGraph,
+    exits: &[usize],
+    platform: &Platform,
+    latency_constraint_s: f64,
+) -> AssignmentSweep {
+    let nseg = exits.len() + 1;
+    let nproc = platform.processors.len();
+    let mut feasible = Vec::new();
+    let mut any_memory_ok = false;
+    let mut evaluated = 0usize;
+    for assignment in enumerate_assignments(nseg, nproc) {
+        let mapping = Mapping { exits: exits.to_vec(), assignment };
+        let report = simulate(graph, &mapping, platform);
+        evaluated += 1;
+        let memory_ok = report.memory_ok.iter().all(|&ok| ok);
+        any_memory_ok |= memory_ok;
+        if memory_ok && report.worst_case_s <= latency_constraint_s {
+            feasible.push((mapping, report));
+        }
+    }
+    AssignmentSweep { feasible, any_memory_ok, evaluated }
+}
+
+/// Index of the lowest-cost entry; strict improvement required, and
+/// the identity chain wins ties (deterministic, seed-compatible).
+fn select_best<T>(items: &[(Mapping, T)], cost: impl Fn(&T) -> f64) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, (mapping, payload)) in items.iter().enumerate() {
+        let c = cost(payload);
+        let better = match best {
+            None => true,
+            Some((bi, bc)) => {
+                c < bc - 1e-15
+                    || (mapping.is_chain()
+                        && !items[bi].0.is_chain()
+                        && (c - bc).abs() <= 1e-15)
+            }
+        };
+        if better {
+            best = Some((i, c));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Enumerate every assignment of `exits` onto `platform`, simulate
+/// each, and report the best feasible one by worst-case latency.
+pub fn sweep_assignments(
+    graph: &BlockGraph,
+    exits: &[usize],
+    platform: &Platform,
+    latency_constraint_s: f64,
+) -> FeasibilitySweep {
+    let AssignmentSweep { mut feasible, any_memory_ok, evaluated } =
+        feasible_assignments(graph, exits, platform, latency_constraint_s);
+    let best_idx = select_best(&feasible, |r| r.worst_case_s);
+    let best = best_idx.map(|i| feasible.swap_remove(i));
+    FeasibilitySweep { best, any_memory_ok, evaluated }
+}
+
+/// Scalarization of the deployment-time mapping objective. Latency and
+/// energy are normalized by the maximum among feasible assignments, so
+/// the weights trade off relative (not unit-bearing) quantities.
+#[derive(Debug, Clone)]
+pub struct MappingObjective {
+    pub w_latency: f64,
+    pub w_energy: f64,
+}
+
+impl Default for MappingObjective {
+    fn default() -> Self {
+        MappingObjective { w_latency: 0.5, w_energy: 0.5 }
+    }
+}
+
+/// Outcome of the deployment-time mapping co-search.
+#[derive(Debug, Clone)]
+pub struct MappingChoice {
+    pub mapping: Mapping,
+    /// Scalarized expected cost of the chosen mapping.
+    pub expected_cost: f64,
+    /// Same scalarization for the identity chain (`f64::INFINITY`
+    /// when the chain itself is infeasible on this platform).
+    pub chain_cost: f64,
+    /// Assignments simulated.
+    pub evaluated: usize,
+}
+
+/// Score every feasible assignment of `exits` by the expected
+/// latency/energy under the termination distribution `term` (one mass
+/// per classifier, EEs then final) and return the cheapest. `None`
+/// when no assignment is feasible.
+pub fn co_search(
+    graph: &BlockGraph,
+    exits: &[usize],
+    platform: &Platform,
+    term: &[f64],
+    latency_constraint_s: f64,
+    obj: &MappingObjective,
+) -> Option<MappingChoice> {
+    let nseg = exits.len() + 1;
+    assert_eq!(term.len(), nseg, "termination distribution must have one mass per segment");
+
+    let sweep = feasible_assignments(graph, exits, platform, latency_constraint_s);
+    if sweep.feasible.is_empty() {
+        return None;
+    }
+    // expectation under the termination distribution, then normalize
+    // each axis by the feasible maximum and scalarize
+    let mut scored: Vec<(Mapping, (f64, f64))> = Vec::with_capacity(sweep.feasible.len());
+    for (mapping, report) in sweep.feasible {
+        let (lat, energy, _) = report.expected(term);
+        scored.push((mapping, (lat, energy)));
+    }
+    let lat_max = scored.iter().map(|s| s.1 .0).fold(f64::MIN, f64::max).max(1e-12);
+    let e_max = scored.iter().map(|s| s.1 .1).fold(f64::MIN, f64::max).max(1e-12);
+    let cost_of =
+        |&(lat, e): &(f64, f64)| obj.w_latency * lat / lat_max + obj.w_energy * e / e_max;
+
+    let chain_cost = scored
+        .iter()
+        .find(|(m, _)| m.is_chain())
+        .map(|(_, le)| cost_of(le))
+        .unwrap_or(f64::INFINITY);
+    let i = select_best(&scored, &cost_of).expect("nonempty feasible set");
+    let expected_cost = cost_of(&scored[i].1);
+    let (mapping, _) = scored.swap_remove(i);
+    Some(MappingChoice { mapping, expected_cost, chain_cost, evaluated: sweep.evaluated })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    #[test]
+    fn chain_is_identity() {
+        let m = Mapping::chain(vec![2, 4]);
+        assert_eq!(m.assignment, vec![0, 1, 2]);
+        assert!(m.is_chain());
+        assert_eq!(m.n_segments(), 3);
+        assert_eq!(m.segment(0, 7), (0, 2));
+        assert_eq!(m.segment(1, 7), (3, 4));
+        assert_eq!(m.segment(2, 7), (5, 6));
+    }
+
+    #[test]
+    fn with_assignment_validates_shape() {
+        assert!(Mapping::with_assignment(vec![1], vec![0]).is_err());
+        assert!(Mapping::with_assignment(vec![3, 1], vec![0, 1, 1]).is_err());
+        let m = Mapping::with_assignment(vec![1], vec![1, 1]).unwrap();
+        assert!(!m.is_chain());
+        assert_eq!(m.proc_of(0), 1);
+    }
+
+    #[test]
+    fn validate_against_platform() {
+        let p = presets::psoc6(); // 2 processors
+        assert!(Mapping::chain(vec![2]).validate(&p).is_ok());
+        assert!(Mapping::chain(vec![1, 3]).validate(&p).is_err()); // needs proc 2
+        let shared = Mapping::with_assignment(vec![2], vec![1, 1]).unwrap();
+        assert!(shared.validate(&p).is_ok());
+    }
+
+    #[test]
+    fn enumerate_full_space() {
+        let a = enumerate_assignments(2, 3);
+        assert_eq!(a.len(), 9);
+        assert_eq!(a[0], vec![0, 0]);
+        assert_eq!(a[8], vec![2, 2]);
+        // lexicographic, distinct
+        for w in a.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn enumerate_fallback_is_monotone() {
+        // 2^13 = 8192 > MAX_ASSIGNMENTS: falls back to non-decreasing
+        let a = enumerate_assignments(13, 2);
+        assert_eq!(a.len(), 14); // C(13 + 1, 13)
+        for asg in &a {
+            assert!(asg.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    fn sweep_prefers_fast_processor() {
+        // rk3588: proc 1 (Mali, 22 GMAC/s) beats the chain's proc 0
+        // (CPU, 8 GMAC/s) for a single-segment model
+        let g = BlockGraph::synthetic_resnet(10, 2);
+        let p = presets::rk3588_cloud();
+        let sweep = sweep_assignments(&g, &[], &p, f64::INFINITY);
+        let (best, _) = sweep.best.expect("feasible");
+        assert_eq!(best.assignment, vec![1], "expected the Mali to win");
+        assert!(sweep.any_memory_ok);
+        assert_eq!(sweep.evaluated, 3);
+    }
+
+    #[test]
+    fn co_search_never_worse_than_chain() {
+        let g = BlockGraph::synthetic_resnet(10, 3);
+        let p = presets::rk3588_cloud();
+        for exits in [vec![], vec![2], vec![1, 4]] {
+            let term = match exits.len() {
+                0 => vec![1.0],
+                1 => vec![0.6, 0.4],
+                _ => vec![0.5, 0.3, 0.2],
+            };
+            let choice = co_search(&g, &exits, &p, &term, f64::INFINITY, &MappingObjective::default())
+                .expect("feasible mapping");
+            assert!(
+                choice.expected_cost <= choice.chain_cost + 1e-12,
+                "{:?}: {} > chain {}",
+                exits,
+                choice.expected_cost,
+                choice.chain_cost
+            );
+            choice.mapping.validate(&p).unwrap();
+        }
+    }
+
+    #[test]
+    fn co_search_finds_non_identity_on_heterogeneous_platform() {
+        // more processors (3) than exits (1): the chain leaves the
+        // fastest local core idle, the co-search should not
+        let g = BlockGraph::synthetic_resnet(10, 2);
+        let p = presets::rk3588_cloud();
+        let choice = co_search(&g, &[2], &p, &[0.6, 0.4], f64::INFINITY, &MappingObjective::default())
+            .expect("feasible mapping");
+        assert!(!choice.mapping.is_chain(), "chain should lose: {:?}", choice.mapping);
+        assert!(choice.expected_cost <= choice.chain_cost);
+    }
+}

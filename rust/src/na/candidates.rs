@@ -1,26 +1,37 @@
 //! Architecture search-space construction (the paper's §3.1):
 //! enumerate every EENN version of the base model — subsets of EE
 //! locations up to one classifier per target processor — and prune
-//! those predicted to violate the worst-case latency constraint or
-//! the per-processor memory budgets.
+//! those for which **no segment→processor assignment** satisfies the
+//! worst-case latency constraint and the per-processor memory
+//! budgets. Each kept candidate carries the feasible assignment with
+//! the lowest worst-case latency; the flow's deployment-time mapping
+//! co-search (termination-distribution-weighted) refines it once the
+//! decision mechanism is configured.
 
 use crate::graph::BlockGraph;
 use crate::hw::Platform;
-use crate::sim::{simulate, Mapping};
+use crate::mapping::{sweep_assignments, Mapping};
 
 #[derive(Debug, Clone)]
 pub struct Candidate {
-    /// EE block boundaries, ascending. Empty = unaugmented base model
-    /// on processor 0.
+    /// EE block boundaries, ascending. Empty = unaugmented base model.
     pub exits: Vec<usize>,
+    /// Best feasible segment→processor mapping found at enumeration
+    /// time (by worst-case latency; the identity chain wins ties).
+    pub mapping: Mapping,
 }
 
 #[derive(Debug, Clone, Default)]
 pub struct PruneStats {
     pub generated: usize,
+    /// Candidates where some assignment fit the memory budgets but
+    /// none met the latency constraint.
     pub latency_pruned: usize,
+    /// Candidates where no assignment fit the memory budgets.
     pub memory_pruned: usize,
     pub kept: usize,
+    /// Total assignments simulated across all candidates.
+    pub assignments_evaluated: u64,
 }
 
 /// Enumerate subsets of `locations` of size 0..=max_ee in ascending
@@ -60,17 +71,13 @@ pub fn enumerate(
     let mut kept = Vec::new();
     for_each_subset(&graph.ee_locations, max_ee, |exits| {
         stats.generated += 1;
-        let mapping = Mapping { exits: exits.to_vec() };
-        let report = simulate(graph, &mapping, platform);
-        if report.worst_case_s > latency_constraint_s {
-            stats.latency_pruned += 1;
-            return;
+        let sweep = sweep_assignments(graph, exits, platform, latency_constraint_s);
+        stats.assignments_evaluated += sweep.evaluated as u64;
+        match sweep.best {
+            Some((mapping, _)) => kept.push(Candidate { exits: exits.to_vec(), mapping }),
+            None if sweep.any_memory_ok => stats.latency_pruned += 1,
+            None => stats.memory_pruned += 1,
         }
-        if report.memory_ok.iter().any(|&ok| !ok) {
-            stats.memory_pruned += 1;
-            return;
-        }
-        kept.push(Candidate { exits: exits.to_vec() });
     });
     stats.kept = kept.len();
     (kept, stats)
@@ -136,7 +143,7 @@ mod tests {
         let g = BlockGraph::synthetic_resnet(10, 2);
         let p = presets::psoc6(); // 10 MMAC/s first core, graph ~27 MMAC
         let (all, _) = enumerate(&g, &p, f64::INFINITY);
-        let (tight, stats) = enumerate(&g, &p, 1.0); // 1 s worst-case
+        let (tight, stats) = enumerate(&g, &p, 0.2); // 200 ms worst-case
         assert!(tight.len() < all.len());
         assert_eq!(stats.latency_pruned + stats.memory_pruned + stats.kept, stats.generated);
     }
@@ -148,6 +155,18 @@ mod tests {
         let (cands, _) = enumerate(&g, &p, f64::INFINITY);
         for c in &cands {
             assert!(c.exits.windows(2).all(|w| w[0] < w[1]), "{:?}", c.exits);
+        }
+    }
+
+    #[test]
+    fn kept_candidates_carry_valid_mappings() {
+        let g = BlockGraph::synthetic_resnet(10, 2);
+        let p = presets::rk3588_cloud();
+        let (cands, stats) = enumerate(&g, &p, f64::INFINITY);
+        assert!(stats.assignments_evaluated >= stats.generated as u64);
+        for c in &cands {
+            assert_eq!(c.mapping.exits, c.exits);
+            c.mapping.validate(&p).unwrap();
         }
     }
 }

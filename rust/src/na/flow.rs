@@ -11,7 +11,11 @@
 //!    shortest-path search on its threshold graph, and score it by
 //!    the expected scalarized cost with its *best* configuration;
 //! 6. return the lowest-cost solution (optionally re-searched on a
-//!    denser threshold grid — the paper's "second search step").
+//!    denser threshold grid — the paper's "second search step");
+//! 7. co-search the segment→processor mapping of the winner: every
+//!    feasible assignment is scored through the analytic simulator
+//!    under the configured cascade's termination distribution, and
+//!    the solution ships with the cheapest one (see `crate::mapping`).
 //!
 //! Calibration uses the validation set when available; otherwise the
 //! flow falls back to the training set and scales the found
@@ -32,6 +36,7 @@ use crate::data::load_split;
 use crate::eenn::{EennSolution, ExitHead};
 use crate::graph::BlockGraph;
 use crate::hw::Platform;
+use crate::mapping::{co_search, MappingObjective};
 use crate::runtime::{Engine, Manifest, WeightStore};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -55,6 +60,8 @@ pub struct FlowConfig {
     pub trainer: TrainerConfig,
     pub solver: Solver,
     pub edge_model: EdgeModel,
+    /// Scalarization of the segment→processor mapping co-search.
+    pub mapping: MappingObjective,
     /// Run the denser second threshold search on the chosen solution.
     pub refine: bool,
     /// Post-selection fine-tuning epochs for the chosen exits (the
@@ -74,6 +81,7 @@ impl Default for FlowConfig {
             trainer: TrainerConfig::default(),
             solver: Solver::BellmanFord,
             edge_model: EdgeModel::Pairwise,
+            mapping: MappingObjective::default(),
             refine: true,
             finetune_epochs: 0,
             verbose: false,
@@ -95,6 +103,8 @@ pub struct SearchReport {
     pub total_s: f64,
     /// total (architecture, threshold-vector) configurations covered
     pub evaluated_configs: u64,
+    /// assignments simulated by the deployment-time mapping co-search
+    pub mapping_candidates: usize,
 }
 
 pub struct AugmentOutcome {
@@ -276,6 +286,28 @@ pub fn augment(
     let identity: Vec<usize> = (0..exits_chosen.len()).collect();
     let expected = si.cascade_metrics(&identity);
 
+    // 6c. mapping co-search: with the termination distribution known,
+    // enumerate every segment→processor assignment of the chosen
+    // architecture and keep the one with the lowest scalarized
+    // expected latency/energy (the identity chain is in the search
+    // space, so this never costs more than the seed behaviour)
+    let mchoice = co_search(
+        &graph,
+        &exits_chosen,
+        platform,
+        &expected.term_rates,
+        cfg.latency_constraint_s,
+        &cfg.mapping,
+    )
+    .ok_or_else(|| anyhow::anyhow!("no feasible mapping for chosen architecture"))?;
+    log!(
+        "mapping {:?} (cost {:.4}, chain {:.4}, {} assignments)",
+        mchoice.mapping.assignment,
+        mchoice.expected_cost,
+        mchoice.chain_cost,
+        mchoice.evaluated
+    );
+
     // 7. correction factor for training-set calibration -------------------
     let factor = match cfg.calibration {
         Calibration::ValSplit => 1.0,
@@ -301,6 +333,7 @@ pub fn augment(
         model: model_name.to_string(),
         platform: platform.name.clone(),
         exits: exits_chosen,
+        assignment: mchoice.mapping.assignment.clone(),
         thresholds,
         raw_thresholds: choice.thresholds.clone(),
         correction_factor: factor,
@@ -321,6 +354,7 @@ pub fn augment(
         threshold_search_s,
         total_s: t_total.elapsed().as_secs_f64(),
         evaluated_configs,
+        mapping_candidates: mchoice.evaluated,
     };
     Ok(AugmentOutcome { solution, report })
 }

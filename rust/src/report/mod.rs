@@ -51,7 +51,7 @@ pub fn evaluate_on_cache(
     cache: &FeatureCache,
 ) -> Result<TestEval> {
     let graph = BlockGraph::from_manifest(model);
-    let mapping = Mapping { exits: solution.exits.clone() };
+    let mapping = solution.mapping();
     let sim = simulate(&graph, &mapping, platform);
 
     // per-exit test profiles from the solution's head weights
@@ -134,7 +134,7 @@ pub fn baseline_eval(
     let ws = WeightStore::load(man, model)?;
     let test = load_split(man, model, "test")?;
     let cache = FeatureCache::build(engine, man, model, &ws, &test)?;
-    let sim = simulate(&graph, &Mapping { exits: vec![] }, &single);
+    let sim = simulate(&graph, &Mapping::chain(vec![]), &single);
 
     let final_prof = cache.final_profile();
     let mut conf = Confusion::new(model.num_classes);
@@ -159,6 +159,8 @@ pub struct Table2Row {
     pub model: String,
     pub calibration: String,
     pub exits: Vec<usize>,
+    /// Segment→processor assignment the solution deploys with.
+    pub assignment: Vec<usize>,
     pub thresholds: Vec<f64>,
     pub search_s: f64,
     pub train_s: f64,
@@ -173,8 +175,9 @@ impl Table2Row {
         let pct = |new: f64, old: f64| 100.0 * (new - old) / old;
         println!("── {} [calib {}] ──", self.model, self.calibration);
         println!(
-            "  exits {:?}  thresholds {:?}",
+            "  exits {:?} -> procs {:?}  thresholds {:?}",
             self.exits,
+            self.assignment,
             self.thresholds.iter().map(|t| (t * 100.0).round() / 100.0).collect::<Vec<_>>()
         );
         println!(
@@ -289,6 +292,7 @@ pub fn table2_row_with_base(
         model: model_name.to_string(),
         calibration: label.to_string(),
         exits: out.solution.exits.clone(),
+        assignment: out.solution.assignment.clone(),
         thresholds: out.solution.thresholds.clone(),
         search_s: out.report.total_s,
         train_s: model.train_seconds,

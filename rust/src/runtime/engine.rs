@@ -11,14 +11,15 @@
 //!   EXPERIMENTS.md §Perf; true device-resident buffers via
 //!   `execute_b` segfault in this xla_extension 0.5.1 CPU build).
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
-use super::tensor::{Dtype, HostTensor};
+use self::backend::service;
+
+use super::tensor::HostTensor;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ExecHandle(usize);
@@ -122,157 +123,213 @@ impl Engine {
 }
 
 // ---------------------------------------------------------------------------
-// service thread
+// service thread — real PJRT backend (needs the xla bindings crate)
 // ---------------------------------------------------------------------------
 
-fn literal_of(t: &HostTensor) -> Result<xla::Literal> {
-    let ty = match t.dtype {
-        Dtype::F32 => xla::ElementType::F32,
-        Dtype::I32 => xla::ElementType::S32,
-    };
-    let lit = xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, &t.data)
-        .map_err(|e| anyhow!("literal create: {e:?}"))?;
-    Ok(lit)
-}
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::mpsc;
 
-fn host_of(lit: &xla::Literal) -> Result<HostTensor> {
-    let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let (dtype, data) = match shape.primitive_type() {
-        xla::PrimitiveType::F32 => {
-            let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-            (Dtype::F32, v.iter().flat_map(|x| x.to_le_bytes()).collect())
-        }
-        xla::PrimitiveType::S32 => {
-            let v: Vec<i32> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-            (Dtype::I32, v.iter().flat_map(|x| x.to_le_bytes()).collect())
-        }
-        other => return Err(anyhow!("unsupported output dtype {other:?}")),
-    };
-    Ok(HostTensor { shape: dims, dtype, data })
-}
+    use anyhow::{anyhow, Result};
 
-struct Service {
-    client: xla::PjRtClient,
-    execs: Vec<xla::PjRtLoadedExecutable>,
-    by_path: HashMap<PathBuf, ExecHandle>,
-    bounds: Vec<(ExecHandle, Vec<xla::Literal>)>,
-    stats: EngineStats,
-}
+    use super::super::tensor::{Dtype, HostTensor};
+    use super::{BoundHandle, EngineStats, ExecHandle, Req};
 
-impl Service {
-    fn compile(&mut self, path: &Path) -> Result<ExecHandle> {
-        if let Some(&h) = self.by_path.get(path) {
-            return Ok(h);
-        }
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
-        let h = ExecHandle(self.execs.len());
-        self.execs.push(exe);
-        self.by_path.insert(path.to_path_buf(), h);
-        self.stats.compiled += 1;
-        Ok(h)
-    }
-
-    fn unpack(&mut self, results: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
-        let buf = &results[0][0];
-        let lit = buf
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: always a tuple.
-        let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
-        parts.iter().map(host_of).collect()
-    }
-
-    fn run(&mut self, h: ExecHandle, args: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
-        let lits: Vec<xla::Literal> =
-            args.iter().map(literal_of).collect::<Result<_>>()?;
-        let t0 = std::time::Instant::now();
-        let exe = self.execs.get(h.0).ok_or_else(|| anyhow!("bad handle"))?;
-        let results = exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        self.stats.executions += 1;
-        self.stats.exec_seconds += t0.elapsed().as_secs_f64();
-        self.unpack(results)
-    }
-
-    fn bind(&mut self, h: ExecHandle, consts: Vec<HostTensor>) -> Result<BoundHandle> {
-        // NOTE: device-resident binding via buffer_from_host_literal +
-        // execute_b segfaults in this xla_extension 0.5.1 CPU build, so
-        // the constants are pre-converted to PJRT *literals* once (the
-        // HostTensor -> Literal conversion is the measurable per-call
-        // cost; see EXPERIMENTS.md §Perf) and joined with the dynamic
-        // arguments through the proven `execute` path.
-        let lits: Vec<xla::Literal> =
-            consts.iter().map(literal_of).collect::<Result<_>>()?;
-        let b = BoundHandle(self.bounds.len());
-        self.bounds.push((h, lits));
-        Ok(b)
-    }
-
-    fn run_bound(&mut self, b: BoundHandle, args: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
-        let h = self
-            .bounds
-            .get(b.0)
-            .ok_or_else(|| anyhow!("bad bound handle"))?
-            .0;
-        let dyn_lits: Vec<xla::Literal> =
-            args.iter().map(literal_of).collect::<Result<_>>()?;
-        let t0 = std::time::Instant::now();
-        let results = {
-            let const_lits = &self.bounds[b.0].1;
-            let all: Vec<&xla::Literal> =
-                const_lits.iter().chain(dyn_lits.iter()).collect();
-            let exe = self.execs.get(h.0).ok_or_else(|| anyhow!("bad handle"))?;
-            exe.execute::<&xla::Literal>(&all)
-                .map_err(|e| anyhow!("execute: {e:?}"))?
+    fn literal_of(t: &HostTensor) -> Result<xla::Literal> {
+        let ty = match t.dtype {
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::I32 => xla::ElementType::S32,
         };
-        self.stats.executions += 1;
-        self.stats.exec_seconds += t0.elapsed().as_secs_f64();
-        self.unpack(results)
+        let lit = xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, &t.data)
+            .map_err(|e| anyhow!("literal create: {e:?}"))?;
+        Ok(lit)
+    }
+
+    fn host_of(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let (dtype, data) = match shape.primitive_type() {
+            xla::PrimitiveType::F32 => {
+                let v: Vec<f32> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                (Dtype::F32, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+            }
+            xla::PrimitiveType::S32 => {
+                let v: Vec<i32> = lit.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                (Dtype::I32, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+            }
+            other => return Err(anyhow!("unsupported output dtype {other:?}")),
+        };
+        Ok(HostTensor { shape: dims, dtype, data })
+    }
+
+    struct Service {
+        client: xla::PjRtClient,
+        execs: Vec<xla::PjRtLoadedExecutable>,
+        by_path: HashMap<PathBuf, ExecHandle>,
+        bounds: Vec<(ExecHandle, Vec<xla::Literal>)>,
+        stats: EngineStats,
+    }
+
+    impl Service {
+        fn compile(&mut self, path: &Path) -> Result<ExecHandle> {
+            if let Some(&h) = self.by_path.get(path) {
+                return Ok(h);
+            }
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+            let h = ExecHandle(self.execs.len());
+            self.execs.push(exe);
+            self.by_path.insert(path.to_path_buf(), h);
+            self.stats.compiled += 1;
+            Ok(h)
+        }
+
+        fn unpack(&mut self, results: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+            let buf = &results[0][0];
+            let lit = buf
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            // aot.py lowers with return_tuple=True: always a tuple.
+            let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+            parts.iter().map(host_of).collect()
+        }
+
+        fn run(&mut self, h: ExecHandle, args: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+            let lits: Vec<xla::Literal> =
+                args.iter().map(literal_of).collect::<Result<_>>()?;
+            let t0 = std::time::Instant::now();
+            let exe = self.execs.get(h.0).ok_or_else(|| anyhow!("bad handle"))?;
+            let results = exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| anyhow!("execute: {e:?}"))?;
+            self.stats.executions += 1;
+            self.stats.exec_seconds += t0.elapsed().as_secs_f64();
+            self.unpack(results)
+        }
+
+        fn bind(&mut self, h: ExecHandle, consts: Vec<HostTensor>) -> Result<BoundHandle> {
+            // NOTE: device-resident binding via buffer_from_host_literal +
+            // execute_b segfaults in this xla_extension 0.5.1 CPU build, so
+            // the constants are pre-converted to PJRT *literals* once (the
+            // HostTensor -> Literal conversion is the measurable per-call
+            // cost; see EXPERIMENTS.md §Perf) and joined with the dynamic
+            // arguments through the proven `execute` path.
+            let lits: Vec<xla::Literal> =
+                consts.iter().map(literal_of).collect::<Result<_>>()?;
+            let b = BoundHandle(self.bounds.len());
+            self.bounds.push((h, lits));
+            Ok(b)
+        }
+
+        fn run_bound(&mut self, b: BoundHandle, args: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+            let h = self
+                .bounds
+                .get(b.0)
+                .ok_or_else(|| anyhow!("bad bound handle"))?
+                .0;
+            let dyn_lits: Vec<xla::Literal> =
+                args.iter().map(literal_of).collect::<Result<_>>()?;
+            let t0 = std::time::Instant::now();
+            let results = {
+                let const_lits = &self.bounds[b.0].1;
+                let all: Vec<&xla::Literal> =
+                    const_lits.iter().chain(dyn_lits.iter()).collect();
+                let exe = self.execs.get(h.0).ok_or_else(|| anyhow!("bad handle"))?;
+                exe.execute::<&xla::Literal>(&all)
+                    .map_err(|e| anyhow!("execute: {e:?}"))?
+            };
+            self.stats.executions += 1;
+            self.stats.exec_seconds += t0.elapsed().as_secs_f64();
+            self.unpack(results)
+        }
+    }
+
+    pub(super) fn service(rx: mpsc::Receiver<Req>, ready: mpsc::Sender<Result<()>>) {
+        let client = match xla::PjRtClient::cpu() {
+            Ok(c) => {
+                let _ = ready.send(Ok(()));
+                c
+            }
+            Err(e) => {
+                let _ = ready.send(Err(anyhow!("PjRtClient::cpu: {e:?}")));
+                return;
+            }
+        };
+        let mut svc = Service {
+            client,
+            execs: Vec::new(),
+            by_path: HashMap::new(),
+            bounds: Vec::new(),
+            stats: EngineStats::default(),
+        };
+        while let Ok(req) = rx.recv() {
+            match req {
+                Req::Compile(path, tx) => {
+                    let _ = tx.send(svc.compile(&path));
+                }
+                Req::Run(h, args, tx) => {
+                    let _ = tx.send(svc.run(h, args));
+                }
+                Req::Bind(h, consts, tx) => {
+                    let _ = tx.send(svc.bind(h, consts));
+                }
+                Req::RunBound(b, args, tx) => {
+                    let _ = tx.send(svc.run_bound(b, args));
+                }
+                Req::Stats(tx) => {
+                    let _ = tx.send(svc.stats.clone());
+                }
+            }
+        }
     }
 }
 
-fn service(rx: mpsc::Receiver<Req>, ready: mpsc::Sender<Result<()>>) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => {
-            let _ = ready.send(Ok(()));
-            c
-        }
-        Err(e) => {
-            let _ = ready.send(Err(anyhow!("PjRtClient::cpu: {e:?}")));
-            return;
-        }
-    };
-    let mut svc = Service {
-        client,
-        execs: Vec::new(),
-        by_path: HashMap::new(),
-        bounds: Vec::new(),
-        stats: EngineStats::default(),
-    };
-    while let Ok(req) = rx.recv() {
-        match req {
-            Req::Compile(path, tx) => {
-                let _ = tx.send(svc.compile(&path));
-            }
-            Req::Run(h, args, tx) => {
-                let _ = tx.send(svc.run(h, args));
-            }
-            Req::Bind(h, consts, tx) => {
-                let _ = tx.send(svc.bind(h, consts));
-            }
-            Req::RunBound(b, args, tx) => {
-                let _ = tx.send(svc.run_bound(b, args));
-            }
-            Req::Stats(tx) => {
-                let _ = tx.send(svc.stats.clone());
+// ---------------------------------------------------------------------------
+// service thread — stub backend (default offline build)
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use std::sync::mpsc;
+
+    use anyhow::{anyhow, Result};
+
+    use super::{EngineStats, Req};
+
+    const UNAVAILABLE: &str = "PJRT backend unavailable: built without the `pjrt` \
+         feature (add the xla bindings crate to rust/Cargo.toml and build with \
+         --features pjrt to execute AOT artifacts)";
+
+    /// Replies an explanatory error to every execution request; the
+    /// engine handle itself stays alive so engine-free paths (search
+    /// mechanics, simulator, synthetic serving) work unchanged.
+    pub(super) fn service(rx: mpsc::Receiver<Req>, ready: mpsc::Sender<Result<()>>) {
+        let _ = ready.send(Ok(()));
+        let stats = EngineStats::default();
+        while let Ok(req) = rx.recv() {
+            match req {
+                Req::Compile(path, tx) => {
+                    let _ = tx.send(Err(anyhow!("{UNAVAILABLE} (compile {})", path.display())));
+                }
+                Req::Run(_, _, tx) => {
+                    let _ = tx.send(Err(anyhow!("{UNAVAILABLE}")));
+                }
+                Req::Bind(_, _, tx) => {
+                    let _ = tx.send(Err(anyhow!("{UNAVAILABLE}")));
+                }
+                Req::RunBound(_, _, tx) => {
+                    let _ = tx.send(Err(anyhow!("{UNAVAILABLE}")));
+                }
+                Req::Stats(tx) => {
+                    let _ = tx.send(stats.clone());
+                }
             }
         }
     }

@@ -3,48 +3,32 @@
 //! and expectation under a termination distribution.
 //!
 //! The model mirrors the paper's §4 methodology: segment time =
-//! MACs / processor throughput; transfer time = IFM bytes over the
-//! link; energy = active-power × time on the executing core plus
-//! sleep-power × time on the parked cores (single-ported-memory
-//! platforms like the PSoC6 cannot overlap cores at all, which is
-//! also why the paper's subgraphs execute strictly in sequence).
+//! MACs / processor throughput; transfer time = IFM bytes routed over
+//! the chain interconnect between the executing processors (zero when
+//! consecutive segments share a processor); energy = active-power ×
+//! time on the executing core plus sleep-power × time on the parked
+//! cores (single-ported-memory platforms like the PSoC6 cannot
+//! overlap cores at all, which is also why the paper's subgraphs
+//! execute strictly in sequence).
+//!
+//! Which processor runs which segment is the [`Mapping`]'s explicit
+//! `assignment` (see `crate::mapping`); the seed's subgraph-*i*-on-
+//! processor-*i* behaviour is `Mapping::chain`. Samples arrive at
+//! processor 0 (the always-on core), so a first segment mapped
+//! elsewhere pays the input transfer.
 
 use crate::graph::BlockGraph;
 use crate::hw::Platform;
 
-/// An EENN architecture mapped onto a platform: exits after blocks
-/// `exits[i]`, subgraph i (blocks between consecutive boundaries) on
-/// processor i, final classifier on processor `exits.len()`.
-#[derive(Debug, Clone)]
-pub struct Mapping {
-    /// EE boundaries in ascending block order (may be empty: the
-    /// whole backbone on processor 0).
-    pub exits: Vec<usize>,
-}
-
-impl Mapping {
-    /// Block range (inclusive) of subgraph `seg`.
-    pub fn segment(&self, seg: usize, n_blocks: usize) -> (usize, usize) {
-        let lo = if seg == 0 { 0 } else { self.exits[seg - 1] + 1 };
-        let hi = if seg < self.exits.len() {
-            self.exits[seg]
-        } else {
-            n_blocks - 1
-        };
-        (lo, hi)
-    }
-
-    pub fn n_segments(&self) -> usize {
-        self.exits.len() + 1
-    }
-}
+pub use crate::mapping::Mapping;
 
 /// Timing/energy of one classifier stage (exit i or the final head).
 #[derive(Debug, Clone, Default)]
 pub struct StageCost {
     /// Compute time of this subgraph (+ its classifier head), seconds.
     pub compute_s: f64,
-    /// Transfer time of the incoming IFM boundary, seconds (0 for seg 0).
+    /// Transfer time of the incoming IFM boundary, seconds (input
+    /// transfer for segment 0 when it is not on processor 0).
     pub transfer_s: f64,
     /// Cumulative latency from sample arrival to this classifier's
     /// verdict, seconds.
@@ -62,7 +46,9 @@ pub struct SimReport {
     /// Worst-case latency: every classifier evaluated (paper's
     /// deployment constraint).
     pub worst_case_s: f64,
-    /// Memory feasibility per processor (params + peak act <= budget).
+    /// Memory feasibility per **processor**: the parameters of every
+    /// segment assigned to it (plus their heads) must fit alongside
+    /// the largest transient activation among those segments.
     pub memory_ok: Vec<bool>,
 }
 
@@ -89,16 +75,25 @@ impl SimReport {
 
 /// Simulate a mapped EENN on a platform.
 ///
-/// Panics if the mapping has more segments than the platform has
-/// processors (the paper's architecture generation never produces
-/// such mappings; the candidate generator enforces it).
+/// Panics if the mapping's assignment does not fit the platform (one
+/// processor id per segment, every id in range) — the candidate
+/// generator and the mapping co-search only produce valid mappings;
+/// use `Mapping::validate` for a non-panicking check.
 pub fn simulate(graph: &BlockGraph, mapping: &Mapping, platform: &Platform) -> SimReport {
     let nseg = mapping.n_segments();
-    assert!(
-        nseg <= platform.processors.len(),
-        "{nseg} segments > {} processors",
-        platform.processors.len()
+    let nproc = platform.processors.len();
+    assert_eq!(
+        mapping.assignment.len(),
+        nseg,
+        "mapping has {nseg} segments but {} processor assignments",
+        mapping.assignment.len()
     );
+    for (seg, &p) in mapping.assignment.iter().enumerate() {
+        assert!(
+            p < nproc,
+            "{nseg} segments > {nproc} processors (segment {seg} assigned to processor {p})"
+        );
+    }
     let nb = graph.blocks.len();
 
     let mut stages = Vec::with_capacity(nseg);
@@ -108,17 +103,22 @@ pub fn simulate(graph: &BlockGraph, mapping: &Mapping, platform: &Platform) -> S
 
     for seg in 0..nseg {
         let (lo, hi) = mapping.segment(seg, nb);
-        let proc = &platform.processors[seg];
+        let proc_id = mapping.proc_of(seg);
+        let proc = &platform.processors[proc_id];
 
-        // incoming transfer (boundary IFM over links[seg-1])
-        let mut transfer_s = 0.0;
-        if seg > 0 {
-            let link = &platform.links[seg - 1];
-            let bytes = graph.blocks[lo - 1].ifm_bytes;
-            transfer_s = link.transfer_s(bytes);
-            cum_e += transfer_s * link.active_mw * 1e-3 * 1e3; // mW*s = mJ
-            cum_lat += transfer_s;
-        }
+        // incoming transfer, routed along the interconnect between the
+        // previous segment's processor (processor 0 for arrivals) and
+        // this segment's processor
+        let (from, bytes) = if seg == 0 {
+            let input_bytes =
+                graph.blocks[0].act_bytes.saturating_sub(graph.blocks[0].ifm_bytes);
+            (0usize, input_bytes)
+        } else {
+            (mapping.proc_of(seg - 1), graph.blocks[lo - 1].ifm_bytes)
+        };
+        let transfer_s = platform.route_transfer_s(from, proc_id, bytes);
+        cum_e += platform.route_transfer_energy_mj(from, proc_id, bytes);
+        cum_lat += transfer_s;
 
         // subgraph compute + classifier head at this boundary
         let seg_macs: u64 = graph.blocks[lo..=hi].iter().map(|b| b.macs).sum();
@@ -130,7 +130,7 @@ pub fn simulate(graph: &BlockGraph, mapping: &Mapping, platform: &Platform) -> S
         // energy: executing core active; the other *local* cores asleep.
         cum_e += compute_s * proc.active_mw;
         for (pi, other) in platform.processors.iter().enumerate() {
-            if pi != seg {
+            if pi != proc_id {
                 cum_e += compute_s * other.sleep_mw;
             }
         }
@@ -144,19 +144,26 @@ pub fn simulate(graph: &BlockGraph, mapping: &Mapping, platform: &Platform) -> S
         });
     }
 
-    // memory feasibility per used processor
-    let mut memory_ok = Vec::with_capacity(nseg);
+    // memory feasibility per processor: every segment assigned to it
+    // must be resident simultaneously (weights stay loaded); transient
+    // activations only need the largest segment's peak
+    let mut params = vec![0u64; nproc];
+    let mut act = vec![0u64; nproc];
     for seg in 0..nseg {
         let (lo, hi) = mapping.segment(seg, nb);
-        let params: u64 = graph.blocks[lo..=hi].iter().map(|b| b.param_bytes).sum();
-        let head = graph.head_param_bytes(hi);
-        let act: u64 = graph.blocks[lo..=hi]
+        let p = mapping.proc_of(seg);
+        let seg_params: u64 = graph.blocks[lo..=hi].iter().map(|b| b.param_bytes).sum();
+        params[p] += seg_params + graph.head_param_bytes(hi);
+        let seg_act: u64 = graph.blocks[lo..=hi]
             .iter()
             .map(|b| b.act_bytes)
             .max()
             .unwrap_or(0);
-        memory_ok.push(params + head + act <= platform.processors[seg].mem_bytes);
+        act[p] = act[p].max(seg_act);
     }
+    let memory_ok: Vec<bool> = (0..nproc)
+        .map(|p| params[p] + act[p] <= platform.processors[p].mem_bytes)
+        .collect();
 
     let worst_case_s = stages.last().map(|s| s.cum_latency_s).unwrap_or(0.0);
     SimReport { stages, worst_case_s, memory_ok }
@@ -173,7 +180,7 @@ mod tests {
 
     #[test]
     fn segment_ranges() {
-        let m = Mapping { exits: vec![2, 4] };
+        let m = Mapping::chain(vec![2, 4]);
         assert_eq!(m.segment(0, 7), (0, 2));
         assert_eq!(m.segment(1, 7), (3, 4));
         assert_eq!(m.segment(2, 7), (5, 6));
@@ -182,7 +189,7 @@ mod tests {
 
     #[test]
     fn empty_mapping_single_segment() {
-        let m = Mapping { exits: vec![] };
+        let m = Mapping::chain(vec![]);
         assert_eq!(m.segment(0, 7), (0, 6));
         assert_eq!(m.n_segments(), 1);
     }
@@ -191,7 +198,7 @@ mod tests {
     fn cumulative_latency_monotone() {
         let g = tiny_graph();
         let p = presets::rk3588_cloud();
-        let r = simulate(&g, &Mapping { exits: vec![1, 4] }, &p);
+        let r = simulate(&g, &Mapping::chain(vec![1, 4]), &p);
         assert_eq!(r.stages.len(), 3);
         let mut prev = 0.0;
         for s in &r.stages {
@@ -205,7 +212,7 @@ mod tests {
     fn expected_interpolates() {
         let g = tiny_graph();
         let p = presets::rk3588_cloud();
-        let r = simulate(&g, &Mapping { exits: vec![1] }, &p);
+        let r = simulate(&g, &Mapping::chain(vec![1]), &p);
         let (l_all_first, ..) = r.expected(&[1.0, 0.0]);
         let (l_all_last, ..) = r.expected(&[0.0, 1.0]);
         assert!(l_all_first < l_all_last);
@@ -224,7 +231,7 @@ mod tests {
             b.macs = per_block;
         }
         let p = presets::psoc6();
-        let r = simulate(&g, &Mapping { exits: vec![2] }, &p);
+        let r = simulate(&g, &Mapping::chain(vec![2]), &p);
         let m0_time = r.stages[0].cum_latency_s;
         assert!(m0_time > 0.2 && m0_time < 1.5, "{m0_time}");
     }
@@ -234,6 +241,47 @@ mod tests {
     fn too_many_segments_panics() {
         let g = tiny_graph();
         let p = presets::psoc6(); // 2 processors
-        simulate(&g, &Mapping { exits: vec![0, 1, 2] }, &p);
+        simulate(&g, &Mapping::chain(vec![0, 1, 2]), &p);
+    }
+
+    #[test]
+    fn non_identity_assignment_changes_processor() {
+        let g = tiny_graph();
+        let p = presets::rk3588_cloud();
+        let chain = simulate(&g, &Mapping::chain(vec![]), &p);
+        let mali = Mapping::with_assignment(vec![], vec![1]).unwrap();
+        let r = simulate(&g, &mali, &p);
+        // 22 GMAC/s vs 8 GMAC/s: compute must be ~2.75x faster
+        assert!(r.stages[0].compute_s < chain.stages[0].compute_s);
+        // but the input has to hop from processor 0 to the Mali
+        assert!(r.stages[0].transfer_s > 0.0);
+        assert_eq!(chain.stages[0].transfer_s, 0.0);
+    }
+
+    #[test]
+    fn shared_processor_aggregates_memory() {
+        let mut g = tiny_graph();
+        for b in &mut g.blocks {
+            b.param_bytes = 200 * 1024; // 7 blocks x 200 KB
+            b.act_bytes = 16 * 1024;
+        }
+        let p = presets::psoc6(); // 288 KB + 736 KB budgets
+        // split at block 1: 2 blocks (400 KB) + 5 blocks (1000 KB)
+        let both_on_m4f = Mapping::with_assignment(vec![1], vec![1, 1]).unwrap();
+        let r = simulate(&g, &both_on_m4f, &p);
+        // all 1.4 MB on the M4F: over budget; M0 unused and trivially ok
+        assert!(r.memory_ok[0]);
+        assert!(!r.memory_ok[1]);
+    }
+
+    #[test]
+    fn backward_assignment_pays_the_link_twice() {
+        let g = tiny_graph();
+        let p = presets::rk3588_cloud();
+        // seg 0 on the Mali (proc 1), seg 1 back on the CPU (proc 0):
+        // legal, but the boundary hops the DRAM link again
+        let back = Mapping::with_assignment(vec![2], vec![1, 0]).unwrap();
+        let r = simulate(&g, &back, &p);
+        assert!(r.stages[1].transfer_s > 0.0);
     }
 }

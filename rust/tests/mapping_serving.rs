@@ -1,0 +1,191 @@
+//! Integration: mapping co-search → stage-graph executor, end to end,
+//! hermetically (synthetic stage backend — no artifacts, no PJRT).
+//!
+//! Covers the tentpole acceptance criteria: on a heterogeneous
+//! platform with more processors than exits the co-search finds a
+//! non-identity assignment that costs no more than the identity
+//! chain, and the coordinator serves that same mapping — escalation
+//! follows the assignment, the termination histogram is consistent
+//! with the simulator's termination distribution.
+
+use eenn_na::coordinator::{serve_synthetic, ServeConfig};
+use eenn_na::eenn::EennSolution;
+use eenn_na::graph::BlockGraph;
+use eenn_na::hw::presets;
+use eenn_na::mapping::{co_search, Mapping, MappingObjective};
+use eenn_na::sim::simulate;
+
+fn synth_solution(
+    exits: Vec<usize>,
+    assignment: Vec<usize>,
+    term: Vec<f64>,
+) -> EennSolution {
+    let k = exits.len();
+    EennSolution {
+        model: "synthetic".into(),
+        platform: "test".into(),
+        exits,
+        assignment,
+        thresholds: vec![0.6; k],
+        raw_thresholds: vec![0.6; k],
+        correction_factor: 1.0,
+        heads: vec![],
+        expected_term_rates: term,
+        expected_acc: 0.9,
+        expected_mac_frac: 0.5,
+        score: 0.0,
+    }
+}
+
+#[test]
+fn co_searched_mapping_serves_end_to_end() {
+    // heterogeneous preset: 3 processors, 1 exit => 2 segments
+    let graph = BlockGraph::synthetic_resnet(10, 2);
+    let platform = presets::rk3588_cloud();
+    let exits = vec![2];
+    let term = vec![0.6, 0.4];
+
+    let choice = co_search(
+        &graph,
+        &exits,
+        &platform,
+        &term,
+        f64::INFINITY,
+        &MappingObjective::default(),
+    )
+    .expect("feasible mapping");
+    // more processors than exits: the identity chain leaves the
+    // fastest local core idle and must lose
+    assert!(!choice.mapping.is_chain(), "expected non-identity: {:?}", choice.mapping);
+    assert!(choice.expected_cost <= choice.chain_cost + 1e-12);
+
+    // serve that exact mapping through the executor
+    let sol = synth_solution(exits, choice.mapping.assignment.clone(), term.clone());
+    let cfg = ServeConfig {
+        arrival_rate_hz: 200.0,
+        n_requests: 800,
+        queue_cap: 4096,
+        batch_max: 4,
+        seed: 11,
+    };
+    let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
+    assert_eq!(m.completed + m.dropped, cfg.n_requests);
+    assert_eq!(m.dropped, 0, "roomy queues must not shed");
+    assert_eq!(m.term_hist.len(), 2);
+
+    // termination histogram consistent with the simulator's
+    // termination distribution (iid draws: binomial noise ~1.7%)
+    let frac0 = m.term_hist[0] as f64 / m.completed as f64;
+    assert!((frac0 - term[0]).abs() < 0.08, "terminated {frac0} vs expected {}", term[0]);
+
+    // escalation follows the assignment: every trace walks the
+    // assignment prefix, and only assigned processors were reserved
+    assert_eq!(m.traces.len(), m.completed);
+    for t in &m.traces {
+        assert_eq!(t.procs, sol.assignment[..=t.exit_index].to_vec());
+        assert!(t.sim_latency_s > 0.0);
+    }
+    for (p, &busy) in m.proc_busy_s.iter().enumerate() {
+        if sol.assignment.contains(&p) {
+            assert!(busy > 0.0, "assigned processor {p} never used");
+        } else {
+            assert_eq!(busy, 0.0, "unassigned processor {p} was reserved");
+        }
+    }
+
+    // mean energy matches the analytic per-exit costs it is built from
+    let rep = simulate(&graph, &sol.mapping(), &platform);
+    let lo = rep.stages[0].cum_energy_mj.min(rep.stages[1].cum_energy_mj);
+    let hi = rep.stages[0].cum_energy_mj.max(rep.stages[1].cum_energy_mj);
+    assert!(m.mean_energy_mj >= lo && m.mean_energy_mj <= hi);
+}
+
+#[test]
+fn shared_processor_serializes_both_segments() {
+    let graph = BlockGraph::synthetic_resnet(10, 2);
+    let platform = presets::rk3588_cloud();
+    let mapping = Mapping::with_assignment(vec![2], vec![1, 1]).unwrap();
+    let sol = synth_solution(vec![2], mapping.assignment.clone(), vec![0.5, 0.5]);
+    let cfg = ServeConfig {
+        arrival_rate_hz: 100.0,
+        n_requests: 300,
+        queue_cap: 2048,
+        batch_max: 1,
+        seed: 5,
+    };
+    let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
+    assert_eq!(m.completed + m.dropped, cfg.n_requests);
+    // both segments live on processor 1: all device time there,
+    // none anywhere else
+    assert!(m.proc_busy_s[1] > 0.0);
+    assert_eq!(m.proc_busy_s[0], 0.0);
+    assert_eq!(m.proc_busy_s[2], 0.0);
+    // escalated samples ran two segments on the same processor
+    assert!(m.traces.iter().any(|t| t.procs == vec![1, 1]));
+}
+
+#[test]
+fn identity_chain_still_serves() {
+    let graph = BlockGraph::synthetic_resnet(10, 2);
+    let platform = presets::psoc6();
+    let sol = synth_solution(vec![2], vec![0, 1], vec![0.7, 0.3]);
+    let cfg = ServeConfig {
+        arrival_rate_hz: 20.0,
+        n_requests: 400,
+        queue_cap: 1024,
+        batch_max: 1,
+        seed: 3,
+    };
+    let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
+    assert_eq!(m.completed + m.dropped, cfg.n_requests);
+    let frac0 = m.term_hist[0] as f64 / m.completed as f64;
+    assert!((frac0 - 0.7).abs() < 0.08, "{frac0}");
+    // traces come back ordered by request id, one per completion
+    assert_eq!(m.traces.len(), m.completed);
+    assert!(m.traces.windows(2).all(|w| w[0].id < w[1].id));
+    // synthetic accuracy tracks the solution's expected accuracy
+    assert!((m.quality.accuracy - sol.expected_acc).abs() < 0.08, "{}", m.quality.accuracy);
+}
+
+#[test]
+fn executor_backpressure_sheds_under_overload() {
+    let graph = BlockGraph::synthetic_resnet(10, 2);
+    let platform = presets::psoc6();
+    let sol = synth_solution(vec![2], vec![0, 1], vec![0.3, 0.7]);
+    let cfg = ServeConfig {
+        arrival_rate_hz: 1e6,
+        n_requests: 500,
+        queue_cap: 2,
+        batch_max: 1,
+        seed: 1,
+    };
+    let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
+    assert!(m.dropped > 0, "expected drops under overload");
+    assert_eq!(m.completed + m.dropped, cfg.n_requests);
+}
+
+#[test]
+fn per_stage_micro_batching_preserves_accounting() {
+    let graph = BlockGraph::synthetic_resnet(10, 2);
+    let platform = presets::rk3588_cloud();
+    let sol = synth_solution(vec![2], vec![0, 1], vec![0.5, 0.5]);
+    let run = |batch_max: usize| {
+        let cfg = ServeConfig {
+            arrival_rate_hz: 500.0,
+            n_requests: 600,
+            queue_cap: 4096,
+            batch_max,
+            seed: 9,
+        };
+        serve_synthetic(&graph, &sol, &platform, &cfg).unwrap()
+    };
+    let single = run(1);
+    let batched = run(8);
+    // batching changes scheduling, never conservation
+    assert_eq!(single.completed + single.dropped, 600);
+    assert_eq!(batched.completed + batched.dropped, 600);
+    assert_eq!(batched.traces.len(), batched.completed);
+    // both routes served through the same processors
+    assert!(batched.proc_busy_s[0] > 0.0 && batched.proc_busy_s[1] > 0.0);
+    assert_eq!(batched.proc_busy_s[2], 0.0);
+}

@@ -5,6 +5,7 @@
 
 use eenn_na::graph::BlockGraph;
 use eenn_na::hw::presets;
+use eenn_na::mapping::{co_search, enumerate_assignments, MappingObjective, MAX_ASSIGNMENTS};
 use eenn_na::na::{
     bellman_ford, dijkstra, exhaustive, threshold_grid, Bitset, EdgeModel, ExitMasks,
     ExitProfile, SearchInput,
@@ -152,7 +153,7 @@ fn prop_mapping_segments_cover_all_blocks_once() {
         let nb = g.usize_in(2, 40);
         let k = g.usize_in(0, 4.min(nb - 1));
         let exits = g.subset(nb - 1, k);
-        let m = Mapping { exits: exits.clone() };
+        let m = Mapping::chain(exits.clone());
         let mut covered = vec![false; nb];
         for seg in 0..m.n_segments() {
             let (lo, hi) = m.segment(seg, nb);
@@ -179,7 +180,7 @@ fn prop_sim_worst_case_dominates_every_stage() {
             .into_iter()
             .map(|i| graph.ee_locations[i])
             .collect();
-        let rep = simulate(&graph, &Mapping { exits }, &platform);
+        let rep = simulate(&graph, &Mapping::chain(exits), &platform);
         for st in &rep.stages {
             assert_holds(
                 st.cum_latency_s <= rep.worst_case_s + 1e-12,
@@ -234,6 +235,93 @@ fn prop_bitset_algebra() {
         // ones complement
         let ones = Bitset::ones(n);
         assert_holds(ones.and_count(&a) == a.count(), "ones is identity")
+    });
+}
+
+#[test]
+fn prop_chain_roundtrips_seed_behaviour() {
+    // Mapping::chain must reproduce the seed's implicit identity
+    // mapping exactly: segment i on processor i, same block ranges.
+    check(100, |g| {
+        let nb = g.usize_in(2, 40);
+        let k = g.usize_in(0, 4.min(nb - 1));
+        let exits = g.subset(nb - 1, k);
+        let m = Mapping::chain(exits.clone());
+        assert_holds(m.is_chain(), "chain is identity")?;
+        assert_holds(
+            m.assignment == (0..=exits.len()).collect::<Vec<_>>(),
+            "assignment is 0..=k",
+        )?;
+        for seg in 0..m.n_segments() {
+            assert_holds(m.proc_of(seg) == seg, "segment i on processor i")?;
+            // the seed's segment formula, restated
+            let lo = if seg == 0 { 0 } else { exits[seg - 1] + 1 };
+            let hi = if seg < exits.len() { exits[seg] } else { nb - 1 };
+            assert_holds(m.segment(seg, nb) == (lo, hi), "segment range")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_enumerated_assignments_are_platform_valid() {
+    check(80, |g| {
+        let nseg = g.usize_in(1, 6);
+        let nproc = g.usize_in(1, 5);
+        let asgs = enumerate_assignments(nseg, nproc);
+        let full = (nproc as u64).pow(nseg as u32);
+        if full <= MAX_ASSIGNMENTS as u64 {
+            assert_holds(asgs.len() as u64 == full, "full space enumerated")?;
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for a in &asgs {
+            assert_holds(a.len() == nseg, "one processor per segment")?;
+            assert_holds(a.iter().all(|&p| p < nproc), "processor ids in range")?;
+            assert_holds(seen.insert(a.clone()), "no duplicates")?;
+        }
+        // the identity chain is part of the space whenever it fits
+        if nseg <= nproc {
+            let chain: Vec<usize> = (0..nseg).collect();
+            assert_holds(asgs.contains(&chain), "chain in search space")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_co_search_is_feasible_and_not_worse_than_chain() {
+    check(30, |g| {
+        let n_res = g.usize_in(1, 5);
+        let graph = BlockGraph::synthetic_resnet(10, n_res);
+        let platform = presets::rk3588_cloud();
+        let k = g.usize_in(0, platform.max_classifiers()).min(platform.max_classifiers() - 1);
+        let exits: Vec<usize> = g
+            .subset(graph.ee_locations.len(), k)
+            .into_iter()
+            .map(|i| graph.ee_locations[i])
+            .collect();
+        // random termination distribution over the k+1 classifiers
+        let raw: Vec<f64> = (0..=k).map(|_| g.f64_in(0.05, 1.0)).collect();
+        let total: f64 = raw.iter().sum();
+        let term: Vec<f64> = raw.iter().map(|r| r / total).collect();
+
+        let choice = co_search(
+            &graph,
+            &exits,
+            &platform,
+            &term,
+            f64::INFINITY,
+            &MappingObjective::default(),
+        )
+        .expect("roomy platform must have a feasible mapping");
+        assert_holds(choice.mapping.validate(&platform).is_ok(), "chosen mapping valid")?;
+        assert_holds(
+            choice.expected_cost <= choice.chain_cost + 1e-12,
+            "co-search never loses to the identity chain",
+        )?;
+        // the simulator accepts the chosen mapping
+        let rep = simulate(&graph, &choice.mapping, &platform);
+        assert_holds(rep.memory_ok.iter().all(|&ok| ok), "memory feasible")
     });
 }
 

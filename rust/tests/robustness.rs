@@ -85,6 +85,9 @@ fn undersized_data_blob_is_an_error() {
 
 #[test]
 fn compiling_missing_hlo_is_an_error_not_a_crash() {
+    if cfg!(not(feature = "pjrt")) {
+        return; // stub backend errors on every compile, valid or not
+    }
     let Some(_) = artifacts() else { return };
     let engine = Engine::new().unwrap();
     assert!(engine.compile("/does/not/exist.hlo.txt").is_err());

@@ -8,6 +8,10 @@ use eenn_na::data::load_split;
 use eenn_na::runtime::{Dtype, Engine, HostTensor, Manifest, WeightStore};
 
 fn artifacts() -> Option<Manifest> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the pjrt feature");
+        return None;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: no artifacts");

@@ -9,6 +9,10 @@ use eenn_na::na::{self, FlowConfig};
 use eenn_na::runtime::{Engine, Manifest, WeightStore};
 
 fn setup() -> Option<(Engine, Manifest)> {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!("skipping: built without the pjrt feature");
+        return None;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: no artifacts");

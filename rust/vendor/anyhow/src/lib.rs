@@ -1,0 +1,165 @@
+//! Minimal drop-in replacement for the subset of the `anyhow` crate
+//! this workspace uses: `Error`, `Result`, `anyhow!`, `bail!` and the
+//! `Context` extension trait. The build environment is fully offline,
+//! so the real crate is vendored as this shim instead of being pulled
+//! from a registry.
+//!
+//! Semantics mirror `anyhow` where it matters here:
+//! * `Error` is a cheap opaque error with a context chain, `Send +
+//!   Sync + 'static`, convertible from any `std::error::Error`;
+//! * `{:#}` (and `{:?}`) render the whole context chain, `{}` renders
+//!   the outermost message;
+//! * `Context` attaches a message to the error of a `Result` or turns
+//!   an `Option::None` into an error.
+
+use std::fmt;
+
+/// Opaque error: a stack of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error { chain: vec![msg.into()] }
+    }
+
+    /// Equivalent of `anyhow::Error::msg`.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error::new(msg.to_string())
+    }
+
+    pub fn context(mut self, msg: impl Into<String>) -> Self {
+        self.chain.insert(0, msg.into());
+        self
+    }
+
+    /// Context messages, outermost first (mirrors `anyhow::Chain`).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    fn write_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, msg) in self.chain.iter().enumerate() {
+            if i == 0 {
+                write!(f, "{msg}")?;
+            } else {
+                write!(f, ": {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            self.write_chain(f)
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.write_chain(f)
+    }
+}
+
+// NOTE: like the real `anyhow::Error`, this type deliberately does
+// NOT implement `std::error::Error`; that keeps the blanket `From`
+// below coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (subset of `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.map_err(|e| e.into().context(msg.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, msg: C) -> Result<T> {
+        self.ok_or_else(|| Error::new(msg.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::new(f().to_string()))
+    }
+}
+
+/// `anyhow!("format", args...)` — construct an [`Error`].
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::new(format!($($arg)*))
+    };
+}
+
+/// `bail!("format", args...)` — early-return an `Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_alternate() {
+        let e = anyhow!("inner {}", 7).context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+        assert_eq!(format!("{e:?}"), "outer: inner 7");
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/here")
+                .with_context(|| format!("read {}", "/definitely/not/here"))?;
+            Ok(s)
+        }
+        let e = read().unwrap_err();
+        assert!(format!("{e:#}").starts_with("read /definitely/not/here: "));
+    }
+
+    #[test]
+    fn option_context_and_bail() {
+        fn pick(x: Option<u32>) -> Result<u32> {
+            let v = x.context("missing")?;
+            if v == 0 {
+                bail!("zero not allowed");
+            }
+            Ok(v)
+        }
+        assert_eq!(pick(Some(3)).unwrap(), 3);
+        assert_eq!(format!("{}", pick(None).unwrap_err()), "missing");
+        assert_eq!(format!("{}", pick(Some(0)).unwrap_err()), "zero not allowed");
+    }
+}
