@@ -34,22 +34,10 @@ pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> f6
 }
 
 /// Synthetic calibration profile of an exit whose accuracy grows with
-/// depth: correct samples are more confident. Mirrors the regime the
-/// trained exits show on the real artifacts.
+/// depth: correct samples are more confident. Thin alias for the
+/// library's shared fixture (`ExitProfile::synthetic`).
 pub fn synth_profile(rng: &mut Rng, n: usize, acc: f64) -> ExitProfile {
-    let mut conf = Vec::with_capacity(n);
-    let mut correct = Vec::with_capacity(n);
-    for _ in 0..n {
-        let ok = rng.f64() < acc;
-        let c = if ok {
-            0.45 + 0.55 * rng.f64()
-        } else {
-            0.2 + 0.45 * rng.f64()
-        };
-        conf.push(c.min(0.999) as f32);
-        correct.push(ok);
-    }
-    ExitProfile { location: 0, conf, pred: vec![0; n], correct }
+    ExitProfile::synthetic(rng, n, acc)
 }
 
 /// Depth-indexed profile family for a graph with `n_locs` EE sites:

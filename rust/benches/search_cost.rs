@@ -1,10 +1,10 @@
 //! Regenerates the paper's **§4.3 search-cost experiment** at full
 //! ResNet-152 scale: 74 EE locations on the RK3588+cloud platform
 //! => 2,776 candidate architectures, each with up to 169 threshold
-//! configurations (~450k configurations overall) — searched on one
-//! CPU core, with synthetic calibration profiles standing in for the
-//! trained exits (the exits' *training* cost at this scale is what
-//! the paper extrapolates to 86.75 days of exhaustive search).
+//! configurations (~450k configurations overall), with synthetic
+//! calibration profiles standing in for the trained exits (the exits'
+//! *training* cost at this scale is what the paper extrapolates to
+//! 86.75 days of exhaustive search).
 //!
 //! Reported against the paper's claims:
 //!   * search space:    2,776 architectures / ~450k configurations
@@ -13,30 +13,59 @@
 //!   * exhaustive extrapolation: per-architecture training cost x
 //!     2,776 (paper: 86.75 days)
 //!
-//! Run: `cargo bench --bench search_cost`
+//! Plus the **threads sweep** of the parallel deterministic search
+//! engine: the candidate-scoring stage is re-run at each worker count,
+//! the winner is asserted identical across counts, and the speedups
+//! land in `BENCH_search_cost.json`.
+//!
+//! Run: `cargo bench --bench search_cost [-- --threads 1,2,4] [-- --smoke]`
+//! (`--smoke`: tiny fixture for CI — skips the paper-scale assertions)
 
 mod common;
+
+use std::collections::BTreeMap;
+use std::time::Instant;
 
 use eenn_na::graph::BlockGraph;
 use eenn_na::hw::presets;
 use eenn_na::na::{
-    self, count_search_space, threshold_grid, EdgeModel, ExitMasks, SearchInput, Solver,
+    self, count_search_space, score_candidates, threshold_grid, EdgeModel, ExitMasks,
+    FlowConfig, SearchInput, Solver,
 };
 use eenn_na::sim::{simulate, Mapping};
+use eenn_na::util::cli::Args;
+use eenn_na::util::json::Json;
+use eenn_na::util::threadpool::ThreadPool;
 
 fn main() {
-    let n_cal = 1500; // calibration samples (matches the real splits)
-    let graph = BlockGraph::synthetic_resnet(10, 25); // ResNet-152 shape
+    let args = Args::from_env();
+    let smoke = args.bool("smoke");
+    let mut threads = args.usize_list("threads", &[1, 2, 4]);
+    // sanitize the sweep: no zero-worker runs, and 1 must be present —
+    // every speedup in the JSON is measured against the 1-worker run
+    threads.retain(|&w| w >= 1);
+    if !threads.contains(&1) {
+        threads.insert(0, 1);
+    }
+
+    // ResNet-152 shape at full scale; a 4-per-stage miniature in smoke
+    // mode (CI runners: two cores, seconds not minutes)
+    let (graph, n_cal) = if smoke {
+        (BlockGraph::synthetic_resnet(10, 4), 300)
+    } else {
+        (BlockGraph::synthetic_resnet(10, 25), 1500)
+    };
     let platform = presets::rk3588_cloud();
     let grid = threshold_grid(10);
 
     println!("=== search-cost experiment (ResNet-152-scale cost graph) ===");
     println!(
-        "blocks {} | EE locations {} | platform {} ({} processors)",
+        "blocks {} | EE locations {} | platform {} ({} processors){}",
         graph.blocks.len(),
         graph.ee_locations.len(),
         platform.name,
-        platform.processors.len()
+        platform.processors.len(),
+        if smoke { " | SMOKE fixture" } else { "" }
     );
 
     // --- search-space size (paper: 2,776 / ~450k) ----------------------
@@ -44,7 +73,9 @@ fn main() {
     let n_configs: u64 = n_archs * (grid.len() as u64).pow(2); // upper bound
     println!("architectures: {n_archs} (paper: 2,776)");
     println!("threshold configurations <= {n_configs} (paper: ~450,000)");
-    assert_eq!(n_archs, 2776, "search-space size must match the paper");
+    if !smoke {
+        assert_eq!(n_archs, 2776, "search-space size must match the paper");
+    }
 
     // --- synthetic calibration profiles --------------------------------
     let profiles = common::profile_family(42, graph.ee_locations.len(), n_cal, 0.45, 0.92);
@@ -52,80 +83,69 @@ fn main() {
         profiles.iter().map(|p| ExitMasks::build(p, &grid)).collect();
     let final_prof = common::profile_family(43, 1, n_cal, 0.96, 0.96).remove(0);
     let final_masks = ExitMasks::build(&final_prof, &grid);
+    let masks_map: BTreeMap<usize, ExitMasks> = graph
+        .ee_locations
+        .iter()
+        .copied()
+        .zip(masks.iter().cloned())
+        .collect();
+    let score_cfg = FlowConfig {
+        w_eff: 0.9,
+        w_acc: 0.1,
+        solver: Solver::BellmanFord,
+        edge_model: EdgeModel::Pairwise,
+        workers: 1,
+        ..FlowConfig::default()
+    };
 
-    // --- full enumeration + threshold search ---------------------------
-    let t0 = std::time::Instant::now();
+    // --- full enumeration + threshold search (sequential baseline) -----
+    let t0 = Instant::now();
     let (cands, stats) = na::enumerate(&graph, &platform, f64::INFINITY);
     let enum_s = t0.elapsed().as_secs_f64();
 
-    let total = graph.total_macs() as f64;
-    let t0 = std::time::Instant::now();
-    let mut best: Option<(f64, Vec<usize>)> = None;
-    let mut searched = 0u64;
-    for cand in &cands {
-        let input = SearchInput {
-            exits: cand
-                .exits
-                .iter()
-                .map(|e| {
-                    let idx = graph.ee_locations.iter().position(|l| l == e).unwrap();
-                    &masks[idx]
-                })
-                .collect(),
-            fin: &final_masks,
-            mac_frac: cand
-                .exits
-                .iter()
-                .map(|&e| graph.macs_to_exit(&cand.exits, e) as f64 / total)
-                .collect(),
-            final_mac_frac: 1.0,
-            w_eff: 0.9,
-            w_acc: 0.1,
-            grid: grid.clone(),
-        };
-        let choice = na::solve(&input, Solver::BellmanFord, EdgeModel::Pairwise);
-        let score = input.exact_cost(&choice.indices);
-        searched += (grid.len() as u64).pow(cand.exits.len() as u32);
-        if best.as_ref().map(|(s, _)| score < *s).unwrap_or(true) {
-            best = Some((score, cand.exits.clone()));
-        }
-    }
+    let t0 = Instant::now();
+    let best = score_candidates(
+        &graph, &cands, &[], &masks_map, &final_masks, &grid, &score_cfg, None,
+    )
+    .expect("feasible architecture");
     let search_s = t0.elapsed().as_secs_f64();
-    let (score, exits) = best.unwrap();
 
     println!("\nenumeration + pruning: {enum_s:.2}s ({} kept)", stats.kept);
     println!(
-        "threshold search over {} architectures / {searched} configs: {search_s:.2}s",
-        cands.len()
+        "threshold search over {} architectures / {} configs: {search_s:.2}s",
+        cands.len(),
+        best.evaluated_configs
     );
-    println!("best architecture: exits {exits:?} (score {score:.4})");
+    println!("best architecture: exits {:?} (score {:.4})", best.exits, best.score);
 
     // --- worst-case latency of the winner on the platform ---------------
-    let rep = simulate(&graph, &Mapping::chain(exits.clone()), &platform);
+    let rep = simulate(&graph, &Mapping::chain(best.exits.clone()), &platform);
     println!("winner worst-case latency: {:.2} ms", rep.worst_case_s * 1e3);
 
     // --- the paper's exhaustive-training extrapolation ------------------
     // paper: 540 s per fine-tuning epoch, 5 epochs per architecture,
     // 2,776 architectures => 86.75 days.
-    let per_epoch_s = 540.0;
-    let exhaustive_days = per_epoch_s * 5.0 * n_archs as f64 / 86_400.0;
-    println!(
-        "\nexhaustive per-architecture training extrapolation: {exhaustive_days:.2} days \
-         (paper: 86.75 days)"
-    );
-    // our flow trains each *exit* once instead: 74 exits x (a few s)
-    println!(
-        "NA-flow equivalent: {} exit trainings reused across all {} architectures",
-        graph.ee_locations.len(),
-        n_archs
-    );
-    assert!(
-        (exhaustive_days - 86.75).abs() < 0.1,
-        "extrapolation must reproduce the paper's arithmetic"
-    );
+    if !smoke {
+        let per_epoch_s = 540.0;
+        let exhaustive_days = per_epoch_s * 5.0 * n_archs as f64 / 86_400.0;
+        println!(
+            "\nexhaustive per-architecture training extrapolation: {exhaustive_days:.2} days \
+             (paper: 86.75 days)"
+        );
+        println!(
+            "NA-flow equivalent: {} exit trainings reused across all {} architectures",
+            graph.ee_locations.len(),
+            n_archs
+        );
+        assert!(
+            (exhaustive_days - 86.75).abs() < 0.1,
+            "extrapolation must reproduce the paper's arithmetic"
+        );
+    }
 
     // --- timed micro-benchmark of one architecture's search -------------
     let two_exit = cands.iter().rev().find(|c| c.exits.len() == 2).unwrap();
+    let total = graph.total_macs() as f64;
     let input = SearchInput {
         exits: two_exit
             .exits
@@ -154,4 +174,80 @@ fn main() {
         let c = na::exhaustive(&input);
         std::hint::black_box(c);
     });
+
+    // --- threads sweep: parallel candidate scoring ----------------------
+    println!("\n--- threads sweep (candidate scoring, {} architectures) ---", cands.len());
+    let (warmup, iters) = if smoke { (1, 3) } else { (1, 5) };
+    let mut sweep: Vec<(usize, f64)> = Vec::new();
+    let mut baseline_1: Option<f64> = None;
+    let mut winner_ref: Option<usize> = None;
+    for &w in &threads {
+        let pool = if w > 1 { Some(ThreadPool::new(w)) } else { None };
+        let mut winner: Option<usize> = None;
+        let mean = common::bench(
+            &format!("candidate scoring ({w} workers)"),
+            warmup,
+            iters,
+            || {
+                let b = score_candidates(
+                    &graph,
+                    &cands,
+                    &[],
+                    &masks_map,
+                    &final_masks,
+                    &grid,
+                    &score_cfg,
+                    pool.as_ref(),
+                )
+                .expect("feasible architecture");
+                winner = Some(b.index);
+                std::hint::black_box(&winner);
+            },
+        );
+        // the winner must be identical at every worker count
+        match winner_ref {
+            None => winner_ref = winner,
+            Some(i) => assert_eq!(
+                Some(i),
+                winner,
+                "parallel scoring must be deterministic across worker counts"
+            ),
+        }
+        if w == 1 {
+            baseline_1 = Some(mean);
+        }
+        sweep.push((w, mean));
+    }
+    if let Some(b1) = baseline_1 {
+        for &(w, m) in &sweep {
+            println!("workers {w:>2}: {:>8.1} ms  speedup {:.2}x", m * 1e3, b1 / m);
+        }
+    }
+
+    // --- BENCH_search_cost.json -----------------------------------------
+    let mut results = BTreeMap::new();
+    for &(w, m) in &sweep {
+        let mut e = BTreeMap::new();
+        e.insert("seconds".to_string(), Json::Num(m));
+        if let Some(b1) = baseline_1 {
+            e.insert("speedup_vs_1".to_string(), Json::Num(b1 / m));
+        }
+        results.insert(format!("workers_{w:02}"), Json::Obj(e));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("search_cost".to_string()));
+    top.insert(
+        "fixture".to_string(),
+        Json::Str(if smoke { "smoke" } else { "resnet152" }.to_string()),
+    );
+    top.insert("architectures".to_string(), Json::Num(cands.len() as f64));
+    top.insert(
+        "evaluated_configs".to_string(),
+        Json::Num(best.evaluated_configs as f64),
+    );
+    top.insert("scoring_seconds_1_worker".to_string(), Json::Num(search_s));
+    top.insert("threads_sweep".to_string(), Json::Obj(results));
+    let path = "BENCH_search_cost.json";
+    std::fs::write(path, Json::Obj(top).to_string()).expect("write bench json");
+    println!("\nwrote {path}");
 }

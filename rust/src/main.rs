@@ -48,6 +48,8 @@ fn run() -> Result<()> {
                  repro augment --model dscnn [--calibration val|train --factor 1.0]\n\
                  \x20             [--w-eff 0.9 --w-acc 0.1 --latency 2.5]\n\
                  \x20             [--solver bf|dijkstra|exhaustive] [--out sol.json]\n\
+                 \x20             [--workers N]   (search parallelism; default: all cores,\n\
+                 \x20                              1 = sequential, same result either way)\n\
                  repro eval    --model dscnn --solution sol.json\n\
                  repro serve   --model dscnn --solution sol.json [--rate 10 --n 200]\n\
                  repro report  table2|fig4 [--model NAME]"
@@ -98,6 +100,7 @@ fn flow_config(args: &Args, task: &str) -> FlowConfig {
         edge_model,
         refine: !args.bool("no-refine"),
         finetune_epochs: args.usize("finetune", 0),
+        workers: args.usize("workers", na::default_workers()),
         verbose: args.bool("verbose"),
         ..FlowConfig::default()
     }
@@ -118,12 +121,13 @@ fn augment(args: &Args) -> Result<()> {
         out.solution.exits, out.solution.assignment, out.solution.thresholds, out.solution.score
     );
     println!(
-        "search: {:.1}s total ({:.1}s features, {:.1}s exit training, {:.2}s thresholds); \
-         {} candidates, {} configs covered, {} mappings",
+        "search: {:.1}s total ({:.1}s features, {:.1}s exit training, {:.2}s thresholds, \
+         {} workers); {} candidates, {} configs covered, {} mappings",
         out.report.total_s,
         out.report.feature_cache_s,
         out.report.exit_training_s,
         out.report.threshold_search_s,
+        out.report.workers,
         out.report.prune.kept,
         out.report.evaluated_configs,
         out.report.mapping_candidates

@@ -31,11 +31,14 @@
 //! [`MAX_ASSIGNMENTS`] the space is restricted to pipeline-ordered
 //! (non-decreasing) assignments as a tractable fallback.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::graph::BlockGraph;
 use crate::hw::Platform;
 use crate::sim::{simulate, SimReport};
+use crate::util::threadpool::ThreadPool;
 
 /// Index into `Platform::processors`.
 pub type ProcId = usize;
@@ -194,21 +197,53 @@ struct AssignmentSweep {
     evaluated: usize,
 }
 
+/// The per-assignment unit of work, shared verbatim by the pooled and
+/// inline arms of [`feasible_assignments`].
+fn simulate_assignment(
+    graph: &BlockGraph,
+    exits: &[usize],
+    platform: &Platform,
+    assignment: Vec<ProcId>,
+) -> (Mapping, SimReport) {
+    let mapping = Mapping { exits: exits.to_vec(), assignment };
+    let report = simulate(graph, &mapping, platform);
+    (mapping, report)
+}
+
 fn feasible_assignments(
     graph: &BlockGraph,
     exits: &[usize],
     platform: &Platform,
     latency_constraint_s: f64,
+    pool: Option<&ThreadPool>,
 ) -> AssignmentSweep {
     let nseg = exits.len() + 1;
     let nproc = platform.processors.len();
+    let assignments = enumerate_assignments(nseg, nproc);
+    let evaluated = assignments.len();
+    // per-assignment simulation fans out over the pool; both arms run
+    // the same `simulate_assignment` body in enumeration order, so the
+    // feasible list (and every downstream tie-break) is identical for
+    // any worker count. The Arc clone of graph/platform is only paid
+    // when the pool is actually used — this sits in the enumeration
+    // hot loop (one call per candidate subset), where the inline path
+    // must stay allocation-free.
+    let reports: Vec<(Mapping, SimReport)> = match pool {
+        Some(pool) if assignments.len() > 1 => {
+            let ctx = Arc::new((graph.clone(), exits.to_vec(), platform.clone()));
+            pool.map(assignments, move |assignment| {
+                let (graph, exits, platform) = &*ctx;
+                simulate_assignment(graph, exits, platform, assignment)
+            })
+        }
+        _ => assignments
+            .into_iter()
+            .map(|assignment| simulate_assignment(graph, exits, platform, assignment))
+            .collect(),
+    };
     let mut feasible = Vec::new();
     let mut any_memory_ok = false;
-    let mut evaluated = 0usize;
-    for assignment in enumerate_assignments(nseg, nproc) {
-        let mapping = Mapping { exits: exits.to_vec(), assignment };
-        let report = simulate(graph, &mapping, platform);
-        evaluated += 1;
+    for (mapping, report) in reports {
         let memory_ok = report.memory_ok.iter().all(|&ok| ok);
         any_memory_ok |= memory_ok;
         if memory_ok && report.worst_case_s <= latency_constraint_s {
@@ -248,8 +283,21 @@ pub fn sweep_assignments(
     platform: &Platform,
     latency_constraint_s: f64,
 ) -> FeasibilitySweep {
+    sweep_assignments_with(graph, exits, platform, latency_constraint_s, None)
+}
+
+/// [`sweep_assignments`] with the per-assignment simulations fanned
+/// out over `pool`. Deterministic: identical result for any worker
+/// count.
+pub fn sweep_assignments_with(
+    graph: &BlockGraph,
+    exits: &[usize],
+    platform: &Platform,
+    latency_constraint_s: f64,
+    pool: Option<&ThreadPool>,
+) -> FeasibilitySweep {
     let AssignmentSweep { mut feasible, any_memory_ok, evaluated } =
-        feasible_assignments(graph, exits, platform, latency_constraint_s);
+        feasible_assignments(graph, exits, platform, latency_constraint_s, pool);
     let best_idx = select_best(&feasible, |r| r.worst_case_s);
     let best = best_idx.map(|i| feasible.swap_remove(i));
     FeasibilitySweep { best, any_memory_ok, evaluated }
@@ -295,10 +343,28 @@ pub fn co_search(
     latency_constraint_s: f64,
     obj: &MappingObjective,
 ) -> Option<MappingChoice> {
+    co_search_with(graph, exits, platform, term, latency_constraint_s, obj, None)
+}
+
+/// [`co_search`] with the per-assignment simulator scoring fanned out
+/// over `pool`. The feasible set keeps enumeration order and the
+/// argmin tie-breaks on the identity chain exactly as in the
+/// sequential path, so the chosen mapping is identical for any worker
+/// count.
+#[allow(clippy::too_many_arguments)]
+pub fn co_search_with(
+    graph: &BlockGraph,
+    exits: &[usize],
+    platform: &Platform,
+    term: &[f64],
+    latency_constraint_s: f64,
+    obj: &MappingObjective,
+    pool: Option<&ThreadPool>,
+) -> Option<MappingChoice> {
     let nseg = exits.len() + 1;
     assert_eq!(term.len(), nseg, "termination distribution must have one mass per segment");
 
-    let sweep = feasible_assignments(graph, exits, platform, latency_constraint_s);
+    let sweep = feasible_assignments(graph, exits, platform, latency_constraint_s, pool);
     if sweep.feasible.is_empty() {
         return None;
     }
@@ -414,6 +480,37 @@ mod tests {
                 choice.chain_cost
             );
             choice.mapping.validate(&p).unwrap();
+        }
+    }
+
+    #[test]
+    fn parallel_co_search_matches_sequential() {
+        let g = BlockGraph::synthetic_resnet(10, 3);
+        let p = presets::rk3588_cloud();
+        let pool = ThreadPool::new(4);
+        for exits in [vec![], vec![2], vec![1, 4]] {
+            let term = match exits.len() {
+                0 => vec![1.0],
+                1 => vec![0.6, 0.4],
+                _ => vec![0.5, 0.3, 0.2],
+            };
+            let seq =
+                co_search(&g, &exits, &p, &term, f64::INFINITY, &MappingObjective::default())
+                    .expect("feasible");
+            let par = co_search_with(
+                &g,
+                &exits,
+                &p,
+                &term,
+                f64::INFINITY,
+                &MappingObjective::default(),
+                Some(&pool),
+            )
+            .expect("feasible");
+            assert_eq!(seq.mapping, par.mapping, "{exits:?}");
+            assert_eq!(seq.evaluated, par.evaluated);
+            assert!(seq.expected_cost.to_bits() == par.expected_cost.to_bits());
+            assert!(seq.chain_cost.to_bits() == par.chain_cost.to_bits());
         }
     }
 

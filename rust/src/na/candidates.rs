@@ -8,9 +8,12 @@
 //! co-search (termination-distribution-weighted) refines it once the
 //! decision mechanism is configured.
 
+use std::sync::Arc;
+
 use crate::graph::BlockGraph;
 use crate::hw::Platform;
 use crate::mapping::{sweep_assignments, Mapping};
+use crate::util::threadpool::{map_maybe, ThreadPool};
 
 #[derive(Debug, Clone)]
 pub struct Candidate {
@@ -60,25 +63,53 @@ fn for_each_subset(locations: &[usize], max_ee: usize, mut f: impl FnMut(&[usize
     rec(locations, 0, max_ee.min(n), &mut stack, &mut f);
 }
 
-/// Generate + prune the candidate set.
+/// Generate + prune the candidate set (sequential).
 pub fn enumerate(
     graph: &BlockGraph,
     platform: &Platform,
     latency_constraint_s: f64,
 ) -> (Vec<Candidate>, PruneStats) {
+    enumerate_with(graph, platform, latency_constraint_s, None)
+}
+
+/// Generate + prune the candidate set, fanning the per-subset
+/// feasibility sweeps out over `pool` when given. Subsets are swept in
+/// deterministic, order-preserved shards, so candidates, their chosen
+/// mappings and every `PruneStats` counter are identical to the
+/// sequential path for any worker count.
+pub fn enumerate_with(
+    graph: &BlockGraph,
+    platform: &Platform,
+    latency_constraint_s: f64,
+    pool: Option<&ThreadPool>,
+) -> (Vec<Candidate>, PruneStats) {
     let max_ee = platform.max_classifiers().saturating_sub(1);
+    let mut subsets: Vec<Vec<usize>> = Vec::new();
+    for_each_subset(&graph.ee_locations, max_ee, |exits| subsets.push(exits.to_vec()));
+
+    // (exit subset, best feasible mapping, any assignment fit memory,
+    // assignments simulated) — each job returns its subset so nothing
+    // needs cloning up front; map_maybe runs the one closure on the
+    // pool or inline, order-preserved either way
+    type Outcome = (Vec<usize>, Option<Mapping>, bool, usize);
+    let ctx = Arc::new((graph.clone(), platform.clone(), latency_constraint_s));
+    let outcomes: Vec<Outcome> = map_maybe(pool, subsets, move |exits| {
+        let (graph, platform, latency) = &*ctx;
+        let sweep = sweep_assignments(graph, &exits, platform, *latency);
+        (exits, sweep.best.map(|(m, _)| m), sweep.any_memory_ok, sweep.evaluated)
+    });
+
     let mut stats = PruneStats::default();
     let mut kept = Vec::new();
-    for_each_subset(&graph.ee_locations, max_ee, |exits| {
+    for (exits, best, any_memory_ok, evaluated) in outcomes {
         stats.generated += 1;
-        let sweep = sweep_assignments(graph, exits, platform, latency_constraint_s);
-        stats.assignments_evaluated += sweep.evaluated as u64;
-        match sweep.best {
-            Some((mapping, _)) => kept.push(Candidate { exits: exits.to_vec(), mapping }),
-            None if sweep.any_memory_ok => stats.latency_pruned += 1,
+        stats.assignments_evaluated += evaluated as u64;
+        match best {
+            Some(mapping) => kept.push(Candidate { exits, mapping }),
+            None if any_memory_ok => stats.latency_pruned += 1,
             None => stats.memory_pruned += 1,
         }
-    });
+    }
     stats.kept = kept.len();
     (kept, stats)
 }
@@ -156,6 +187,25 @@ mod tests {
         for c in &cands {
             assert!(c.exits.windows(2).all(|w| w[0] < w[1]), "{:?}", c.exits);
         }
+    }
+
+    #[test]
+    fn parallel_enumeration_matches_sequential() {
+        let g = BlockGraph::synthetic_resnet(10, 3);
+        let p = presets::rk3588_cloud();
+        let (seq, seq_stats) = enumerate(&g, &p, 0.5);
+        let pool = ThreadPool::new(4);
+        let (par, par_stats) = enumerate_with(&g, &p, 0.5, Some(&pool));
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.exits, b.exits);
+            assert_eq!(a.mapping, b.mapping);
+        }
+        assert_eq!(seq_stats.generated, par_stats.generated);
+        assert_eq!(seq_stats.kept, par_stats.kept);
+        assert_eq!(seq_stats.latency_pruned, par_stats.latency_pruned);
+        assert_eq!(seq_stats.memory_pruned, par_stats.memory_pruned);
+        assert_eq!(seq_stats.assignments_evaluated, par_stats.assignments_evaluated);
     }
 
     #[test]

@@ -12,12 +12,15 @@ pub mod profile;
 pub mod threshold;
 pub mod trainer;
 
-pub use candidates::{count_search_space, enumerate, Candidate, PruneStats};
+pub use candidates::{count_search_space, enumerate, enumerate_with, Candidate, PruneStats};
 pub use features::{FeatureCache, FINAL_LOC};
-pub use flow::{augment, AugmentOutcome, Calibration, FlowConfig, SearchReport};
+pub use flow::{
+    augment, augment_prepared, default_workers, score_candidates, AugmentOutcome,
+    Calibration, ExitBank, ExitRefresher, FlowConfig, ScoredBest, SearchReport,
+};
 pub use profile::{threshold_grid, Bitset, ExitMasks, ExitProfile, GRID_POINTS};
 pub use threshold::{
-    bellman_ford, dijkstra, exhaustive, solve, CascadeMetrics, Choice, EdgeModel,
-    SearchInput, Solver,
+    bellman_ford, dijkstra, exact_cost_cached, exhaustive, solve, CascadeMetrics, Choice,
+    EdgeModel, PrefixCache, ReplayState, SearchInput, Solver,
 };
 pub use trainer::{profile_exit, train_exit, TrainedExit, TrainerConfig};

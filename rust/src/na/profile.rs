@@ -113,6 +113,23 @@ pub struct ExitProfile {
 }
 
 impl ExitProfile {
+    /// Seeded synthetic calibration profile: correct predictions draw
+    /// higher confidence than wrong ones — the regime trained exits
+    /// show on the real artifacts. The one shared fixture behind the
+    /// hermetic search tests and the paper-scale benches, so they all
+    /// exercise the same confidence model.
+    pub fn synthetic(rng: &mut crate::util::rng::Rng, n: usize, acc: f64) -> ExitProfile {
+        let mut conf = Vec::with_capacity(n);
+        let mut correct = Vec::with_capacity(n);
+        for _ in 0..n {
+            let ok = rng.f64() < acc;
+            let c = if ok { 0.45 + 0.55 * rng.f64() } else { 0.2 + 0.45 * rng.f64() };
+            conf.push(c.min(0.999) as f32);
+            correct.push(ok);
+        }
+        ExitProfile { location: 0, conf, pred: vec![0; n], correct }
+    }
+
     pub fn accuracy(&self) -> f64 {
         if self.correct.is_empty() {
             return 0.0;

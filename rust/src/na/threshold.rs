@@ -28,7 +28,9 @@
 //! enumeration over the full 13^k configuration space as the
 //! optimality oracle.
 
-use super::profile::ExitMasks;
+use std::collections::HashMap;
+
+use super::profile::{Bitset, ExitMasks};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EdgeModel {
@@ -81,29 +83,60 @@ pub struct CascadeMetrics {
     pub expected_mac_frac: f64,
 }
 
+/// Cascade replay state after a prefix of the early exits: the set of
+/// samples still in flight plus the scalar cost accrued so far. The
+/// single source of truth for exact replay — [`SearchInput::exact_cost`],
+/// the exhaustive solver and the [`PrefixCache`] all advance it through
+/// the same [`SearchInput::step`]/[`SearchInput::finish`] arithmetic,
+/// so cached and recomputed costs are bit-identical by construction.
+#[derive(Debug, Clone)]
+pub struct ReplayState {
+    remaining: Bitset,
+    cost: f64,
+}
+
 impl<'a> SearchInput<'a> {
     fn n(&self) -> usize {
         self.fin.n
     }
 
+    /// Replay state before any exit has been applied.
+    pub fn initial_state(&self) -> ReplayState {
+        ReplayState { remaining: Bitset::ones(self.n()), cost: 0.0 }
+    }
+
+    /// Advance the replay past exit `i` at threshold index `j`.
+    pub fn step(&self, st: &ReplayState, i: usize, j: usize) -> ReplayState {
+        let n = self.n() as f64;
+        let masks = self.exits[i];
+        let ge = &masks.ge[j];
+        let term = st.remaining.and_count(ge) as f64;
+        let wrong = masks.err.and3_count(&st.remaining, ge) as f64;
+        let mut remaining = st.remaining.clone();
+        remaining.andnot_assign(ge);
+        ReplayState {
+            remaining,
+            cost: st.cost
+                + (self.w_eff * self.mac_frac[i] * term / n + self.w_acc * wrong / n),
+        }
+    }
+
+    /// Terminate the replay at the final classifier.
+    pub fn finish(&self, st: &ReplayState) -> f64 {
+        let n = self.n() as f64;
+        let term = st.remaining.count() as f64;
+        let wrong = st.remaining.and_count(&self.fin.err) as f64;
+        st.cost + (self.w_eff * self.final_mac_frac * term / n + self.w_acc * wrong / n)
+    }
+
     /// Exact expected scalar cost of a threshold vector: replay the
     /// calibration set through the cascade with bitset chaining.
     pub fn exact_cost(&self, indices: &[usize]) -> f64 {
-        let n = self.n() as f64;
-        let mut remaining = super::profile::Bitset::ones(self.n());
-        let mut cost = 0.0;
-        for (i, masks) in self.exits.iter().enumerate() {
-            let ge = &masks.ge[indices[i]];
-            let term = remaining.and_count(ge) as f64;
-            let wrong = masks.err.and3_count(&remaining, ge);
-            cost += self.w_eff * self.mac_frac[i] * term / n
-                + self.w_acc * wrong as f64 / n;
-            remaining.andnot_assign(ge);
+        let mut st = self.initial_state();
+        for (i, &j) in indices.iter().enumerate() {
+            st = self.step(&st, i, j);
         }
-        let term = remaining.count() as f64;
-        let wrong = remaining.and_count(&self.fin.err) as f64;
-        cost += self.w_eff * self.final_mac_frac * term / n + self.w_acc * wrong / n;
-        cost
+        self.finish(&st)
     }
 
     /// Replay metrics for reporting.
@@ -334,41 +367,136 @@ pub fn dijkstra(input: &SearchInput, model: EdgeModel) -> Choice {
 
 /// Optimality oracle: enumerate all grid^k combinations and score each
 /// by **exact replay**.
+///
+/// Combinations are visited in lexicographic order (last exit's index
+/// fastest) so consecutive combinations share the longest possible
+/// cascade prefix, and the replay resumes from a stack of memoized
+/// prefix states instead of restarting from sample zero — the in-place
+/// flavour of the [`PrefixCache`] idea. Ties keep the first optimum
+/// found, i.e. the **lexicographically smallest** index vector (the
+/// canonical deterministic tie-break).
 pub fn exhaustive(input: &SearchInput) -> Choice {
     let k = input.exits.len();
     let g = input.grid.len();
-    let mut best = Choice {
-        indices: vec![0; k],
-        thresholds: vec![input.grid.first().copied().unwrap_or(0.0); k],
-        cost: f64::INFINITY,
-    };
     let mut idx = vec![0usize; k];
+    // states[d] = replay state after the first d exits at idx[..d]
+    let mut states: Vec<ReplayState> = Vec::with_capacity(k + 1);
+    states.push(input.initial_state());
+    if k == 0 {
+        let cost = input.finish(&states[0]);
+        return Choice { indices: Vec::new(), thresholds: Vec::new(), cost };
+    }
+    let mut best_cost = f64::INFINITY;
+    let mut best_idx = vec![0usize; k];
     loop {
-        let cost = input.exact_cost(&idx);
-        if cost < best.cost {
-            best = Choice {
-                indices: idx.clone(),
-                thresholds: idx.iter().map(|&j| input.grid[j]).collect(),
-                cost,
-            };
+        while states.len() <= k {
+            let d = states.len() - 1;
+            let next = input.step(&states[d], d, idx[d]);
+            states.push(next);
         }
-        // increment odometer
-        let mut i = 0;
+        let cost = input.finish(&states[k]);
+        if cost < best_cost {
+            best_cost = cost;
+            best_idx.copy_from_slice(&idx);
+        }
+        // lexicographic odometer, last position fastest; invalidate
+        // memoized states past the bumped position
+        let mut p = k;
         loop {
-            if i == k {
-                return best;
+            if p == 0 {
+                return Choice {
+                    thresholds: best_idx.iter().map(|&j| input.grid[j]).collect(),
+                    indices: best_idx,
+                    cost: best_cost,
+                };
             }
-            idx[i] += 1;
-            if idx[i] < g {
+            p -= 1;
+            idx[p] += 1;
+            states.truncate(p + 1);
+            if idx[p] < g {
                 break;
             }
-            idx[i] = 0;
-            i += 1;
-        }
-        if k == 0 {
-            return best;
+            idx[p] = 0;
         }
     }
+}
+
+/// Memoized cascade-replay cache keyed on the exit **prefix**: the
+/// `(exit location, threshold index)` pairs of the leading cascade
+/// stages. Architectures that share a cascade prefix — e.g. `[3]` and
+/// `[3, 7]` scored at the same threshold index for exit 3 — resume the
+/// replay from the cached [`ReplayState`] instead of recomputing it.
+/// Cached resumption is bit-identical to a cold replay (same
+/// [`SearchInput::step`] arithmetic in the same association order), so
+/// results never depend on the hit pattern — a shard under any worker
+/// count computes the same scores.
+///
+/// Validity: entries are only meaningful while the masks, grid,
+/// scalarization weights and per-prefix MAC fractions are fixed, so
+/// use one cache per search pass (the flow keeps one per scoring
+/// shard) and drop it when the grid changes.
+#[derive(Debug, Default)]
+pub struct PrefixCache {
+    map: HashMap<Vec<(usize, usize)>, ReplayState>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl PrefixCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Exact replay cost of `indices` for the architecture whose exit
+/// locations are `locs`, resuming from the longest cached cascade
+/// prefix and memoizing every prefix computed on the way.
+/// Bit-identical to [`SearchInput::exact_cost`].
+pub fn exact_cost_cached(
+    input: &SearchInput,
+    locs: &[usize],
+    indices: &[usize],
+    cache: &mut PrefixCache,
+) -> f64 {
+    let k = indices.len();
+    debug_assert_eq!(locs.len(), k, "one location per early exit");
+    let mut start = 0usize;
+    let mut st: Option<ReplayState> = None;
+    for d in (1..=k).rev() {
+        let key: Vec<(usize, usize)> = locs[..d]
+            .iter()
+            .copied()
+            .zip(indices[..d].iter().copied())
+            .collect();
+        if let Some(s) = cache.map.get(&key) {
+            st = Some(s.clone());
+            start = d;
+            cache.hits += 1;
+            break;
+        }
+    }
+    if st.is_none() {
+        cache.misses += 1;
+    }
+    let mut st = st.unwrap_or_else(|| input.initial_state());
+    for d in start..k {
+        st = input.step(&st, d, indices[d]);
+        let key: Vec<(usize, usize)> = locs[..=d]
+            .iter()
+            .copied()
+            .zip(indices[..=d].iter().copied())
+            .collect();
+        cache.map.insert(key, st.clone());
+    }
+    input.finish(&st)
 }
 
 pub fn solve(input: &SearchInput, solver: Solver, model: EdgeModel) -> Choice {
@@ -495,6 +623,76 @@ mod tests {
         assert!((total - 1.0).abs() < 1e-12);
         assert!(m.expected_acc > 0.5 && m.expected_acc <= 1.0);
         assert!(m.expected_mac_frac <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn cached_replay_is_bit_identical_to_uncached() {
+        let mut rng = Rng::seeded(21);
+        let grid = threshold_grid(10);
+        let n = 350;
+        let p1 = synth_profile(&mut rng, n, 0.7, 0.55);
+        let p2 = synth_profile(&mut rng, n, 0.88, 0.58);
+        let pf = synth_profile(&mut rng, n, 0.96, 0.6);
+        let m1 = ExitMasks::build(&p1, &grid);
+        let m2 = ExitMasks::build(&p2, &grid);
+        let mf = ExitMasks::build(&pf, &grid);
+        let input = build_input(vec![&m1, &m2], &mf, &grid);
+        let locs = [3usize, 7];
+
+        let mut cache = PrefixCache::new();
+        for a in 0..grid.len() {
+            for b in 0..grid.len() {
+                let plain = input.exact_cost(&[a, b]);
+                let cached = exact_cost_cached(&input, &locs, &[a, b], &mut cache);
+                assert!(
+                    plain.to_bits() == cached.to_bits(),
+                    "cached replay diverged at [{a},{b}]: {plain} vs {cached}"
+                );
+            }
+        }
+        // every (a, b) pair shares the depth-1 prefix with its
+        // predecessor in the scan: the cache must actually hit
+        assert!(cache.hits > 0, "prefix cache never hit");
+        assert!(cache.len() > 0);
+        // second scan resolves every prefix from cache
+        let before = cache.misses;
+        for a in 0..grid.len() {
+            let _ = exact_cost_cached(&input, &locs, &[a, 0], &mut cache);
+        }
+        assert_eq!(cache.misses, before, "warm cache must not miss");
+    }
+
+    #[test]
+    fn exhaustive_matches_brute_force_replay_argmin() {
+        let mut rng = Rng::seeded(31);
+        let grid = threshold_grid(10);
+        let n = 300;
+        let p1 = synth_profile(&mut rng, n, 0.65, 0.5);
+        let p2 = synth_profile(&mut rng, n, 0.85, 0.55);
+        let pf = synth_profile(&mut rng, n, 0.97, 0.6);
+        let m1 = ExitMasks::build(&p1, &grid);
+        let m2 = ExitMasks::build(&p2, &grid);
+        let mf = ExitMasks::build(&pf, &grid);
+        let input = build_input(vec![&m1, &m2], &mf, &grid);
+
+        let ex = exhaustive(&input);
+        // brute force in lexicographic order with first-wins ties —
+        // the incremental oracle must agree exactly
+        let mut best = (f64::INFINITY, vec![0usize, 0]);
+        for a in 0..grid.len() {
+            for b in 0..grid.len() {
+                let c = input.exact_cost(&[a, b]);
+                if c < best.0 {
+                    best = (c, vec![a, b]);
+                }
+            }
+        }
+        assert_eq!(ex.indices, best.1);
+        assert!(ex.cost.to_bits() == best.0.to_bits(), "{} vs {}", ex.cost, best.0);
+        assert_eq!(
+            ex.thresholds,
+            best.1.iter().map(|&j| grid[j]).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -65,6 +65,29 @@ impl Args {
     pub fn bool(&self, key: &str) -> bool {
         matches!(self.flags.get(key).map(|s| s.as_str()), Some("true" | "1" | "yes"))
     }
+
+    /// Comma-separated usize list, e.g. `--threads 1,2,4`. Falls back
+    /// to `default` when the flag is missing or **any** entry fails to
+    /// parse (all-or-nothing, so a typo cannot silently drop entries).
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.flags.get(key) {
+            Some(v) => {
+                let parts: Vec<&str> = v
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|s| !s.is_empty())
+                    .collect();
+                let parsed: Vec<usize> =
+                    parts.iter().filter_map(|s| s.parse().ok()).collect();
+                if parts.is_empty() || parsed.len() != parts.len() {
+                    default.to_vec()
+                } else {
+                    parsed
+                }
+            }
+            None => default.to_vec(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -91,6 +114,16 @@ mod tests {
         assert_eq!(a.str("missing", "dflt"), "dflt");
         assert_eq!(a.usize("missing", 7), 7);
         assert!(!a.bool("missing"));
+    }
+
+    #[test]
+    fn usize_lists() {
+        let a = parse("bench --threads 1,2,4 --bad x,y --typo 1,2x,4");
+        assert_eq!(a.usize_list("threads", &[8]), vec![1, 2, 4]);
+        assert_eq!(a.usize_list("missing", &[8, 16]), vec![8, 16]);
+        assert_eq!(a.usize_list("bad", &[3]), vec![3]);
+        // one bad entry rejects the whole list, never a silent subset
+        assert_eq!(a.usize_list("typo", &[7]), vec![7]);
     }
 
     #[test]

@@ -1,7 +1,16 @@
 //! Small fixed-size thread pool (no tokio/rayon in the offline vendor
-//! set). Used by the coordinator's device workers and by parallel
-//! sections of the search.
+//! set). Used by the coordinator's device workers and by the parallel
+//! sections of the search engine (exit training fan-out, architecture
+//! scoring shards, mapping co-search).
+//!
+//! Panic policy: a panicking job never poisons the pool. Worker
+//! threads contain job panics and keep serving the queue; [`ThreadPool::map`]
+//! collects every job's outcome and — only after all jobs have
+//! finished — re-raises the panic of the lowest-indexed failing item,
+//! so panic propagation is deterministic and the pool stays usable.
 
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -11,6 +20,7 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
 }
 
 impl ThreadPool {
@@ -26,14 +36,23 @@ impl ThreadPool {
                     .spawn(move || loop {
                         let job = rx.lock().unwrap().recv();
                         match job {
-                            Ok(job) => job(),
+                            // Contain job panics: the worker survives
+                            // and `map` re-raises on the calling side.
+                            Ok(job) => {
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                            }
                             Err(_) => break,
                         }
                     })
                     .expect("spawn pool worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers }
+        ThreadPool { tx: Some(tx), workers, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
     }
 
     pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
@@ -44,28 +63,68 @@ impl ThreadPool {
             .expect("pool receiver gone");
     }
 
-    /// Map `f` over items in parallel, preserving order.
+    /// Map `f` over items in parallel, preserving input order.
+    ///
+    /// Every job runs to completion before this returns. If any job
+    /// panicked, the panic payload of the **lowest item index** is
+    /// re-raised here (deterministic regardless of thread timing); the
+    /// pool itself remains fully usable afterwards.
     pub fn map<T, R>(&self, items: Vec<T>, f: impl Fn(T) -> R + Send + Sync + 'static) -> Vec<R>
     where
         T: Send + 'static,
         R: Send + 'static,
     {
         let f = Arc::new(f);
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = mpsc::channel::<(usize, thread::Result<R>)>();
         let n = items.len();
         for (i, item) in items.into_iter().enumerate() {
             let f = Arc::clone(&f);
             let tx = tx.clone();
             self.execute(move || {
-                let _ = tx.send((i, f(item)));
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
+                let _ = tx.send((i, r));
             });
         }
         drop(tx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut first_panic: Option<(usize, Box<dyn Any + Send>)> = None;
         for (i, r) in rx {
-            out[i] = Some(r);
+            match r {
+                Ok(v) => out[i] = Some(v),
+                Err(p) => {
+                    if first_panic.as_ref().map(|(pi, _)| i < *pi).unwrap_or(true) {
+                        first_panic = Some((i, p));
+                    }
+                }
+            }
         }
-        out.into_iter().map(|o| o.expect("worker panicked")).collect()
+        if let Some((_, p)) = first_panic {
+            resume_unwind(p);
+        }
+        out.into_iter()
+            .map(|o| o.expect("pool job dropped without reporting"))
+            .collect()
+    }
+}
+
+/// Run `f` over `items` — on the pool (parallel, order-preserving)
+/// when one is given and there is more than one item, inline on the
+/// calling thread otherwise. Both paths execute the **same** closure,
+/// so a sequential (`workers = 1`) run can never diverge from the
+/// parallel one — the bit-identity guarantee of the search engine
+/// rests on every fan-out site going through here.
+pub fn map_maybe<T, R>(
+    pool: Option<&ThreadPool>,
+    items: Vec<T>,
+    f: impl Fn(T) -> R + Send + Sync + 'static,
+) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+{
+    match pool {
+        Some(pool) if items.len() > 1 => pool.map(items, f),
+        _ => items.into_iter().map(f).collect(),
     }
 }
 
@@ -102,5 +161,89 @@ mod tests {
         let pool = ThreadPool::new(3);
         let out = pool.map((0..50).collect(), |x: usize| x * x);
         assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_stress_many_more_jobs_than_workers() {
+        let pool = ThreadPool::new(3);
+        let n = 5000usize;
+        let out = pool.map((0..n).collect(), |x: usize| x.wrapping_mul(2654435761));
+        assert_eq!(out.len(), n);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i.wrapping_mul(2654435761), "order broken at {i}");
+        }
+    }
+
+    #[test]
+    fn panicking_job_propagates_without_hanging_or_poisoning() {
+        let pool = ThreadPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(vec![0usize, 1, 2, 3], |x| {
+                if x == 1 {
+                    panic!("job boom");
+                }
+                x * 10
+            })
+        }));
+        let payload = r.expect_err("map must re-raise the job panic");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .unwrap_or("<non-str payload>");
+        assert!(msg.contains("job boom"), "unexpected payload: {msg}");
+        // the pool survives: a fresh map on the same pool still works
+        let out = pool.map((0..100).collect(), |x: usize| x + 1);
+        assert_eq!(out, (1..=100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panic_propagation_is_deterministic_lowest_index() {
+        let pool = ThreadPool::new(4);
+        for _ in 0..10 {
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                pool.map((0..64).collect::<Vec<usize>>(), |x| {
+                    if x % 7 == 3 {
+                        panic!("boom at {x}");
+                    }
+                    x
+                })
+            }));
+            let payload = r.expect_err("must panic");
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default();
+            // lowest panicking index is 3, regardless of scheduling
+            assert_eq!(msg, "boom at 3");
+        }
+    }
+
+    #[test]
+    fn map_maybe_matches_with_and_without_pool() {
+        let items: Vec<usize> = (0..200).collect();
+        let seq = map_maybe(None, items.clone(), |x| x * 3 + 1);
+        let pool = ThreadPool::new(4);
+        let par = map_maybe(Some(&pool), items, |x| x * 3 + 1);
+        assert_eq!(seq, par);
+        // degenerate sizes take the inline path but still work
+        assert_eq!(map_maybe(Some(&pool), vec![7usize], |x| x + 1), vec![8]);
+        let empty = map_maybe(Some(&pool), Vec::new(), |x: usize| x);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn execute_panic_does_not_kill_workers() {
+        let pool = ThreadPool::new(1);
+        pool.execute(|| panic!("fire-and-forget boom"));
+        // the single worker must survive to run the next 50 jobs
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
     }
 }

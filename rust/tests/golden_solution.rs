@@ -1,0 +1,79 @@
+//! Golden-file back-compat: a checked-in `EennSolution` JSON written
+//! **before** the mapping layer existed (no `assignment` key) must
+//! keep deserializing — defaulting to the identity chain — and a
+//! round-trip through the writer must preserve every field.
+
+use eenn_na::eenn::EennSolution;
+use eenn_na::util::json::Json;
+
+fn golden_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/pre_pr1_solution.json")
+}
+
+#[test]
+fn pre_mapping_solution_deserializes_to_identity_chain() {
+    let raw = std::fs::read_to_string(golden_path()).unwrap();
+    assert!(
+        !raw.contains("assignment"),
+        "golden file must predate the assignment field"
+    );
+    let sol = EennSolution::load(golden_path()).unwrap();
+    assert_eq!(sol.model, "ecg1d");
+    assert_eq!(sol.platform, "psoc6");
+    assert_eq!(sol.exits, vec![2]);
+    assert_eq!(
+        sol.assignment,
+        vec![0, 1],
+        "missing assignment must default to the identity chain"
+    );
+    assert!(sol.mapping().is_chain());
+    assert_eq!(sol.mapping().n_segments(), 2);
+}
+
+#[test]
+fn golden_roundtrip_preserves_every_field() {
+    let sol = EennSolution::load(golden_path()).unwrap();
+    let re = EennSolution::from_json(&Json::parse(&sol.to_json().to_string()).unwrap())
+        .unwrap();
+
+    assert_eq!(re.model, sol.model);
+    assert_eq!(re.platform, sol.platform);
+    assert_eq!(re.exits, sol.exits);
+    assert_eq!(re.assignment, sol.assignment);
+    assert_eq!(re.thresholds, sol.thresholds);
+    assert_eq!(re.raw_thresholds, sol.raw_thresholds);
+    assert_eq!(re.correction_factor, sol.correction_factor);
+    assert_eq!(re.expected_term_rates, sol.expected_term_rates);
+    assert_eq!(re.expected_acc, sol.expected_acc);
+    assert_eq!(re.expected_mac_frac, sol.expected_mac_frac);
+    assert_eq!(re.score, sol.score);
+    assert_eq!(re.heads.len(), sol.heads.len());
+    for (a, b) in re.heads.iter().zip(&sol.heads) {
+        assert_eq!(a.location, b.location);
+        assert_eq!(a.c, b.c);
+        assert_eq!(a.k, b.k);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.b, b.b);
+    }
+    // the round-tripped artifact now carries the chain explicitly
+    let rendered = re.to_json().to_string();
+    assert!(rendered.contains("\"assignment\":[0,1]"));
+}
+
+#[test]
+fn golden_values_survive_the_parser_exactly() {
+    // spot-check the literal values in the checked-in file so writer
+    // changes cannot silently reinterpret old solutions
+    let sol = EennSolution::load(golden_path()).unwrap();
+    assert_eq!(sol.thresholds, vec![0.3375]);
+    assert_eq!(sol.raw_thresholds, vec![0.675]);
+    assert_eq!(sol.correction_factor, 0.5);
+    assert_eq!(sol.expected_term_rates, vec![0.62, 0.38]);
+    assert_eq!(sol.expected_acc, 0.9731);
+    assert_eq!(sol.expected_mac_frac, 0.5214);
+    assert_eq!(sol.score, 0.2113);
+    assert_eq!(sol.heads[0].w.len(), 12);
+    assert_eq!(sol.heads[0].b.len(), 3);
+    // deployed = raw * factor, as the pre-PR-1 flow wrote it
+    assert!((sol.thresholds[0] - sol.raw_thresholds[0] * sol.correction_factor).abs() < 1e-12);
+}

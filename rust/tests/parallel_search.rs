@@ -1,0 +1,175 @@
+//! Hermetic parallel-search battery (no artifacts, no PJRT): the
+//! engine-free configuration core `na::augment_prepared` runs on a
+//! fully synthetic `ExitBank`, and the parallel deterministic search
+//! engine must produce **byte-identical** serialized solutions and
+//! identical `SearchReport` counters for every worker count.
+
+use std::collections::BTreeMap;
+
+use eenn_na::graph::BlockGraph;
+use eenn_na::hw::presets;
+use eenn_na::na::{
+    self, AugmentOutcome, ExitBank, ExitProfile, FlowConfig, TrainedExit,
+};
+use eenn_na::util::rng::Rng;
+
+/// Deterministic synthetic exit bank: one trained exit per EE
+/// location, accuracy ramping with depth, seeded head weights.
+fn synthetic_bank(graph: &BlockGraph, seed: u64, n_cal: usize) -> ExitBank {
+    let mut rng = Rng::seeded(seed);
+    let n_locs = graph.ee_locations.len();
+    let mut exits = BTreeMap::new();
+    let mut profiles = BTreeMap::new();
+    let mut exit_accs = BTreeMap::new();
+    for (i, &loc) in graph.ee_locations.iter().enumerate() {
+        let t = if n_locs <= 1 { 1.0 } else { i as f64 / (n_locs - 1) as f64 };
+        let prof = ExitProfile::synthetic(&mut rng, n_cal, 0.45 + (0.92 - 0.45) * t);
+        let c = graph.blocks[loc].gap_dim;
+        let k = graph.num_classes;
+        exits.insert(
+            loc,
+            TrainedExit {
+                location: loc,
+                c,
+                k,
+                w: (0..c * k).map(|_| rng.f32() - 0.5).collect(),
+                b: (0..k).map(|_| rng.f32() - 0.5).collect(),
+                first_epoch_acc: prof.accuracy(),
+                calibration_acc: prof.accuracy(),
+                viable: true,
+                epochs_run: 1,
+            },
+        );
+        exit_accs.insert(loc, prof.accuracy());
+        profiles.insert(loc, prof);
+    }
+    let final_profile = ExitProfile::synthetic(&mut rng, n_cal, 0.96);
+    ExitBank {
+        exits,
+        profiles,
+        final_profile,
+        exit_accs,
+        nonviable: Vec::new(),
+        feature_cache_s: 0.0,
+        exit_training_s: 0.0,
+    }
+}
+
+fn run(bank: &ExitBank, graph: &BlockGraph, workers: usize) -> AugmentOutcome {
+    let platform = presets::rk3588_cloud();
+    let cfg = FlowConfig { workers, ..FlowConfig::default() };
+    na::augment_prepared(bank, graph, "synthetic", &platform, &cfg, None)
+        .expect("synthetic augment must succeed")
+}
+
+#[test]
+fn parallel_augment_is_byte_identical_to_sequential() {
+    let graph = BlockGraph::synthetic_resnet(10, 3);
+    let bank = synthetic_bank(&graph, 7, 400);
+    let seq = run(&bank, &graph, 1);
+    let seq_json = seq.solution.to_json().to_string();
+    for workers in [2, 4] {
+        let par = run(&bank, &graph, workers);
+        assert_eq!(
+            par.solution.to_json().to_string(),
+            seq_json,
+            "workers={workers}: serialized solution differs from sequential"
+        );
+        // every SearchReport counter must match too
+        assert_eq!(par.report.n_locations, seq.report.n_locations);
+        assert_eq!(par.report.evaluated_configs, seq.report.evaluated_configs);
+        assert_eq!(par.report.mapping_candidates, seq.report.mapping_candidates);
+        assert_eq!(par.report.prune.generated, seq.report.prune.generated);
+        assert_eq!(par.report.prune.kept, seq.report.prune.kept);
+        assert_eq!(par.report.prune.latency_pruned, seq.report.prune.latency_pruned);
+        assert_eq!(par.report.prune.memory_pruned, seq.report.prune.memory_pruned);
+        assert_eq!(
+            par.report.prune.assignments_evaluated,
+            seq.report.prune.assignments_evaluated
+        );
+        assert_eq!(par.report.nonviable, seq.report.nonviable);
+        assert_eq!(par.report.exit_accs, seq.report.exit_accs);
+    }
+}
+
+#[test]
+fn determinism_holds_under_latency_constraint_and_fallback_calibration() {
+    let graph = BlockGraph::synthetic_resnet(10, 2);
+    let bank = synthetic_bank(&graph, 23, 300);
+    let platform = presets::rk3588_cloud();
+    let mk = |workers| FlowConfig {
+        workers,
+        latency_constraint_s: 0.5,
+        calibration: na::Calibration::TrainFallback { factor: 0.5 },
+        ..FlowConfig::default()
+    };
+    let seq = na::augment_prepared(&bank, &graph, "m", &platform, &mk(1), None).unwrap();
+    let par = na::augment_prepared(&bank, &graph, "m", &platform, &mk(4), None).unwrap();
+    assert_eq!(
+        par.solution.to_json().to_string(),
+        seq.solution.to_json().to_string()
+    );
+    // correction factor applied identically
+    for (t, r) in seq.solution.thresholds.iter().zip(&seq.solution.raw_thresholds) {
+        assert!((t - r * 0.5).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn nonviable_exits_are_skipped_identically_in_parallel() {
+    let graph = BlockGraph::synthetic_resnet(10, 3);
+    let mut bank = synthetic_bank(&graph, 11, 350);
+    // declare every third location hopeless, as the first-epoch check would
+    let doomed: Vec<usize> =
+        graph.ee_locations.iter().copied().filter(|l| l % 3 == 0).collect();
+    for &loc in &doomed {
+        bank.exits.get_mut(&loc).unwrap().viable = false;
+    }
+    bank.nonviable = doomed.clone();
+
+    let seq = run(&bank, &graph, 1);
+    let par = run(&bank, &graph, 4);
+    assert_eq!(
+        par.solution.to_json().to_string(),
+        seq.solution.to_json().to_string()
+    );
+    for e in &seq.solution.exits {
+        assert!(!doomed.contains(e), "nonviable exit {e} chosen");
+    }
+}
+
+#[test]
+fn synthetic_solution_is_wellformed() {
+    let graph = BlockGraph::synthetic_resnet(10, 3);
+    let bank = synthetic_bank(&graph, 7, 400);
+    let out = run(&bank, &graph, 4);
+    let sol = &out.solution;
+    let platform = presets::rk3588_cloud();
+
+    assert_eq!(sol.exits.len(), sol.thresholds.len());
+    assert_eq!(sol.exits.len(), sol.heads.len());
+    assert_eq!(sol.assignment.len(), sol.exits.len() + 1);
+    sol.mapping().validate(&platform).unwrap();
+    let total: f64 = sol.expected_term_rates.iter().sum();
+    assert!((total - 1.0).abs() < 1e-9, "termination mass {total}");
+    assert!(sol.expected_mac_frac <= 1.0 + 1e-9);
+    // report covers the whole enumerated space
+    assert_eq!(
+        out.report.prune.generated as u64,
+        na::count_search_space(graph.ee_locations.len(), 2)
+    );
+}
+
+#[test]
+fn solution_roundtrips_through_file() {
+    let graph = BlockGraph::synthetic_resnet(10, 2);
+    let bank = synthetic_bank(&graph, 3, 250);
+    let out = run(&bank, &graph, 2);
+    let p = std::env::temp_dir().join("parallel_search_sol.json");
+    out.solution.save(&p).unwrap();
+    let loaded = eenn_na::eenn::EennSolution::load(&p).unwrap();
+    assert_eq!(loaded.exits, out.solution.exits);
+    assert_eq!(loaded.assignment, out.solution.assignment);
+    assert_eq!(loaded.thresholds, out.solution.thresholds);
+    assert_eq!(loaded.heads.len(), out.solution.heads.len());
+}

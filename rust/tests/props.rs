@@ -104,6 +104,91 @@ fn prop_bf_equals_dijkstra() {
 }
 
 #[test]
+fn prop_solver_agreement_battery() {
+    // ~50 seeded-random small cascades. On single-EE inputs the
+    // pairwise path cost is exact, so all three solvers — exhaustive,
+    // Dijkstra, Bellman-Ford — must return equal-cost choices, and
+    // identical thresholds wherever the optimum is unique. On deeper
+    // cascades BF and Dijkstra still search the same graph (equal path
+    // cost) and the oracle lower-bounds both replays.
+    check(50, |g| {
+        let n = g.usize_in(30, 250);
+        let grid = threshold_grid(10);
+        let k = g.usize_in(1, 3); // 1 or 2 exits
+        let profs: Vec<ExitProfile> = (0..k).map(|_| gen_profile(g, n)).collect();
+        let masks: Vec<ExitMasks> =
+            profs.iter().map(|p| ExitMasks::build(p, &grid)).collect();
+        let fp = gen_profile(g, n);
+        let fin = ExitMasks::build(&fp, &grid);
+        let input = gen_input(g, &masks, &fin, &grid);
+
+        let bf = bellman_ford(&input, EdgeModel::Pairwise);
+        let dj = dijkstra(&input, EdgeModel::Pairwise);
+        let ex = exhaustive(&input);
+
+        // BF and Dijkstra are both optimal in the same graph
+        assert_close(bf.cost, dj.cost, 1e-9, "BF vs Dijkstra path cost")?;
+        // the oracle lower-bounds any replayed configuration
+        let bf_replay = input.exact_cost(&bf.indices);
+        let dj_replay = input.exact_cost(&dj.indices);
+        assert_holds(bf_replay >= ex.cost - 1e-12, "oracle lower-bounds BF")?;
+        assert_holds(dj_replay >= ex.cost - 1e-12, "oracle lower-bounds Dijkstra")?;
+
+        if k == 1 {
+            // single-EE: path cost is the exact replay — three-way
+            // equal-cost agreement is mandatory
+            assert_close(bf_replay, ex.cost, 1e-9, "BF vs oracle (k=1)")?;
+            assert_close(dj_replay, ex.cost, 1e-9, "Dijkstra vs oracle (k=1)")?;
+            // identical thresholds where the optimum is unique
+            let near_optimal = (0..grid.len())
+                .filter(|&j| input.exact_cost(&[j]) <= ex.cost + 1e-12)
+                .count();
+            if near_optimal == 1 {
+                assert_holds(bf.indices == ex.indices, "unique optimum: BF thresholds")?;
+                assert_holds(
+                    dj.indices == ex.indices,
+                    "unique optimum: Dijkstra thresholds",
+                )?;
+                assert_holds(
+                    bf.thresholds == ex.thresholds,
+                    "unique optimum: threshold values",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cached_replay_matches_plain_replay() {
+    use eenn_na::na::{exact_cost_cached, PrefixCache};
+    check(40, |g| {
+        let n = g.usize_in(30, 200);
+        let grid = threshold_grid(10);
+        let k = g.usize_in(1, 4).min(3);
+        let profs: Vec<ExitProfile> = (0..k).map(|_| gen_profile(g, n)).collect();
+        let masks: Vec<ExitMasks> =
+            profs.iter().map(|p| ExitMasks::build(p, &grid)).collect();
+        let fp = gen_profile(g, n);
+        let fin = ExitMasks::build(&fp, &grid);
+        let input = gen_input(g, &masks, &fin, &grid);
+        let locs: Vec<usize> = (0..k).map(|i| i * 2 + 1).collect();
+
+        let mut cache = PrefixCache::new();
+        for _ in 0..25 {
+            let idx: Vec<usize> = (0..k).map(|_| g.usize_in(0, grid.len())).collect();
+            let plain = input.exact_cost(&idx);
+            let cached = exact_cost_cached(&input, &locs, &idx, &mut cache);
+            assert_holds(
+                plain.to_bits() == cached.to_bits(),
+                &format!("cached replay diverged: {plain} vs {cached}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_cascade_metrics_are_a_distribution() {
     check(80, |g| {
         let n = g.usize_in(20, 200);
