@@ -88,6 +88,10 @@ pub struct RequestTrace {
     pub exit_index: usize,
     /// Processors visited, in escalation order (assignment prefix).
     pub procs: Vec<usize>,
+    /// Sim-clock arrival time (deterministic: drawn by the generator
+    /// before any stage scheduling — the anchor for deterministic
+    /// replays of a served trace, see `crate::scenarios`).
+    pub sim_arrival_s: f64,
     pub sim_latency_s: f64,
     pub wall_latency_s: f64,
 }
@@ -148,6 +152,7 @@ struct Done {
     exit_index: usize,
     label: i32,
     pred: i32,
+    sim_arrival: f64,
     sim_latency: f64,
     wall_latency: f64,
 }
@@ -306,6 +311,7 @@ fn run_executor(
             id: d.id,
             exit_index: d.exit_index,
             procs: plan.mapping.assignment[..=d.exit_index].to_vec(),
+            sim_arrival_s: d.sim_arrival,
             sim_latency_s: d.sim_latency,
             wall_latency_s: d.wall_latency,
         });
@@ -400,6 +406,7 @@ fn stage_worker(
                     exit_index: ctx.seg,
                     label: job.label,
                     pred: out.pred,
+                    sim_arrival: job.sim_arrival,
                     sim_latency: sim_done - job.sim_arrival,
                     wall_latency: job.wall_start.elapsed().as_secs_f64(),
                 });

@@ -193,6 +193,74 @@ pub mod presets {
         }
     }
 
+    /// Four-tier fog serving cluster for the high-traffic scenarios:
+    /// an always-on IoT gateway CPU, an edge NPU beside it, a fog-node
+    /// GPU one WiFi hop away and a cloud GPU across the WAN. Not one
+    /// of the paper's measured testbeds — an extrapolation of its
+    /// distributed scenario used by the `stress_fog` workload preset
+    /// (`crate::scenarios`) to exercise deep escalation chains and
+    /// queueing under load.
+    pub fn fog_cluster() -> Platform {
+        Platform {
+            name: "fog-cluster".into(),
+            processors: vec![
+                Processor {
+                    name: "gateway-cpu".into(),
+                    macs_per_sec: 2e9,
+                    active_mw: 3500.0,
+                    sleep_mw: 120.0,
+                    mem_bytes: 2 * 1024 * 1024 * 1024,
+                    batch_serial_frac: 1.0,
+                },
+                Processor {
+                    name: "edge-npu".into(),
+                    macs_per_sec: 12e9,
+                    active_mw: 5000.0,
+                    sleep_mw: 40.0,
+                    mem_bytes: 4 * 1024 * 1024 * 1024,
+                    batch_serial_frac: 0.25,
+                },
+                Processor {
+                    name: "fog-gpu".into(),
+                    macs_per_sec: 80e9,
+                    active_mw: 60_000.0,
+                    sleep_mw: 0.0, // off-device: not in the gateway energy budget
+                    mem_bytes: 8 * 1024 * 1024 * 1024,
+                    batch_serial_frac: 0.0,
+                },
+                Processor {
+                    name: "cloud-gpu".into(),
+                    macs_per_sec: 2e12,
+                    active_mw: 350_000.0,
+                    sleep_mw: 0.0,
+                    mem_bytes: 24 * 1024 * 1024 * 1024,
+                    batch_serial_frac: 0.0,
+                },
+            ],
+            links: vec![
+                Link {
+                    name: "lpddr".into(),
+                    bandwidth_bps: 60e9,
+                    latency_s: 0.0,
+                    active_mw: 180.0,
+                },
+                Link {
+                    name: "wifi-100mbps".into(),
+                    bandwidth_bps: 100e6,
+                    latency_s: 0.004,
+                    active_mw: 900.0,
+                },
+                Link {
+                    name: "wan-200mbps".into(),
+                    bandwidth_bps: 200e6,
+                    latency_s: 0.025,
+                    active_mw: 1500.0,
+                },
+            ],
+            exclusive_memory: false,
+        }
+    }
+
     /// Single-processor platform wrapping one device (baseline target).
     pub fn single(proc: Processor) -> Platform {
         Platform {
@@ -212,6 +280,22 @@ mod tests {
     fn presets_validate() {
         presets::psoc6().validate().unwrap();
         presets::rk3588_cloud().validate().unwrap();
+        presets::fog_cluster().validate().unwrap();
+    }
+
+    #[test]
+    fn fog_cluster_escalates_to_faster_tiers() {
+        let p = presets::fog_cluster();
+        assert_eq!(p.max_classifiers(), 4);
+        assert!(!p.exclusive_memory);
+        // strictly faster compute at each escalation tier
+        for w in p.processors.windows(2) {
+            assert!(w[1].macs_per_sec > w[0].macs_per_sec);
+        }
+        // the WAN hop dominates transfer latency for small payloads
+        let wifi = p.route_transfer_s(1, 2, 64 * 1024);
+        let wan = p.route_transfer_s(2, 3, 64 * 1024);
+        assert!(wan > wifi);
     }
 
     #[test]

@@ -24,6 +24,15 @@
 //! escalation follows the assignment, segments sharing a processor
 //! serialize on its device timeline, and every stage micro-batches.
 //!
+//! The [`scenarios`] module closes the loop per use case: a registry
+//! of hermetic workload presets modeled on the paper's evaluation
+//! (`kws_psoc6`, `ecg_mcu`, `cifar_rk3588_cloud`, `stress_fog` — see
+//! the preset table in its docs), each running search → mapping
+//! co-search → analytic sim → synthetic serving and emitting a
+//! bit-reproducible `ScenarioReport` (CLI: `repro scenarios
+//! [--smoke]`, aggregated into `BENCH_scenarios.json` and guarded by
+//! the CI regression gate).
+//!
 //! ```no_run
 //! use eenn_na::prelude::*;
 //!
@@ -45,6 +54,7 @@ pub mod metrics;
 pub mod na;
 pub mod report;
 pub mod runtime;
+pub mod scenarios;
 pub mod sim;
 pub mod util;
 

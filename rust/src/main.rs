@@ -6,6 +6,10 @@
 //!   eval    --model M --solution S   Table-2-style evaluation
 //!   serve   --model M --solution S   distributed serving simulation
 //!   report table2|fig4           regenerate paper artifacts
+//!   scenarios                    hermetic end-to-end scenario matrix
+//!                                (kws_psoc6 / ecg_mcu /
+//!                                cifar_rk3588_cloud / stress_fog),
+//!                                writes BENCH_scenarios.json
 
 use anyhow::{anyhow, Result};
 
@@ -41,9 +45,10 @@ fn run() -> Result<()> {
         "eval" => eval(&args),
         "serve" => serve_cmd(&args),
         "report" => report_cmd(&args),
+        "scenarios" => scenarios_cmd(&args),
         _ => {
             println!(
-                "usage: repro <info|augment|eval|serve|report> [--artifacts DIR]\n\
+                "usage: repro <info|augment|eval|serve|report|scenarios> [--artifacts DIR]\n\
                  \n\
                  repro augment --model dscnn [--calibration val|train --factor 1.0]\n\
                  \x20             [--w-eff 0.9 --w-acc 0.1 --latency 2.5]\n\
@@ -52,7 +57,14 @@ fn run() -> Result<()> {
                  \x20                              1 = sequential, same result either way)\n\
                  repro eval    --model dscnn --solution sol.json\n\
                  repro serve   --model dscnn --solution sol.json [--rate 10 --n 200]\n\
-                 repro report  table2|fig4 [--model NAME]"
+                 repro report  table2|fig4 [--model NAME]\n\
+                 repro scenarios [--smoke] [--only PRESET] [--workers N]\n\
+                 \x20             [--out BENCH_scenarios.json]\n\
+                 \x20             hermetic (no artifacts, no PJRT) end-to-end matrix:\n\
+                 \x20               kws_psoc6           speech commands, PSoC6, 2.5s constraint\n\
+                 \x20               ecg_mcu             easy majority: 100% early termination\n\
+                 \x20               cifar_rk3588_cloud  CIFAR-10 fog offload\n\
+                 \x20               stress_fog          high-traffic four-tier fog serving"
             );
             Ok(())
         }
@@ -214,6 +226,47 @@ fn serve_cmd(args: &Args) -> Result<()> {
         sol.assignment,
         m.proc_busy_s.iter().map(|s| (s * 100.0).round() / 100.0).collect::<Vec<_>>()
     );
+    Ok(())
+}
+
+/// Run the hermetic scenario matrix (search → mapping co-search →
+/// analytic sim → synthetic serving per preset) and aggregate the
+/// reports into `BENCH_scenarios.json`. No artifacts or PJRT needed.
+fn scenarios_cmd(args: &Args) -> Result<()> {
+    use eenn_na::scenarios;
+
+    let smoke = args.bool("smoke");
+    let workers = args.usize("workers", na::default_workers());
+    let only = args.opt("only");
+    let out_path = args.str("out", "BENCH_scenarios.json");
+
+    let presets = scenarios::all();
+    let selected: Vec<_> = presets
+        .iter()
+        .filter(|sc| only.map(|o| o == sc.name).unwrap_or(true))
+        .collect();
+    if selected.is_empty() {
+        let names: Vec<&str> = presets.iter().map(|s| s.name).collect();
+        return Err(anyhow!(
+            "unknown preset {:?}; available: {}",
+            only.unwrap_or(""),
+            names.join(", ")
+        ));
+    }
+    println!(
+        "=== scenario matrix ({} presets{}, {workers} workers) ===\n",
+        selected.len(),
+        if smoke { ", smoke" } else { "" }
+    );
+    let mut reports = Vec::with_capacity(selected.len());
+    for sc in selected {
+        let r = scenarios::run_scenario(sc, workers, smoke)?;
+        r.print();
+        println!();
+        reports.push(r);
+    }
+    std::fs::write(&out_path, scenarios::bench_json(&reports, smoke).to_string())?;
+    println!("wrote {out_path}");
     Ok(())
 }
 

@@ -85,9 +85,15 @@ pub enum Calibration {
     TrainFallback { factor: f64 },
 }
 
-/// Default worker count for the parallel search sections.
+/// Default worker count for the parallel search sections. Clamped to
+/// at least 1: `available_parallelism` can error (restricted
+/// single-CPU CI runners), and a zero worker count must still mean
+/// "run the sequential path", never an empty pool.
 pub fn default_workers() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .max(1)
 }
 
 #[derive(Debug, Clone)]
@@ -222,7 +228,10 @@ pub fn augment(
         ($($t:tt)*) => { if cfg.verbose { eprintln!("[na] {}", format!($($t)*)); } }
     }
     let t_total = Instant::now();
-    let pool = (cfg.workers > 1).then(|| ThreadPool::new(cfg.workers));
+    // `workers == 0` (misconfiguration, or a failed parallelism probe
+    // upstream) degrades to the sequential path instead of panicking
+    let workers = cfg.workers.max(1);
+    let pool = (workers > 1).then(|| ThreadPool::new(workers));
 
     // 1-2. feature caches -------------------------------------------------
     let t0 = Instant::now();
@@ -377,7 +386,9 @@ pub fn augment_prepared(
         ($($t:tt)*) => { if cfg.verbose { eprintln!("[na] {}", format!($($t)*)); } }
     }
     let t_core = Instant::now();
-    let pool = (cfg.workers > 1).then(|| ThreadPool::new(cfg.workers));
+    // clamp as in [`augment`]: 0 workers means sequential, not a panic
+    let workers = cfg.workers.max(1);
+    let pool = (workers > 1).then(|| ThreadPool::new(workers));
 
     // local, mutable copies (the fine-tuning step refreshes exits)
     let mut exits = bank.exits.clone();
@@ -551,7 +562,7 @@ pub fn augment_prepared(
         total_s: bank.feature_cache_s + bank.exit_training_s + t_core.elapsed().as_secs_f64(),
         evaluated_configs,
         mapping_candidates: mchoice.evaluated,
-        workers: cfg.workers,
+        workers,
     };
     Ok(AugmentOutcome { solution, report })
 }
@@ -835,6 +846,13 @@ mod tests {
         let sizes: Vec<usize> = chunks.iter().map(Vec::len).collect();
         assert_eq!(sizes.iter().sum::<usize>(), 11);
         assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn default_workers_is_at_least_one() {
+        // single-CPU CI runners (or a failed available_parallelism
+        // probe) must still get a usable sequential configuration
+        assert!(default_workers() >= 1);
     }
 
     #[test]

@@ -304,8 +304,9 @@ mod backend {
     use super::{EngineStats, Req};
 
     const UNAVAILABLE: &str = "PJRT backend unavailable: built without the `pjrt` \
-         feature (add the xla bindings crate to rust/Cargo.toml and build with \
-         --features pjrt to execute AOT artifacts)";
+         feature (point the `xla` dependency in rust/Cargo.toml at a real xla-rs \
+         checkout instead of vendor/xla-stub and build with --features pjrt to \
+         execute AOT artifacts)";
 
     /// Replies an explanatory error to every execution request; the
     /// engine handle itself stays alive so engine-free paths (search

@@ -143,6 +143,17 @@ mod tests {
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
+    fn zero_size_clamps_to_one_worker() {
+        // a zero worker count (failed available_parallelism probe, or
+        // `--workers 0`) must yield a working single-worker pool, not
+        // an empty one that deadlocks every job
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        let out = pool.map((0..10).collect(), |x: usize| x + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
     fn runs_all_jobs() {
         let pool = ThreadPool::new(4);
         let counter = Arc::new(AtomicUsize::new(0));

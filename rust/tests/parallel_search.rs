@@ -4,55 +4,21 @@
 //! engine must produce **byte-identical** serialized solutions and
 //! identical `SearchReport` counters for every worker count.
 
-use std::collections::BTreeMap;
-
 use eenn_na::graph::BlockGraph;
 use eenn_na::hw::presets;
-use eenn_na::na::{
-    self, AugmentOutcome, ExitBank, ExitProfile, FlowConfig, TrainedExit,
-};
-use eenn_na::util::rng::Rng;
+use eenn_na::na::{self, AugmentOutcome, ExitBank, FlowConfig};
+use eenn_na::scenarios::ConfidenceModel;
 
 /// Deterministic synthetic exit bank: one trained exit per EE
-/// location, accuracy ramping with depth, seeded head weights.
+/// location, accuracy ramping with depth, seeded head weights —
+/// the library's shared fixture (`scenarios::synthetic_bank`).
 fn synthetic_bank(graph: &BlockGraph, seed: u64, n_cal: usize) -> ExitBank {
-    let mut rng = Rng::seeded(seed);
-    let n_locs = graph.ee_locations.len();
-    let mut exits = BTreeMap::new();
-    let mut profiles = BTreeMap::new();
-    let mut exit_accs = BTreeMap::new();
-    for (i, &loc) in graph.ee_locations.iter().enumerate() {
-        let t = if n_locs <= 1 { 1.0 } else { i as f64 / (n_locs - 1) as f64 };
-        let prof = ExitProfile::synthetic(&mut rng, n_cal, 0.45 + (0.92 - 0.45) * t);
-        let c = graph.blocks[loc].gap_dim;
-        let k = graph.num_classes;
-        exits.insert(
-            loc,
-            TrainedExit {
-                location: loc,
-                c,
-                k,
-                w: (0..c * k).map(|_| rng.f32() - 0.5).collect(),
-                b: (0..k).map(|_| rng.f32() - 0.5).collect(),
-                first_epoch_acc: prof.accuracy(),
-                calibration_acc: prof.accuracy(),
-                viable: true,
-                epochs_run: 1,
-            },
-        );
-        exit_accs.insert(loc, prof.accuracy());
-        profiles.insert(loc, prof);
-    }
-    let final_profile = ExitProfile::synthetic(&mut rng, n_cal, 0.96);
-    ExitBank {
-        exits,
-        profiles,
-        final_profile,
-        exit_accs,
-        nonviable: Vec::new(),
-        feature_cache_s: 0.0,
-        exit_training_s: 0.0,
-    }
+    eenn_na::scenarios::synthetic_bank(
+        graph,
+        seed,
+        n_cal,
+        ConfidenceModel::Ramp { lo: 0.45, hi: 0.92 },
+    )
 }
 
 fn run(bank: &ExitBank, graph: &BlockGraph, workers: usize) -> AugmentOutcome {

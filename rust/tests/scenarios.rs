@@ -1,0 +1,134 @@
+//! Hermetic scenario-matrix battery (no artifacts, no PJRT): every
+//! preset's closed loop — search → mapping co-search → analytic sim →
+//! synthetic serving → deterministic replay — must be bit-reproducible
+//! across repeated runs and across search worker counts, and the
+//! per-preset reports must carry the paper-shaped claims (`ecg_mcu`
+//! terminates 100% of traffic early).
+
+use eenn_na::scenarios::{self, ScenarioReport};
+
+fn run(sc: &scenarios::Scenario, workers: usize) -> ScenarioReport {
+    scenarios::run_scenario(sc, workers, true).expect("scenario must run hermetically")
+}
+
+#[test]
+fn every_preset_is_deterministic_across_runs_and_worker_counts() {
+    for sc in scenarios::all() {
+        let first = run(&sc, 1).deterministic_json().to_string();
+        let again = run(&sc, 1).deterministic_json().to_string();
+        assert_eq!(first, again, "{}: two identical runs diverged", sc.name);
+        let par = run(&sc, 4).deterministic_json().to_string();
+        assert_eq!(first, par, "{}: workers=4 report differs from workers=1", sc.name);
+    }
+}
+
+#[test]
+fn zero_workers_clamps_to_sequential_behaviour() {
+    // the FlowConfig::workers >= 1 clamp: a zero worker count (failed
+    // available_parallelism probe) must behave exactly like 1
+    let sc = scenarios::kws_psoc6();
+    let zero = run(&sc, 0);
+    let one = run(&sc, 1);
+    assert_eq!(zero.workers, 1, "report must show the clamped worker count");
+    assert_eq!(zero.deterministic_json().to_string(), one.deterministic_json().to_string());
+}
+
+#[test]
+fn ecg_mcu_terminates_all_traffic_early() {
+    // the paper's ECG claim: the easy-majority distribution lets every
+    // sample exit before the final head
+    let r = run(&scenarios::ecg_mcu(), 2);
+    assert!(!r.exits.is_empty(), "ECG solution must have an early exit");
+    assert_eq!(
+        *r.term_hist.last().unwrap(),
+        0,
+        "no request may reach the final head: {:?}",
+        r.term_hist
+    );
+    assert_eq!(r.early_term_pct, 100.0);
+    assert!(
+        r.expected_term_rates.last().unwrap().abs() < 1e-12,
+        "calibration must predict zero final-head mass: {:?}",
+        r.expected_term_rates
+    );
+    // compute savings in the paper's regime (it reports 78.3%)
+    assert!(
+        r.mean_ops_reduction_pct > 50.0,
+        "easy majority must cut most of the ops, got {:.2}%",
+        r.mean_ops_reduction_pct
+    );
+}
+
+#[test]
+fn reports_are_internally_consistent() {
+    for sc in scenarios::all() {
+        let r = run(&sc, 2);
+        assert_eq!(r.completed + r.dropped, r.n_requests, "{}", sc.name);
+        assert_eq!(r.dropped, 0, "{}: roomy queues must not shed", sc.name);
+        assert_eq!(
+            r.term_hist.iter().sum::<usize>(),
+            r.completed,
+            "{}: termination histogram must cover every completion",
+            sc.name
+        );
+        assert_eq!(r.term_hist.len(), r.exits.len() + 1, "{}", sc.name);
+        assert_eq!(r.assignment.len(), r.exits.len() + 1, "{}", sc.name);
+        assert!(
+            r.mean_ops_reduction_pct >= 0.0 && r.mean_ops_reduction_pct < 100.0,
+            "{}: reduction {:.2}% out of range",
+            sc.name,
+            r.mean_ops_reduction_pct
+        );
+        assert!(r.sim_latency_p99_s >= r.sim_latency_p50_s, "{}", sc.name);
+        assert!(r.sim_latency_p50_s > 0.0, "{}", sc.name);
+        assert!(r.accuracy > 0.0 && r.accuracy <= 1.0, "{}", sc.name);
+        // a processor accumulates busy time iff some segment assigned
+        // to it actually received traffic (suffix of the term hist)
+        for (p, &busy) in r.proc_busy_s.iter().enumerate() {
+            let visited = r.assignment.iter().enumerate().any(|(seg, &proc)| {
+                proc == p && r.term_hist[seg..].iter().sum::<usize>() > 0
+            });
+            assert_eq!(busy > 0.0, visited, "{}: processor {p} busy {busy}", sc.name);
+        }
+    }
+}
+
+#[test]
+fn stress_fog_is_the_high_traffic_preset() {
+    let sc = scenarios::stress_fog();
+    assert_eq!(sc.platform.processors.len(), 4, "four-tier fog cluster");
+    assert!(
+        sc.traffic.arrival_rate_hz > 10.0 * scenarios::kws_psoc6().traffic.arrival_rate_hz,
+        "stress preset must arrive at least an order of magnitude hotter"
+    );
+    let r = run(&sc, 2);
+    assert_eq!(r.completed, r.n_requests, "roomy queues must absorb the burst");
+    assert!(r.sim_latency_p99_s >= r.sim_latency_p50_s);
+}
+
+#[test]
+fn bench_json_carries_per_preset_ops_reduction() {
+    // the acceptance-criterion shape of BENCH_scenarios.json
+    let reports: Vec<ScenarioReport> =
+        scenarios::all().iter().take(2).map(|sc| run(sc, 2)).collect();
+    let doc = scenarios::bench_json(&reports, true);
+    let text = doc.to_string();
+    let parsed = eenn_na::util::json::Json::parse(&text).expect("valid json");
+    assert_eq!(parsed.req("bench").unwrap().as_str(), Some("scenarios"));
+    assert_eq!(parsed.req("fixture").unwrap().as_str(), Some("smoke"));
+    let scen = parsed.req("scenarios").unwrap().as_obj().expect("scenarios object");
+    assert_eq!(scen.len(), 2);
+    for (name, entry) in scen {
+        let red = entry
+            .req("mean_ops_reduction_pct")
+            .unwrap_or_else(|_| panic!("{name}: missing mean_ops_reduction_pct"))
+            .as_f64()
+            .unwrap();
+        assert!(red.is_finite(), "{name}: reduction must be finite");
+        assert!(entry.get("timing").is_some(), "{name}: timing block present in bench json");
+        assert!(
+            entry.get("workers").is_none(),
+            "{name}: environment-derived workers must not reach the gated artifact"
+        );
+    }
+}

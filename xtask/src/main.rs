@@ -1,0 +1,269 @@
+//! `cargo run -p xtask -- <command>` — repo automation.
+//!
+//! # bench-check: the CI bench-regression gate
+//!
+//! Compares a freshly generated `BENCH_*.json` against a committed
+//! baseline (`ci/baselines/`):
+//!
+//! * **timing fields** (key path containing `timing`, `seconds`,
+//!   `wall`, `rps`, `throughput` or `speedup`) must stay within a
+//!   relative tolerance (`--tol`, default ±15%) — wall time is noisy
+//!   but a regression beyond the band fails the job;
+//! * **every other numeric field** (solution scores, termination
+//!   counts, ops reductions, search-space sizes, replayed latencies)
+//!   is deterministic and must match exactly (1e-9 relative);
+//! * structural drift (missing/extra keys, array length changes, type
+//!   changes) fails — refresh the baseline deliberately with
+//!   `bench-update` when a PR intentionally moves the numbers.
+//!
+//! A missing baseline is **bootstrap mode**: the check passes with a
+//! notice (first CI run on a new bench; commit the uploaded artifact
+//! as the baseline to arm the gate). A missing *fresh* file always
+//! fails — the bench did not run.
+//!
+//! ```text
+//! cargo run -p xtask -- bench-check --fresh BENCH_scenarios.json \
+//!     --baseline ci/baselines/BENCH_scenarios.json [--tol 0.15]
+//! cargo run -p xtask -- bench-update --fresh BENCH_scenarios.json \
+//!     --baseline ci/baselines/BENCH_scenarios.json
+//! ```
+
+use std::process::exit;
+
+use eenn_na::util::cli::Args;
+use eenn_na::util::json::Json;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "bench-check" => bench_check(&args),
+        "bench-update" => bench_update(&args),
+        _ => {
+            eprintln!(
+                "usage: cargo run -p xtask -- <bench-check|bench-update> \
+                 --fresh F.json --baseline B.json [--tol 0.15]"
+            );
+            2
+        }
+    };
+    exit(code);
+}
+
+fn required(args: &Args, key: &str) -> Option<String> {
+    let v = args.str(key, "");
+    if v.is_empty() {
+        eprintln!("error: --{key} is required");
+        return None;
+    }
+    Some(v)
+}
+
+fn bench_check(args: &Args) -> i32 {
+    let (Some(fresh_path), Some(base_path)) =
+        (required(args, "fresh"), required(args, "baseline"))
+    else {
+        return 2;
+    };
+    let tol = args.f64("tol", 0.15);
+
+    let Ok(fresh_text) = std::fs::read_to_string(&fresh_path) else {
+        eprintln!("bench-check: FAIL — fresh file {fresh_path} missing (bench did not run?)");
+        return 1;
+    };
+    let fresh = match Json::parse(&fresh_text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("bench-check: FAIL — {fresh_path}: {e}");
+            return 1;
+        }
+    };
+    let base_text = match std::fs::read_to_string(&base_path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!(
+                "bench-check: {base_path} not committed yet — bootstrap mode, \
+                 gate passes.\n  To arm it: cargo run -p xtask -- bench-update \
+                 --fresh {fresh_path} --baseline {base_path} and commit the result."
+            );
+            return 0;
+        }
+    };
+    let base = match Json::parse(&base_text) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("bench-check: FAIL — baseline {base_path}: {e}");
+            return 1;
+        }
+    };
+
+    let mut violations = Vec::new();
+    compare("$", &fresh, &base, tol, &mut violations);
+    if violations.is_empty() {
+        println!(
+            "bench-check: OK — {fresh_path} matches {base_path} \
+             (timings within ±{:.0}%, deterministic fields exact)",
+            tol * 100.0
+        );
+        0
+    } else {
+        eprintln!("bench-check: FAIL — {fresh_path} regressed vs {base_path}:");
+        for v in &violations {
+            eprintln!("  {v}");
+        }
+        eprintln!(
+            "  ({} violation(s); refresh deliberately with `cargo run -p xtask -- \
+             bench-update` if the change is intended)",
+            violations.len()
+        );
+        1
+    }
+}
+
+fn bench_update(args: &Args) -> i32 {
+    let (Some(fresh_path), Some(base_path)) =
+        (required(args, "fresh"), required(args, "baseline"))
+    else {
+        return 2;
+    };
+    let text = match std::fs::read_to_string(&fresh_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("bench-update: cannot read {fresh_path}: {e}");
+            return 1;
+        }
+    };
+    if let Err(e) = Json::parse(&text) {
+        eprintln!("bench-update: {fresh_path} is not valid JSON: {e}");
+        return 1;
+    }
+    if let Some(dir) = std::path::Path::new(&base_path).parent() {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("bench-update: cannot create {}: {e}", dir.display());
+            return 1;
+        }
+    }
+    if let Err(e) = std::fs::write(&base_path, &text) {
+        eprintln!("bench-update: cannot write {base_path}: {e}");
+        return 1;
+    }
+    println!("bench-update: {base_path} <- {fresh_path}");
+    0
+}
+
+/// Is this key path a wall-clock measurement (tolerance-checked)
+/// rather than a deterministic quantity (exact-checked)?
+fn is_timing(path: &str) -> bool {
+    let p = path.to_ascii_lowercase();
+    ["timing", "seconds", "wall", "rps", "throughput", "speedup"].iter().any(|k| p.contains(k))
+}
+
+fn compare(path: &str, fresh: &Json, base: &Json, tol: f64, out: &mut Vec<String>) {
+    match (fresh, base) {
+        (Json::Obj(f), Json::Obj(b)) => {
+            for (k, bv) in b {
+                match f.get(k) {
+                    Some(fv) => compare(&format!("{path}.{k}"), fv, bv, tol, out),
+                    None => out.push(format!("{path}.{k}: missing from fresh output")),
+                }
+            }
+            for k in f.keys() {
+                if !b.contains_key(k) {
+                    out.push(format!("{path}.{k}: not in baseline (structure drift)"));
+                }
+            }
+        }
+        (Json::Arr(f), Json::Arr(b)) => {
+            if f.len() != b.len() {
+                out.push(format!("{path}: length {} vs baseline {}", f.len(), b.len()));
+                return;
+            }
+            for (i, (fv, bv)) in f.iter().zip(b).enumerate() {
+                compare(&format!("{path}[{i}]"), fv, bv, tol, out);
+            }
+        }
+        (Json::Num(f), Json::Num(b)) => {
+            let (f, b) = (*f, *b);
+            if is_timing(path) {
+                // relative band around the baseline; tiny baselines are
+                // compared on an absolute epsilon to dodge 0/0
+                let scale = b.abs().max(1e-9);
+                if (f - b).abs() > tol * scale {
+                    out.push(format!("{path}: {f} outside ±{:.0}% of baseline {b}", tol * 100.0));
+                }
+            } else {
+                let scale = b.abs().max(1e-12);
+                if (f - b).abs() > 1e-9 * scale {
+                    out.push(format!("{path}: {f} != baseline {b} (deterministic field)"));
+                }
+            }
+        }
+        (Json::Str(f), Json::Str(b)) => {
+            if f != b {
+                out.push(format!("{path}: {f:?} != baseline {b:?}"));
+            }
+        }
+        (Json::Bool(f), Json::Bool(b)) => {
+            if f != b {
+                out.push(format!("{path}: {f} != baseline {b}"));
+            }
+        }
+        (Json::Null, Json::Null) => {}
+        _ => out.push(format!("{path}: type changed vs baseline")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn j(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    fn violations(fresh: &str, base: &str, tol: f64) -> Vec<String> {
+        let mut out = Vec::new();
+        compare("$", &j(fresh), &j(base), tol, &mut out);
+        out
+    }
+
+    #[test]
+    fn identical_documents_pass() {
+        let doc = r#"{"a": 1, "b": {"seconds": 0.5}, "c": [1, 2, 3]}"#;
+        assert!(violations(doc, doc, 0.15).is_empty());
+    }
+
+    #[test]
+    fn timing_fields_get_tolerance() {
+        let base = r#"{"timing": {"search_wall_s": 1.0}, "rps_x": 100.0}"#;
+        let ok = r#"{"timing": {"search_wall_s": 1.1}, "rps_x": 110.0}"#;
+        assert!(violations(ok, base, 0.15).is_empty());
+        let bad = r#"{"timing": {"search_wall_s": 1.3}, "rps_x": 100.0}"#;
+        assert_eq!(violations(bad, base, 0.15).len(), 1);
+    }
+
+    #[test]
+    fn deterministic_fields_must_match_exactly() {
+        let base = r#"{"score": 0.5, "term_hist": [10, 5]}"#;
+        assert!(violations(base, base, 0.15).is_empty());
+        let drift = r#"{"score": 0.5000001, "term_hist": [10, 5]}"#;
+        assert_eq!(violations(drift, base, 0.15).len(), 1);
+        let counts = r#"{"score": 0.5, "term_hist": [9, 6]}"#;
+        assert_eq!(violations(counts, base, 0.15).len(), 2);
+    }
+
+    #[test]
+    fn structure_drift_is_flagged() {
+        let base = r#"{"a": 1, "b": 2}"#;
+        assert!(!violations(r#"{"a": 1}"#, base, 0.15).is_empty());
+        assert!(!violations(r#"{"a": 1, "b": 2, "c": 3}"#, base, 0.15).is_empty());
+        assert!(!violations(r#"{"a": 1, "b": [2]}"#, base, 0.15).is_empty());
+        assert!(!violations(r#"{"a": 1, "b": 2, "extra": null}"#, base, 0.15).is_empty());
+    }
+
+    #[test]
+    fn array_length_changes_are_flagged() {
+        let base = r#"{"proc_busy_s": [0.1, 0.2]}"#;
+        assert!(!violations(r#"{"proc_busy_s": [0.1]}"#, base, 0.15).is_empty());
+    }
+}
