@@ -1,0 +1,576 @@
+//! Virtual-time discrete-event scheduler: the executor core behind
+//! [`serve`](super::serve) / [`serve_synthetic`](super::serve_synthetic).
+//!
+//! One binary heap of events, min-ordered on `(sim_time, seq)`, drives
+//! everything: arrivals land in the first stage's bounded queue,
+//! device timelines dispatch micro-batches when they free up, and
+//! escalations re-enter the heap at the instant the previous stage
+//! finishes them. The [`StageExec`] backends do their real (wall
+//! clock) work at event-dispatch time on the calling thread, but all
+//! *ordering and accounting* comes from the deterministic virtual
+//! clock — two runs of the same config produce byte-identical
+//! metrics on any host, for any `batch_max`.
+//!
+//! # Discipline
+//!
+//! * Per-stage queues are FIFO and bounded (`queue_cap`); an
+//!   `Enqueue` that finds the queue full is shed, whether it is a
+//!   fresh arrival or a mid-pipeline escalation.
+//! * A device timeline serves its stages in global FIFO order: among
+//!   non-empty queues on the timeline, the one whose head sample got
+//!   its enqueue ticket first wins (ties cannot happen — tickets are
+//!   unique). The boundary transfer belongs to the sample, so a head
+//!   sample whose transfer is still in flight holds its reservation
+//!   (`start = max(free, ready)`), exactly like the analytic clock.
+//! * A dispatch takes up to `batch_max` samples from the winning
+//!   queue. Serial cores (`batch_serial_frac == 1`) are reserved per
+//!   sample; batch-capable devices once per batch, stretched by the
+//!   serialization fraction — identical accounting to the previous
+//!   (threaded) executor and to `sim::simulate`.
+//!
+//! # Exactness
+//!
+//! Each job carries two accumulators: `base_s` sums per-stage
+//! transfer + compute in exactly `sim::simulate`'s order, and
+//! `wait_s` sums every schedule-induced delay (queueing behind a
+//! busy timeline, batch-formation skew, batch stretch). While a
+//! request never waits, `wait_s` is exactly `0.0` — every term is a
+//! bit-exact zero, not an epsilon — so its reported latency equals
+//! `SimReport::stages[exit].cum_latency_s` bit-for-bit. That is the
+//! closed-form-fast-path contract `tests/des_equivalence.rs` asserts.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::hw::{Platform, Timelines};
+use crate::metrics::{Confusion, Quality};
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+use crate::util::stats::summarize;
+
+use super::{RequestTrace, ServeConfig, ServeMetrics, StageCtx, StageExec, StagePlan};
+
+/// One sample in flight through the stage graph.
+struct Job {
+    id: usize,
+    ifm: HostTensor,
+    label: i32,
+    sim_arrival: f64,
+    /// Virtual instant the sample entered its current stage's queue
+    /// (arrival time at stage 0; the previous stage's finish time
+    /// after an escalation).
+    sim_ready: f64,
+    /// Unloaded path time: per-stage transfer + compute, accumulated
+    /// in `sim::simulate`'s order (bit-identical to the analytic
+    /// cumulative latency when `wait_s` is zero).
+    base_s: f64,
+    /// Queueing + contention + batching delay on top of `base_s`.
+    wait_s: f64,
+    /// Backend wall time attributed to this sample.
+    wall_s: f64,
+    /// Global enqueue ticket: the executor's FIFO discipline.
+    enq_seq: u64,
+}
+
+struct Done {
+    id: usize,
+    exit_index: usize,
+    label: i32,
+    pred: i32,
+    sim_arrival: f64,
+    sim_latency: f64,
+    sim_wait: f64,
+    wall_latency: f64,
+}
+
+enum EventKind {
+    /// A sample lands in `seg`'s bounded queue (a fresh arrival at
+    /// stage 0, or an escalation leaving the previous stage).
+    Enqueue { seg: usize, job: Job },
+    /// A device timeline finished a reservation: dispatch more work.
+    Wake { timeline: usize },
+}
+
+/// Heap entry, min-ordered by `(time, seq)`. `seq` is the global
+/// scheduling counter, so simultaneous events fire in the order they
+/// were scheduled — deterministic regardless of host scheduling.
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap pops the maximum: invert so the earliest
+        // (time, seq) comes out first. Times are finite by
+        // construction (arrivals, reservation ends).
+        other
+            .time
+            .total_cmp(&self.time)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct Des<'a> {
+    ctxs: &'a [StageCtx],
+    /// Timeline index of each segment's processor.
+    tl_of_seg: Vec<usize>,
+    /// Segments served by each timeline, ascending.
+    stages_on: Vec<Vec<usize>>,
+    queues: Vec<VecDeque<Job>>,
+    timelines: Timelines,
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    enq_seq: u64,
+    queue_cap: usize,
+    dropped: usize,
+    done: Vec<Done>,
+}
+
+impl Des<'_> {
+    fn schedule(&mut self, time: f64, kind: EventKind) {
+        self.heap.push(Event { time, seq: self.seq, kind });
+        self.seq += 1;
+    }
+
+    fn enqueue(&mut self, now: f64, seg: usize, mut job: Job, stages: &mut [Box<dyn StageExec>]) {
+        if self.queues[seg].len() >= self.queue_cap {
+            // bounded queue full at this virtual instant: shed
+            self.dropped += 1;
+            return;
+        }
+        job.sim_ready = now;
+        job.enq_seq = self.enq_seq;
+        self.enq_seq += 1;
+        let tl = self.tl_of_seg[seg];
+        self.queues[seg].push_back(job);
+        self.dispatch(now, tl, stages);
+    }
+
+    fn dispatch(&mut self, now: f64, tl: usize, stages: &mut [Box<dyn StageExec>]) {
+        if self.timelines.timeline_free_at(tl) > now {
+            return; // still reserved: a Wake fires when it frees
+        }
+        // FIFO across the timeline: serve the stage whose head sample
+        // got its enqueue ticket first
+        let Some(&seg) = self
+            .stages_on[tl]
+            .iter()
+            .filter(|&&s| !self.queues[s].is_empty())
+            .min_by_key(|&&s| self.queues[s].front().map(|j| j.enq_seq))
+        else {
+            return;
+        };
+        let StageCtx {
+            proc,
+            is_last,
+            threshold,
+            compute_s,
+            transfer_s,
+            batch_serial_frac,
+            batch_max,
+        } = self.ctxs[seg];
+        let take = batch_max.min(self.queues[seg].len());
+        let batch: Vec<Job> = self.queues[seg].drain(..take).collect();
+        let k = batch.len();
+
+        // device clock: a serial core is occupied per sample; a
+        // batch-capable device once per batch, stretched by its
+        // serialization fraction. `batch_stretch` is the extra time
+        // every batch member pays beyond a lone sample's compute.
+        let spans: Vec<(f64, f64)>;
+        let batch_stretch: f64;
+        if k == 1 || batch_serial_frac >= 1.0 - 1e-9 {
+            spans = batch
+                .iter()
+                .map(|j| self.timelines.reserve(proc, j.sim_ready + transfer_s, compute_s))
+                .collect();
+            batch_stretch = 0.0;
+        } else {
+            let ready = batch
+                .iter()
+                .map(|j| j.sim_ready + transfer_s)
+                .fold(0.0f64, f64::max);
+            let duration =
+                compute_s * ((1.0 - batch_serial_frac) + batch_serial_frac * k as f64);
+            spans = vec![self.timelines.reserve(proc, ready, duration); k];
+            batch_stretch = duration - compute_s;
+        }
+        // the timeline frees at the batch's last end: keep draining
+        let end_of_batch = spans.last().map(|s| s.1).unwrap_or(now);
+        self.schedule(end_of_batch, EventKind::Wake { timeline: tl });
+
+        // wall clock: the real backend executes here, at dispatch
+        let wall_t0 = Instant::now();
+        let outs = if k == 1 {
+            vec![stages[seg].run_single(&batch[0].ifm, batch[0].label)]
+        } else {
+            let refs: Vec<(&HostTensor, i32)> =
+                batch.iter().map(|j| (&j.ifm, j.label)).collect();
+            stages[seg].run_batch(&refs)
+        };
+        debug_assert_eq!(outs.len(), k);
+        let wall_each = wall_t0.elapsed().as_secs_f64() / k as f64;
+
+        for ((mut job, out), (start, end)) in batch.into_iter().zip(outs).zip(spans) {
+            // latency split: `base_s` follows the analytic sim's
+            // accumulation order; every schedule-induced delay lands
+            // in `wait_s` (each term is an exact 0.0 when the sample
+            // never waited)
+            let ready = job.sim_ready + transfer_s;
+            job.base_s += transfer_s;
+            job.base_s += compute_s;
+            job.wait_s += (start - ready) + batch_stretch;
+            job.wall_s += wall_each;
+            let terminate = is_last || out.conf >= threshold.unwrap_or(f64::NEG_INFINITY);
+            if terminate {
+                self.done.push(Done {
+                    id: job.id,
+                    exit_index: seg,
+                    label: job.label,
+                    pred: out.pred,
+                    sim_arrival: job.sim_arrival,
+                    sim_latency: job.base_s + job.wait_s,
+                    sim_wait: job.wait_s,
+                    wall_latency: job.wall_s,
+                });
+            } else {
+                // escalate along the assignment: the sample reaches
+                // the next stage's queue the instant this stage
+                // finishes it; the boundary transfer is charged at
+                // the next dispatch
+                job.ifm = out.ifm;
+                self.schedule(end, EventKind::Enqueue { seg: seg + 1, job });
+            }
+        }
+    }
+}
+
+/// Run the full event loop for `cfg.n_requests` Poisson arrivals.
+pub(super) fn run_executor(
+    mut stages: Vec<Box<dyn StageExec>>,
+    plan: &StagePlan,
+    platform: &Platform,
+    num_classes: usize,
+    cfg: &ServeConfig,
+    mut next_job: impl FnMut(usize, &mut Rng) -> (HostTensor, i32),
+) -> Result<ServeMetrics> {
+    let nseg = plan.mapping.n_segments();
+    assert_eq!(stages.len(), nseg, "one stage per segment");
+    let batch_max = cfg.batch_max.max(1);
+
+    let ctxs: Vec<StageCtx> = (0..nseg)
+        .map(|seg| {
+            let proc = plan.mapping.proc_of(seg);
+            StageCtx {
+                proc,
+                is_last: seg == nseg - 1,
+                threshold: plan.thresholds[seg],
+                compute_s: plan.sim.stages[seg].compute_s,
+                transfer_s: plan.sim.stages[seg].transfer_s,
+                batch_serial_frac: platform.processors[proc].batch_serial_frac,
+                batch_max,
+            }
+        })
+        .collect();
+    let tl_of_seg: Vec<usize> =
+        ctxs.iter().map(|c| platform.timeline_of(c.proc)).collect();
+    let mut stages_on: Vec<Vec<usize>> = vec![Vec::new(); platform.n_timelines()];
+    for (seg, &tl) in tl_of_seg.iter().enumerate() {
+        stages_on[tl].push(seg);
+    }
+
+    let mut des = Des {
+        ctxs: &ctxs,
+        tl_of_seg,
+        stages_on,
+        queues: (0..nseg).map(|_| VecDeque::new()).collect(),
+        timelines: Timelines::new(platform),
+        heap: BinaryHeap::new(),
+        seq: 0,
+        enq_seq: 0,
+        // 0 = unbounded (the scenario layer's "roomy" convention)
+        queue_cap: if cfg.queue_cap == 0 { usize::MAX } else { cfg.queue_cap },
+        dropped: 0,
+        done: Vec::with_capacity(cfg.n_requests),
+    };
+
+    // Lazy Poisson generator with the same RNG interleaving the
+    // previous (threaded) executor used — one exp() then one payload
+    // per request, in request order — but at most ONE undelivered
+    // arrival resident at a time: Poisson arrivals are time-ordered,
+    // so the merge below never needs to heap them, and payload
+    // tensors (real inputs on the PJRT path) only occupy memory once
+    // the virtual clock reaches them.
+    let mut rng = Rng::seeded(cfg.seed);
+    let mut sim_now = 0.0;
+    let mut draw = |i: usize, sim_now: &mut f64, rng: &mut Rng| -> Job {
+        *sim_now += rng.exp(cfg.arrival_rate_hz);
+        let (ifm, label) = next_job(i, rng);
+        Job {
+            id: i,
+            ifm,
+            label,
+            sim_arrival: *sim_now,
+            sim_ready: *sim_now,
+            base_s: 0.0,
+            wait_s: 0.0,
+            wall_s: 0.0,
+            enq_seq: 0,
+        }
+    };
+    let mut pending: Option<Job> =
+        (cfg.n_requests > 0).then(|| draw(0, &mut sim_now, &mut rng));
+    let mut next_id = 1usize;
+
+    // Merge the arrival stream with the event heap in virtual-time
+    // order (an arrival wins a tie, as the earlier-scheduled event):
+    // ordering and accounting come from the virtual clock; backends do
+    // their real work at dispatch, on this thread.
+    let wall0 = Instant::now();
+    loop {
+        let arrival_due = match (&pending, des.heap.peek()) {
+            (Some(j), Some(ev)) => j.sim_arrival <= ev.time,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => break,
+        };
+        if arrival_due {
+            let job = pending.take().expect("arrival_due implies a pending job");
+            let t = job.sim_arrival;
+            des.enqueue(t, 0, job, &mut stages);
+            if next_id < cfg.n_requests {
+                pending = Some(draw(next_id, &mut sim_now, &mut rng));
+                next_id += 1;
+            }
+        } else {
+            let Event { time, kind, .. } =
+                des.heap.pop().expect("non-arrival branch implies a heaped event");
+            match kind {
+                EventKind::Enqueue { seg, job } => des.enqueue(time, seg, job, &mut stages),
+                EventKind::Wake { timeline } => des.dispatch(time, timeline, &mut stages),
+            }
+        }
+    }
+    let wall_s = wall0.elapsed().as_secs_f64();
+
+    // --- collect ----------------------------------------------------------
+    des.done.sort_by_key(|d| d.id);
+    let mut term_hist = vec![0usize; nseg];
+    let mut sim_lat = Vec::with_capacity(des.done.len());
+    let mut waits = Vec::with_capacity(des.done.len());
+    let mut wall_lat = Vec::with_capacity(des.done.len());
+    let mut conf = Confusion::new(num_classes);
+    let mut energy = 0.0;
+    let mut traces = Vec::with_capacity(des.done.len());
+    for d in &des.done {
+        term_hist[d.exit_index] += 1;
+        sim_lat.push(d.sim_latency);
+        waits.push(d.sim_wait);
+        wall_lat.push(d.wall_latency);
+        conf.add(d.label as usize, d.pred as usize);
+        energy += plan.sim.stages[d.exit_index].cum_energy_mj;
+        traces.push(RequestTrace {
+            id: d.id,
+            exit_index: d.exit_index,
+            procs: plan.mapping.assignment[..=d.exit_index].to_vec(),
+            sim_arrival_s: d.sim_arrival,
+            sim_latency_s: d.sim_latency,
+            sim_wait_s: d.sim_wait,
+            wall_latency_s: d.wall_latency,
+        });
+    }
+    let completed = traces.len();
+    debug_assert_eq!(completed + des.dropped, cfg.n_requests);
+
+    Ok(ServeMetrics {
+        completed,
+        dropped: des.dropped,
+        wall_s,
+        throughput_rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
+        sim_latency: summarize(&sim_lat),
+        queue_wait: summarize(&waits),
+        wall_latency: summarize(&wall_lat),
+        mean_energy_mj: if completed > 0 { energy / completed as f64 } else { 0.0 },
+        term_hist,
+        quality: Quality::from_confusion(&conf),
+        traces,
+        proc_busy_s: des.timelines.into_busy_totals(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{StageExec, StageOutput, StagePlan};
+    use super::*;
+    use crate::graph::BlockGraph;
+    use crate::hw::presets;
+    use crate::mapping::Mapping;
+    use crate::sim::simulate;
+
+    /// Backend with a fixed verdict: conf 1.0 terminates at any
+    /// threshold, conf 0.0 always escalates.
+    struct ScriptExec {
+        conf: f64,
+    }
+
+    impl StageExec for ScriptExec {
+        fn run_single(&mut self, ifm: &HostTensor, label: i32) -> StageOutput {
+            StageOutput { ifm: ifm.clone(), conf: self.conf, pred: label }
+        }
+    }
+
+    fn plan(graph: &BlockGraph, mapping: Mapping, platform: &crate::hw::Platform) -> StagePlan {
+        let nseg = mapping.n_segments();
+        let sim = simulate(graph, &mapping, platform);
+        let thresholds = (0..nseg)
+            .map(|s| if s + 1 < nseg { Some(0.5) } else { None })
+            .collect();
+        StagePlan { mapping, thresholds, sim }
+    }
+
+    fn cfg(rate: f64, n: usize, queue_cap: usize, batch_max: usize) -> ServeConfig {
+        ServeConfig { arrival_rate_hz: rate, n_requests: n, queue_cap, batch_max, seed: 7 }
+    }
+
+    fn dummy() -> HostTensor {
+        HostTensor::f32(&[1, 1], &[0.0])
+    }
+
+    #[test]
+    fn unloaded_latency_is_bit_exact_vs_analytic_sim() {
+        let graph = BlockGraph::synthetic_resnet(4, 2);
+        let platform = presets::rk3588_cloud();
+        let p = plan(&graph, Mapping::chain(vec![2]), &platform);
+        // everything terminates at stage 0; arrivals eons apart
+        let stages: Vec<Box<dyn StageExec>> =
+            vec![Box::new(ScriptExec { conf: 1.0 }), Box::new(ScriptExec { conf: 1.0 })];
+        let m = run_executor(stages, &p, &platform, 4, &cfg(1e-9, 6, 64, 1), |_, rng| {
+            (dummy(), rng.below(4) as i32)
+        })
+        .unwrap();
+        assert_eq!(m.completed, 6);
+        assert_eq!(m.dropped, 0);
+        assert_eq!(m.term_hist, vec![6, 0]);
+        for t in &m.traces {
+            assert_eq!(t.sim_wait_s, 0.0, "no contention at 1e-9 req/s");
+            assert_eq!(t.sim_latency_s, p.sim.stages[0].cum_latency_s, "bit-exact fast path");
+        }
+    }
+
+    #[test]
+    fn full_escalation_walks_every_stage() {
+        let graph = BlockGraph::synthetic_resnet(4, 2);
+        let platform = presets::rk3588_cloud();
+        let p = plan(&graph, Mapping::chain(vec![1, 3]), &platform);
+        let stages: Vec<Box<dyn StageExec>> = vec![
+            Box::new(ScriptExec { conf: 0.0 }),
+            Box::new(ScriptExec { conf: 0.0 }),
+            Box::new(ScriptExec { conf: 0.0 }),
+        ];
+        let m = run_executor(stages, &p, &platform, 4, &cfg(1e-9, 4, 64, 1), |_, rng| {
+            (dummy(), rng.below(4) as i32)
+        })
+        .unwrap();
+        assert_eq!(m.term_hist, vec![0, 0, 4]);
+        for t in &m.traces {
+            assert_eq!(t.procs, vec![0, 1, 2]);
+            assert_eq!(t.sim_latency_s, p.sim.stages[2].cum_latency_s);
+        }
+        // every processor accumulated exactly its stage's compute
+        for (proc, busy) in m.proc_busy_s.iter().enumerate() {
+            let expect = 4.0 * p.sim.stages[proc].compute_s;
+            assert!((busy - expect).abs() < 1e-12, "proc {proc}: {busy} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn bounded_queue_sheds_exactly() {
+        let graph = BlockGraph::synthetic_resnet(4, 2);
+        let platform = presets::psoc6();
+        let p = plan(&graph, Mapping::chain(vec![2]), &platform);
+        let stages: Vec<Box<dyn StageExec>> =
+            vec![Box::new(ScriptExec { conf: 1.0 }), Box::new(ScriptExec { conf: 1.0 })];
+        // burst arrivals, queue of 2: most of the trace is shed
+        let m = run_executor(stages, &p, &platform, 4, &cfg(1e9, 50, 2, 1), |_, rng| {
+            (dummy(), rng.below(4) as i32)
+        })
+        .unwrap();
+        assert!(m.dropped > 0, "expected shed under burst");
+        assert_eq!(m.completed + m.dropped, 50, "shed + completed == offered");
+        // shed samples never reserve device time
+        assert!((m.proc_busy_s[0] - m.completed as f64 * p.sim.stages[0].compute_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_capable_device_amortizes_reserved_time() {
+        let graph = BlockGraph::synthetic_resnet(4, 2);
+        let platform = presets::rk3588_cloud();
+        // single segment on the Mali (batch_serial_frac = 0)
+        let mapping = Mapping::with_assignment(vec![], vec![1]).unwrap();
+        let p = plan(&graph, mapping, &platform);
+        let n = 64;
+        let run = |batch_max| {
+            let stages: Vec<Box<dyn StageExec>> = vec![Box::new(ScriptExec { conf: 1.0 })];
+            run_executor(stages, &p, &platform, 4, &cfg(1e9, n, n, batch_max), |_, rng| {
+                (dummy(), rng.below(4) as i32)
+            })
+            .unwrap()
+        };
+        let single = run(1);
+        let batched = run(8);
+        assert_eq!(single.completed, n);
+        assert_eq!(batched.completed, n);
+        // per-sample reservations vs fully amortized batches
+        assert!((single.proc_busy_s[1] - n as f64 * p.sim.stages[0].compute_s).abs() < 1e-9);
+        assert!(
+            batched.proc_busy_s[1] < single.proc_busy_s[1] * 0.5,
+            "batching must amortize device time: {} vs {}",
+            batched.proc_busy_s[1],
+            single.proc_busy_s[1]
+        );
+        // identical verdicts either way
+        assert_eq!(single.term_hist, batched.term_hist);
+    }
+
+    #[test]
+    fn repeated_runs_are_byte_identical() {
+        let graph = BlockGraph::synthetic_resnet(4, 2);
+        let platform = presets::fog_cluster();
+        let p = plan(&graph, Mapping::chain(vec![1, 2, 3]), &platform);
+        let run = || {
+            let stages: Vec<Box<dyn StageExec>> = vec![
+                Box::new(ScriptExec { conf: 0.0 }),
+                Box::new(ScriptExec { conf: 0.0 }),
+                Box::new(ScriptExec { conf: 0.0 }),
+                Box::new(ScriptExec { conf: 1.0 }),
+            ];
+            run_executor(stages, &p, &platform, 4, &cfg(5_000.0, 300, 16, 4), |_, rng| {
+                (dummy(), rng.below(4) as i32)
+            })
+            .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.term_hist, b.term_hist);
+        assert_eq!(a.proc_busy_s, b.proc_busy_s);
+        let lat = |m: &ServeMetrics| m.traces.iter().map(|t| t.sim_latency_s).collect::<Vec<_>>();
+        assert_eq!(lat(&a), lat(&b), "virtual-time latencies are deterministic");
+    }
+}

@@ -1,21 +1,26 @@
 //! Distributed serving coordinator: the deployment runtime for an
 //! augmented EENN on a (simulated) heterogeneous platform.
 //!
-//! The executor is a **stage graph built from the solution's
-//! [`Mapping`]**: one stage per segment, each with a bounded queue
-//! (backpressure: arrivals are shed when the first queue is full — the
-//! always-on-monitoring regime of the paper's IoT scenarios) and a
-//! worker thread driving a [`StageExec`] backend. Samples that fail
-//! the confidence test escalate along the mapping's `assignment`:
-//! the device clock routes the boundary IFM over the interconnect
-//! between the two segments' processors, and two segments sharing a
-//! processor serialize on its single device timeline (all stages
-//! share one timeline on single-ported-memory platforms). Every
-//! stage micro-batches up to `batch_max` queued samples per wake; a
-//! micro-batch occupies its processor once, scaled by the processor's
-//! batch-serialization fraction (GPUs amortize, scalar cores do not).
+//! The executor is a **virtual-time discrete-event scheduler** over
+//! the stage graph built from the solution's [`Mapping`]: one stage
+//! per segment, each with a bounded FIFO queue (backpressure:
+//! arrivals *and* escalations are shed when their target queue is
+//! full — the always-on-monitoring regime of the paper's IoT
+//! scenarios). A single event loop (binary heap keyed on
+//! `(sim_time, seq)`, see the private `des` module) advances the
+//! platform's
+//! per-processor device timelines ([`crate::hw::Timelines`]; all
+//! processors share one timeline on single-ported-memory platforms),
+//! forms micro-batches up to `batch_max`, and routes escalations
+//! along the mapping's `assignment` — the boundary IFM pays the
+//! routed interconnect transfer between the two segments'
+//! processors. A micro-batch occupies its processor once, scaled by
+//! the processor's batch-serialization fraction (GPUs amortize,
+//! scalar cores do not).
 //!
-//! Two interchangeable stage backends:
+//! Two interchangeable stage backends, executed at event-dispatch
+//! time (real wall-clock work still happens; only *ordering and
+//! accounting* come from the virtual clock):
 //! * [`serve`] — real PJRT compute through B=1 / batched artifacts
 //!   (needs exported artifacts and the `pjrt` feature);
 //! * [`serve_synthetic`] — a calibrated stochastic stand-in drawing
@@ -25,23 +30,21 @@
 //!
 //! Two clocks:
 //! * **wall** — actual compute on this machine (hot-path perf);
-//! * **sim**  — the platform's analytic device clock (per-processor
-//!   busy-until, single-ported-memory exclusivity, link delays),
-//!   which produces the latency/energy numbers comparable to the
-//!   paper's testbeds.
+//! * **sim**  — the platform's analytic device clock, which produces
+//!   the latency/energy numbers comparable to the paper's testbeds.
 //!
-//! Known limitation: when two stages share a device timeline (a
-//! shared-processor mapping, or any exclusive-memory platform), the
-//! *order* in which they reserve it follows the OS thread schedule,
-//! so seeded runs reproduce aggregate behaviour (counts, routing,
-//! busy totals) but individual sim-latency percentiles can vary
-//! slightly across runs. Fully deterministic replay would need a
-//! discrete-event scheduler instead of free-running stage threads.
+//! The sim-clock side is **fully deterministic**: the same
+//! [`ServeConfig`] yields byte-identical completions, sheds,
+//! termination histograms, per-request latencies and busy totals on
+//! every run, every host, and every `batch_max` choice — there are no
+//! free-running stage threads left to race. With `batch_max = 1` and
+//! no contention the executor reproduces `sim::simulate`'s
+//! cumulative stage latencies bit-for-bit ([`RequestTrace`] carries
+//! the queueing share separately as `sim_wait_s`); under load it
+//! generalizes the closed form with queueing, batching and
+//! backpressure (equivalence asserted by `tests/des_equivalence.rs`).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+mod des;
 
 use anyhow::Result;
 
@@ -50,20 +53,25 @@ use crate::eenn::EennSolution;
 use crate::graph::BlockGraph;
 use crate::hw::Platform;
 use crate::mapping::Mapping;
-use crate::metrics::{Confusion, Quality};
+use crate::metrics::Quality;
 use crate::runtime::{BoundHandle, Engine, HostTensor, Manifest, ModelInfo, WeightStore};
 use crate::sim::{simulate, SimReport};
 use crate::util::rng::Rng;
-use crate::util::stats::{summarize, Summary};
+use crate::util::stats::Summary;
+
+use des::run_executor;
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// Poisson arrival rate, requests per second of *sim* time.
     pub arrival_rate_hz: f64,
     pub n_requests: usize,
-    /// Per-queue capacity (backpressure bound).
+    /// Per-queue capacity (backpressure bound). An enqueue — fresh
+    /// arrival or escalation — that finds its target queue full at
+    /// that virtual instant is shed. `0` = unbounded (the scenario
+    /// layer's "roomy" convention: nothing can shed).
     pub queue_cap: usize,
-    /// Micro-batch bound per stage wake (1 = strictly per-sample).
+    /// Micro-batch bound per dispatch (1 = strictly per-sample).
     pub batch_max: usize,
     pub seed: u64,
 }
@@ -80,7 +88,7 @@ impl Default for ServeConfig {
     }
 }
 
-/// Per-request record (wired from `Job.id` through the pipeline).
+/// Per-request record (wired from the job id through the pipeline).
 #[derive(Debug, Clone)]
 pub struct RequestTrace {
     pub id: usize,
@@ -89,21 +97,35 @@ pub struct RequestTrace {
     /// Processors visited, in escalation order (assignment prefix).
     pub procs: Vec<usize>,
     /// Sim-clock arrival time (deterministic: drawn by the generator
-    /// before any stage scheduling — the anchor for deterministic
-    /// replays of a served trace, see `crate::scenarios`).
+    /// before any scheduling).
     pub sim_arrival_s: f64,
+    /// Sim-clock end-to-end latency (arrival -> verdict), seconds.
     pub sim_latency_s: f64,
+    /// Schedule-induced share of `sim_latency_s` (queueing behind busy
+    /// timelines, batch-formation skew, batch stretch). Exactly `0.0`
+    /// when the request never waited — then `sim_latency_s` equals the
+    /// analytic `SimReport::stages[exit_index].cum_latency_s`
+    /// bit-for-bit.
+    pub sim_wait_s: f64,
+    /// Backend wall time attributed to this request (a batch's wall
+    /// time is split evenly over its members).
     pub wall_latency_s: f64,
 }
 
 #[derive(Debug)]
 pub struct ServeMetrics {
     pub completed: usize,
+    /// Requests shed at a full bounded queue (arrival-side sheds plus
+    /// mid-pipeline escalation drops); `completed + dropped` always
+    /// equals the offered `n_requests`.
     pub dropped: usize,
     pub wall_s: f64,
     pub throughput_rps: f64,
     /// Sim-clock end-to-end latency (arrival -> verdict), seconds.
     pub sim_latency: Summary,
+    /// Schedule-induced wait per completed request, seconds (the
+    /// queueing/batching share of `sim_latency`).
+    pub queue_wait: Summary,
     /// Wall-clock compute latency per request, seconds.
     pub wall_latency: Summary,
     pub mean_energy_mj: f64,
@@ -125,10 +147,11 @@ pub struct StageOutput {
     pub pred: i32,
 }
 
-/// Per-segment execution backend, moved onto the stage's worker
-/// thread. `label` is threaded through for backends that synthesize
-/// predictions (the PJRT backend ignores it).
-pub trait StageExec: Send {
+/// Per-segment execution backend, driven by the event loop at
+/// dispatch time on the calling thread. `label` is threaded through
+/// for backends that synthesize predictions (the PJRT backend
+/// ignores it).
+pub trait StageExec {
     fn run_single(&mut self, ifm: &HostTensor, label: i32) -> StageOutput;
 
     /// Micro-batched execution; the default runs samples one by one.
@@ -137,59 +160,9 @@ pub trait StageExec: Send {
     }
 }
 
-struct Job {
-    /// Request id, carried through the pipeline into [`RequestTrace`].
-    id: usize,
-    ifm: HostTensor,
-    label: i32,
-    sim_arrival: f64,
-    sim_ready: f64, // sim time when the sample became available at this queue
-    wall_start: Instant,
-}
-
-struct Done {
-    id: usize,
-    exit_index: usize,
-    label: i32,
-    pred: i32,
-    sim_arrival: f64,
-    sim_latency: f64,
-    wall_latency: f64,
-}
-
-/// Shared device timelines. Non-exclusive platforms keep one timeline
-/// per processor (so two segments mapped to the same processor
-/// serialize on it); exclusive-memory platforms share a single
-/// timeline across all processors. `busy_total` is always tracked per
-/// processor for utilization reporting.
-struct SimClock {
-    state: Mutex<ClockState>,
-    exclusive: bool,
-}
-
-struct ClockState {
-    timeline: Vec<f64>,
-    busy_total: Vec<f64>,
-}
-
-impl SimClock {
-    fn reserve(&self, proc: usize, ready: f64, duration: f64) -> f64 {
-        let mut st = self.state.lock().unwrap();
-        let idx = if self.exclusive { 0 } else { proc };
-        let start = st.timeline[idx].max(ready);
-        st.timeline[idx] = start + duration;
-        st.busy_total[proc] += duration;
-        start + duration
-    }
-
-    fn busy_totals(&self) -> Vec<f64> {
-        self.state.lock().unwrap().busy_total.clone()
-    }
-}
-
-/// Everything a stage worker needs besides its backend.
+/// Static per-stage inputs of the event loop.
+#[derive(Debug, Clone, Copy)]
 struct StageCtx {
-    seg: usize,
     proc: usize,
     is_last: bool,
     threshold: Option<f64>,
@@ -205,222 +178,6 @@ struct StagePlan {
     /// Per segment; `None` = final stage (always terminates).
     thresholds: Vec<Option<f64>>,
     sim: SimReport,
-}
-
-// ---------------------------------------------------------------------------
-// executor core
-// ---------------------------------------------------------------------------
-
-fn run_executor(
-    stages: Vec<Box<dyn StageExec>>,
-    plan: &StagePlan,
-    platform: &Platform,
-    num_classes: usize,
-    cfg: &ServeConfig,
-    mut next_job: impl FnMut(usize, &mut Rng) -> (HostTensor, i32),
-) -> Result<ServeMetrics> {
-    let nseg = plan.mapping.n_segments();
-    assert_eq!(stages.len(), nseg, "one stage per segment");
-    let nproc = platform.processors.len();
-
-    // --- channels ---------------------------------------------------------
-    let mut senders: Vec<mpsc::SyncSender<Job>> = Vec::new();
-    let mut receivers: Vec<mpsc::Receiver<Job>> = Vec::new();
-    for _ in 0..nseg {
-        let (tx, rx) = mpsc::sync_channel::<Job>(cfg.queue_cap);
-        senders.push(tx);
-        receivers.push(rx);
-    }
-    let (done_tx, done_rx) = mpsc::channel::<Done>();
-
-    let clock = Arc::new(SimClock {
-        state: Mutex::new(ClockState {
-            timeline: vec![0.0; nproc],
-            busy_total: vec![0.0; nproc],
-        }),
-        exclusive: platform.exclusive_memory,
-    });
-    let dropped = Arc::new(AtomicUsize::new(0));
-
-    // --- stage workers ----------------------------------------------------
-    let mut handles = Vec::new();
-    for (seg, (rx, exec)) in receivers.into_iter().zip(stages).enumerate() {
-        let proc = plan.mapping.proc_of(seg);
-        let ctx = StageCtx {
-            seg,
-            proc,
-            is_last: seg == nseg - 1,
-            threshold: plan.thresholds[seg],
-            compute_s: plan.sim.stages[seg].compute_s,
-            transfer_s: plan.sim.stages[seg].transfer_s,
-            batch_serial_frac: platform.processors[proc].batch_serial_frac,
-            batch_max: cfg.batch_max.max(1),
-        };
-        let next_tx = senders.get(seg + 1).cloned();
-        let done_tx = done_tx.clone();
-        let clock = Arc::clone(&clock);
-        let dropped = Arc::clone(&dropped);
-        handles.push(std::thread::spawn(move || {
-            stage_worker(exec, ctx, rx, next_tx, done_tx, clock, dropped)
-        }));
-    }
-    drop(done_tx);
-    let gen_tx = senders.remove(0);
-    drop(senders);
-
-    // --- generator --------------------------------------------------------
-    let mut rng = Rng::seeded(cfg.seed);
-    let mut sim_now = 0.0;
-    let wall0 = Instant::now();
-    let mut emitted = 0usize;
-    for i in 0..cfg.n_requests {
-        sim_now += rng.exp(cfg.arrival_rate_hz);
-        let (ifm, label) = next_job(i, &mut rng);
-        let job = Job {
-            id: i,
-            ifm,
-            label,
-            sim_arrival: sim_now,
-            sim_ready: sim_now,
-            wall_start: Instant::now(),
-        };
-        // arrival-side shedding is accounted via (n_requests - emitted);
-        // the atomic counter tracks mid-pipeline escalation drops only
-        match gen_tx.try_send(job) {
-            Ok(()) => emitted += 1,
-            Err(mpsc::TrySendError::Full(_)) => {}
-            Err(mpsc::TrySendError::Disconnected(_)) => break,
-        }
-    }
-    drop(gen_tx);
-
-    // --- collect ----------------------------------------------------------
-    let mut term_hist = vec![0usize; nseg];
-    let mut sim_lat = Vec::new();
-    let mut wall_lat = Vec::new();
-    let mut conf = Confusion::new(num_classes);
-    let mut energy = 0.0;
-    let mut traces = Vec::new();
-    for d in done_rx {
-        term_hist[d.exit_index] += 1;
-        sim_lat.push(d.sim_latency);
-        wall_lat.push(d.wall_latency);
-        conf.add(d.label as usize, d.pred as usize);
-        energy += plan.sim.stages[d.exit_index].cum_energy_mj;
-        traces.push(RequestTrace {
-            id: d.id,
-            exit_index: d.exit_index,
-            procs: plan.mapping.assignment[..=d.exit_index].to_vec(),
-            sim_arrival_s: d.sim_arrival,
-            sim_latency_s: d.sim_latency,
-            wall_latency_s: d.wall_latency,
-        });
-    }
-    for h in handles {
-        h.join().expect("stage worker panicked");
-    }
-    let wall_s = wall0.elapsed().as_secs_f64();
-    let completed = sim_lat.len();
-    traces.sort_by_key(|t| t.id);
-
-    Ok(ServeMetrics {
-        completed,
-        dropped: dropped.load(Ordering::Relaxed) + (cfg.n_requests - emitted),
-        wall_s,
-        throughput_rps: completed as f64 / wall_s,
-        sim_latency: summarize(&sim_lat),
-        wall_latency: summarize(&wall_lat),
-        mean_energy_mj: if completed > 0 { energy / completed as f64 } else { 0.0 },
-        term_hist,
-        quality: Quality::from_confusion(&conf),
-        traces,
-        proc_busy_s: clock.busy_totals(),
-    })
-}
-
-fn stage_worker(
-    mut exec: Box<dyn StageExec>,
-    ctx: StageCtx,
-    rx: mpsc::Receiver<Job>,
-    next_tx: Option<mpsc::SyncSender<Job>>,
-    done_tx: mpsc::Sender<Done>,
-    clock: Arc<SimClock>,
-    dropped: Arc<AtomicUsize>,
-) {
-    let mut pending: Vec<Job> = Vec::new();
-    loop {
-        // blocking recv for the first job; opportunistic drain up to batch_max
-        if pending.is_empty() {
-            match rx.recv() {
-                Ok(j) => pending.push(j),
-                Err(_) => break,
-            }
-        }
-        while pending.len() < ctx.batch_max {
-            match rx.try_recv() {
-                Ok(j) => pending.push(j),
-                Err(_) => break,
-            }
-        }
-        let batch: Vec<Job> = pending.drain(..).collect();
-        let k = batch.len();
-
-        // device clock: samples are ready after their incoming (routed)
-        // transfer. A serial core (batch_serial_frac == 1) gains nothing
-        // from device-side batching, so its samples are charged
-        // individually — identical to unbatched accounting even when the
-        // wall side micro-batches to amortize dispatch overhead. A
-        // batch-capable device is occupied once for the whole batch,
-        // scaled by its serialization fraction.
-        let sim_dones: Vec<f64> = if ctx.batch_serial_frac >= 1.0 - 1e-9 {
-            batch
-                .iter()
-                .map(|j| clock.reserve(ctx.proc, j.sim_ready + ctx.transfer_s, ctx.compute_s))
-                .collect()
-        } else {
-            let ready = batch
-                .iter()
-                .map(|j| j.sim_ready + ctx.transfer_s)
-                .fold(0.0f64, f64::max);
-            let duration = ctx.compute_s
-                * ((1.0 - ctx.batch_serial_frac) + ctx.batch_serial_frac * k as f64);
-            vec![clock.reserve(ctx.proc, ready, duration); k]
-        };
-
-        // wall clock: the backend decides how to execute the batch
-        let outs = if k == 1 {
-            vec![exec.run_single(&batch[0].ifm, batch[0].label)]
-        } else {
-            let refs: Vec<(&HostTensor, i32)> =
-                batch.iter().map(|j| (&j.ifm, j.label)).collect();
-            exec.run_batch(&refs)
-        };
-        debug_assert_eq!(outs.len(), k);
-
-        for ((mut job, out), sim_done) in batch.into_iter().zip(outs).zip(sim_dones) {
-            let terminate =
-                ctx.is_last || out.conf >= ctx.threshold.unwrap_or(f64::NEG_INFINITY);
-            if terminate {
-                let _ = done_tx.send(Done {
-                    id: job.id,
-                    exit_index: ctx.seg,
-                    label: job.label,
-                    pred: out.pred,
-                    sim_arrival: job.sim_arrival,
-                    sim_latency: sim_done - job.sim_arrival,
-                    wall_latency: job.wall_start.elapsed().as_secs_f64(),
-                });
-            } else if let Some(tx) = &next_tx {
-                // escalate along the assignment: the next stage adds its
-                // own incoming (routed) transfer time
-                job.ifm = out.ifm;
-                job.sim_ready = sim_done;
-                if tx.try_send(job).is_err() {
-                    dropped.fetch_add(1, Ordering::Relaxed);
-                }
-            }
-        }
-    }
 }
 
 // ---------------------------------------------------------------------------
@@ -509,7 +266,9 @@ impl StageExec for PjrtStageExec {
 /// solution's conditional termination probability and predicts the
 /// sample's label with the solution's expected accuracy. Lets the
 /// full executor (queues, escalation, device clocks, traces) run
-/// without artifacts or a PJRT build.
+/// without artifacts or a PJRT build. Verdicts depend only on the
+/// order samples pass through the stage — which the event loop makes
+/// deterministic and (for a FIFO queue) independent of `batch_max`.
 struct SynthStageExec {
     rng: Rng,
     /// P(terminate here | reached here); the final stage ignores it.
@@ -613,11 +372,12 @@ pub fn serve(
     })
 }
 
-/// Serve through the same stage-graph executor with the calibrated
+/// Serve through the same discrete-event executor with the calibrated
 /// synthetic backend: no artifacts, no PJRT — the executor's queues,
-/// escalation routing, device clocks and tracing all run for real,
+/// escalation routing, device timelines and tracing all run for real,
 /// while each stage's verdicts are drawn from the solution's expected
 /// termination rates and accuracy. Labels are sampled uniformly.
+/// Fully deterministic for a given `cfg`.
 pub fn serve_synthetic(
     graph: &BlockGraph,
     solution: &EennSolution,

@@ -76,6 +76,26 @@ impl Platform {
         self.processors.len()
     }
 
+    /// Number of independent device timelines: a single-ported-memory
+    /// platform serializes every processor on one shared timeline, all
+    /// other platforms run one timeline per processor.
+    pub fn n_timelines(&self) -> usize {
+        if self.exclusive_memory {
+            1
+        } else {
+            self.processors.len()
+        }
+    }
+
+    /// Timeline index a processor reserves compute on.
+    pub fn timeline_of(&self, proc: usize) -> usize {
+        if self.exclusive_memory {
+            0
+        } else {
+            proc
+        }
+    }
+
     /// Transfer time for `bytes` moved between two processors,
     /// store-and-forward along the chain interconnect (links[i]
     /// connects processors i and i+1; zero when `from == to`).
@@ -92,6 +112,57 @@ impl Platform {
             .iter()
             .map(|l| l.transfer_s(bytes) * l.active_mw)
             .sum()
+    }
+}
+
+/// Mutable device-timeline state shared by the analytic serving
+/// layers: one busy-until clock per timeline (see
+/// [`Platform::n_timelines`]) plus per-**processor** reserved-time
+/// totals for utilization reporting. Reservations are ordinary
+/// analytic bookkeeping — callers decide the reservation *order*
+/// (that order is what the coordinator's discrete-event scheduler
+/// makes deterministic).
+#[derive(Debug, Clone)]
+pub struct Timelines {
+    free_at: Vec<f64>,
+    busy_total: Vec<f64>,
+    exclusive: bool,
+}
+
+impl Timelines {
+    pub fn new(platform: &Platform) -> Self {
+        Timelines {
+            free_at: vec![0.0; platform.n_timelines()],
+            busy_total: vec![0.0; platform.processors.len()],
+            exclusive: platform.exclusive_memory,
+        }
+    }
+
+    /// Reserve `duration` seconds on `proc`'s timeline, starting no
+    /// earlier than `ready`; returns `(start, end)`. When the timeline
+    /// is idle at `ready`, `start == ready` bit-exactly (no epsilon) —
+    /// the property the DES↔analytic-sim equivalence tests rely on.
+    pub fn reserve(&mut self, proc: usize, ready: f64, duration: f64) -> (f64, f64) {
+        let idx = if self.exclusive { 0 } else { proc };
+        let start = self.free_at[idx].max(ready);
+        let end = start + duration;
+        self.free_at[idx] = end;
+        self.busy_total[proc] += duration;
+        (start, end)
+    }
+
+    /// Instant timeline `timeline` becomes free (0.0 if never used).
+    pub fn timeline_free_at(&self, timeline: usize) -> f64 {
+        self.free_at[timeline]
+    }
+
+    /// Total reserved device time per processor.
+    pub fn busy_totals(&self) -> &[f64] {
+        &self.busy_total
+    }
+
+    pub fn into_busy_totals(self) -> Vec<f64> {
+        self.busy_total
     }
 }
 
@@ -326,5 +397,47 @@ mod tests {
         let mut p = presets::psoc6();
         p.links.clear();
         assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn exclusive_memory_collapses_timelines() {
+        let psoc = presets::psoc6();
+        assert_eq!(psoc.n_timelines(), 1);
+        assert_eq!(psoc.timeline_of(1), 0);
+        let fog = presets::fog_cluster();
+        assert_eq!(fog.n_timelines(), 4);
+        assert_eq!(fog.timeline_of(2), 2);
+    }
+
+    #[test]
+    fn timelines_reserve_and_account() {
+        let p = presets::rk3588_cloud();
+        let mut tl = Timelines::new(&p);
+        // idle timeline: start == ready bit-exactly
+        let (s0, e0) = tl.reserve(1, 2.5, 1.0);
+        assert_eq!(s0, 2.5);
+        assert_eq!(e0, 3.5);
+        // busy timeline: the second reservation queues behind the first
+        let (s1, e1) = tl.reserve(1, 3.0, 0.5);
+        assert_eq!(s1, 3.5);
+        assert_eq!(e1, 4.0);
+        // independent processor: its own timeline is still idle
+        let (s2, _) = tl.reserve(0, 0.25, 1.0);
+        assert_eq!(s2, 0.25);
+        assert_eq!(tl.timeline_free_at(p.timeline_of(1)), 4.0);
+        assert_eq!(tl.busy_totals(), &[1.0, 1.5, 0.0]);
+    }
+
+    #[test]
+    fn exclusive_timelines_serialize_processors() {
+        let p = presets::psoc6();
+        let mut tl = Timelines::new(&p);
+        let (_, e0) = tl.reserve(0, 0.0, 1.0);
+        // a different processor still queues on the shared timeline,
+        // but busy totals stay per-processor
+        let (s1, _) = tl.reserve(1, 0.0, 2.0);
+        assert_eq!(s1, e0);
+        assert_eq!(tl.busy_totals(), &[1.0, 2.0]);
+        assert_eq!(tl.into_busy_totals(), vec![1.0, 2.0]);
     }
 }

@@ -18,20 +18,25 @@
 //! through all three layers: the [`mapping`] module defines
 //! `Mapping { exits, assignment }` and its co-search, [`sim`] prices
 //! a mapping on a platform (routed transfers, shared-processor
-//! memory), the search keeps architectures feasible under *some*
-//! assignment and ships the cheapest one inside [`eenn::EennSolution`],
-//! and the [`coordinator`]'s stage-graph executor serves it —
-//! escalation follows the assignment, segments sharing a processor
-//! serialize on its device timeline, and every stage micro-batches.
+//! memory) as the closed-form single-request fast path, the search
+//! keeps architectures feasible under *some* assignment and ships the
+//! cheapest one inside [`eenn::EennSolution`], and the
+//! [`coordinator`]'s **virtual-time discrete-event executor** serves
+//! it — escalation follows the assignment, segments sharing a
+//! processor serialize on its device timeline
+//! ([`hw::Timelines`]), every stage micro-batches, bounded queues
+//! shed with exact accounting, and every sim-clock number is
+//! deterministic (bit-identical to the analytic sim whenever a
+//! request never waits).
 //!
 //! The [`scenarios`] module closes the loop per use case: a registry
 //! of hermetic workload presets modeled on the paper's evaluation
-//! (`kws_psoc6`, `ecg_mcu`, `cifar_rk3588_cloud`, `stress_fog` — see
-//! the preset table in its docs), each running search → mapping
-//! co-search → analytic sim → synthetic serving and emitting a
-//! bit-reproducible `ScenarioReport` (CLI: `repro scenarios
-//! [--smoke]`, aggregated into `BENCH_scenarios.json` and guarded by
-//! the CI regression gate).
+//! (`kws_psoc6`, `ecg_mcu`, `cifar_rk3588_cloud`, `stress_fog`,
+//! `stress_fog_shed` — see the preset table in its docs), each
+//! running search → mapping co-search → analytic sim → synthetic
+//! serving and emitting a bit-reproducible `ScenarioReport` (CLI:
+//! `repro scenarios [--smoke]`, aggregated into
+//! `BENCH_scenarios.json` and guarded by the CI regression gate).
 //!
 //! ```no_run
 //! use eenn_na::prelude::*;

@@ -4,11 +4,13 @@
 //!   info                         manifest + artifact summary
 //!   augment --model M            run the NA flow, save the solution
 //!   eval    --model M --solution S   Table-2-style evaluation
-//!   serve   --model M --solution S   distributed serving simulation
+//!   serve   --model M --solution S   distributed serving through the
+//!                                deterministic discrete-event executor
 //!   report table2|fig4           regenerate paper artifacts
 //!   scenarios                    hermetic end-to-end scenario matrix
 //!                                (kws_psoc6 / ecg_mcu /
-//!                                cifar_rk3588_cloud / stress_fog),
+//!                                cifar_rk3588_cloud / stress_fog /
+//!                                stress_fog_shed),
 //!                                writes BENCH_scenarios.json
 
 use anyhow::{anyhow, Result};
@@ -64,7 +66,8 @@ fn run() -> Result<()> {
                  \x20               kws_psoc6           speech commands, PSoC6, 2.5s constraint\n\
                  \x20               ecg_mcu             easy majority: 100% early termination\n\
                  \x20               cifar_rk3588_cloud  CIFAR-10 fog offload\n\
-                 \x20               stress_fog          high-traffic four-tier fog serving"
+                 \x20               stress_fog          high-traffic four-tier fog serving\n\
+                 \x20               stress_fog_shed     bounded queues: deterministic shedding"
             );
             Ok(())
         }
@@ -202,7 +205,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
     };
     let m = serve(&engine, &man, model, &ws, &sol, &platform, &test, &cfg)?;
     println!(
-        "completed {}/{} (dropped {}), wall {:.2}s, {:.1} req/s",
+        "completed {}/{} (shed {}), wall {:.2}s, {:.1} req/s",
         m.completed,
         cfg.n_requests,
         m.dropped,
@@ -210,8 +213,12 @@ fn serve_cmd(args: &Args) -> Result<()> {
         m.throughput_rps
     );
     println!(
-        "sim latency  p50 {:.4}s p90 {:.4}s p99 {:.4}s",
+        "sim latency  p50 {:.4}s p90 {:.4}s p99 {:.4}s (deterministic virtual clock)",
         m.sim_latency.p50, m.sim_latency.p90, m.sim_latency.p99
+    );
+    println!(
+        "queue wait   p50 {:.4}s p99 {:.4}s (schedule-induced share)",
+        m.queue_wait.p50, m.queue_wait.p99
     );
     println!(
         "wall latency p50 {:.4}s p99 {:.4}s",

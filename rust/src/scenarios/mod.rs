@@ -17,26 +17,25 @@
 //! | `cifar_rk3588_cloud` | rk3588+cloud | CIFAR-10 distributed fog offload (up to 58.75%)  |
 //! | `stress_fog`         | fog-cluster  | high-traffic fog serving: arrivals far above the |
 //! |                      |              | first stage's service rate, queueing visible in  |
-//! |                      |              | the replayed latency tail                        |
+//! |                      |              | the executor's latency tail                      |
+//! | `stress_fog_shed`    | fog-cluster  | the same regime with bounded queues: the DES     |
+//! |                      |              | backpressure path sheds deterministically, with  |
+//! |                      |              | exact `shed + completed == offered` accounting   |
 //!
 //! # Determinism
 //!
 //! A [`ScenarioReport`] is **bit-reproducible**: running a preset
 //! twice — or at different search worker counts — yields byte-identical
 //! [`ScenarioReport::deterministic_json`] output (asserted by
-//! `tests/scenarios.rs`). Three ingredients make that hold:
+//! `tests/scenarios.rs`). Two ingredients make that hold:
 //!
 //! * the search core (`na::augment_prepared`) is deterministic for any
 //!   worker count (PR 2's order-preserving reductions);
-//! * serving runs with `batch_max = 1` and queues sized to the whole
-//!   trace, so the stage pipeline processes samples in strict arrival
-//!   order and never sheds — per-stage RNG draws, termination counts
-//!   and routing are schedule-independent;
-//! * latency percentiles, busy times and energy come from a
-//!   **deterministic arrival-ordered replay** of the served traces on
-//!   the analytic device clock, not from the free-running stage
-//!   threads (whose shared-timeline reservation order follows the OS
-//!   scheduler — see the known limitation in `crate::coordinator`).
+//! * the serving executor is a virtual-time discrete-event scheduler
+//!   (`crate::coordinator`): completions, sheds, termination counts,
+//!   per-request latencies and busy totals all come from the
+//!   deterministic event clock — the scenario layer consumes its
+//!   metrics directly, with no separate replay.
 //!
 //! Wall-clock timings (search/serve duration, throughput) are real and
 //! therefore volatile; they live under the report's `"timing"` key,
@@ -47,15 +46,13 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{serve_synthetic, RequestTrace, ServeConfig};
+use crate::coordinator::{serve_synthetic, ServeConfig};
 use crate::graph::BlockGraph;
 use crate::hw::{presets, Platform};
-use crate::mapping::Mapping;
 use crate::na::{self, ExitBank, ExitProfile, FlowConfig, TrainedExit};
-use crate::sim::{simulate, SimReport};
+use crate::sim::simulate;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::util::stats::summarize;
 
 /// How the synthetic calibration profiles of a scenario's exits are
 /// shaped — the knob that turns "CIFAR-like mixed difficulty" into
@@ -104,6 +101,11 @@ pub struct Scenario {
     pub w_eff: f64,
     pub w_acc: f64,
     pub traffic: TrafficTrace,
+    /// Serving queue bound, passed through to `ServeConfig::queue_cap`.
+    /// `0` = unbounded (roomy: the preset must not shed); a positive
+    /// value bounds the stage queues and lets the executor shed
+    /// deterministically.
+    pub queue_cap: usize,
 }
 
 /// Speech-command detection on the PSoC6 MCU testbed: 12-class
@@ -130,6 +132,7 @@ pub fn kws_psoc6() -> Scenario {
             smoke_n_requests: 400,
             seed: 7,
         },
+        queue_cap: 0,
     }
 }
 
@@ -168,6 +171,7 @@ pub fn ecg_mcu() -> Scenario {
             smoke_n_requests: 500,
             seed: 11,
         },
+        queue_cap: 0,
     }
 }
 
@@ -191,11 +195,12 @@ pub fn cifar_rk3588_cloud() -> Scenario {
             smoke_n_requests: 300,
             seed: 13,
         },
+        queue_cap: 0,
     }
 }
 
 /// High-traffic fog serving: a four-tier platform and an arrival rate
-/// far above the first stage's service rate, so the replayed latency
+/// far above the first stage's service rate, so the executor's latency
 /// tail shows sustained queueing (the scaling stress case every
 /// serving-path PR is measured against).
 pub fn stress_fog() -> Scenario {
@@ -216,12 +221,41 @@ pub fn stress_fog() -> Scenario {
             smoke_n_requests: 800,
             seed: 17,
         },
+        queue_cap: 0,
+    }
+}
+
+/// Bounded-queue shedding: the fog platform swamped well beyond any
+/// on-premise tier's service rate (the first segment serves at most
+/// ~15.5k req/s even on the fog GPU, against 25k req/s offered) with
+/// stage queues capped at 64 entries, so the executor's backpressure
+/// path must shed — deterministically, with exact
+/// `shed + completed == offered` accounting in the report.
+pub fn stress_fog_shed() -> Scenario {
+    Scenario {
+        name: "stress_fog_shed",
+        description: "bounded-queue overload on the fog cluster (deterministic shedding)",
+        graph: BlockGraph::synthetic_resnet(10, 4),
+        platform: presets::fog_cluster(),
+        bank_seed: 505,
+        n_cal: 400,
+        confidence: ConfidenceModel::Ramp { lo: 0.50, hi: 0.90 },
+        latency_constraint_s: f64::INFINITY,
+        w_eff: 0.9,
+        w_acc: 0.1,
+        traffic: TrafficTrace {
+            arrival_rate_hz: 25_000.0,
+            n_requests: 6_000,
+            smoke_n_requests: 600,
+            seed: 23,
+        },
+        queue_cap: 64,
     }
 }
 
 /// The full scenario matrix, in reporting order.
 pub fn all() -> Vec<Scenario> {
-    vec![kws_psoc6(), ecg_mcu(), cifar_rk3588_cloud(), stress_fog()]
+    vec![kws_psoc6(), ecg_mcu(), cifar_rk3588_cloud(), stress_fog(), stress_fog_shed()]
 }
 
 /// Calibration profile where every sample clears the top of the
@@ -326,15 +360,20 @@ pub struct ScenarioReport {
     /// Share of served requests that terminated before the final head.
     pub early_term_pct: f64,
     pub completed: usize,
-    pub dropped: usize,
+    /// Requests shed at a full bounded queue (exact accounting:
+    /// `shed + completed == n_requests` offered). Zero for every
+    /// roomy-queue preset; deterministic and nonzero for
+    /// `stress_fog_shed`.
+    pub shed: usize,
     /// Termination count per classifier (EEs then final).
     pub term_hist: Vec<usize>,
     pub accuracy: f64,
     pub mean_energy_mj: f64,
-    /// Reserved device time per processor on the replayed sim clock.
+    /// Reserved device time per processor on the executor's virtual
+    /// clock.
     pub proc_busy_s: Vec<f64>,
-    /// End-to-end sim latency percentiles from the deterministic
-    /// arrival-ordered replay.
+    /// End-to-end sim latency percentiles straight from the
+    /// deterministic discrete-event executor.
     pub sim_latency_p50_s: f64,
     pub sim_latency_p99_s: f64,
     // --- volatile wall-clock measurements -------------------------------
@@ -370,7 +409,7 @@ impl ScenarioReport {
         m.insert("measured_ops_reduction_pct".into(), Json::Num(self.measured_ops_reduction_pct));
         m.insert("early_term_pct".into(), Json::Num(self.early_term_pct));
         m.insert("completed".into(), Json::Num(self.completed as f64));
-        m.insert("dropped".into(), Json::Num(self.dropped as f64));
+        m.insert("shed".into(), Json::Num(self.shed as f64));
         m.insert("term_hist".into(), uarr(&self.term_hist));
         m.insert("accuracy".into(), Json::Num(self.accuracy));
         m.insert("mean_energy_mj".into(), Json::Num(self.mean_energy_mj));
@@ -416,8 +455,14 @@ impl ScenarioReport {
             self.mean_ops_reduction_pct, self.measured_ops_reduction_pct, self.early_term_pct
         );
         println!(
-            "  serving: {}/{} completed at {:.0} req/s arrival, term hist {:?}, acc {:.4}",
-            self.completed, self.n_requests, self.arrival_rate_hz, self.term_hist, self.accuracy
+            "  serving: {}/{} completed ({} shed) at {:.0} req/s arrival, \
+             term hist {:?}, acc {:.4}",
+            self.completed,
+            self.n_requests,
+            self.shed,
+            self.arrival_rate_hz,
+            self.term_hist,
+            self.accuracy
         );
         println!(
             "  sim latency p50 {:.4}s p99 {:.4}s | mean energy {:.3}mJ | busy {:?}s",
@@ -432,50 +477,13 @@ impl ScenarioReport {
     }
 }
 
-/// Outcome of the deterministic arrival-ordered replay.
-struct Replay {
-    latencies: Vec<f64>,
-    busy_s: Vec<f64>,
-}
-
-/// Replay the served traces on the analytic device clock in strict
-/// arrival (request-id) order: each request walks its escalation path,
-/// reserving every stage's processor timeline in turn (all processors
-/// share one timeline on exclusive-memory platforms, mirroring
-/// `coordinator::SimClock`). Deterministic by construction — the same
-/// traces always produce the same latencies and busy totals.
-fn replay(
-    traces: &[RequestTrace],
-    sim: &SimReport,
-    mapping: &Mapping,
-    platform: &Platform,
-) -> Replay {
-    let nproc = platform.processors.len();
-    let n_timelines = if platform.exclusive_memory { 1 } else { nproc };
-    let mut timeline = vec![0.0f64; n_timelines];
-    let mut busy_s = vec![0.0f64; nproc];
-    let mut latencies = Vec::with_capacity(traces.len());
-    for t in traces {
-        let mut cur = t.sim_arrival_s;
-        for seg in 0..=t.exit_index {
-            let proc = mapping.proc_of(seg);
-            let idx = if platform.exclusive_memory { 0 } else { proc };
-            let ready = cur + sim.stages[seg].transfer_s;
-            let start = timeline[idx].max(ready);
-            cur = start + sim.stages[seg].compute_s;
-            timeline[idx] = cur;
-            busy_s[proc] += sim.stages[seg].compute_s;
-        }
-        latencies.push(cur - t.sim_arrival_s);
-    }
-    Replay { latencies, busy_s }
-}
-
 /// Run one preset through the full closed loop: synthetic bank →
 /// `augment_prepared` (search + mapping co-search) → analytic sim →
-/// `serve_synthetic` traffic replay → deterministic latency replay.
-/// `workers` drives the search fan-out only; the report's
-/// deterministic payload is identical for every value.
+/// `serve_synthetic` through the discrete-event executor, whose
+/// metrics (latency percentiles, busy totals, sheds) are consumed
+/// directly — the executor *is* the deterministic replay. `workers`
+/// drives the search fan-out only; the report's deterministic payload
+/// is identical for every value.
 pub fn run_scenario(sc: &Scenario, workers: usize, smoke: bool) -> Result<ScenarioReport> {
     let bank = build_bank(sc);
     let cfg = FlowConfig {
@@ -491,12 +499,13 @@ pub fn run_scenario(sc: &Scenario, workers: usize, smoke: bool) -> Result<Scenar
     let sol = &out.solution;
 
     let n_requests = if smoke { sc.traffic.smoke_n_requests } else { sc.traffic.n_requests };
-    // batch_max = 1 and a queue sized to the whole trace keep the
-    // executor's counts/routing schedule-independent (see module docs)
+    // per-sample serving; the preset's queue bound passes straight
+    // through (0 = unbounded in the executor too, so roomy presets
+    // cannot shed)
     let scfg = ServeConfig {
         arrival_rate_hz: sc.traffic.arrival_rate_hz,
         n_requests,
-        queue_cap: n_requests.max(1),
+        queue_cap: sc.queue_cap,
         batch_max: 1,
         seed: sc.traffic.seed,
     };
@@ -505,27 +514,22 @@ pub fn run_scenario(sc: &Scenario, workers: usize, smoke: bool) -> Result<Scenar
     let serve_wall_s = t0.elapsed().as_secs_f64();
     if m.completed + m.dropped != n_requests {
         bail!(
-            "{}: request accounting broken ({} completed + {} dropped != {})",
+            "{}: request accounting broken ({} completed + {} shed != {} offered)",
             sc.name,
             m.completed,
             m.dropped,
             n_requests
         );
     }
-    if m.dropped != 0 {
-        bail!("{}: roomy queues must not shed ({} dropped)", sc.name, m.dropped);
+    if sc.queue_cap == 0 && m.dropped != 0 {
+        bail!("{}: roomy queues must not shed ({} shed)", sc.name, m.dropped);
+    }
+    if m.completed == 0 {
+        bail!("{}: nothing served (all {} offered requests shed)", sc.name, n_requests);
     }
 
     let mapping = sol.mapping();
     let sim = simulate(&sc.graph, &mapping, &sc.platform);
-    let rp = replay(&m.traces, &sim, &mapping, &sc.platform);
-    // the executor accounted the same device time, just in OS order;
-    // any real divergence means plan and execution disagree
-    for (p, (a, b)) in m.proc_busy_s.iter().zip(&rp.busy_s).enumerate() {
-        if (a - b).abs() > 1e-6 * b.abs().max(1.0) {
-            bail!("{}: busy-time mismatch on processor {p}: executor {a} vs replay {b}", sc.name);
-        }
-    }
 
     let total_macs = sc.graph.total_macs() as f64;
     let completed = m.completed as f64;
@@ -536,15 +540,7 @@ pub fn run_scenario(sc: &Scenario, workers: usize, smoke: bool) -> Result<Scenar
         .map(|(&c, st)| c as f64 * st.cum_macs as f64)
         .sum();
     let measured_frac = measured_macs / (completed * total_macs);
-    let mean_energy_mj = m
-        .term_hist
-        .iter()
-        .zip(&sim.stages)
-        .map(|(&c, st)| c as f64 * st.cum_energy_mj)
-        .sum::<f64>()
-        / completed;
     let early = m.completed - m.term_hist.last().copied().unwrap_or(0);
-    let lat = summarize(&rp.latencies);
 
     Ok(ScenarioReport {
         scenario: sc.name.to_string(),
@@ -565,13 +561,13 @@ pub fn run_scenario(sc: &Scenario, workers: usize, smoke: bool) -> Result<Scenar
         measured_ops_reduction_pct: 100.0 * (1.0 - measured_frac),
         early_term_pct: 100.0 * early as f64 / completed,
         completed: m.completed,
-        dropped: m.dropped,
+        shed: m.dropped,
         term_hist: m.term_hist.clone(),
         accuracy: m.quality.accuracy,
-        mean_energy_mj,
-        proc_busy_s: rp.busy_s,
-        sim_latency_p50_s: lat.p50,
-        sim_latency_p99_s: lat.p99,
+        mean_energy_mj: m.mean_energy_mj,
+        proc_busy_s: m.proc_busy_s.clone(),
+        sim_latency_p50_s: m.sim_latency.p50,
+        sim_latency_p99_s: m.sim_latency.p99,
         search_wall_s,
         serve_wall_s,
         throughput_rps: m.throughput_rps,
@@ -614,17 +610,21 @@ mod tests {
     #[test]
     fn presets_are_wellformed() {
         let ps = all();
-        assert_eq!(ps.len(), 4);
+        assert_eq!(ps.len(), 5);
         let mut names: Vec<&str> = ps.iter().map(|s| s.name).collect();
         names.sort_unstable();
         names.dedup();
-        assert_eq!(names.len(), 4, "preset names must be unique");
+        assert_eq!(names.len(), 5, "preset names must be unique");
         for sc in &ps {
             sc.platform.validate().unwrap();
             assert!(sc.platform.max_classifiers() >= 2, "{}: needs room for an EE", sc.name);
             assert!(sc.traffic.smoke_n_requests > 0);
             assert!(sc.traffic.smoke_n_requests <= sc.traffic.n_requests);
         }
+        // exactly one bounded-queue (shedding) preset in the matrix
+        let bounded: Vec<&str> =
+            ps.iter().filter(|s| s.queue_cap > 0).map(|s| s.name).collect();
+        assert_eq!(bounded, vec!["stress_fog_shed"]);
     }
 
     #[test]
@@ -654,22 +654,24 @@ mod tests {
     }
 
     #[test]
-    fn replay_is_fifo_on_an_idle_platform() {
-        // one request, one segment: latency = transfer + compute
-        let sc = cifar_rk3588_cloud();
-        let mapping = Mapping::chain(vec![]);
-        let sim = simulate(&sc.graph, &mapping, &sc.platform);
-        let traces = vec![RequestTrace {
-            id: 0,
-            exit_index: 0,
-            procs: vec![0],
-            sim_latency_s: 0.0,
-            wall_latency_s: 0.0,
-            sim_arrival_s: 1.0,
-        }];
-        let rp = replay(&traces, &sim, &mapping, &sc.platform);
-        let expect = sim.stages[0].transfer_s + sim.stages[0].compute_s;
-        assert!((rp.latencies[0] - expect).abs() < 1e-12);
-        assert!((rp.busy_s[0] - sim.stages[0].compute_s).abs() < 1e-12);
+    fn shed_preset_is_overloaded_on_every_local_tier() {
+        // the guarantee behind the deterministic-shed claim: the
+        // offered rate exceeds the first segment's service rate on
+        // every tier a sane mapping would place it on (everything but
+        // the cloud GPU, which the WAN hop prices out of seg-0)
+        let sc = stress_fog_shed();
+        assert!(sc.queue_cap > 0, "bounded queues");
+        let seg0_macs: f64 = sc.graph.blocks[..=1].iter().map(|b| b.macs as f64).sum();
+        for proc in &sc.platform.processors[..3] {
+            let service_hz = proc.macs_per_sec / seg0_macs;
+            assert!(
+                sc.traffic.arrival_rate_hz > 1.5 * service_hz,
+                "{}: {} req/s must swamp {} ({:.0} req/s capacity)",
+                sc.name,
+                sc.traffic.arrival_rate_hz,
+                proc.name,
+                service_hz
+            );
+        }
     }
 }

@@ -2,6 +2,14 @@
 //! platform and produces per-exit latency/energy, worst-case latency,
 //! and expectation under a termination distribution.
 //!
+//! This is the **closed-form fast path** of the serving stack: it
+//! prices a *single, uncontended* request walking the mapped cascade.
+//! The coordinator's discrete-event executor reproduces these numbers
+//! bit-exactly whenever a request never waits (its per-stage
+//! accumulation order is deliberately identical — asserted by
+//! `tests/des_equivalence.rs`), and generalizes them with queueing,
+//! micro-batching and backpressure under load.
+//!
 //! The model mirrors the paper's §4 methodology: segment time =
 //! MACs / processor throughput; transfer time = IFM bytes routed over
 //! the chain interconnect between the executing processors (zero when
@@ -55,6 +63,15 @@ pub struct SimReport {
 impl SimReport {
     pub fn feasible(&self, latency_constraint_s: f64) -> bool {
         self.worst_case_s <= latency_constraint_s && self.memory_ok.iter().all(|&b| b)
+    }
+
+    /// Closed-form (latency, energy, macs) of one request terminating
+    /// at classifier `exit` on an otherwise idle platform — the values
+    /// the discrete-event executor reproduces bit-exactly for requests
+    /// whose accumulated wait is zero.
+    pub fn isolated(&self, exit: usize) -> (f64, f64, u64) {
+        let st = &self.stages[exit];
+        (st.cum_latency_s, st.cum_energy_mj, st.cum_macs)
     }
 
     /// Expectation of (latency, energy, macs) under a per-classifier
@@ -206,6 +223,19 @@ mod tests {
             prev = s.cum_latency_s;
         }
         assert!((r.worst_case_s - prev).abs() < 1e-12);
+    }
+
+    #[test]
+    fn isolated_matches_stage_cumulatives() {
+        let g = tiny_graph();
+        let p = presets::rk3588_cloud();
+        let r = simulate(&g, &Mapping::chain(vec![1, 4]), &p);
+        for (i, st) in r.stages.iter().enumerate() {
+            let (l, e, m) = r.isolated(i);
+            assert_eq!(l, st.cum_latency_s);
+            assert_eq!(e, st.cum_energy_mj);
+            assert_eq!(m, st.cum_macs);
+        }
     }
 
     #[test]

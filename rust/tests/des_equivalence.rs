@@ -1,0 +1,313 @@
+//! DES ↔ analytic-sim equivalence battery (hermetic: no artifacts,
+//! no PJRT).
+//!
+//! The discrete-event executor and `sim::simulate` are two views of
+//! one model: the sim is the closed form for a single uncontended
+//! request, the DES generalizes it with queueing, batching and
+//! backpressure. Their contract, asserted here:
+//!
+//! * a request whose accumulated `sim_wait_s` is zero reports a
+//!   latency **bit-identical** to the analytic
+//!   `stages[exit].cum_latency_s` — for random mappings and for every
+//!   scenario preset's co-searched solution (`batch_max = 1`);
+//! * energy and termination accounting always match the analytic
+//!   per-exit costs, contended or not;
+//! * on chain mappings the executor reproduces the pre-refactor
+//!   arrival-ordered replay (the deleted `scenarios::replay`) to
+//!   float rounding, loaded or idle — a reference copy of that replay
+//!   lives below as the regression oracle.
+
+use eenn_na::coordinator::{serve_synthetic, RequestTrace, ServeConfig, ServeMetrics};
+use eenn_na::eenn::EennSolution;
+use eenn_na::graph::BlockGraph;
+use eenn_na::hw::{presets, Platform};
+use eenn_na::mapping::Mapping;
+use eenn_na::na::{self, FlowConfig};
+use eenn_na::scenarios;
+use eenn_na::sim::{simulate, SimReport};
+use eenn_na::util::rng::Rng;
+
+fn synth_solution(exits: Vec<usize>, assignment: Vec<usize>, term: Vec<f64>) -> EennSolution {
+    let k = exits.len();
+    EennSolution {
+        model: "synthetic".into(),
+        platform: "test".into(),
+        exits,
+        assignment,
+        thresholds: vec![0.6; k],
+        raw_thresholds: vec![0.6; k],
+        correction_factor: 1.0,
+        heads: vec![],
+        expected_term_rates: term,
+        expected_acc: 0.9,
+        expected_mac_frac: 0.5,
+        score: 0.0,
+    }
+}
+
+/// Assert the fast-path contract on served metrics: zero-wait traces
+/// match the analytic latency bit-for-bit, waits are never negative,
+/// the wait decomposition is consistent, and energy/termination
+/// accounting follows the analytic per-exit costs.
+fn assert_fast_path(m: &ServeMetrics, sim: &SimReport, ctx: &str) -> usize {
+    assert!(m.completed > 0, "{ctx}: nothing served");
+    let mut exact = 0;
+    for t in &m.traces {
+        let (cum_lat, ..) = sim.isolated(t.exit_index);
+        assert!(t.sim_wait_s >= 0.0, "{ctx}: negative wait {}", t.sim_wait_s);
+        if t.sim_wait_s == 0.0 {
+            assert_eq!(
+                t.sim_latency_s, cum_lat,
+                "{ctx}: request {} (exit {}) uncontended latency must be bit-exact",
+                t.id, t.exit_index
+            );
+            exact += 1;
+        } else {
+            // contended: latency = analytic base + wait, to rounding
+            let rebuilt = cum_lat + t.sim_wait_s;
+            assert!(
+                (t.sim_latency_s - rebuilt).abs() <= 1e-9 * rebuilt.max(1.0),
+                "{ctx}: request {}: latency {} != base {} + wait {}",
+                t.id,
+                t.sim_latency_s,
+                cum_lat,
+                t.sim_wait_s
+            );
+        }
+    }
+    // energy is the termination-histogram mix of analytic per-exit costs
+    let expect_energy: f64 = m
+        .term_hist
+        .iter()
+        .enumerate()
+        .map(|(e, &c)| c as f64 * sim.stages[e].cum_energy_mj)
+        .sum::<f64>()
+        / m.completed as f64;
+    assert!(
+        (m.mean_energy_mj - expect_energy).abs() <= 1e-9 * expect_energy.max(1e-12),
+        "{ctx}: energy {} vs analytic mix {}",
+        m.mean_energy_mj,
+        expect_energy
+    );
+    assert_eq!(m.term_hist.iter().sum::<usize>(), m.completed, "{ctx}: term accounting");
+    exact
+}
+
+#[test]
+fn random_mappings_match_analytic_sim_when_uncontended() {
+    // arrivals eons apart (1e-9 req/s): every request sees an idle
+    // platform, so the DES must reproduce the closed form bit-exactly
+    let mut rng = Rng::seeded(0xD35);
+    let platforms = [presets::psoc6(), presets::rk3588_cloud(), presets::fog_cluster()];
+    for case in 0..24 {
+        let platform = &platforms[case % platforms.len()];
+        let nproc = platform.processors.len();
+        let graph = BlockGraph::synthetic_resnet(6, 2);
+        // random ascending exits over the EE sites, random assignment
+        let k = 1 + rng.below(2.min(graph.ee_locations.len()));
+        let mut exits: Vec<usize> = Vec::new();
+        for _ in 0..k {
+            let loc = graph.ee_locations[rng.below(graph.ee_locations.len())];
+            if !exits.contains(&loc) {
+                exits.push(loc);
+            }
+        }
+        exits.sort_unstable();
+        let nseg = exits.len() + 1;
+        let assignment: Vec<usize> = (0..nseg).map(|_| rng.below(nproc)).collect();
+        let mut term: Vec<f64> = (0..nseg).map(|_| 0.05 + rng.f64()).collect();
+        let total: f64 = term.iter().sum();
+        term.iter_mut().for_each(|t| *t /= total);
+
+        let sol = synth_solution(exits.clone(), assignment.clone(), term);
+        let mapping = sol.mapping();
+        mapping.validate(platform).unwrap();
+        let sim = simulate(&graph, &mapping, platform);
+        let cfg = ServeConfig {
+            arrival_rate_hz: 1e-9,
+            n_requests: 40,
+            queue_cap: 64,
+            batch_max: 1,
+            seed: 100 + case as u64,
+        };
+        let m = serve_synthetic(&graph, &sol, platform, &cfg).unwrap();
+        assert_eq!(m.completed, 40, "case {case}: roomy queues, no shed");
+        let ctx = format!("case {case} ({} exits {exits:?} -> {assignment:?})", platform.name);
+        let exact = assert_fast_path(&m, &sim, &ctx);
+        assert!(
+            exact * 10 >= m.completed * 9,
+            "{ctx}: at 1e-9 req/s nearly every request must be wait-free ({exact}/{})",
+            m.completed
+        );
+    }
+}
+
+#[test]
+fn every_preset_solution_matches_analytic_sim_when_uncontended() {
+    // the acceptance claim: with batch_max = 1 the DES reproduces
+    // sim::simulate's latency/energy/termination numbers exactly on
+    // every preset's co-searched solution once queueing is out of the
+    // picture (same trace shape, arrival rate scaled to isolation)
+    for sc in scenarios::all() {
+        let bank = scenarios::build_bank(&sc);
+        let cfg = FlowConfig {
+            latency_constraint_s: sc.latency_constraint_s,
+            w_eff: sc.w_eff,
+            w_acc: sc.w_acc,
+            workers: 1,
+            ..FlowConfig::default()
+        };
+        let out = na::augment_prepared(&bank, &sc.graph, sc.name, &sc.platform, &cfg, None)
+            .expect("search must run hermetically");
+        let sol = &out.solution;
+        let sim = simulate(&sc.graph, &sol.mapping(), &sc.platform);
+
+        let scfg = ServeConfig {
+            arrival_rate_hz: 1e-9,
+            n_requests: 50,
+            queue_cap: 50,
+            batch_max: 1,
+            seed: sc.traffic.seed,
+        };
+        let m = serve_synthetic(&sc.graph, sol, &sc.platform, &scfg).unwrap();
+        assert_eq!(m.completed, 50, "{}: isolated serving must not shed", sc.name);
+        let exact = assert_fast_path(&m, &sim, sc.name);
+        assert_eq!(
+            exact, m.completed,
+            "{}: every isolated request must hit the closed-form fast path",
+            sc.name
+        );
+        // and the loaded run still satisfies the decomposition contract
+        let loaded = ServeConfig {
+            arrival_rate_hz: sc.traffic.arrival_rate_hz,
+            n_requests: sc.traffic.smoke_n_requests,
+            queue_cap: sc.queue_cap, // 0 = unbounded
+            batch_max: 1,
+            seed: sc.traffic.seed,
+        };
+        let lm = serve_synthetic(&sc.graph, sol, &sc.platform, &loaded).unwrap();
+        assert_fast_path(&lm, &sim, &format!("{} (loaded)", sc.name));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pre-refactor replay oracle
+// ---------------------------------------------------------------------------
+
+/// Verbatim copy of the arrival-ordered replay the scenario layer
+/// used before the executor became a discrete-event scheduler
+/// (deleted `scenarios::replay`). Kept here as the regression oracle:
+/// on chain mappings — one stage per timeline, FIFO arrivals — the
+/// replay's reservation schedule and the DES's coincide, so the
+/// executor must reproduce its latencies and busy totals to float
+/// rounding. (On *shared* timelines the two disciplines legitimately
+/// differ: the replay let an escalation cut ahead of an
+/// earlier-enqueued arrival; the DES serves strict enqueue order.)
+fn replay_oracle(
+    traces: &[RequestTrace],
+    sim: &SimReport,
+    mapping: &Mapping,
+    platform: &Platform,
+) -> (Vec<f64>, Vec<f64>) {
+    let nproc = platform.processors.len();
+    let n_timelines = if platform.exclusive_memory { 1 } else { nproc };
+    let mut timeline = vec![0.0f64; n_timelines];
+    let mut busy_s = vec![0.0f64; nproc];
+    let mut latencies = Vec::with_capacity(traces.len());
+    for t in traces {
+        let mut cur = t.sim_arrival_s;
+        for seg in 0..=t.exit_index {
+            let proc = mapping.proc_of(seg);
+            let idx = if platform.exclusive_memory { 0 } else { proc };
+            let ready = cur + sim.stages[seg].transfer_s;
+            let start = timeline[idx].max(ready);
+            cur = start + sim.stages[seg].compute_s;
+            timeline[idx] = cur;
+            busy_s[proc] += sim.stages[seg].compute_s;
+        }
+        latencies.push(cur - t.sim_arrival_s);
+    }
+    (latencies, busy_s)
+}
+
+#[test]
+fn chain_mapping_reproduces_prerefactor_replay_under_load() {
+    // stress_fog regime on a chain mapping: heavy sustained queueing,
+    // every timeline serving exactly one stage — the executor must
+    // match the old replay per request
+    let graph = BlockGraph::synthetic_resnet(10, 4);
+    let platform = presets::fog_cluster();
+    let sol = synth_solution(vec![1, 2, 3], vec![0, 1, 2, 3], vec![0.4, 0.3, 0.2, 0.1]);
+    let cfg = ServeConfig {
+        arrival_rate_hz: 1_500.0,
+        n_requests: 800,
+        queue_cap: 800,
+        batch_max: 1,
+        seed: 17,
+    };
+    let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
+    assert_eq!(m.completed, 800);
+    let sim = simulate(&graph, &sol.mapping(), &platform);
+    let (lat, busy) = replay_oracle(&m.traces, &sim, &sol.mapping(), &platform);
+    assert!(
+        m.queue_wait.max > 0.0,
+        "the stress regime must actually queue (p99 wait {})",
+        m.queue_wait.p99
+    );
+    for (t, &l) in m.traces.iter().zip(&lat) {
+        assert!(
+            (t.sim_latency_s - l).abs() <= 1e-9 * l.max(1.0),
+            "request {}: executor {} vs replay {}",
+            t.id,
+            t.sim_latency_s,
+            l
+        );
+    }
+    for (p, (&a, &b)) in m.proc_busy_s.iter().zip(&busy).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-9 * b.abs().max(1e-12),
+            "processor {p}: executor busy {a} vs replay {b}"
+        );
+    }
+}
+
+#[test]
+fn shared_timeline_reproduces_prerefactor_replay_when_idle() {
+    // exclusive-memory platform (one shared timeline): the disciplines
+    // coincide whenever requests never overlap. The old replay
+    // accumulated absolute times (arrival + stage sums − arrival), so
+    // parity is to float rounding, not bit-exact — the bit-exact
+    // anchor is the analytic sim, covered above.
+    let graph = BlockGraph::synthetic_resnet(10, 2);
+    let platform = presets::psoc6();
+    let sol = synth_solution(vec![2], vec![0, 1], vec![0.6, 0.4]);
+    let cfg = ServeConfig {
+        arrival_rate_hz: 1e-9,
+        n_requests: 60,
+        queue_cap: 64,
+        batch_max: 1,
+        seed: 3,
+    };
+    let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
+    assert_eq!(m.completed, 60);
+    assert_eq!(m.queue_wait.max, 0.0, "isolated arrivals must never wait");
+    let sim = simulate(&graph, &sol.mapping(), &platform);
+    let (lat, busy) = replay_oracle(&m.traces, &sim, &sol.mapping(), &platform);
+    for (t, &l) in m.traces.iter().zip(&lat) {
+        // 1e-4 s absolute: the replay's arrival times sit near 4e10 s
+        // at this rate, costing ~1e-5 s of f64 resolution per request
+        assert!(
+            (t.sim_latency_s - l).abs() < 1e-4,
+            "request {}: executor {} vs replay {}",
+            t.id,
+            t.sim_latency_s,
+            l
+        );
+    }
+    for (p, (&a, &b)) in m.proc_busy_s.iter().zip(&busy).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-9 * b.abs().max(1e-12),
+            "processor {p}: executor busy {a} vs replay {b}"
+        );
+    }
+}

@@ -1,12 +1,15 @@
-//! Integration: mapping co-search → stage-graph executor, end to end,
-//! hermetically (synthetic stage backend — no artifacts, no PJRT).
+//! Integration: mapping co-search → discrete-event serving executor,
+//! end to end, hermetically (synthetic stage backend — no artifacts,
+//! no PJRT).
 //!
-//! Covers the tentpole acceptance criteria: on a heterogeneous
-//! platform with more processors than exits the co-search finds a
-//! non-identity assignment that costs no more than the identity
-//! chain, and the coordinator serves that same mapping — escalation
-//! follows the assignment, the termination histogram is consistent
-//! with the simulator's termination distribution.
+//! Covers: on a heterogeneous platform with more processors than
+//! exits the co-search finds a non-identity assignment that costs no
+//! more than the identity chain, and the coordinator serves that same
+//! mapping — escalation follows the assignment, the termination
+//! histogram is consistent with the simulator's termination
+//! distribution, and every virtual-clock number is deterministic
+//! (including under micro-batching, where the event clock replaced
+//! the old free-running stage threads).
 
 use eenn_na::coordinator::{serve_synthetic, ServeConfig};
 use eenn_na::eenn::EennSolution;
@@ -162,6 +165,15 @@ fn executor_backpressure_sheds_under_overload() {
     let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
     assert!(m.dropped > 0, "expected drops under overload");
     assert_eq!(m.completed + m.dropped, cfg.n_requests);
+    // shedding is part of the virtual clock now: the count, the
+    // surviving ids and their latencies are all schedule-independent
+    let again = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
+    assert_eq!(m.dropped, again.dropped);
+    assert_eq!(m.term_hist, again.term_hist);
+    let ids = |m: &eenn_na::coordinator::ServeMetrics| {
+        m.traces.iter().map(|t| t.id).collect::<Vec<_>>()
+    };
+    assert_eq!(ids(&m), ids(&again), "identical survivors run to run");
 }
 
 #[test]
@@ -188,4 +200,13 @@ fn per_stage_micro_batching_preserves_accounting() {
     // both routes served through the same processors
     assert!(batched.proc_busy_s[0] > 0.0 && batched.proc_busy_s[1] > 0.0);
     assert_eq!(batched.proc_busy_s[2], 0.0);
+    // FIFO queues + per-stage RNG: every sample meets each stage in
+    // the same order whatever the batch bound, so the verdicts — and
+    // with them the termination histogram and every escalation path —
+    // are batch-invariant; only the timing moves
+    assert_eq!(single.term_hist, batched.term_hist);
+    let exits = |m: &eenn_na::coordinator::ServeMetrics| {
+        m.traces.iter().map(|t| (t.id, t.exit_index)).collect::<Vec<_>>()
+    };
+    assert_eq!(exits(&single), exits(&batched));
 }

@@ -1,9 +1,12 @@
 //! Hermetic scenario-matrix battery (no artifacts, no PJRT): every
 //! preset's closed loop — search → mapping co-search → analytic sim →
-//! synthetic serving → deterministic replay — must be bit-reproducible
-//! across repeated runs and across search worker counts, and the
-//! per-preset reports must carry the paper-shaped claims (`ecg_mcu`
-//! terminates 100% of traffic early).
+//! synthetic serving through the discrete-event executor — must be
+//! bit-reproducible across repeated runs and across search worker
+//! counts, and the per-preset reports must carry the paper-shaped
+//! claims (`ecg_mcu` terminates 100% of traffic early; the
+//! bounded-queue preset sheds deterministically with exact
+//! accounting). The latency/busy numbers asserted here are
+//! executor-produced — there is no separate replay layer left.
 
 use eenn_na::scenarios::{self, ScenarioReport};
 
@@ -62,9 +65,14 @@ fn ecg_mcu_terminates_all_traffic_early() {
 #[test]
 fn reports_are_internally_consistent() {
     for sc in scenarios::all() {
+        let bounded = sc.queue_cap > 0;
         let r = run(&sc, 2);
-        assert_eq!(r.completed + r.dropped, r.n_requests, "{}", sc.name);
-        assert_eq!(r.dropped, 0, "{}: roomy queues must not shed", sc.name);
+        assert_eq!(r.completed + r.shed, r.n_requests, "{}: shed accounting", sc.name);
+        if bounded {
+            assert!(r.shed > 0, "{}: bounded queues under overload must shed", sc.name);
+        } else {
+            assert_eq!(r.shed, 0, "{}: roomy queues must not shed", sc.name);
+        }
         assert_eq!(
             r.term_hist.iter().sum::<usize>(),
             r.completed,
@@ -82,13 +90,22 @@ fn reports_are_internally_consistent() {
         assert!(r.sim_latency_p99_s >= r.sim_latency_p50_s, "{}", sc.name);
         assert!(r.sim_latency_p50_s > 0.0, "{}", sc.name);
         assert!(r.accuracy > 0.0 && r.accuracy <= 1.0, "{}", sc.name);
-        // a processor accumulates busy time iff some segment assigned
-        // to it actually received traffic (suffix of the term hist)
         for (p, &busy) in r.proc_busy_s.iter().enumerate() {
-            let visited = r.assignment.iter().enumerate().any(|(seg, &proc)| {
-                proc == p && r.term_hist[seg..].iter().sum::<usize>() > 0
-            });
-            assert_eq!(busy > 0.0, visited, "{}: processor {p} busy {busy}", sc.name);
+            if bounded {
+                // escalations can execute a segment and then be shed at
+                // the next queue, so only the weaker direction holds:
+                // device time implies the processor was assigned
+                let assigned = r.assignment.contains(&p);
+                assert!(assigned || busy == 0.0, "{}: unassigned proc {p} busy {busy}", sc.name);
+            } else {
+                // a processor accumulates busy time iff some segment
+                // assigned to it actually received traffic (suffix of
+                // the term hist)
+                let visited = r.assignment.iter().enumerate().any(|(seg, &proc)| {
+                    proc == p && r.term_hist[seg..].iter().sum::<usize>() > 0
+                });
+                assert_eq!(busy > 0.0, visited, "{}: processor {p} busy {busy}", sc.name);
+            }
         }
     }
 }
@@ -104,6 +121,25 @@ fn stress_fog_is_the_high_traffic_preset() {
     let r = run(&sc, 2);
     assert_eq!(r.completed, r.n_requests, "roomy queues must absorb the burst");
     assert!(r.sim_latency_p99_s >= r.sim_latency_p50_s);
+}
+
+#[test]
+fn stress_fog_shed_sheds_deterministically() {
+    // the DES backpressure path end to end: bounded queues under a
+    // swamping Poisson trace shed a deterministic, nonzero share with
+    // exact accounting
+    let sc = scenarios::stress_fog_shed();
+    let a = run(&sc, 1);
+    assert!(a.shed > 0, "bounded queues must shed: {:?}", (a.completed, a.shed));
+    assert!(a.completed > 0, "the surviving share must still be served");
+    assert_eq!(a.completed + a.shed, a.n_requests, "shed + completed == offered");
+    let b = run(&sc, 4);
+    assert_eq!(a.shed, b.shed, "shed count must be schedule-independent");
+    assert_eq!(
+        a.deterministic_json().to_string(),
+        b.deterministic_json().to_string(),
+        "shed report must be byte-identical across worker counts"
+    );
 }
 
 #[test]
@@ -125,6 +161,7 @@ fn bench_json_carries_per_preset_ops_reduction() {
             .as_f64()
             .unwrap();
         assert!(red.is_finite(), "{name}: reduction must be finite");
+        assert!(entry.get("shed").is_some(), "{name}: shed accounting present");
         assert!(entry.get("timing").is_some(), "{name}: timing block present in bench json");
         assert!(
             entry.get("workers").is_none(),

@@ -1,6 +1,9 @@
 //! Integration: the distributed serving coordinator on real
 //! artifacts — completion, quality, backpressure, batching, and
-//! sim-clock sanity.
+//! sim-clock sanity. The executor is the virtual-time discrete-event
+//! scheduler: PJRT backends do their real compute at event-dispatch
+//! time, while every sim-clock number (latencies, sheds, busy
+//! totals) is deterministic for a given `ServeConfig`.
 
 use eenn_na::coordinator::{serve, ServeConfig};
 use eenn_na::data::load_split;
