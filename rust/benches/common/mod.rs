@@ -62,3 +62,48 @@ pub fn profile_family(
 pub fn have_artifacts() -> bool {
     std::path::Path::new("artifacts/manifest.json").exists()
 }
+
+/// Shared two-plane pipeline-speedup measurement: serve `cfg` through
+/// the burn backend (`burn_ns` of wall work per sample) with the
+/// inline exec plane and with 4 exec workers, assert the virtual
+/// metrics did not move, and return `(inline, pipelined, json)` where
+/// `json` is the `pipeline_speedup` object both bench documents embed
+/// under `timing` (key names must stay in lockstep with the committed
+/// `ci/baselines/` gates — which is why this lives here, once).
+pub fn pipeline_speedup(
+    graph: &eenn_na::graph::BlockGraph,
+    sol: &eenn_na::eenn::EennSolution,
+    platform: &eenn_na::hw::Platform,
+    cfg: &eenn_na::coordinator::ServeConfig,
+    burn_ns: u64,
+) -> (
+    eenn_na::coordinator::ServeMetrics,
+    eenn_na::coordinator::ServeMetrics,
+    eenn_na::util::json::Json,
+) {
+    use eenn_na::coordinator::{serve_synthetic_burn, ServeConfig};
+    use eenn_na::util::json::Json;
+    use std::collections::BTreeMap;
+
+    let run = |exec_workers: usize| {
+        let c = ServeConfig { exec_workers, ..cfg.clone() };
+        serve_synthetic_burn(graph, sol, platform, &c, burn_ns).expect("burn serve")
+    };
+    run(1); // warmup
+    let m1 = run(1);
+    let m4 = run(4);
+    assert_eq!(m1.term_hist, m4.term_hist, "exec workers must not move verdicts");
+    assert_eq!(
+        m1.sim_latency.p99.to_bits(),
+        m4.sim_latency.p99.to_bits(),
+        "virtual clock must be bit-equal across exec workers"
+    );
+    let mut pipe = BTreeMap::new();
+    pipe.insert("exec_workers_1_rps".to_string(), Json::Num(m1.throughput_rps));
+    pipe.insert("exec_workers_4_rps".to_string(), Json::Num(m4.throughput_rps));
+    pipe.insert(
+        "speedup_vs_1".to_string(),
+        Json::Num(m4.throughput_rps / m1.throughput_rps),
+    );
+    (m1, m4, Json::Obj(pipe))
+}

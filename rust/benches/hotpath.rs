@@ -1,27 +1,104 @@
 //! Hot-path micro-benchmarks: the per-request serving loop.
 //!
-//! * staged adaptive inference (block exec -> fused decision kernel)
-//!   per sample, per model;
-//! * engine dispatch overhead (channel round-trip + literal
-//!   conversion) vs pure PJRT execute time;
-//! * batched vs single-sample execution on the escalation path.
+//! Two modes:
 //!
-//! These are the numbers the §Perf pass optimizes; EXPERIMENTS.md
-//! records before/after.
+//! * `--smoke` — **hermetic** (no artifacts, no PJRT): the
+//!   `stress_fog` preset's synthetic bank is searched, then served
+//!   through the discrete-event executor, and the two-plane pipeline
+//!   speedup (exec-workers 4 vs 1 with a calibrated burn backend) is
+//!   measured. Writes `BENCH_hotpath.json` with everything under
+//!   `timing`, so `xtask bench-check` tracks the serving hot path's
+//!   perf trajectory in CI;
+//! * default (artifacts present) — PJRT micro-benchmarks:
+//!   staged adaptive inference per sample, engine dispatch overhead
+//!   vs pure execute time, batched vs single-sample execution on the
+//!   escalation path.
 //!
-//! Run: `cargo bench --bench hotpath`
+//! Run: `cargo bench --bench hotpath [-- --smoke]`
 
 mod common;
 
+use std::collections::BTreeMap;
+
+use eenn_na::coordinator::{serve_synthetic, ServeConfig};
 use eenn_na::data::load_split;
 use eenn_na::eenn::StagedRunner;
 use eenn_na::na::{self, FlowConfig};
 use eenn_na::report;
 use eenn_na::runtime::{Engine, HostTensor, Manifest, WeightStore};
+use eenn_na::scenarios;
+use eenn_na::util::cli::Args;
+use eenn_na::util::json::Json;
+
+/// Hermetic serving-hot-path smoke: search the stress_fog preset once,
+/// then measure (a) raw executor throughput with the synthetic backend
+/// and (b) the pipeline speedup with per-sample backend wall work
+/// overlapped onto the exec plane. All numbers land under `timing` in
+/// `BENCH_hotpath.json` (wall clock: CI gates them with a tolerance
+/// band, never exactly).
+fn smoke_bench() -> anyhow::Result<()> {
+    let sc = scenarios::stress_fog();
+    let bank = scenarios::build_bank(&sc);
+    let cfg = FlowConfig {
+        latency_constraint_s: sc.latency_constraint_s,
+        w_eff: sc.w_eff,
+        w_acc: sc.w_acc,
+        workers: 1,
+        ..FlowConfig::default()
+    };
+    let out = na::augment_prepared(&bank, &sc.graph, sc.name, &sc.platform, &cfg, None)?;
+    let sol = &out.solution;
+    println!("=== hotpath smoke (hermetic: {} preset) ===", sc.name);
+    println!("solution: exits {:?} -> procs {:?}\n", sol.exits, sol.assignment);
+
+    let serve_cfg = |exec_workers: usize| ServeConfig {
+        arrival_rate_hz: sc.traffic.arrival_rate_hz,
+        n_requests: sc.traffic.smoke_n_requests,
+        queue_cap: 0,
+        batch_max: 8,
+        seed: sc.traffic.seed,
+        exec_workers,
+    };
+
+    // raw executor overhead: synthetic backend, inline exec plane
+    serve_synthetic(&sc.graph, sol, &sc.platform, &serve_cfg(1))?; // warmup
+    let raw = serve_synthetic(&sc.graph, sol, &sc.platform, &serve_cfg(1))?;
+    println!("executor (synthetic backend, inline): {:>10.0} req/s", raw.throughput_rps);
+
+    // pipeline speedup: burn backend (stand-in for real compute),
+    // exec-workers 1 vs 4 — shared measurement with serving_throughput
+    let burn_ns = 30_000;
+    let (m1, m4, pipe_json) =
+        common::pipeline_speedup(&sc.graph, sol, &sc.platform, &serve_cfg(1), burn_ns);
+    let speedup = m4.throughput_rps / m1.throughput_rps;
+    println!(
+        "burn {}us/sample: exec-workers 1 -> {:.0} req/s, 4 -> {:.0} req/s ({speedup:.2}x)",
+        burn_ns / 1000,
+        m1.throughput_rps,
+        m4.throughput_rps
+    );
+
+    let mut timing = BTreeMap::new();
+    timing.insert("executor_synthetic_rps".to_string(), Json::Num(raw.throughput_rps));
+    timing.insert("pipeline_speedup".to_string(), pipe_json);
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("hotpath".to_string()));
+    top.insert("fixture".to_string(), Json::Str("smoke".to_string()));
+    top.insert("unit".to_string(), Json::Str("requests_per_sec".to_string()));
+    top.insert("timing".to_string(), Json::Obj(timing));
+    let path = "BENCH_hotpath.json";
+    std::fs::write(path, Json::Obj(top).to_string())?;
+    println!("\nwrote {path}");
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    if args.bool("smoke") {
+        return smoke_bench();
+    }
     if !common::have_artifacts() {
-        println!("hotpath: skipping (no artifacts; run `make artifacts`)");
+        println!("hotpath: skipping (no artifacts; run `make artifacts` or use -- --smoke)");
         return Ok(());
     }
     let man = Manifest::load("artifacts")?;

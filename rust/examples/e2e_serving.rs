@@ -57,6 +57,7 @@ fn main() -> anyhow::Result<()> {
         queue_cap: 128,
         batch_max: 8,
         seed: 7,
+        exec_workers: 1,
     };
     let m = serve(&engine, &manifest, model, &ws, &out.solution, &platform, &test, &scfg)?;
 

@@ -1,21 +1,43 @@
-//! Virtual-time discrete-event scheduler: the executor core behind
-//! [`serve`](super::serve) / [`serve_synthetic`](super::serve_synthetic).
+//! Two-plane virtual-time discrete-event scheduler: the executor core
+//! behind [`serve`](super::serve) / [`serve_synthetic`](super::serve_synthetic).
 //!
-//! One binary heap of events, min-ordered on `(sim_time, seq)`, drives
-//! everything: arrivals land in the first stage's bounded queue,
-//! device timelines dispatch micro-batches when they free up, and
-//! escalations re-enter the heap at the instant the previous stage
-//! finishes them. The [`StageExec`] backends do their real (wall
-//! clock) work at event-dispatch time on the calling thread, but all
-//! *ordering and accounting* comes from the deterministic virtual
-//! clock — two runs of the same config produce byte-identical
-//! metrics on any host, for any `batch_max`.
+//! # The two planes
+//!
+//! The **virtual-time plane** is single-threaded and authoritative:
+//! one binary heap of events, min-ordered on `(sim_time, seq)`,
+//! drives arrivals into bounded stage queues, frees device timelines,
+//! and commits backend verdicts. Every virtual timestamp — queue
+//! entry, reservation start/end, escalation instant — is computed *at
+//! dispatch* from the calibrated per-stage latencies, before any
+//! backend output exists.
+//!
+//! The **exec plane** runs the backends' real wall-clock work. Each
+//! dispatch ships its payload batch to the stage's backend as a
+//! ticketed job ([`Lanes`]): per stage, jobs execute strictly in
+//! dispatch order (backends are stateful — the synthetic stand-in's
+//! verdict RNG, PJRT bindings), while different stages (and hence
+//! different timelines) execute concurrently on
+//! `ServeConfig::exec_workers` pool threads. With `exec_workers <= 1`
+//! the same job bodies run inline on the event-loop thread — the
+//! pre-pipeline discipline.
+//!
+//! The planes meet at **commit events**: each dispatched sample gets a
+//! `Commit` scheduled at its reservation end. When the loop pops a
+//! commit whose dispatch result is still in flight it blocks on that
+//! ticket — a *lazy barrier*: independent dispatches keep overlapping,
+//! and the loop only ever waits for the one result it needs *now*.
+//! Because commits fire in `(sim_time, seq)` order and per-stage
+//! backend order equals dispatch order, every metric (completions,
+//! sheds, termination histogram, per-request `base_s`/`wait_s`, busy
+//! totals) is **byte-identical across exec-worker counts** — and
+//! bit-equal to the pre-pipeline inline executor.
 //!
 //! # Discipline
 //!
-//! * Per-stage queues are FIFO and bounded (`queue_cap`); an
-//!   `Enqueue` that finds the queue full is shed, whether it is a
-//!   fresh arrival or a mid-pipeline escalation.
+//! * Per-stage queues are FIFO and bounded (`queue_cap`); an enqueue
+//!   that finds the queue full is shed, whether it is a fresh arrival
+//!   or a mid-pipeline escalation (escalations enqueue at their commit
+//!   instant, exactly when the previous stage finishes them).
 //! * A device timeline serves its stages in global FIFO order: among
 //!   non-empty queues on the timeline, the one whose head sample got
 //!   its enqueue ticket first wins (ties cannot happen — tickets are
@@ -25,8 +47,22 @@
 //! * A dispatch takes up to `batch_max` samples from the winning
 //!   queue. Serial cores (`batch_serial_frac == 1`) are reserved per
 //!   sample; batch-capable devices once per batch, stretched by the
-//!   serialization fraction — identical accounting to the previous
-//!   (threaded) executor and to `sim::simulate`.
+//!   serialization fraction — identical accounting to the analytic
+//!   simulator.
+//! * Payloads **move**: the boundary IFM is swapped out of the queued
+//!   job at dispatch, through the backend, and back in along the
+//!   escalation path — no deep copies on the hot path
+//!   (`tests/clone_budget.rs`).
+//!
+//! # Panics
+//!
+//! A panicking backend never deadlocks the loop or poisons the pool:
+//! the exec plane posts the payload under the dispatch ticket, keeps
+//! draining, and the loop — on observing the first failed commit in
+//! virtual order — joins every outstanding dispatch and re-raises the
+//! payload of the **lowest ticket** that failed. Deterministic for
+//! every `exec_workers` count (inline execution panics at the same
+//! dispatch, with the same payload).
 //!
 //! # Exactness
 //!
@@ -40,7 +76,8 @@
 //! closed-form-fast-path contract `tests/des_equivalence.rs` asserts.
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
+use std::panic::resume_unwind;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -50,8 +87,9 @@ use crate::metrics::{Confusion, Quality};
 use crate::runtime::HostTensor;
 use crate::util::rng::Rng;
 use crate::util::stats::summarize;
+use crate::util::threadpool::{Lanes, ThreadPool};
 
-use super::{RequestTrace, ServeConfig, ServeMetrics, StageCtx, StageExec, StagePlan};
+use super::{RequestTrace, ServeConfig, ServeMetrics, StageCtx, StageExec, StageOutput, StagePlan};
 
 /// One sample in flight through the stage graph.
 struct Job {
@@ -87,11 +125,12 @@ struct Done {
 }
 
 enum EventKind {
-    /// A sample lands in `seg`'s bounded queue (a fresh arrival at
-    /// stage 0, or an escalation leaving the previous stage).
-    Enqueue { seg: usize, job: Job },
     /// A device timeline finished a reservation: dispatch more work.
     Wake { timeline: usize },
+    /// One dispatched sample reaches its reservation end: join the
+    /// dispatch's backend result (lazy barrier) and apply the verdict
+    /// — terminate, or escalate into the next stage's queue *now*.
+    Commit { ticket: u64, slot: usize },
 }
 
 /// Heap entry, min-ordered by `(time, seq)`. `seq` is the global
@@ -126,6 +165,84 @@ impl Ord for Event {
     }
 }
 
+/// Joined outcome of one dispatch on the exec plane: per-sample
+/// backend outputs plus the wall time attributed to each sample.
+type ExecResult = (Vec<StageOutput>, f64);
+
+/// The wall-clock plane: stage backends executing dispatch payloads.
+/// `Inline` runs them synchronously on the event-loop thread (the
+/// pre-pipeline discipline, `exec_workers <= 1`); `Pooled` ships them
+/// to per-stage ordered lanes on a worker pool and joins lazily at
+/// commit time. Both run the identical job body in the identical
+/// per-stage order, which is what makes the two modes bit-equal.
+enum ExecPlane {
+    Inline {
+        stages: Vec<Box<dyn StageExec>>,
+        ready: HashMap<u64, ExecResult>,
+    },
+    Pooled {
+        pool: ThreadPool,
+        lanes: Lanes<Box<dyn StageExec>, ExecResult>,
+    },
+}
+
+/// The one job body both planes execute: route the batch to the
+/// backend (`run_single` for a lone sample) and split the measured
+/// wall time evenly over its members.
+fn run_stage(stage: &mut dyn StageExec, mut inputs: Vec<(HostTensor, i32)>) -> ExecResult {
+    let k = inputs.len();
+    let t0 = Instant::now();
+    let outs = if k == 1 {
+        let (ifm, label) = inputs.pop().expect("dispatches are never empty");
+        vec![stage.run_single(ifm, label)]
+    } else {
+        stage.run_batch(inputs)
+    };
+    assert_eq!(outs.len(), k, "backend must return one output per sample");
+    (outs, t0.elapsed().as_secs_f64() / k as f64)
+}
+
+impl ExecPlane {
+    fn submit(&mut self, seg: usize, ticket: u64, inputs: Vec<(HostTensor, i32)>) {
+        match self {
+            ExecPlane::Inline { stages, ready } => {
+                let r = run_stage(stages[seg].as_mut(), inputs);
+                ready.insert(ticket, r);
+            }
+            ExecPlane::Pooled { pool, lanes } => {
+                lanes.submit(pool, seg, ticket, move |stage| run_stage(stage.as_mut(), inputs));
+            }
+        }
+    }
+
+    /// Lazy barrier: block until `ticket`'s backend result is in
+    /// (no-op for the inline plane). `Err` carries a panicking
+    /// backend's payload.
+    fn join(&mut self, ticket: u64) -> std::thread::Result<ExecResult> {
+        match self {
+            ExecPlane::Inline { ready, .. } => Ok(ready
+                .remove(&ticket)
+                .expect("inline results are ready the moment they are submitted")),
+            ExecPlane::Pooled { lanes, .. } => lanes.join(ticket),
+        }
+    }
+}
+
+/// Virtual-time bookkeeping of one dispatch awaiting its commits.
+struct Dispatch {
+    seg: usize,
+    /// One slot per batched sample; taken at its commit.
+    jobs: Vec<Option<Job>>,
+    /// Device reservation `(start, end)` per slot.
+    spans: Vec<(f64, f64)>,
+    /// Extra time every batch member pays beyond a lone sample.
+    batch_stretch: f64,
+    /// Joined backend outputs; `None` while still in flight.
+    outs: Option<Vec<Option<StageOutput>>>,
+    wall_each: f64,
+    remaining: usize,
+}
+
 struct Des<'a> {
     ctxs: &'a [StageCtx],
     /// Timeline index of each segment's processor.
@@ -140,6 +257,11 @@ struct Des<'a> {
     queue_cap: usize,
     dropped: usize,
     done: Vec<Done>,
+    exec: ExecPlane,
+    /// Dispatches whose commits are still pending, by exec ticket
+    /// (ordered: the panic path re-raises the lowest failing ticket).
+    inflight: BTreeMap<u64, Dispatch>,
+    next_ticket: u64,
 }
 
 impl Des<'_> {
@@ -148,7 +270,7 @@ impl Des<'_> {
         self.seq += 1;
     }
 
-    fn enqueue(&mut self, now: f64, seg: usize, mut job: Job, stages: &mut [Box<dyn StageExec>]) {
+    fn enqueue(&mut self, now: f64, seg: usize, mut job: Job) {
         if self.queues[seg].len() >= self.queue_cap {
             // bounded queue full at this virtual instant: shed
             self.dropped += 1;
@@ -159,10 +281,10 @@ impl Des<'_> {
         self.enq_seq += 1;
         let tl = self.tl_of_seg[seg];
         self.queues[seg].push_back(job);
-        self.dispatch(now, tl, stages);
+        self.dispatch(now, tl);
     }
 
-    fn dispatch(&mut self, now: f64, tl: usize, stages: &mut [Box<dyn StageExec>]) {
+    fn dispatch(&mut self, now: f64, tl: usize) {
         if self.timelines.timeline_free_at(tl) > now {
             return; // still reserved: a Wake fires when it frees
         }
@@ -178,21 +300,22 @@ impl Des<'_> {
         };
         let StageCtx {
             proc,
-            is_last,
-            threshold,
             compute_s,
             transfer_s,
             batch_serial_frac,
             batch_max,
+            ..
         } = self.ctxs[seg];
         let take = batch_max.min(self.queues[seg].len());
-        let batch: Vec<Job> = self.queues[seg].drain(..take).collect();
+        let mut batch: Vec<Job> = self.queues[seg].drain(..take).collect();
         let k = batch.len();
 
-        // device clock: a serial core is occupied per sample; a
-        // batch-capable device once per batch, stretched by its
-        // serialization fraction. `batch_stretch` is the extra time
-        // every batch member pays beyond a lone sample's compute.
+        // virtual-time plane: every timestamp is derived here, from
+        // the calibrated latencies, before the backend runs. A serial
+        // core is occupied per sample; a batch-capable device once per
+        // batch, stretched by its serialization fraction.
+        // `batch_stretch` is the extra time every batch member pays
+        // beyond a lone sample's compute.
         let spans: Vec<(f64, f64)>;
         let batch_stretch: f64;
         if k == 1 || batch_serial_frac >= 1.0 - 1e-9 {
@@ -215,55 +338,128 @@ impl Des<'_> {
         let end_of_batch = spans.last().map(|s| s.1).unwrap_or(now);
         self.schedule(end_of_batch, EventKind::Wake { timeline: tl });
 
-        // wall clock: the real backend executes here, at dispatch
-        let wall_t0 = Instant::now();
-        let outs = if k == 1 {
-            vec![stages[seg].run_single(&batch[0].ifm, batch[0].label)]
-        } else {
-            let refs: Vec<(&HostTensor, i32)> =
-                batch.iter().map(|j| (&j.ifm, j.label)).collect();
-            stages[seg].run_batch(&refs)
-        };
-        debug_assert_eq!(outs.len(), k);
-        let wall_each = wall_t0.elapsed().as_secs_f64() / k as f64;
+        // exec plane: move the payloads out of the queued jobs and
+        // ship them to the stage backend (on a worker when pooled);
+        // one commit per slot at its reservation end joins the result
+        // back into virtual time
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        let inputs: Vec<(HostTensor, i32)> = batch
+            .iter_mut()
+            .map(|j| (std::mem::replace(&mut j.ifm, HostTensor::empty()), j.label))
+            .collect();
+        self.exec.submit(seg, ticket, inputs);
+        for (slot, &(_, end)) in spans.iter().enumerate() {
+            self.schedule(end, EventKind::Commit { ticket, slot });
+        }
+        self.inflight.insert(
+            ticket,
+            Dispatch {
+                seg,
+                jobs: batch.into_iter().map(Some).collect(),
+                spans,
+                batch_stretch,
+                outs: None,
+                wall_each: 0.0,
+                remaining: k,
+            },
+        );
+    }
 
-        for ((mut job, out), (start, end)) in batch.into_iter().zip(outs).zip(spans) {
-            // latency split: `base_s` follows the analytic sim's
-            // accumulation order; every schedule-induced delay lands
-            // in `wait_s` (each term is an exact 0.0 when the sample
-            // never waited)
-            let ready = job.sim_ready + transfer_s;
-            job.base_s += transfer_s;
-            job.base_s += compute_s;
-            job.wait_s += (start - ready) + batch_stretch;
-            job.wall_s += wall_each;
-            let terminate = is_last || out.conf >= threshold.unwrap_or(f64::NEG_INFINITY);
-            if terminate {
-                self.done.push(Done {
-                    id: job.id,
-                    exit_index: seg,
-                    label: job.label,
-                    pred: out.pred,
-                    sim_arrival: job.sim_arrival,
-                    sim_latency: job.base_s + job.wait_s,
-                    sim_wait: job.wait_s,
-                    wall_latency: job.wall_s,
-                });
-            } else {
-                // escalate along the assignment: the sample reaches
-                // the next stage's queue the instant this stage
-                // finishes it; the boundary transfer is charged at
-                // the next dispatch
-                job.ifm = out.ifm;
-                self.schedule(end, EventKind::Enqueue { seg: seg + 1, job });
+    /// One dispatched sample reaches its reservation end: join the
+    /// backend result if this is the dispatch's first commit (lazy
+    /// barrier), apply the latency split, and terminate or escalate.
+    fn commit(&mut self, now: f64, ticket: u64, slot: usize) {
+        let needs_join = self
+            .inflight
+            .get(&ticket)
+            .map(|d| d.outs.is_none())
+            .expect("commit for an unknown dispatch");
+        if needs_join {
+            match self.exec.join(ticket) {
+                Ok((outs, wall_each)) => {
+                    let d = self.inflight.get_mut(&ticket).expect("dispatch present");
+                    d.outs = Some(outs.into_iter().map(Some).collect());
+                    d.wall_each = wall_each;
+                }
+                Err(payload) => self.abort(ticket, payload),
             }
         }
+        let (mut job, out, start, seg, batch_stretch, wall_each, emptied) = {
+            let d = self.inflight.get_mut(&ticket).expect("dispatch present");
+            let job = d.jobs[slot].take().expect("one commit per slot");
+            let out = d.outs.as_mut().expect("joined above")[slot]
+                .take()
+                .expect("one output per slot");
+            let (start, _) = d.spans[slot];
+            d.remaining -= 1;
+            (job, out, start, d.seg, d.batch_stretch, d.wall_each, d.remaining == 0)
+        };
+        if emptied {
+            self.inflight.remove(&ticket);
+        }
+        let StageCtx { is_last, threshold, compute_s, transfer_s, .. } = self.ctxs[seg];
+
+        // latency split: `base_s` follows the analytic sim's
+        // accumulation order; every schedule-induced delay lands in
+        // `wait_s` (each term is an exact 0.0 when the sample never
+        // waited)
+        let ready = job.sim_ready + transfer_s;
+        job.base_s += transfer_s;
+        job.base_s += compute_s;
+        job.wait_s += (start - ready) + batch_stretch;
+        job.wall_s += wall_each;
+        let terminate = is_last || out.conf >= threshold.unwrap_or(f64::NEG_INFINITY);
+        if terminate {
+            self.done.push(Done {
+                id: job.id,
+                exit_index: seg,
+                label: job.label,
+                pred: out.pred,
+                sim_arrival: job.sim_arrival,
+                sim_latency: job.base_s + job.wait_s,
+                sim_wait: job.wait_s,
+                wall_latency: job.wall_s,
+            });
+        } else {
+            // escalate along the assignment: the sample reaches the
+            // next stage's queue the instant this stage finishes it
+            // (`now` == this slot's reservation end); the boundary
+            // transfer is charged at the next dispatch
+            job.ifm = out.ifm;
+            self.enqueue(now, seg + 1, job);
+        }
+    }
+
+    /// Deterministic panic propagation: a backend panicked. Join every
+    /// outstanding dispatch (the lanes keep draining — nothing is
+    /// poisoned), then re-raise the payload of the **lowest** failing
+    /// ticket. Tickets are assigned in dispatch order, and dispatch
+    /// order is deterministic, so the re-raised payload is identical
+    /// for every exec-worker count — including the inline plane, which
+    /// panics at the same dispatch on its own.
+    fn abort(&mut self, observed: u64, payload: Box<dyn std::any::Any + Send>) -> ! {
+        let mut failures: BTreeMap<u64, Box<dyn std::any::Any + Send>> = BTreeMap::new();
+        failures.insert(observed, payload);
+        let outstanding: Vec<u64> = self
+            .inflight
+            .iter()
+            .filter(|(&t, d)| d.outs.is_none() && t != observed)
+            .map(|(&t, _)| t)
+            .collect();
+        for t in outstanding {
+            if let Err(p) = self.exec.join(t) {
+                failures.insert(t, p);
+            }
+        }
+        let (_, lowest) = failures.into_iter().next().expect("at least the observed failure");
+        resume_unwind(lowest);
     }
 }
 
 /// Run the full event loop for `cfg.n_requests` Poisson arrivals.
 pub(super) fn run_executor(
-    mut stages: Vec<Box<dyn StageExec>>,
+    stages: Vec<Box<dyn StageExec>>,
     plan: &StagePlan,
     platform: &Platform,
     num_classes: usize,
@@ -295,6 +491,20 @@ pub(super) fn run_executor(
         stages_on[tl].push(seg);
     }
 
+    // exec plane: 0 = one worker per core, 1 = inline (pre-pipeline
+    // discipline), N > 1 = a pool of N. Metrics are byte-identical
+    // across all of them.
+    let exec_workers = if cfg.exec_workers == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        cfg.exec_workers
+    };
+    let exec = if exec_workers > 1 {
+        ExecPlane::Pooled { pool: ThreadPool::new(exec_workers), lanes: Lanes::new(stages) }
+    } else {
+        ExecPlane::Inline { stages, ready: HashMap::new() }
+    };
+
     let mut des = Des {
         ctxs: &ctxs,
         tl_of_seg,
@@ -308,15 +518,18 @@ pub(super) fn run_executor(
         queue_cap: if cfg.queue_cap == 0 { usize::MAX } else { cfg.queue_cap },
         dropped: 0,
         done: Vec::with_capacity(cfg.n_requests),
+        exec,
+        inflight: BTreeMap::new(),
+        next_ticket: 0,
     };
 
     // Lazy Poisson generator with the same RNG interleaving the
-    // previous (threaded) executor used — one exp() then one payload
-    // per request, in request order — but at most ONE undelivered
-    // arrival resident at a time: Poisson arrivals are time-ordered,
-    // so the merge below never needs to heap them, and payload
-    // tensors (real inputs on the PJRT path) only occupy memory once
-    // the virtual clock reaches them.
+    // inline executor always used — one exp() then one payload per
+    // request, in request order — but at most ONE undelivered arrival
+    // resident at a time: Poisson arrivals are time-ordered, so the
+    // merge below never needs to heap them, and payload tensors (real
+    // inputs on the PJRT path) only occupy memory once the virtual
+    // clock reaches them.
     let mut rng = Rng::seeded(cfg.seed);
     let mut sim_now = 0.0;
     let mut draw = |i: usize, sim_now: &mut f64, rng: &mut Rng| -> Job {
@@ -341,7 +554,7 @@ pub(super) fn run_executor(
     // Merge the arrival stream with the event heap in virtual-time
     // order (an arrival wins a tie, as the earlier-scheduled event):
     // ordering and accounting come from the virtual clock; backends do
-    // their real work at dispatch, on this thread.
+    // their real work on the exec plane and rejoin at commit events.
     let wall0 = Instant::now();
     loop {
         let arrival_due = match (&pending, des.heap.peek()) {
@@ -353,7 +566,7 @@ pub(super) fn run_executor(
         if arrival_due {
             let job = pending.take().expect("arrival_due implies a pending job");
             let t = job.sim_arrival;
-            des.enqueue(t, 0, job, &mut stages);
+            des.enqueue(t, 0, job);
             if next_id < cfg.n_requests {
                 pending = Some(draw(next_id, &mut sim_now, &mut rng));
                 next_id += 1;
@@ -362,11 +575,12 @@ pub(super) fn run_executor(
             let Event { time, kind, .. } =
                 des.heap.pop().expect("non-arrival branch implies a heaped event");
             match kind {
-                EventKind::Enqueue { seg, job } => des.enqueue(time, seg, job, &mut stages),
-                EventKind::Wake { timeline } => des.dispatch(time, timeline, &mut stages),
+                EventKind::Wake { timeline } => des.dispatch(time, timeline),
+                EventKind::Commit { ticket, slot } => des.commit(time, ticket, slot),
             }
         }
     }
+    debug_assert!(des.inflight.is_empty(), "every dispatch commits before the heap drains");
     let wall_s = wall0.elapsed().as_secs_f64();
 
     // --- collect ----------------------------------------------------------
@@ -422,6 +636,7 @@ mod tests {
     use crate::hw::presets;
     use crate::mapping::Mapping;
     use crate::sim::simulate;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
 
     /// Backend with a fixed verdict: conf 1.0 terminates at any
     /// threshold, conf 0.0 always escalates.
@@ -430,8 +645,27 @@ mod tests {
     }
 
     impl StageExec for ScriptExec {
-        fn run_single(&mut self, ifm: &HostTensor, label: i32) -> StageOutput {
-            StageOutput { ifm: ifm.clone(), conf: self.conf, pred: label }
+        fn run_single(&mut self, ifm: HostTensor, label: i32) -> StageOutput {
+            StageOutput { ifm, conf: self.conf, pred: label }
+        }
+    }
+
+    /// Always-escalating backend that panics once its `panic_at`-th
+    /// sample arrives (per-stage call order is deterministic, so the
+    /// panic site is too).
+    struct PanicExec {
+        calls: usize,
+        panic_at: usize,
+    }
+
+    impl StageExec for PanicExec {
+        fn run_single(&mut self, ifm: HostTensor, label: i32) -> StageOutput {
+            let n = self.calls;
+            self.calls += 1;
+            if n >= self.panic_at {
+                panic!("backend boom at sample {n}");
+            }
+            StageOutput { ifm, conf: 0.0, pred: label }
         }
     }
 
@@ -445,7 +679,14 @@ mod tests {
     }
 
     fn cfg(rate: f64, n: usize, queue_cap: usize, batch_max: usize) -> ServeConfig {
-        ServeConfig { arrival_rate_hz: rate, n_requests: n, queue_cap, batch_max, seed: 7 }
+        ServeConfig {
+            arrival_rate_hz: rate,
+            n_requests: n,
+            queue_cap,
+            batch_max,
+            seed: 7,
+            exec_workers: 1,
+        }
     }
 
     fn dummy() -> HostTensor {
@@ -572,5 +813,92 @@ mod tests {
         assert_eq!(a.proc_busy_s, b.proc_busy_s);
         let lat = |m: &ServeMetrics| m.traces.iter().map(|t| t.sim_latency_s).collect::<Vec<_>>();
         assert_eq!(lat(&a), lat(&b), "virtual-time latencies are deterministic");
+    }
+
+    #[test]
+    fn exec_worker_counts_are_byte_identical() {
+        // the two-plane contract at the unit level: a loaded, deeply
+        // escalating, micro-batched run produces bit-equal virtual
+        // metrics for the inline plane and pools of every size
+        let graph = BlockGraph::synthetic_resnet(4, 2);
+        let platform = presets::fog_cluster();
+        let p = plan(&graph, Mapping::chain(vec![1, 2, 3]), &platform);
+        let run = |exec_workers: usize| {
+            let stages: Vec<Box<dyn StageExec>> = vec![
+                Box::new(ScriptExec { conf: 0.0 }),
+                Box::new(ScriptExec { conf: 0.0 }),
+                Box::new(ScriptExec { conf: 0.0 }),
+                Box::new(ScriptExec { conf: 1.0 }),
+            ];
+            let mut c = cfg(5_000.0, 400, 16, 4);
+            c.exec_workers = exec_workers;
+            run_executor(stages, &p, &platform, 4, &c, |_, rng| {
+                (dummy(), rng.below(4) as i32)
+            })
+            .unwrap()
+        };
+        let base = run(1);
+        assert!(base.dropped > 0, "the fixture must exercise shedding");
+        for w in [2, 8] {
+            let m = run(w);
+            assert_eq!(m.completed, base.completed, "workers {w}");
+            assert_eq!(m.dropped, base.dropped, "workers {w}");
+            assert_eq!(m.term_hist, base.term_hist, "workers {w}");
+            let bits = |m: &ServeMetrics| {
+                m.traces
+                    .iter()
+                    .map(|t| {
+                        (t.id, t.exit_index, t.sim_latency_s.to_bits(), t.sim_wait_s.to_bits())
+                    })
+                    .collect::<Vec<_>>()
+            };
+            assert_eq!(bits(&m), bits(&base), "workers {w}: per-request bit equality");
+            let busy = |m: &ServeMetrics| {
+                m.proc_busy_s.iter().map(|b| b.to_bits()).collect::<Vec<_>>()
+            };
+            assert_eq!(busy(&m), busy(&base), "workers {w}: busy totals bit equality");
+        }
+    }
+
+    #[test]
+    fn backend_panic_reraises_lowest_ticket_for_every_worker_count() {
+        // stage 0 escalates its first three samples, then panics on
+        // every later one; under burst arrivals several dispatches
+        // fail — the re-raised payload must always be the lowest
+        // ticket's ("sample 3"), for the inline plane and every pool
+        let graph = BlockGraph::synthetic_resnet(4, 2);
+        let platform = presets::rk3588_cloud();
+        for exec_workers in [1usize, 2, 8] {
+            let p = plan(&graph, Mapping::chain(vec![2]), &platform);
+            let stages: Vec<Box<dyn StageExec>> = vec![
+                Box::new(PanicExec { calls: 0, panic_at: 3 }),
+                Box::new(ScriptExec { conf: 1.0 }),
+            ];
+            let mut c = cfg(1e9, 16, 64, 2);
+            c.exec_workers = exec_workers;
+            let r = catch_unwind(AssertUnwindSafe(|| {
+                run_executor(stages, &p, &platform, 4, &c, |_, rng| {
+                    (dummy(), rng.below(4) as i32)
+                })
+            }));
+            let payload = r.expect_err("backend panic must re-raise");
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_else(|| "<non-string payload>".into());
+            assert_eq!(
+                msg, "backend boom at sample 3",
+                "exec_workers {exec_workers}: lowest failing ticket must win"
+            );
+            // nothing is poisoned: a fresh healthy run in the same
+            // process still serves
+            let ok: Vec<Box<dyn StageExec>> =
+                vec![Box::new(ScriptExec { conf: 1.0 }), Box::new(ScriptExec { conf: 1.0 })];
+            let m = run_executor(ok, &p, &platform, 4, &c, |_, rng| {
+                (dummy(), rng.below(4) as i32)
+            })
+            .unwrap();
+            assert_eq!(m.completed + m.dropped, 16);
+        }
     }
 }

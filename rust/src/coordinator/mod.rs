@@ -18,15 +18,39 @@
 //! the processor's batch-serialization fraction (GPUs amortize,
 //! scalar cores do not).
 //!
-//! Two interchangeable stage backends, executed at event-dispatch
-//! time (real wall-clock work still happens; only *ordering and
-//! accounting* come from the virtual clock):
+//! The executor is a **two-plane scheduler** (see the private `des`
+//! module):
+//!
+//! * the **virtual-time plane** — event heap, stage queues, device
+//!   timelines, shed/latency accounting — stays single-threaded and
+//!   authoritative: every virtual timestamp is computed at dispatch
+//!   from the calibrated per-stage latencies, before any backend
+//!   output exists;
+//! * the **exec plane** runs the backends' real wall-clock work
+//!   ([`StageExec::run_batch`]) as ticketed jobs on a
+//!   [`crate::util::threadpool::ThreadPool`]
+//!   (`ServeConfig::exec_workers`; `1` = inline on the event-loop
+//!   thread, the pre-pipeline discipline). Per stage, jobs execute
+//!   strictly in dispatch order (each backend owns mutable state —
+//!   the RNG of the synthetic stand-in, PJRT bindings — and verdict
+//!   streams must not depend on scheduling); across stages and
+//!   timelines they overlap freely. The event loop only blocks when
+//!   it pops a commit event whose backend result is still in flight
+//!   (a *lazy barrier*), and escalation payloads are committed in
+//!   `(sim_time, seq)` ticket order — so the metrics are
+//!   **byte-identical for every `exec_workers` value**, while the
+//!   wall-clock throughput scales with the cores the stage work can
+//!   use.
+//!
+//! Two interchangeable stage backends:
 //! * [`serve`] — real PJRT compute through B=1 / batched artifacts
 //!   (needs exported artifacts and the `pjrt` feature);
 //! * [`serve_synthetic`] — a calibrated stochastic stand-in drawing
 //!   per-stage termination from the solution's expected rates, which
 //!   exercises the full executor (queues, escalation, clocks, traces)
-//!   hermetically for tests and benches.
+//!   hermetically for tests and benches ([`serve_synthetic_burn`]
+//!   additionally spins a configurable per-sample wall-time burn, so
+//!   pipeline benches have backend work to overlap).
 //!
 //! Two clocks:
 //! * **wall** — actual compute on this machine (hot-path perf);
@@ -36,13 +60,15 @@
 //! The sim-clock side is **fully deterministic**: the same
 //! [`ServeConfig`] yields byte-identical completions, sheds,
 //! termination histograms, per-request latencies and busy totals on
-//! every run, every host, and every `batch_max` choice — there are no
-//! free-running stage threads left to race. With `batch_max = 1` and
-//! no contention the executor reproduces `sim::simulate`'s
-//! cumulative stage latencies bit-for-bit ([`RequestTrace`] carries
-//! the queueing share separately as `sim_wait_s`); under load it
-//! generalizes the closed form with queueing, batching and
-//! backpressure (equivalence asserted by `tests/des_equivalence.rs`).
+//! every run, every host, every `batch_max` choice and every
+//! `exec_workers` count — there are no free-running stage threads to
+//! race, and backend results only enter the simulation at their
+//! commit events. With `batch_max = 1` and no contention the executor
+//! reproduces `sim::simulate`'s cumulative stage latencies
+//! bit-for-bit ([`RequestTrace`] carries the queueing share
+//! separately as `sim_wait_s`); under load it generalizes the closed
+//! form with queueing, batching and backpressure (equivalence
+//! asserted by `tests/des_equivalence.rs`).
 
 mod des;
 
@@ -74,6 +100,12 @@ pub struct ServeConfig {
     /// Micro-batch bound per dispatch (1 = strictly per-sample).
     pub batch_max: usize,
     pub seed: u64,
+    /// Exec-plane worker threads running the stage backends' wall
+    /// work. `1` = inline on the event-loop thread (the pre-pipeline
+    /// discipline), `0` = one per core, `N > 1` = a pool of N. Every
+    /// sim-clock metric is byte-identical for every value — only the
+    /// wall-clock throughput moves.
+    pub exec_workers: usize,
 }
 
 impl Default for ServeConfig {
@@ -84,6 +116,7 @@ impl Default for ServeConfig {
             queue_cap: 64,
             batch_max: 8,
             seed: 0,
+            exec_workers: 1,
         }
     }
 }
@@ -147,16 +180,20 @@ pub struct StageOutput {
     pub pred: i32,
 }
 
-/// Per-segment execution backend, driven by the event loop at
-/// dispatch time on the calling thread. `label` is threaded through
-/// for backends that synthesize predictions (the PJRT backend
-/// ignores it).
-pub trait StageExec {
-    fn run_single(&mut self, ifm: &HostTensor, label: i32) -> StageOutput;
+/// Per-segment execution backend. Dispatched by the executor's exec
+/// plane — on a worker thread when `exec_workers > 1` (hence the
+/// `Send` bound), inline on the event-loop thread otherwise; per
+/// stage, calls always arrive strictly in dispatch order. Inputs are
+/// **owned**: a pass-through backend (the synthetic stand-in) moves
+/// the payload into its [`StageOutput`] without copying. `label` is
+/// threaded through for backends that synthesize predictions (the
+/// PJRT backend ignores it).
+pub trait StageExec: Send {
+    fn run_single(&mut self, ifm: HostTensor, label: i32) -> StageOutput;
 
     /// Micro-batched execution; the default runs samples one by one.
-    fn run_batch(&mut self, jobs: &[(&HostTensor, i32)]) -> Vec<StageOutput> {
-        jobs.iter().map(|&(x, y)| self.run_single(x, y)).collect()
+    fn run_batch(&mut self, jobs: Vec<(HostTensor, i32)>) -> Vec<StageOutput> {
+        jobs.into_iter().map(|(x, y)| self.run_single(x, y)).collect()
     }
 }
 
@@ -194,13 +231,15 @@ struct PjrtStageExec {
 }
 
 impl StageExec for PjrtStageExec {
-    fn run_single(&mut self, ifm: &HostTensor, _label: i32) -> StageOutput {
-        let mut x = ifm.clone();
+    fn run_single(&mut self, ifm: HostTensor, _label: i32) -> StageOutput {
+        let mut x = ifm;
         let mut gap = None;
         for b in &self.blocks {
-            let out = self.engine.run_bound(*b, vec![x]).expect("block exec");
-            x = out[0].clone();
-            gap = Some(out[1].clone());
+            // outputs are (boundary IFM, GAP features): move both out
+            // of the returned vec — no deep copies on the serve path
+            let mut out = self.engine.run_bound(*b, vec![x]).expect("block exec");
+            gap = Some(out.swap_remove(1));
+            x = out.swap_remove(0);
         }
         let gap = gap.expect("segment has blocks");
         let hout = self.engine.run_bound(self.head, vec![gap]).expect("head exec");
@@ -211,18 +250,18 @@ impl StageExec for PjrtStageExec {
         }
     }
 
-    fn run_batch(&mut self, jobs: &[(&HostTensor, i32)]) -> Vec<StageOutput> {
+    fn run_batch(&mut self, jobs: Vec<(HostTensor, i32)>) -> Vec<StageOutput> {
         let real = jobs.len();
         // the batched artifact always executes at the full eval batch
         // width: fall back to B=1 when padding would dominate
         if real <= 1 || real > self.eval_batch || real * 2 < self.eval_batch {
-            return jobs.iter().map(|&(x, y)| self.run_single(x, y)).collect();
+            return jobs.into_iter().map(|(x, y)| self.run_single(x, y)).collect();
         }
         let feat: usize = jobs[0].0.len();
         let mut shape = vec![self.eval_batch];
         shape.extend(jobs[0].0.shape.iter().skip(1));
         let mut xs: Vec<f32> = Vec::with_capacity(self.eval_batch * feat);
-        for &(x, _) in jobs {
+        for (x, _) in &jobs {
             xs.extend(x.to_f32());
         }
         for _ in real..self.eval_batch {
@@ -231,9 +270,9 @@ impl StageExec for PjrtStageExec {
         let mut x = HostTensor::f32(&shape, &xs);
         let mut gap = None;
         for b in &self.blocks_eval {
-            let out = self.engine.run_bound(*b, vec![x]).expect("batched block");
-            x = out[0].clone();
-            gap = Some(out[1].clone());
+            let mut out = self.engine.run_bound(*b, vec![x]).expect("batched block");
+            gap = Some(out.swap_remove(1));
+            x = out.swap_remove(0);
         }
         let hout = self
             .engine
@@ -279,7 +318,7 @@ struct SynthStageExec {
 }
 
 impl StageExec for SynthStageExec {
-    fn run_single(&mut self, ifm: &HostTensor, label: i32) -> StageOutput {
+    fn run_single(&mut self, ifm: HostTensor, label: i32) -> StageOutput {
         let terminate = self.rng.f64() < self.p_term;
         let conf = if terminate {
             // in [threshold, 1)
@@ -293,7 +332,36 @@ impl StageExec for SynthStageExec {
         } else {
             (label + 1).rem_euclid(self.num_classes.max(2) as i32)
         };
-        StageOutput { ifm: ifm.clone(), conf, pred }
+        // the payload moves straight through: no deep copy on the
+        // serve hot path (pinned by tests/clone_budget.rs)
+        StageOutput { ifm, conf, pred }
+    }
+}
+
+/// Wrapper that spins a fixed per-sample wall-time burn before
+/// delegating — a stand-in for real backend compute in the pipeline
+/// benches. Verdicts come from the inner backend in the same call
+/// order, so all sim-clock metrics are identical to the unburdened
+/// run; only wall time (and therefore throughput) changes.
+struct BurnExec {
+    inner: Box<dyn StageExec>,
+    burn_ns: u64,
+}
+
+fn busy_wait_ns(ns: u64) {
+    if ns == 0 {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    while (t0.elapsed().as_nanos() as u64) < ns {
+        std::hint::spin_loop();
+    }
+}
+
+impl StageExec for BurnExec {
+    fn run_single(&mut self, ifm: HostTensor, label: i32) -> StageOutput {
+        busy_wait_ns(self.burn_ns);
+        self.inner.run_single(ifm, label)
     }
 }
 
@@ -372,18 +440,14 @@ pub fn serve(
     })
 }
 
-/// Serve through the same discrete-event executor with the calibrated
-/// synthetic backend: no artifacts, no PJRT — the executor's queues,
-/// escalation routing, device timelines and tracing all run for real,
-/// while each stage's verdicts are drawn from the solution's expected
-/// termination rates and accuracy. Labels are sampled uniformly.
-/// Fully deterministic for a given `cfg`.
-pub fn serve_synthetic(
+/// Shared plan + calibrated-synthetic-backend construction behind
+/// [`serve_synthetic`] / [`serve_synthetic_burn`].
+fn synth_plan(
     graph: &BlockGraph,
     solution: &EennSolution,
     platform: &Platform,
     cfg: &ServeConfig,
-) -> Result<ServeMetrics> {
+) -> Result<(StagePlan, Vec<Box<dyn StageExec>>, usize)> {
     platform.validate()?;
     let mapping = solution.mapping();
     mapping.validate(platform)?;
@@ -416,10 +480,48 @@ pub fn serve_synthetic(
     let thresholds: Vec<Option<f64>> = (0..nseg)
         .map(|s| solution.thresholds.get(s).copied())
         .collect();
-    let plan = StagePlan { mapping, thresholds, sim: sim_report };
+    Ok((StagePlan { mapping, thresholds, sim: sim_report }, stages, num_classes))
+}
 
-    let ifm = HostTensor::f32(&[1, 1], &[0.0]);
+/// Serve through the same discrete-event executor with the calibrated
+/// synthetic backend: no artifacts, no PJRT — the executor's queues,
+/// escalation routing, device timelines and tracing all run for real,
+/// while each stage's verdicts are drawn from the solution's expected
+/// termination rates and accuracy. Labels are sampled uniformly.
+/// Fully deterministic for a given `cfg` (including `exec_workers`).
+pub fn serve_synthetic(
+    graph: &BlockGraph,
+    solution: &EennSolution,
+    platform: &Platform,
+    cfg: &ServeConfig,
+) -> Result<ServeMetrics> {
+    let (plan, stages, num_classes) = synth_plan(graph, solution, platform, cfg)?;
     run_executor(stages, &plan, platform, num_classes, cfg, move |_, rng| {
-        (ifm.clone(), rng.below(num_classes) as i32)
+        (HostTensor::f32(&[1, 1], &[0.0]), rng.below(num_classes) as i32)
+    })
+}
+
+/// [`serve_synthetic`] with each stage backend spinning
+/// `burn_ns_per_sample` of real wall time per sample before its
+/// verdict — backend work for the pipeline benches to overlap (the
+/// pure synthetic backend finishes in nanoseconds, so there is
+/// nothing for the exec plane to hide). Every sim-clock metric is
+/// identical to [`serve_synthetic`] with the same `cfg`; only wall
+/// time and throughput change.
+pub fn serve_synthetic_burn(
+    graph: &BlockGraph,
+    solution: &EennSolution,
+    platform: &Platform,
+    cfg: &ServeConfig,
+    burn_ns_per_sample: u64,
+) -> Result<ServeMetrics> {
+    let (plan, stages, num_classes) = synth_plan(graph, solution, platform, cfg)?;
+    let burn_ns = burn_ns_per_sample;
+    let stages = stages
+        .into_iter()
+        .map(|inner| Box::new(BurnExec { inner, burn_ns }) as Box<dyn StageExec>)
+        .collect();
+    run_executor(stages, &plan, platform, num_classes, cfg, move |_, rng| {
+        (HostTensor::f32(&[1, 1], &[0.0]), rng.below(num_classes) as i32)
     })
 }

@@ -122,6 +122,14 @@ impl Platform {
 /// analytic bookkeeping — callers decide the reservation *order*
 /// (that order is what the coordinator's discrete-event scheduler
 /// makes deterministic).
+///
+/// `Timelines` belongs to the executor's **virtual-time plane**: the
+/// single-threaded event loop owns it exclusively and computes every
+/// reservation at dispatch, before any backend output exists. The
+/// exec plane (worker threads running the stage backends' wall work)
+/// never touches it — that split is what lets backend execution
+/// overlap with this bookkeeping while the virtual clock stays
+/// authoritative and byte-reproducible.
 #[derive(Debug, Clone)]
 pub struct Timelines {
     free_at: Vec<f64>,

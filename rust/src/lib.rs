@@ -21,13 +21,15 @@
 //! memory) as the closed-form single-request fast path, the search
 //! keeps architectures feasible under *some* assignment and ships the
 //! cheapest one inside [`eenn::EennSolution`], and the
-//! [`coordinator`]'s **virtual-time discrete-event executor** serves
-//! it — escalation follows the assignment, segments sharing a
-//! processor serialize on its device timeline
+//! [`coordinator`]'s **two-plane virtual-time discrete-event
+//! executor** serves it — escalation follows the assignment, segments
+//! sharing a processor serialize on its device timeline
 //! ([`hw::Timelines`]), every stage micro-batches, bounded queues
-//! shed with exact accounting, and every sim-clock number is
-//! deterministic (bit-identical to the analytic sim whenever a
-//! request never waits).
+//! shed with exact accounting, backend wall work pipelines onto
+//! exec-plane workers (`ServeConfig::exec_workers`) while the virtual
+//! clock stays single-threaded and authoritative, and every sim-clock
+//! number is deterministic for every worker count (bit-identical to
+//! the analytic sim whenever a request never waits).
 //!
 //! The [`scenarios`] module closes the loop per use case: a registry
 //! of hermetic workload presets modeled on the paper's evaluation

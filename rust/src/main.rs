@@ -59,8 +59,12 @@ fn run() -> Result<()> {
                  \x20                              1 = sequential, same result either way)\n\
                  repro eval    --model dscnn --solution sol.json\n\
                  repro serve   --model dscnn --solution sol.json [--rate 10 --n 200]\n\
+                 \x20             [--exec-workers N]   (exec-plane threads running the stage\n\
+                 \x20                              backends' wall work; 0 = one per core,\n\
+                 \x20                              1 = inline — metrics identical either way)\n\
                  repro report  table2|fig4 [--model NAME]\n\
                  repro scenarios [--smoke] [--only PRESET] [--workers N]\n\
+                 \x20             [--exec-workers N]\n\
                  \x20             [--out BENCH_scenarios.json]\n\
                  \x20             hermetic (no artifacts, no PJRT) end-to-end matrix:\n\
                  \x20               kws_psoc6           speech commands, PSoC6, 2.5s constraint\n\
@@ -202,6 +206,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
         queue_cap: args.usize("queue", 64),
         batch_max: args.usize("batch", 8),
         seed: args.usize("seed", 0) as u64,
+        // 0 = one exec-plane worker per core; every sim-clock metric
+        // is byte-identical to the inline (--exec-workers 1) run
+        exec_workers: args.usize("exec-workers", 0),
     };
     let m = serve(&engine, &man, model, &ws, &sol, &platform, &test, &cfg)?;
     println!(
@@ -244,6 +251,10 @@ fn scenarios_cmd(args: &Args) -> Result<()> {
 
     let smoke = args.bool("smoke");
     let workers = args.usize("workers", na::default_workers());
+    // inline by default: scenario wall timings stay comparable across
+    // CI baselines (the deterministic payload is byte-identical for
+    // any value anyway)
+    let exec_workers = args.usize("exec-workers", 1);
     let only = args.opt("only");
     let out_path = args.str("out", "BENCH_scenarios.json");
 
@@ -267,7 +278,7 @@ fn scenarios_cmd(args: &Args) -> Result<()> {
     );
     let mut reports = Vec::with_capacity(selected.len());
     for sc in selected {
-        let r = scenarios::run_scenario(sc, workers, smoke)?;
+        let r = scenarios::run_scenario(sc, workers, exec_workers, smoke)?;
         r.print();
         println!();
         reports.push(r);

@@ -29,7 +29,14 @@
 //! (the paper's testbeds have 2–3 targets and at most one classifier
 //! per processor), so exhaustive enumeration is cheap. Past
 //! [`MAX_ASSIGNMENTS`] the space is restricted to pipeline-ordered
-//! (non-decreasing) assignments as a tractable fallback.
+//! (non-decreasing) assignments as a tractable fallback. Either way
+//! the space is **streamed** ([`AssignmentIter`]), never materialized:
+//! the sweeps simulate fixed-size chunks as they are generated, so
+//! the enumeration/simulation working set stays O(workers × chunk)
+//! instead of O(assignments). (The *feasible survivors* are still
+//! retained — the co-search needs the full feasible set for its
+//! normalization and argmin — so a loose constraint keeps
+//! O(feasible) mapping+report pairs live.)
 
 use std::sync::Arc;
 
@@ -130,50 +137,91 @@ impl Mapping {
 /// pipeline-ordered (non-decreasing) assignments only.
 pub const MAX_ASSIGNMENTS: usize = 4096;
 
-/// Every segment→processor assignment for `nseg` segments on `nproc`
-/// processors, in lexicographic order. Full `nproc^nseg` enumeration
-/// while it stays under [`MAX_ASSIGNMENTS`]; non-decreasing
-/// assignments only beyond that.
-pub fn enumerate_assignments(nseg: usize, nproc: usize) -> Vec<Vec<ProcId>> {
-    if nseg == 0 || nproc == 0 {
-        return Vec::new();
+/// Streaming enumeration of segment→processor assignments, in the
+/// exact order [`enumerate_assignments`] materializes: full
+/// `nproc^nseg` lexicographic enumeration while it stays under
+/// [`MAX_ASSIGNMENTS`]; non-decreasing (pipeline-ordered) assignments
+/// only beyond that. One live `Vec` of state, one allocation per item
+/// yielded — the sweep layers consume it in bounded chunks so the
+/// co-search never materializes the exponential space.
+pub struct AssignmentIter {
+    next: Option<Vec<ProcId>>,
+    nproc: usize,
+    /// Non-decreasing fallback mode (space too large for full
+    /// enumeration).
+    monotone: bool,
+}
+
+impl AssignmentIter {
+    pub fn new(nseg: usize, nproc: usize) -> Self {
+        if nseg == 0 || nproc == 0 {
+            return AssignmentIter { next: None, nproc, monotone: false };
+        }
+        let full = (nproc as u64)
+            .checked_pow(nseg as u32)
+            .map(|s| s <= MAX_ASSIGNMENTS as u64)
+            .unwrap_or(false);
+        AssignmentIter { next: Some(vec![0; nseg]), nproc, monotone: !full }
     }
-    let full_size = (nproc as u64).checked_pow(nseg as u32);
-    if full_size.map(|s| s <= MAX_ASSIGNMENTS as u64).unwrap_or(false) {
-        let mut out = Vec::with_capacity(full_size.unwrap() as usize);
-        let mut cur = vec![0usize; nseg];
-        loop {
-            out.push(cur.clone());
-            // lexicographic odometer, most-significant digit first
-            let mut i = nseg;
-            loop {
-                if i == 0 {
-                    return out;
-                }
-                i -= 1;
-                cur[i] += 1;
-                if cur[i] < nproc {
-                    break;
-                }
-                cur[i] = 0;
+}
+
+/// Lexicographic odometer step, most-significant digit first; `false`
+/// on wrap-around (enumeration exhausted).
+fn advance_full(digits: &mut [ProcId], nproc: usize) -> bool {
+    let mut i = digits.len();
+    while i > 0 {
+        i -= 1;
+        digits[i] += 1;
+        if digits[i] < nproc {
+            return true;
+        }
+        digits[i] = 0;
+    }
+    false
+}
+
+/// Next non-decreasing sequence in lexicographic order: bump the
+/// rightmost digit with headroom and snap everything after it to the
+/// new value (keeps the sequence monotone).
+fn advance_monotone(digits: &mut [ProcId], nproc: usize) -> bool {
+    let mut i = digits.len();
+    while i > 0 {
+        i -= 1;
+        if digits[i] + 1 < nproc {
+            let v = digits[i] + 1;
+            for d in &mut digits[i..] {
+                *d = v;
             }
+            return true;
         }
     }
-    // fallback: non-decreasing assignments (C(nseg + nproc - 1, nseg))
-    let mut out = Vec::new();
-    let mut cur = vec![0usize; nseg];
-    fn rec(cur: &mut Vec<usize>, pos: usize, min_proc: usize, nproc: usize, out: &mut Vec<Vec<usize>>) {
-        if pos == cur.len() {
-            out.push(cur.clone());
-            return;
+    false
+}
+
+impl Iterator for AssignmentIter {
+    type Item = Vec<ProcId>;
+
+    fn next(&mut self) -> Option<Vec<ProcId>> {
+        let cur = self.next.take()?;
+        let mut succ = cur.clone();
+        let advanced = if self.monotone {
+            advance_monotone(&mut succ, self.nproc)
+        } else {
+            advance_full(&mut succ, self.nproc)
+        };
+        if advanced {
+            self.next = Some(succ);
         }
-        for p in min_proc..nproc {
-            cur[pos] = p;
-            rec(cur, pos + 1, p, nproc, out);
-        }
+        Some(cur)
     }
-    rec(&mut cur, 0, 0, nproc, &mut out);
-    out
+}
+
+/// Every segment→processor assignment for `nseg` segments on `nproc`
+/// processors, materialized in [`AssignmentIter`] order. Kept for the
+/// property tests and small callers; the search layers stream the
+/// iterator instead.
+pub fn enumerate_assignments(nseg: usize, nproc: usize) -> Vec<Vec<ProcId>> {
+    AssignmentIter::new(nseg, nproc).collect()
 }
 
 /// Feasibility sweep over every assignment of one architecture.
@@ -210,6 +258,14 @@ fn simulate_assignment(
     (mapping, report)
 }
 
+/// Assignments simulated per streamed chunk: the enumeration buffer
+/// and in-flight simulation reports are bounded at
+/// O(workers × SWEEP_CHUNK) instead of the whole (potentially
+/// exponential) assignment space, while each pooled dispatch still
+/// amortizes its fan-out overhead over a full chunk. (Feasible
+/// survivors are accumulated on top — see the module docs.)
+const SWEEP_CHUNK: usize = 64;
+
 fn feasible_assignments(
     graph: &BlockGraph,
     exits: &[usize],
@@ -219,35 +275,45 @@ fn feasible_assignments(
 ) -> AssignmentSweep {
     let nseg = exits.len() + 1;
     let nproc = platform.processors.len();
-    let assignments = enumerate_assignments(nseg, nproc);
-    let evaluated = assignments.len();
-    // per-assignment simulation fans out over the pool; both arms run
-    // the same `simulate_assignment` body in enumeration order, so the
-    // feasible list (and every downstream tie-break) is identical for
-    // any worker count. The Arc clone of graph/platform is only paid
-    // when the pool is actually used — this sits in the enumeration
+    // streamed enumeration: chunks are generated on the fly and the
+    // per-assignment simulation fans out over the pool per chunk; both
+    // arms run the same `simulate_assignment` body in enumeration
+    // order, so the feasible list (and every downstream tie-break) is
+    // identical for any worker count and bit-identical to the old
+    // fully-materialized sweep. The Arc clone of graph/platform is
+    // only paid when a pool is given — this sits in the enumeration
     // hot loop (one call per candidate subset), where the inline path
-    // must stay allocation-free.
-    let reports: Vec<(Mapping, SimReport)> = match pool {
-        Some(pool) if assignments.len() > 1 => {
-            let ctx = Arc::new((graph.clone(), exits.to_vec(), platform.clone()));
-            pool.map(assignments, move |assignment| {
-                let (graph, exits, platform) = &*ctx;
-                simulate_assignment(graph, exits, platform, assignment)
-            })
-        }
-        _ => assignments
-            .into_iter()
-            .map(|assignment| simulate_assignment(graph, exits, platform, assignment))
-            .collect(),
-    };
+    // must stay allocation-lean.
+    let ctx = pool.map(|_| Arc::new((graph.clone(), exits.to_vec(), platform.clone())));
+    let mut iter = AssignmentIter::new(nseg, nproc);
     let mut feasible = Vec::new();
     let mut any_memory_ok = false;
-    for (mapping, report) in reports {
-        let memory_ok = report.memory_ok.iter().all(|&ok| ok);
-        any_memory_ok |= memory_ok;
-        if memory_ok && report.worst_case_s <= latency_constraint_s {
-            feasible.push((mapping, report));
+    let mut evaluated = 0usize;
+    loop {
+        let chunk: Vec<Vec<ProcId>> = iter.by_ref().take(SWEEP_CHUNK).collect();
+        if chunk.is_empty() {
+            break;
+        }
+        evaluated += chunk.len();
+        let reports: Vec<(Mapping, SimReport)> = match (pool, &ctx) {
+            (Some(pool), Some(ctx)) if chunk.len() > 1 => {
+                let ctx = Arc::clone(ctx);
+                pool.map(chunk, move |assignment| {
+                    let (graph, exits, platform) = &*ctx;
+                    simulate_assignment(graph, exits, platform, assignment)
+                })
+            }
+            _ => chunk
+                .into_iter()
+                .map(|assignment| simulate_assignment(graph, exits, platform, assignment))
+                .collect(),
+        };
+        for (mapping, report) in reports {
+            let memory_ok = report.memory_ok.iter().all(|&ok| ok);
+            any_memory_ok |= memory_ok;
+            if memory_ok && report.worst_case_s <= latency_constraint_s {
+                feasible.push((mapping, report));
+            }
         }
     }
     AssignmentSweep { feasible, any_memory_ok, evaluated }
@@ -445,6 +511,64 @@ mod tests {
         for asg in &a {
             assert!(asg.windows(2).all(|w| w[0] <= w[1]));
         }
+    }
+
+    #[test]
+    fn assignment_iter_is_lazy_and_ordered() {
+        // full space: iterator yields the lexicographic sequence
+        // without materializing it
+        let mut it = AssignmentIter::new(2, 3);
+        assert_eq!(it.next(), Some(vec![0, 0]));
+        assert_eq!(it.next(), Some(vec![0, 1]));
+        let rest: Vec<_> = it.collect();
+        assert_eq!(rest.len(), 7);
+        assert_eq!(rest.last(), Some(&vec![2, 2]));
+
+        // fallback space: pin the monotone successor rule against an
+        // independent recursive enumeration (the pre-streaming
+        // implementation), not against itself
+        fn rec(cur: &mut Vec<ProcId>, min_proc: usize, nproc: usize, out: &mut Vec<Vec<ProcId>>) {
+            if cur.len() == 13 {
+                out.push(cur.clone());
+                return;
+            }
+            for p in min_proc..nproc {
+                cur.push(p);
+                rec(cur, p, nproc, out);
+                cur.pop();
+            }
+        }
+        let mut expected = Vec::new();
+        rec(&mut Vec::new(), 0, 2, &mut expected);
+        let fallback: Vec<_> = AssignmentIter::new(13, 2).collect();
+        assert_eq!(fallback, expected, "streamed fallback must match the recursive enumeration");
+        // and a mid-sized monotone case: after [0,1,2] comes [0,2,2]
+        let a = enumerate_assignments(14, 3);
+        let i = a.iter().position(|x| x[..12].iter().all(|&d| d == 0) && x[12] == 1 && x[13] == 2);
+        let i = i.expect("[0..,1,2] enumerated");
+        assert_eq!(&a[i + 1][12..], &[2, 2]);
+        // exhausted iterator stays exhausted
+        let mut done = AssignmentIter::new(1, 1);
+        assert_eq!(done.next(), Some(vec![0]));
+        assert_eq!(done.next(), None);
+        assert_eq!(done.next(), None);
+    }
+
+    #[test]
+    fn streamed_sweep_matches_pooled_and_sequential() {
+        // the chunked streaming path must keep enumeration order for
+        // any worker count (tie-breaks depend on it)
+        let g = BlockGraph::synthetic_resnet(10, 3);
+        let p = presets::fog_cluster(); // 4 procs, 3 segments: 64 assignments = 1 chunk boundary
+        let pool = ThreadPool::new(3);
+        let seq = sweep_assignments(&g, &[1, 4], &p, f64::INFINITY);
+        let par = sweep_assignments_with(&g, &[1, 4], &p, f64::INFINITY, Some(&pool));
+        assert_eq!(seq.evaluated, 64);
+        assert_eq!(par.evaluated, 64);
+        let (sm, sr) = seq.best.expect("feasible");
+        let (pm, pr) = par.best.expect("feasible");
+        assert_eq!(sm, pm);
+        assert_eq!(sr.worst_case_s.to_bits(), pr.worst_case_s.to_bits());
     }
 
     #[test]

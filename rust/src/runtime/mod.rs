@@ -15,5 +15,5 @@ mod weights;
 
 pub use engine::{BoundHandle, Engine, ExecHandle};
 pub use manifest::{BlockInfo, HeadGraphs, Manifest, ModelInfo, SplitInfo, TensorInfo};
-pub use tensor::{Dtype, HostTensor};
+pub use tensor::{clone_stats, Dtype, HostTensor};
 pub use weights::WeightStore;

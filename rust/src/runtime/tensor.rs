@@ -6,7 +6,7 @@ pub enum Dtype {
     I32,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct HostTensor {
     pub shape: Vec<usize>,
     pub dtype: Dtype,
@@ -14,7 +14,69 @@ pub struct HostTensor {
     pub data: Vec<u8>,
 }
 
+impl Clone for HostTensor {
+    fn clone(&self) -> Self {
+        clone_stats::bump();
+        HostTensor {
+            shape: self.shape.clone(),
+            dtype: self.dtype,
+            data: self.data.clone(),
+        }
+    }
+}
+
+/// Debug-build clone instrumentation: the serving executor's contract
+/// is that payload tensors *move* through the escalation path (queue →
+/// backend → next queue) without being copied, and
+/// `tests/clone_budget.rs` pins that by counting every deep copy. The
+/// counter only exists in debug builds — release binaries (benches,
+/// production serving) pay nothing.
+pub mod clone_stats {
+    #[cfg(debug_assertions)]
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[cfg(debug_assertions)]
+    static CLONES: AtomicUsize = AtomicUsize::new(0);
+
+    #[cfg(debug_assertions)]
+    #[inline]
+    pub(super) fn bump() {
+        CLONES.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[inline]
+    pub(super) fn bump() {}
+
+    /// Process-wide [`super::HostTensor`] deep-copy count since the
+    /// last [`reset`] (always 0 in release builds).
+    #[cfg(debug_assertions)]
+    pub fn count() -> usize {
+        CLONES.load(Ordering::Relaxed)
+    }
+
+    #[cfg(not(debug_assertions))]
+    pub fn count() -> usize {
+        0
+    }
+
+    #[cfg(debug_assertions)]
+    pub fn reset() {
+        CLONES.store(0, Ordering::Relaxed);
+    }
+
+    #[cfg(not(debug_assertions))]
+    pub fn reset() {}
+}
+
 impl HostTensor {
+    /// Zero-element placeholder. The serving executor swaps it into a
+    /// dispatched job so the real payload can move to the backend (and
+    /// back along the escalation path) without a deep copy.
+    pub fn empty() -> Self {
+        HostTensor { shape: vec![0], dtype: Dtype::F32, data: Vec::new() }
+    }
+
     pub fn f32(shape: &[usize], values: &[f32]) -> Self {
         assert_eq!(shape.iter().product::<usize>(), values.len());
         let mut data = Vec::with_capacity(values.len() * 4);
@@ -83,5 +145,26 @@ mod tests {
     #[should_panic]
     fn shape_mismatch_panics() {
         HostTensor::f32(&[2, 2], &[1.0]);
+    }
+
+    #[test]
+    fn empty_placeholder_has_no_elements() {
+        let t = HostTensor::empty();
+        assert_eq!(t.len(), 0);
+        assert!(t.is_empty());
+        assert!(t.to_f32().is_empty());
+    }
+
+    #[test]
+    fn clone_stats_counts_deep_copies_in_debug() {
+        let t = HostTensor::f32(&[2], &[1.0, 2.0]);
+        let before = clone_stats::count();
+        let u = t.clone();
+        assert_eq!(u.to_f32(), t.to_f32());
+        if cfg!(debug_assertions) {
+            assert!(clone_stats::count() > before, "debug builds must count clones");
+        } else {
+            assert_eq!(clone_stats::count(), 0, "release builds never count");
+        }
     }
 }

@@ -482,9 +482,15 @@ impl ScenarioReport {
 /// `serve_synthetic` through the discrete-event executor, whose
 /// metrics (latency percentiles, busy totals, sheds) are consumed
 /// directly — the executor *is* the deterministic replay. `workers`
-/// drives the search fan-out only; the report's deterministic payload
-/// is identical for every value.
-pub fn run_scenario(sc: &Scenario, workers: usize, smoke: bool) -> Result<ScenarioReport> {
+/// drives the search fan-out and `exec_workers` the executor's exec
+/// plane (`1` = inline); the report's deterministic payload is
+/// identical for every value of either.
+pub fn run_scenario(
+    sc: &Scenario,
+    workers: usize,
+    exec_workers: usize,
+    smoke: bool,
+) -> Result<ScenarioReport> {
     let bank = build_bank(sc);
     let cfg = FlowConfig {
         latency_constraint_s: sc.latency_constraint_s,
@@ -508,6 +514,7 @@ pub fn run_scenario(sc: &Scenario, workers: usize, smoke: bool) -> Result<Scenar
         queue_cap: sc.queue_cap,
         batch_max: 1,
         seed: sc.traffic.seed,
+        exec_workers,
     };
     let t0 = Instant::now();
     let m = serve_synthetic(&sc.graph, sol, &sc.platform, &scfg)?;
@@ -574,9 +581,9 @@ pub fn run_scenario(sc: &Scenario, workers: usize, smoke: bool) -> Result<Scenar
     })
 }
 
-/// Run every preset in [`all`] at the given worker count.
-pub fn run_all(workers: usize, smoke: bool) -> Result<Vec<ScenarioReport>> {
-    all().iter().map(|sc| run_scenario(sc, workers, smoke)).collect()
+/// Run every preset in [`all`] at the given worker counts.
+pub fn run_all(workers: usize, exec_workers: usize, smoke: bool) -> Result<Vec<ScenarioReport>> {
+    all().iter().map(|sc| run_scenario(sc, workers, exec_workers, smoke)).collect()
 }
 
 /// Aggregate reports into the `BENCH_scenarios.json` document. Keeps

@@ -1,18 +1,33 @@
 //! Small fixed-size thread pool (no tokio/rayon in the offline vendor
-//! set). Used by the coordinator's device workers and by the parallel
+//! set). Used by the serving executor's exec plane and by the parallel
 //! sections of the search engine (exit training fan-out, architecture
 //! scoring shards, mapping co-search).
+//!
+//! Two submission styles:
+//!
+//! * [`ThreadPool::map`] — one-shot fork/join over a `Vec` with an
+//!   order-preserving reduction (the search engine's fan-outs);
+//! * [`Lanes`] — a reusable handle/ticket API for long-lived stateful
+//!   workers: each lane owns a piece of mutable state (a serving-stage
+//!   backend, say) and executes its jobs strictly in submission order,
+//!   while different lanes run concurrently. Every submission carries
+//!   a caller-chosen ticket; [`Lanes::join`] blocks until that
+//!   ticket's result (or panic payload) is posted. This is the exec
+//!   plane of the coordinator's two-plane discrete-event scheduler.
 //!
 //! Panic policy: a panicking job never poisons the pool. Worker
 //! threads contain job panics and keep serving the queue; [`ThreadPool::map`]
 //! collects every job's outcome and — only after all jobs have
 //! finished — re-raises the panic of the lowest-indexed failing item,
 //! so panic propagation is deterministic and the pool stays usable.
+//! [`Lanes`] likewise catches per-job panics, posts the payload under
+//! the job's ticket, and keeps draining the lane.
 
 use std::any::Any;
+use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -137,6 +152,155 @@ impl Drop for ThreadPool {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Lanes: ordered stateful execution with completion tickets
+// ---------------------------------------------------------------------------
+
+type LaneJob<S, R> = Box<dyn FnOnce(&mut S) -> R + Send>;
+
+struct LaneQueue<S, R> {
+    /// The lane's exclusive state; `None` while a drainer holds it.
+    state: Option<S>,
+    pending: VecDeque<(u64, LaneJob<S, R>)>,
+    /// Is a drainer currently scheduled/running for this lane?
+    active: bool,
+}
+
+struct Lane<S, R> {
+    q: Mutex<LaneQueue<S, R>>,
+}
+
+struct Board<R> {
+    done: Mutex<HashMap<u64, thread::Result<R>>>,
+    cv: Condvar,
+}
+
+impl<R> Board<R> {
+    fn post(&self, ticket: u64, r: thread::Result<R>) {
+        let mut done = self.done.lock().unwrap();
+        let prev = done.insert(ticket, r);
+        debug_assert!(prev.is_none(), "ticket {ticket} posted twice");
+        self.cv.notify_all();
+    }
+}
+
+/// Ordered execution lanes with completion tickets on top of
+/// [`ThreadPool`].
+///
+/// Each lane owns one mutable state value `S` (e.g. a serving-stage
+/// backend with its RNG). Jobs submitted to a lane run **strictly in
+/// submission order** — the determinism anchor for stateful backends —
+/// while different lanes execute concurrently on the pool's workers.
+/// A lane drains through an actor-style job: the first submission to
+/// an idle lane schedules one pool job that pops the lane's queue
+/// until empty, so a busy lane never blocks a pool worker on another
+/// lane's progress.
+///
+/// Every submission carries a caller-chosen ticket (unique across the
+/// `Lanes` instance); [`Lanes::join`] blocks until that ticket's
+/// result is posted and returns it — `Err` carries the panic payload
+/// of a job that panicked, the lane itself keeps draining and the
+/// pool stays fully usable (the caller decides when and how to
+/// re-raise, which is what makes panic propagation deterministic).
+pub struct Lanes<S, R> {
+    lanes: Vec<Arc<Lane<S, R>>>,
+    board: Arc<Board<R>>,
+}
+
+impl<S: Send + 'static, R: Send + 'static> Lanes<S, R> {
+    /// One lane per entry of `states`.
+    pub fn new(states: Vec<S>) -> Self {
+        let lanes = states
+            .into_iter()
+            .map(|s| {
+                Arc::new(Lane {
+                    q: Mutex::new(LaneQueue {
+                        state: Some(s),
+                        pending: VecDeque::new(),
+                        active: false,
+                    }),
+                })
+            })
+            .collect();
+        Lanes {
+            lanes,
+            board: Arc::new(Board { done: Mutex::new(HashMap::new()), cv: Condvar::new() }),
+        }
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Queue `job` on `lane`; it will run after every job submitted to
+    /// that lane before it, with exclusive access to the lane's state.
+    /// The result (or panic payload) is posted under `ticket`.
+    pub fn submit(
+        &self,
+        pool: &ThreadPool,
+        lane: usize,
+        ticket: u64,
+        job: impl FnOnce(&mut S) -> R + Send + 'static,
+    ) {
+        let lane = Arc::clone(&self.lanes[lane]);
+        let spawn = {
+            let mut q = lane.q.lock().unwrap();
+            q.pending.push_back((ticket, Box::new(job)));
+            !std::mem::replace(&mut q.active, true)
+        };
+        if spawn {
+            let board = Arc::clone(&self.board);
+            pool.execute(move || drain_lane(lane, board));
+        }
+    }
+
+    /// Block until `ticket`'s job has finished and take its result.
+    /// `Err` is the panic payload of a panicking job (the lane and the
+    /// pool both survive). Each ticket can be joined exactly once.
+    pub fn join(&self, ticket: u64) -> thread::Result<R> {
+        let mut done = self.board.done.lock().unwrap();
+        loop {
+            if let Some(r) = done.remove(&ticket) {
+                return r;
+            }
+            done = self.board.cv.wait(done).unwrap();
+        }
+    }
+}
+
+/// The actor body of one lane: pop-and-run until the queue drains,
+/// holding the lane state outside the lock while a job executes so
+/// submitters (the event loop) never wait on backend work.
+fn drain_lane<S, R>(lane: Arc<Lane<S, R>>, board: Arc<Board<R>>) {
+    let mut state = lane
+        .q
+        .lock()
+        .unwrap()
+        .state
+        .take()
+        .expect("lane state present while the lane is marked active");
+    loop {
+        let next = {
+            let mut q = lane.q.lock().unwrap();
+            match q.pending.pop_front() {
+                Some(x) => x,
+                None => {
+                    // put the state back and deactivate under the same
+                    // lock, so a concurrent submit either sees the lane
+                    // active (job queued for this drainer — impossible,
+                    // we just saw the queue empty) or spawns a fresh one
+                    q.state = Some(state);
+                    q.active = false;
+                    return;
+                }
+            }
+        };
+        let (ticket, job) = next;
+        let r = catch_unwind(AssertUnwindSafe(|| job(&mut state)));
+        board.post(ticket, r);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,6 +404,75 @@ mod tests {
         assert_eq!(map_maybe(Some(&pool), vec![7usize], |x| x + 1), vec![8]);
         let empty = map_maybe(Some(&pool), Vec::new(), |x: usize| x);
         assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn lanes_run_jobs_in_submission_order_per_lane() {
+        let pool = ThreadPool::new(4);
+        // lane state = the log of job ids the lane has executed
+        let lanes: Lanes<Vec<u64>, Vec<u64>> =
+            Lanes::new(vec![Vec::new(), Vec::new(), Vec::new()]);
+        assert_eq!(lanes.n_lanes(), 3);
+        let mut ticket = 0u64;
+        for round in 0..50u64 {
+            for lane in 0..3 {
+                lanes.submit(&pool, lane, ticket, move |log: &mut Vec<u64>| {
+                    log.push(round);
+                    log.clone()
+                });
+                ticket += 1;
+            }
+        }
+        // the log observed at round r's job must be exactly 0..=r, for
+        // every lane — strict per-lane ordering regardless of worker
+        // interleaving
+        for t in 0..ticket {
+            let round = t / 3;
+            let log = lanes.join(t).expect("no panic");
+            assert_eq!(log, (0..=round).collect::<Vec<_>>(), "ticket {t}");
+        }
+    }
+
+    #[test]
+    fn lanes_join_works_out_of_order() {
+        let pool = ThreadPool::new(2);
+        let lanes: Lanes<u64, u64> = Lanes::new(vec![0, 0]);
+        for t in 0..10u64 {
+            lanes.submit(&pool, (t % 2) as usize, t, move |acc| {
+                *acc += t;
+                *acc
+            });
+        }
+        // join newest-first: every ticket must still resolve
+        for t in (0..10u64).rev() {
+            let v = lanes.join(t).expect("no panic");
+            assert!(v >= t / 2, "ticket {t} -> {v}");
+        }
+    }
+
+    #[test]
+    fn lanes_contain_panics_and_stay_usable() {
+        let pool = ThreadPool::new(2);
+        let lanes: Lanes<usize, usize> = Lanes::new(vec![0, 0]);
+        lanes.submit(&pool, 0, 0, |n| {
+            *n += 1;
+            *n
+        });
+        lanes.submit(&pool, 0, 1, |_| -> usize { panic!("lane boom") });
+        // submitted after the panicking job, on the same lane: must
+        // still run, with the lane state intact
+        lanes.submit(&pool, 0, 2, |n| {
+            *n += 1;
+            *n
+        });
+        assert_eq!(lanes.join(0).expect("ok"), 1);
+        let payload = lanes.join(1).expect_err("panic payload");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("<non-str>");
+        assert!(msg.contains("lane boom"), "unexpected payload: {msg}");
+        assert_eq!(lanes.join(2).expect("lane survives its panicking job"), 2);
+        // and the pool itself is not poisoned
+        let out = pool.map((0..20).collect(), |x: usize| x * 2);
+        assert_eq!(out, (0..20).map(|x| x * 2).collect::<Vec<_>>());
     }
 
     #[test]

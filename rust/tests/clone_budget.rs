@@ -1,0 +1,65 @@
+//! Serve-hot-path clone budget (hermetic): payload tensors must
+//! **move** through the executor — arrival generator → stage queue →
+//! backend → escalation → next queue — with zero `HostTensor` deep
+//! copies, for the inline exec plane and the pipelined one alike.
+//! The counter behind `runtime::clone_stats` only exists in debug
+//! builds (where `cargo test` runs); in release it reads 0 and the
+//! assertion is vacuous.
+//!
+//! This file intentionally holds a single test: the counter is
+//! process-global, and sibling tests cloning tensors concurrently
+//! would pollute the budget.
+
+use eenn_na::coordinator::{serve_synthetic, ServeConfig};
+use eenn_na::eenn::EennSolution;
+use eenn_na::graph::BlockGraph;
+use eenn_na::hw::presets;
+use eenn_na::runtime::clone_stats;
+
+#[test]
+fn synthetic_serving_hot_path_performs_zero_tensor_clones() {
+    let graph = BlockGraph::synthetic_resnet(10, 4);
+    let platform = presets::fog_cluster();
+    let sol = EennSolution {
+        model: "synthetic".into(),
+        platform: "test".into(),
+        exits: vec![1, 2, 3],
+        assignment: vec![0, 1, 2, 3],
+        thresholds: vec![0.6; 3],
+        raw_thresholds: vec![0.6; 3],
+        correction_factor: 1.0,
+        heads: vec![],
+        expected_term_rates: vec![0.4, 0.3, 0.2, 0.1],
+        expected_acc: 0.9,
+        expected_mac_frac: 0.5,
+        score: 0.0,
+    };
+    // loaded + micro-batched + deep escalation chains: the regime
+    // where redundant copies used to accumulate (one per stage visit)
+    for exec_workers in [1usize, 4] {
+        let cfg = ServeConfig {
+            arrival_rate_hz: 2_000.0,
+            n_requests: 500,
+            queue_cap: 0, // unbounded: every sample walks its full path
+            batch_max: 4,
+            seed: 21,
+            exec_workers,
+        };
+        clone_stats::reset();
+        let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
+        assert_eq!(m.completed, 500, "roomy queues serve everything");
+        let visits: usize = m
+            .term_hist
+            .iter()
+            .enumerate()
+            .map(|(exit, &c)| (exit + 1) * c)
+            .sum();
+        assert!(visits > 500, "fixture must actually escalate");
+        let clones = clone_stats::count();
+        assert_eq!(
+            clones, 0,
+            "exec_workers {exec_workers}: serve hot path must move payloads, \
+             not copy them ({clones} HostTensor clones over {visits} stage visits)"
+        );
+    }
+}

@@ -129,6 +129,7 @@ fn random_mappings_match_analytic_sim_when_uncontended() {
             queue_cap: 64,
             batch_max: 1,
             seed: 100 + case as u64,
+            exec_workers: 1,
         };
         let m = serve_synthetic(&graph, &sol, platform, &cfg).unwrap();
         assert_eq!(m.completed, 40, "case {case}: roomy queues, no shed");
@@ -168,6 +169,7 @@ fn every_preset_solution_matches_analytic_sim_when_uncontended() {
             queue_cap: 50,
             batch_max: 1,
             seed: sc.traffic.seed,
+            exec_workers: 1,
         };
         let m = serve_synthetic(&sc.graph, sol, &sc.platform, &scfg).unwrap();
         assert_eq!(m.completed, 50, "{}: isolated serving must not shed", sc.name);
@@ -184,6 +186,7 @@ fn every_preset_solution_matches_analytic_sim_when_uncontended() {
             queue_cap: sc.queue_cap, // 0 = unbounded
             batch_max: 1,
             seed: sc.traffic.seed,
+            exec_workers: 1,
         };
         let lm = serve_synthetic(&sc.graph, sol, &sc.platform, &loaded).unwrap();
         assert_fast_path(&lm, &sim, &format!("{} (loaded)", sc.name));
@@ -244,9 +247,27 @@ fn chain_mapping_reproduces_prerefactor_replay_under_load() {
         queue_cap: 800,
         batch_max: 1,
         seed: 17,
+        exec_workers: 1,
     };
     let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
     assert_eq!(m.completed, 800);
+    // the pipelined exec plane must land on the same schedule
+    // bit-for-bit — this loaded chain regime is the acceptance anchor
+    // for "byte-identical vs the pre-pipeline executor"
+    let piped = serve_synthetic(
+        &graph,
+        &sol,
+        &platform,
+        &ServeConfig { exec_workers: 8, ..cfg },
+    )
+    .unwrap();
+    assert_eq!(piped.completed, m.completed);
+    assert_eq!(piped.term_hist, m.term_hist);
+    for (a, b) in m.traces.iter().zip(&piped.traces) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.sim_latency_s.to_bits(), b.sim_latency_s.to_bits());
+        assert_eq!(a.sim_wait_s.to_bits(), b.sim_wait_s.to_bits());
+    }
     let sim = simulate(&graph, &sol.mapping(), &platform);
     let (lat, busy) = replay_oracle(&m.traces, &sim, &sol.mapping(), &platform);
     assert!(
@@ -271,6 +292,84 @@ fn chain_mapping_reproduces_prerefactor_replay_under_load() {
     }
 }
 
+/// One trace reduced to bits: (id, exit, procs, arrival, latency, wait).
+type TraceBits = (usize, usize, Vec<usize>, u64, u64, u64);
+/// (completed, shed, term_hist, busy bits, per-trace bits).
+type MetricBits = (usize, usize, Vec<usize>, Vec<u64>, Vec<TraceBits>);
+
+/// Everything the virtual clock produces, reduced to comparable bits.
+fn metric_bits(m: &ServeMetrics) -> MetricBits {
+    (
+        m.completed,
+        m.dropped,
+        m.term_hist.clone(),
+        m.proc_busy_s.iter().map(|b| b.to_bits()).collect(),
+        m.traces
+            .iter()
+            .map(|t| {
+                (
+                    t.id,
+                    t.exit_index,
+                    t.procs.clone(),
+                    t.sim_arrival_s.to_bits(),
+                    t.sim_latency_s.to_bits(),
+                    t.sim_wait_s.to_bits(),
+                )
+            })
+            .collect(),
+    )
+}
+
+#[test]
+fn every_preset_is_byte_identical_across_exec_worker_counts() {
+    // the pipelined-executor acceptance battery: each preset's
+    // co-searched solution served at its own (loaded) rate — shedding
+    // preset included — must produce bit-equal virtual metrics for
+    // exec-worker counts 1 (the pre-pipeline inline discipline), 2
+    // and 8, per-sample and micro-batched
+    for sc in scenarios::all() {
+        let bank = scenarios::build_bank(&sc);
+        let cfg = FlowConfig {
+            latency_constraint_s: sc.latency_constraint_s,
+            w_eff: sc.w_eff,
+            w_acc: sc.w_acc,
+            workers: 1,
+            ..FlowConfig::default()
+        };
+        let out = na::augment_prepared(&bank, &sc.graph, sc.name, &sc.platform, &cfg, None)
+            .expect("search must run hermetically");
+        let sol = &out.solution;
+        for batch_max in [1usize, 4] {
+            let serve = |exec_workers: usize| {
+                let scfg = ServeConfig {
+                    arrival_rate_hz: sc.traffic.arrival_rate_hz,
+                    n_requests: sc.traffic.smoke_n_requests,
+                    queue_cap: sc.queue_cap, // 0 = unbounded
+                    batch_max,
+                    seed: sc.traffic.seed,
+                    exec_workers,
+                };
+                serve_synthetic(&sc.graph, sol, &sc.platform, &scfg).unwrap()
+            };
+            let base = serve(1);
+            assert!(base.completed > 0, "{}: nothing served", sc.name);
+            if sc.queue_cap > 0 {
+                assert!(base.dropped > 0, "{}: shed preset must shed", sc.name);
+            }
+            let base_bits = metric_bits(&base);
+            for w in [2usize, 8] {
+                let m = serve(w);
+                assert_eq!(
+                    metric_bits(&m),
+                    base_bits,
+                    "{} (batch_max {batch_max}): exec_workers {w} diverged from inline",
+                    sc.name
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn shared_timeline_reproduces_prerefactor_replay_when_idle() {
     // exclusive-memory platform (one shared timeline): the disciplines
@@ -287,6 +386,7 @@ fn shared_timeline_reproduces_prerefactor_replay_when_idle() {
         queue_cap: 64,
         batch_max: 1,
         seed: 3,
+        exec_workers: 1,
     };
     let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
     assert_eq!(m.completed, 60);

@@ -70,6 +70,7 @@ fn co_searched_mapping_serves_end_to_end() {
         queue_cap: 4096,
         batch_max: 4,
         seed: 11,
+        exec_workers: 1,
     };
     let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
     assert_eq!(m.completed + m.dropped, cfg.n_requests);
@@ -115,6 +116,7 @@ fn shared_processor_serializes_both_segments() {
         queue_cap: 2048,
         batch_max: 1,
         seed: 5,
+        exec_workers: 1,
     };
     let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
     assert_eq!(m.completed + m.dropped, cfg.n_requests);
@@ -138,6 +140,7 @@ fn identity_chain_still_serves() {
         queue_cap: 1024,
         batch_max: 1,
         seed: 3,
+        exec_workers: 1,
     };
     let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
     assert_eq!(m.completed + m.dropped, cfg.n_requests);
@@ -161,6 +164,7 @@ fn executor_backpressure_sheds_under_overload() {
         queue_cap: 2,
         batch_max: 1,
         seed: 1,
+        exec_workers: 1,
     };
     let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
     assert!(m.dropped > 0, "expected drops under overload");
@@ -188,6 +192,7 @@ fn per_stage_micro_batching_preserves_accounting() {
             queue_cap: 4096,
             batch_max,
             seed: 9,
+            exec_workers: 1,
         };
         serve_synthetic(&graph, &sol, &platform, &cfg).unwrap()
     };

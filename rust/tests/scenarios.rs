@@ -11,7 +11,7 @@
 use eenn_na::scenarios::{self, ScenarioReport};
 
 fn run(sc: &scenarios::Scenario, workers: usize) -> ScenarioReport {
-    scenarios::run_scenario(sc, workers, true).expect("scenario must run hermetically")
+    scenarios::run_scenario(sc, workers, 1, true).expect("scenario must run hermetically")
 }
 
 #[test]
@@ -22,6 +22,24 @@ fn every_preset_is_deterministic_across_runs_and_worker_counts() {
         assert_eq!(first, again, "{}: two identical runs diverged", sc.name);
         let par = run(&sc, 4).deterministic_json().to_string();
         assert_eq!(first, par, "{}: workers=4 report differs from workers=1", sc.name);
+    }
+}
+
+#[test]
+fn exec_workers_do_not_move_the_deterministic_report() {
+    // the two-plane executor contract at the scenario level: the
+    // pipelined exec plane (4 workers) produces a byte-identical
+    // report to the inline plane, loaded (stress_fog) and shedding
+    // (stress_fog_shed) alike
+    for sc in [scenarios::stress_fog(), scenarios::stress_fog_shed()] {
+        let inline = scenarios::run_scenario(&sc, 1, 1, true).expect("inline run");
+        let pooled = scenarios::run_scenario(&sc, 1, 4, true).expect("pooled run");
+        assert_eq!(
+            inline.deterministic_json().to_string(),
+            pooled.deterministic_json().to_string(),
+            "{}: exec_workers=4 report differs from inline",
+            sc.name
+        );
     }
 }
 

@@ -41,6 +41,7 @@ fn serves_all_requests_with_replay_quality() {
         queue_cap: 256,
         batch_max: 4,
         seed: 3,
+        exec_workers: 1,
     };
     let m = serve(&engine, &man, model, &ws, &sol, &platform, &test, &cfg).unwrap();
 
@@ -73,6 +74,7 @@ fn backpressure_drops_when_overloaded() {
         queue_cap: 2,
         batch_max: 1,
         seed: 1,
+        exec_workers: 1,
     };
     let m = serve(&engine, &man, model, &ws, &sol, &platform, &test, &cfg).unwrap();
     assert!(m.dropped > 0, "expected drops under overload");
@@ -97,6 +99,7 @@ fn queueing_increases_sim_latency_under_load() {
             queue_cap: 4096,
             batch_max: 1,
             seed: 9,
+            exec_workers: 1,
         };
         serve(&engine, &man, model, &ws, &sol, &platform, &test, &cfg).unwrap()
     };
@@ -126,6 +129,7 @@ fn cloud_batching_on_distributed_platform() {
         queue_cap: 128,
         batch_max: 8,
         seed: 2,
+        exec_workers: 1,
     };
     let m = serve(&engine, &man, model, &ws, &sol, &platform, &test, &scfg).unwrap();
     assert_eq!(m.completed + m.dropped, scfg.n_requests);
