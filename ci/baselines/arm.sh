@@ -1,0 +1,35 @@
+#!/usr/bin/env sh
+# Arm (or deliberately refresh) the CI bench-regression baselines.
+#
+# Regenerates every smoke-scale bench artifact exactly the way the
+# bench-smoke CI job does, then copies each into ci/baselines/ via
+# `xtask bench-update`. Run from the repo root on the machine class
+# whose numbers should gate (wall-clock fields carry a ±50% band, so
+# any reasonably quiet host arms a usable gate; deterministic fields
+# are host-independent by construction).
+#
+#   ./ci/baselines/arm.sh            # arm only missing baselines
+#   ./ci/baselines/arm.sh --refresh  # rewrite all of them
+set -eu
+
+refresh=0
+[ "${1:-}" = "--refresh" ] && refresh=1
+
+cargo bench --bench search_cost -- --smoke --threads 1,2
+cargo bench --bench serving_throughput -- --smoke
+cargo bench --bench hotpath -- --smoke
+cargo bench --bench hotpath -- --backend native
+cargo run --release -p eenn-na --bin repro -- scenarios --smoke
+cargo run --release -p eenn-na --bin repro -- scenarios --smoke \
+  --only stress_fog_shed --out BENCH_scenarios_shed.json
+
+for b in search_cost serving_throughput scenarios scenarios_shed hotpath hotpath_native; do
+  if [ "$refresh" = 1 ] || [ ! -f "ci/baselines/BENCH_$b.json" ]; then
+    cargo run --release -p xtask -- bench-update \
+      --fresh "BENCH_$b.json" --baseline "ci/baselines/BENCH_$b.json"
+  else
+    echo "ci/baselines/BENCH_$b.json already armed (use --refresh to rewrite)"
+  fi
+done
+
+echo "done — commit ci/baselines/ to end bootstrap mode"

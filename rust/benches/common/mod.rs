@@ -107,3 +107,88 @@ pub fn pipeline_speedup(
     );
     (m1, m4, Json::Obj(pipe))
 }
+
+/// Shared native-backend measurement: serve `cfg` through the native
+/// SIMD backend (calibrated verdicts) at exec-workers 1 vs 4 and with
+/// detected vs forced-scalar dispatch, assert every virtual-clock
+/// metric is bit-identical across all runs, and return
+/// `(inline, pipelined, native_speedup, native_gflops)` where the two
+/// json objects are what the bench documents embed under `timing`
+/// (same key-lockstep rule as [`pipeline_speedup`]). GFLOP/s is
+/// computed from the exact per-segment MAC counts the model reports:
+/// a request that terminated at classifier `e` ran segments `0..=e`
+/// (exact for the roomy-queue bench regimes — nothing sheds
+/// mid-cascade).
+pub fn native_measurements(
+    graph: &eenn_na::graph::BlockGraph,
+    sol: &eenn_na::eenn::EennSolution,
+    platform: &eenn_na::hw::Platform,
+    cfg: &eenn_na::coordinator::ServeConfig,
+    compute: eenn_na::compute::NativeConfig,
+) -> (
+    eenn_na::coordinator::ServeMetrics,
+    eenn_na::coordinator::ServeMetrics,
+    eenn_na::util::json::Json,
+    eenn_na::util::json::Json,
+) {
+    use eenn_na::compute::{Dispatch, NativeModel};
+    use eenn_na::coordinator::{serve_native, NativeOptions, ServeConfig, ServeMetrics};
+    use eenn_na::util::json::Json;
+    use std::collections::BTreeMap;
+
+    let run = |exec_workers: usize, dispatch: Dispatch| {
+        let c = ServeConfig { exec_workers, ..cfg.clone() };
+        let opts = NativeOptions { compute, dispatch, measured: false, final_head: None };
+        serve_native(graph, sol, platform, &c, &opts).expect("native serve")
+    };
+    let detected = Dispatch::detect();
+    run(1, detected); // warmup
+    let m1 = run(1, detected);
+    let m4 = run(4, detected);
+    let mscalar = run(4, Dispatch::Scalar);
+    for (what, m) in [("exec workers", &m4), ("SIMD dispatch", &mscalar)] {
+        assert_eq!(m1.term_hist, m.term_hist, "{what} must not move verdicts");
+        assert_eq!(m1.completed, m.completed, "{what} must not move completions");
+        assert_eq!(
+            m1.sim_latency.p99.to_bits(),
+            m.sim_latency.p99.to_bits(),
+            "virtual clock must be bit-equal across {what}"
+        );
+    }
+
+    let model = NativeModel::build(graph, &compute);
+    let seg = model.segment_macs(&sol.mapping());
+    let cum: Vec<u64> = seg
+        .iter()
+        .scan(0u64, |acc, &m| {
+            *acc += m;
+            Some(*acc)
+        })
+        .collect();
+    let macs: f64 = m1.term_hist.iter().zip(&cum).map(|(&k, &c)| k as f64 * c as f64).sum();
+    let gflops = |m: &ServeMetrics| 2.0 * macs / m.wall_s.max(1e-12) / 1e9;
+
+    println!(
+        "native backend ({}): exec-workers 1 -> {:.0} req/s ({:.2} GFLOP/s), \
+         4 -> {:.0} req/s ({:.2} GFLOP/s); forced scalar at 4 -> {:.2} GFLOP/s",
+        detected.name(),
+        m1.throughput_rps,
+        gflops(&m1),
+        m4.throughput_rps,
+        gflops(&m4),
+        gflops(&mscalar)
+    );
+
+    let mut sp = BTreeMap::new();
+    sp.insert("exec_workers_1_rps".to_string(), Json::Num(m1.throughput_rps));
+    sp.insert("exec_workers_4_rps".to_string(), Json::Num(m4.throughput_rps));
+    sp.insert("speedup_vs_1".to_string(), Json::Num(m4.throughput_rps / m1.throughput_rps));
+    let mut gf = BTreeMap::new();
+    gf.insert("detected_gflops".to_string(), Json::Num(gflops(&m4)));
+    gf.insert("scalar_gflops".to_string(), Json::Num(gflops(&mscalar)));
+    gf.insert(
+        "detected_vs_scalar".to_string(),
+        Json::Num(gflops(&m4) / gflops(&mscalar).max(1e-12)),
+    );
+    (m1, m4, Json::Obj(sp), Json::Obj(gf))
+}

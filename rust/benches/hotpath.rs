@@ -9,17 +9,24 @@
 //!   measured. Writes `BENCH_hotpath.json` with everything under
 //!   `timing`, so `xtask bench-check` tracks the serving hot path's
 //!   perf trajectory in CI;
+//! * `--backend native` — **hermetic** real compute: the same
+//!   `stress_fog` search served through the pure-Rust SIMD backend
+//!   (AVX2 or scalar, `RUST_PALLAS_FORCE_SCALAR=1` forces scalar),
+//!   measuring exec-workers 1 vs 4 and realized GFLOP/s per dispatch.
+//!   Writes `BENCH_hotpath_native.json` (`--out` overrides, so the CI
+//!   forced-scalar leg keeps its own file);
 //! * default (artifacts present) — PJRT micro-benchmarks:
 //!   staged adaptive inference per sample, engine dispatch overhead
 //!   vs pure execute time, batched vs single-sample execution on the
 //!   escalation path.
 //!
-//! Run: `cargo bench --bench hotpath [-- --smoke]`
+//! Run: `cargo bench --bench hotpath [-- --smoke | --backend native]`
 
 mod common;
 
 use std::collections::BTreeMap;
 
+use eenn_na::compute::NativeConfig;
 use eenn_na::coordinator::{serve_synthetic, ServeConfig};
 use eenn_na::data::load_split;
 use eenn_na::eenn::StagedRunner;
@@ -92,8 +99,62 @@ fn smoke_bench() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Hermetic native-backend smoke: same `stress_fog` search as
+/// [`smoke_bench`], then the shared native measurement (exec-workers
+/// 1 vs 4, detected vs forced-scalar dispatch — virtual metrics
+/// asserted bit-identical throughout) written to its own BENCH
+/// document. `--out` overrides the path so the CI forced-scalar leg
+/// does not clobber the gated artifact.
+fn smoke_native_bench(out_path: &str) -> anyhow::Result<()> {
+    let sc = scenarios::stress_fog();
+    let bank = scenarios::build_bank(&sc);
+    let cfg = FlowConfig {
+        latency_constraint_s: sc.latency_constraint_s,
+        w_eff: sc.w_eff,
+        w_acc: sc.w_acc,
+        workers: 1,
+        ..FlowConfig::default()
+    };
+    let out = na::augment_prepared(&bank, &sc.graph, sc.name, &sc.platform, &cfg, None)?;
+    let sol = &out.solution;
+    println!("=== hotpath smoke (native SIMD backend: {} preset) ===", sc.name);
+    println!("solution: exits {:?} -> procs {:?}\n", sol.exits, sol.assignment);
+
+    let serve_cfg = ServeConfig {
+        arrival_rate_hz: sc.traffic.arrival_rate_hz,
+        n_requests: sc.traffic.smoke_n_requests,
+        queue_cap: 0,
+        batch_max: 8,
+        seed: sc.traffic.seed,
+        exec_workers: 1,
+    };
+    let (m1, _m4, native_speedup, native_gflops) = common::native_measurements(
+        &sc.graph,
+        sol,
+        &sc.platform,
+        &serve_cfg,
+        NativeConfig::bench(sc.bank_seed),
+    );
+
+    let mut timing = BTreeMap::new();
+    timing.insert("native_rps".to_string(), Json::Num(m1.throughput_rps));
+    timing.insert("native_speedup".to_string(), native_speedup);
+    timing.insert("native_gflops".to_string(), native_gflops);
+    let mut top = BTreeMap::new();
+    top.insert("bench".to_string(), Json::Str("hotpath_native".to_string()));
+    top.insert("fixture".to_string(), Json::Str("smoke-native".to_string()));
+    top.insert("unit".to_string(), Json::Str("requests_per_sec".to_string()));
+    top.insert("timing".to_string(), Json::Obj(timing));
+    std::fs::write(out_path, Json::Obj(top).to_string())?;
+    println!("\nwrote {out_path}");
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    if args.str("backend", "synthetic") == "native" {
+        return smoke_native_bench(&args.str("out", "BENCH_hotpath_native.json"));
+    }
     if args.bool("smoke") {
         return smoke_bench();
     }

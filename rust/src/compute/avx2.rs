@@ -1,0 +1,309 @@
+//! AVX2 (f32x8 + FMA) kernels, selected at runtime by
+//! [`super::Dispatch::detect`].
+//!
+//! Vectorization axis is the **output channel**: the weight layouts
+//! put `cout` (or `c` for depthwise) innermost, so eight output
+//! channels load as one contiguous `f32x8` lane while the input
+//! activation broadcasts. Each lane accumulates in exactly the scalar
+//! reference order (taps outer, input channels inner ascending); the
+//! only numerical difference is FMA rounding, bounded by the kernel
+//! parity battery at 1e-5 relative. The channel remainder (`% 8`)
+//! falls back to the scalar inner loop in the same order. GAP uses
+//! additions only — no FMA — and is bit-exact vs scalar.
+//!
+//! Every function is `unsafe` because of `#[target_feature]`: callers
+//! must have verified AVX2+FMA support (the dispatch enum does).
+#![cfg(target_arch = "x86_64")]
+
+use std::arch::x86_64::*;
+
+use super::{Conv1dSpec, Conv2dSpec, DenseSpec, DwConv2dSpec};
+
+/// NHWC conv2d, AVX2 lanes over `cout`.
+///
+/// # Safety
+/// The running CPU must support AVX2 and FMA
+/// (`is_x86_feature_detected!("avx2")` + `("fma")`).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn conv2d(
+    x: &[f32],
+    batch: usize,
+    s: &Conv2dSpec,
+    wgt: &[f32],
+    bias: &[f32],
+) -> Vec<f32> {
+    let (ho, wo) = s.out_dims();
+    let (sh, sw) = s.stride;
+    let (ph, pw) = s.pad;
+    let lanes = s.cout / 8 * 8;
+    let mut out = vec![0.0f32; batch * ho * wo * s.cout];
+    for bi in 0..batch {
+        let xb = &x[bi * s.h * s.w * s.cin..][..s.h * s.w * s.cin];
+        let ob = &mut out[bi * ho * wo * s.cout..][..ho * wo * s.cout];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let o = (oy * wo + ox) * s.cout;
+                let mut co = 0usize;
+                while co < lanes {
+                    let mut acc = _mm256_setzero_ps();
+                    for ky in 0..s.kh {
+                        let iy = (oy * sh + ky) as isize - ph as isize;
+                        if iy < 0 || iy >= s.h as isize {
+                            continue;
+                        }
+                        for kx in 0..s.kw {
+                            let ix = (ox * sw + kx) as isize - pw as isize;
+                            if ix < 0 || ix >= s.w as isize {
+                                continue;
+                            }
+                            let xoff = (iy as usize * s.w + ix as usize) * s.cin;
+                            let woff = (ky * s.kw + kx) * s.cin * s.cout + co;
+                            for ci in 0..s.cin {
+                                let xv = _mm256_set1_ps(xb[xoff + ci]);
+                                let wv = _mm256_loadu_ps(wgt.as_ptr().add(woff + ci * s.cout));
+                                acc = _mm256_fmadd_ps(xv, wv, acc);
+                            }
+                        }
+                    }
+                    acc = _mm256_add_ps(acc, _mm256_loadu_ps(bias.as_ptr().add(co)));
+                    if s.relu {
+                        acc = _mm256_max_ps(acc, _mm256_setzero_ps());
+                    }
+                    _mm256_storeu_ps(ob.as_mut_ptr().add(o + co), acc);
+                    co += 8;
+                }
+                for co in lanes..s.cout {
+                    let mut acc = 0.0f32;
+                    for ky in 0..s.kh {
+                        let iy = (oy * sh + ky) as isize - ph as isize;
+                        if iy < 0 || iy >= s.h as isize {
+                            continue;
+                        }
+                        for kx in 0..s.kw {
+                            let ix = (ox * sw + kx) as isize - pw as isize;
+                            if ix < 0 || ix >= s.w as isize {
+                                continue;
+                            }
+                            let xoff = (iy as usize * s.w + ix as usize) * s.cin;
+                            let woff = (ky * s.kw + kx) * s.cin * s.cout + co;
+                            for ci in 0..s.cin {
+                                acc += xb[xoff + ci] * wgt[woff + ci * s.cout];
+                            }
+                        }
+                    }
+                    acc += bias[co];
+                    ob[o + co] = if s.relu { acc.max(0.0) } else { acc };
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Depthwise NHWC conv2d, AVX2 lanes over `c`.
+///
+/// # Safety
+/// The running CPU must support AVX2 and FMA.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dwconv2d(
+    x: &[f32],
+    batch: usize,
+    s: &DwConv2dSpec,
+    wgt: &[f32],
+    bias: &[f32],
+) -> Vec<f32> {
+    let (ho, wo) = s.out_dims();
+    let (sh, sw) = s.stride;
+    let (ph, pw) = s.pad;
+    let lanes = s.c / 8 * 8;
+    let mut out = vec![0.0f32; batch * ho * wo * s.c];
+    for bi in 0..batch {
+        let xb = &x[bi * s.h * s.w * s.c..][..s.h * s.w * s.c];
+        let ob = &mut out[bi * ho * wo * s.c..][..ho * wo * s.c];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let o = (oy * wo + ox) * s.c;
+                let mut ci = 0usize;
+                while ci < lanes {
+                    let mut acc = _mm256_setzero_ps();
+                    for ky in 0..s.kh {
+                        let iy = (oy * sh + ky) as isize - ph as isize;
+                        if iy < 0 || iy >= s.h as isize {
+                            continue;
+                        }
+                        for kx in 0..s.kw {
+                            let ix = (ox * sw + kx) as isize - pw as isize;
+                            if ix < 0 || ix >= s.w as isize {
+                                continue;
+                            }
+                            let xv = _mm256_loadu_ps(
+                                xb.as_ptr().add((iy as usize * s.w + ix as usize) * s.c + ci),
+                            );
+                            let wv =
+                                _mm256_loadu_ps(wgt.as_ptr().add((ky * s.kw + kx) * s.c + ci));
+                            acc = _mm256_fmadd_ps(xv, wv, acc);
+                        }
+                    }
+                    acc = _mm256_add_ps(acc, _mm256_loadu_ps(bias.as_ptr().add(ci)));
+                    if s.relu {
+                        acc = _mm256_max_ps(acc, _mm256_setzero_ps());
+                    }
+                    _mm256_storeu_ps(ob.as_mut_ptr().add(o + ci), acc);
+                    ci += 8;
+                }
+                for ci in lanes..s.c {
+                    let mut acc = 0.0f32;
+                    for ky in 0..s.kh {
+                        let iy = (oy * sh + ky) as isize - ph as isize;
+                        if iy < 0 || iy >= s.h as isize {
+                            continue;
+                        }
+                        for kx in 0..s.kw {
+                            let ix = (ox * sw + kx) as isize - pw as isize;
+                            if ix < 0 || ix >= s.w as isize {
+                                continue;
+                            }
+                            acc += xb[(iy as usize * s.w + ix as usize) * s.c + ci]
+                                * wgt[(ky * s.kw + kx) * s.c + ci];
+                        }
+                    }
+                    acc += bias[ci];
+                    ob[o + ci] = if s.relu { acc.max(0.0) } else { acc };
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 1-D conv, AVX2 lanes over `cout`.
+///
+/// # Safety
+/// The running CPU must support AVX2 and FMA.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn conv1d(
+    x: &[f32],
+    batch: usize,
+    s: &Conv1dSpec,
+    wgt: &[f32],
+    bias: &[f32],
+) -> Vec<f32> {
+    let lo = s.out_len();
+    let lanes = s.cout / 8 * 8;
+    let mut out = vec![0.0f32; batch * lo * s.cout];
+    for bi in 0..batch {
+        let xb = &x[bi * s.l * s.cin..][..s.l * s.cin];
+        let ob = &mut out[bi * lo * s.cout..][..lo * s.cout];
+        for op in 0..lo {
+            let o = op * s.cout;
+            let mut co = 0usize;
+            while co < lanes {
+                let mut acc = _mm256_setzero_ps();
+                for kt in 0..s.k {
+                    let ip = (op * s.stride + kt) as isize - s.pad as isize;
+                    if ip < 0 || ip >= s.l as isize {
+                        continue;
+                    }
+                    let xoff = ip as usize * s.cin;
+                    let woff = kt * s.cin * s.cout + co;
+                    for ci in 0..s.cin {
+                        let xv = _mm256_set1_ps(xb[xoff + ci]);
+                        let wv = _mm256_loadu_ps(wgt.as_ptr().add(woff + ci * s.cout));
+                        acc = _mm256_fmadd_ps(xv, wv, acc);
+                    }
+                }
+                acc = _mm256_add_ps(acc, _mm256_loadu_ps(bias.as_ptr().add(co)));
+                if s.relu {
+                    acc = _mm256_max_ps(acc, _mm256_setzero_ps());
+                }
+                _mm256_storeu_ps(ob.as_mut_ptr().add(o + co), acc);
+                co += 8;
+            }
+            for co in lanes..s.cout {
+                let mut acc = 0.0f32;
+                for kt in 0..s.k {
+                    let ip = (op * s.stride + kt) as isize - s.pad as isize;
+                    if ip < 0 || ip >= s.l as isize {
+                        continue;
+                    }
+                    let xoff = ip as usize * s.cin;
+                    let woff = kt * s.cin * s.cout + co;
+                    for ci in 0..s.cin {
+                        acc += xb[xoff + ci] * wgt[woff + ci * s.cout];
+                    }
+                }
+                acc += bias[co];
+                ob[o + co] = if s.relu { acc.max(0.0) } else { acc };
+            }
+        }
+    }
+    out
+}
+
+/// Dense `(m, k) @ (k, n)`, AVX2 lanes over `n`.
+///
+/// # Safety
+/// The running CPU must support AVX2 and FMA.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn dense(x: &[f32], m: usize, s: &DenseSpec, wgt: &[f32], bias: &[f32]) -> Vec<f32> {
+    let lanes = s.n / 8 * 8;
+    let mut out = vec![0.0f32; m * s.n];
+    for i in 0..m {
+        let xr = &x[i * s.k..][..s.k];
+        let ob = &mut out[i * s.n..][..s.n];
+        let mut j = 0usize;
+        while j < lanes {
+            let mut acc = _mm256_setzero_ps();
+            for (ki, &xv) in xr.iter().enumerate() {
+                let xv = _mm256_set1_ps(xv);
+                let wv = _mm256_loadu_ps(wgt.as_ptr().add(ki * s.n + j));
+                acc = _mm256_fmadd_ps(xv, wv, acc);
+            }
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(bias.as_ptr().add(j)));
+            if s.relu {
+                acc = _mm256_max_ps(acc, _mm256_setzero_ps());
+            }
+            _mm256_storeu_ps(ob.as_mut_ptr().add(j), acc);
+            j += 8;
+        }
+        for j in lanes..s.n {
+            let mut acc = 0.0f32;
+            for (ki, &xv) in xr.iter().enumerate() {
+                acc += xv * wgt[ki * s.n + j];
+            }
+            acc += bias[j];
+            ob[j] = if s.relu { acc.max(0.0) } else { acc };
+        }
+    }
+    out
+}
+
+/// Global average pool, AVX2 lanes over `c` — additions only, in the
+/// scalar order, so the result is bit-exact vs [`super::scalar::gap`].
+///
+/// # Safety
+/// The running CPU must support AVX2 and FMA.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn gap(x: &[f32], spatial: usize, c: usize) -> Vec<f32> {
+    let inv = 1.0f32 / spatial.max(1) as f32;
+    let lanes = c / 8 * 8;
+    let mut out = vec![0.0f32; c];
+    let mut ci = 0usize;
+    while ci < lanes {
+        let mut acc = _mm256_setzero_ps();
+        for p in 0..spatial {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(x.as_ptr().add(p * c + ci)));
+        }
+        acc = _mm256_mul_ps(acc, _mm256_set1_ps(inv));
+        _mm256_storeu_ps(out.as_mut_ptr().add(ci), acc);
+        ci += 8;
+    }
+    for ci in lanes..c {
+        let mut acc = 0.0f32;
+        for p in 0..spatial {
+            acc += x[p * c + ci];
+        }
+        out[ci] = acc * inv;
+    }
+    out
+}

@@ -1,0 +1,803 @@
+//! Native SIMD compute backend: real multiply-accumulate kernels for
+//! the serving exec plane (ROADMAP open item 2, resolved).
+//!
+//! Ports the Python reference kernels
+//! (`python/compile/kernels/{conv1d,conv2d,depthwise,dense,ee_head}.py`)
+//! to pure Rust, covering exactly the [`crate::graph::fine::Layer`]
+//! compute variants — `Conv2d`, `DwConv2d`, `Conv1d`, `Dense` — plus
+//! the EE head's GAP → dense → softmax → max-confidence chain.
+//!
+//! Two implementations sit behind one runtime [`Dispatch`]:
+//!
+//! * [`scalar`] — the portable, **bit-exact reference**: one fixed
+//!   summation order per output element (taps outer, input channels
+//!   inner);
+//! * [`avx2`] — `f32x8` + FMA lanes over the output-channel axis,
+//!   selected via `is_x86_feature_detected!` and forced off with the
+//!   env var `RUST_PALLAS_FORCE_SCALAR=1`. Same summation order; FMA
+//!   rounding keeps it within 1e-5 relative of scalar (pinned by
+//!   `tests/kernel_parity.rs`), and the add-only GAP is bit-exact.
+//!
+//! [`NativeModel`] assembles seeded-weight layer stacks from a
+//! [`crate::graph::BlockGraph`] (ResNet-shaped when the block count
+//! matches `3n + 1`, one conv per block otherwise), splits into
+//! per-segment stacks for the coordinator's `NativeExec` stage
+//! backend, and exposes exact per-block MAC counts that agree with
+//! [`crate::graph::fine::FineNode::macs`] on SAME-padded shapes — the
+//! cost model the search optimizes is the arithmetic the backend
+//! performs.
+
+pub mod avx2;
+pub mod scalar;
+
+use crate::graph::BlockGraph;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// layer specs
+// ---------------------------------------------------------------------------
+
+/// Shape/behaviour of one NHWC 2-D convolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dSpec {
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub kh: usize,
+    pub kw: usize,
+    /// (stride_h, stride_w).
+    pub stride: (usize, usize),
+    /// Symmetric zero padding (pad_h, pad_w).
+    pub pad: (usize, usize),
+    pub relu: bool,
+}
+
+impl Conv2dSpec {
+    pub fn out_dims(&self) -> (usize, usize) {
+        (
+            (self.h + 2 * self.pad.0 - self.kh) / self.stride.0 + 1,
+            (self.w + 2 * self.pad.1 - self.kw) / self.stride.1 + 1,
+        )
+    }
+    /// Exact multiply-accumulate count per sample.
+    pub fn macs(&self) -> u64 {
+        let (ho, wo) = self.out_dims();
+        (ho * wo * self.kh * self.kw * self.cin * self.cout) as u64
+    }
+    pub fn weight_len(&self) -> usize {
+        self.kh * self.kw * self.cin * self.cout
+    }
+}
+
+/// Shape/behaviour of one depthwise NHWC 2-D convolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DwConv2dSpec {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: (usize, usize),
+    pub pad: (usize, usize),
+    pub relu: bool,
+}
+
+impl DwConv2dSpec {
+    pub fn out_dims(&self) -> (usize, usize) {
+        (
+            (self.h + 2 * self.pad.0 - self.kh) / self.stride.0 + 1,
+            (self.w + 2 * self.pad.1 - self.kw) / self.stride.1 + 1,
+        )
+    }
+    pub fn macs(&self) -> u64 {
+        let (ho, wo) = self.out_dims();
+        (ho * wo * self.kh * self.kw * self.c) as u64
+    }
+    pub fn weight_len(&self) -> usize {
+        self.kh * self.kw * self.c
+    }
+}
+
+/// Shape/behaviour of one 1-D convolution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv1dSpec {
+    pub l: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub relu: bool,
+}
+
+impl Conv1dSpec {
+    pub fn out_len(&self) -> usize {
+        (self.l + 2 * self.pad - self.k) / self.stride + 1
+    }
+    pub fn macs(&self) -> u64 {
+        (self.out_len() * self.k * self.cin * self.cout) as u64
+    }
+    pub fn weight_len(&self) -> usize {
+        self.k * self.cin * self.cout
+    }
+}
+
+/// Shape/behaviour of one dense layer (`(m, k) @ (k, n)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DenseSpec {
+    pub k: usize,
+    pub n: usize,
+    pub relu: bool,
+}
+
+impl DenseSpec {
+    /// MACs per input row.
+    pub fn macs(&self) -> u64 {
+        (self.k * self.n) as u64
+    }
+    pub fn weight_len(&self) -> usize {
+        self.k * self.n
+    }
+}
+
+// ---------------------------------------------------------------------------
+// runtime dispatch
+// ---------------------------------------------------------------------------
+
+/// Which kernel implementation executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Portable reference (fixed summation order, bit-exact).
+    Scalar,
+    /// `f32x8` + FMA lanes; falls back to scalar off x86_64.
+    Avx2,
+}
+
+/// Pure dispatch policy, separated from the process environment so
+/// tests can sweep it: the env override wins, then hardware detection.
+pub fn dispatch_from(force_scalar: Option<&str>, avx2_available: bool) -> Dispatch {
+    let forced = force_scalar.is_some_and(|v| !v.is_empty() && v != "0");
+    if !forced && avx2_available {
+        Dispatch::Avx2
+    } else {
+        Dispatch::Scalar
+    }
+}
+
+impl Dispatch {
+    /// Runtime selection: `RUST_PALLAS_FORCE_SCALAR=1` forces the
+    /// scalar reference; otherwise AVX2+FMA when the CPU has it.
+    pub fn detect() -> Dispatch {
+        let force = std::env::var("RUST_PALLAS_FORCE_SCALAR").ok();
+        dispatch_from(force.as_deref(), avx2_available())
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dispatch::Scalar => "scalar",
+            Dispatch::Avx2 => "avx2",
+        }
+    }
+
+    pub fn conv2d(
+        &self,
+        x: &[f32],
+        batch: usize,
+        s: &Conv2dSpec,
+        w: &[f32],
+        b: &[f32],
+    ) -> Vec<f32> {
+        match self {
+            Dispatch::Scalar => scalar::conv2d(x, batch, s, w, b),
+            #[cfg(target_arch = "x86_64")]
+            Dispatch::Avx2 => unsafe { avx2::conv2d(x, batch, s, w, b) },
+            #[cfg(not(target_arch = "x86_64"))]
+            Dispatch::Avx2 => scalar::conv2d(x, batch, s, w, b),
+        }
+    }
+
+    pub fn dwconv2d(
+        &self,
+        x: &[f32],
+        batch: usize,
+        s: &DwConv2dSpec,
+        w: &[f32],
+        b: &[f32],
+    ) -> Vec<f32> {
+        match self {
+            Dispatch::Scalar => scalar::dwconv2d(x, batch, s, w, b),
+            #[cfg(target_arch = "x86_64")]
+            Dispatch::Avx2 => unsafe { avx2::dwconv2d(x, batch, s, w, b) },
+            #[cfg(not(target_arch = "x86_64"))]
+            Dispatch::Avx2 => scalar::dwconv2d(x, batch, s, w, b),
+        }
+    }
+
+    pub fn conv1d(
+        &self,
+        x: &[f32],
+        batch: usize,
+        s: &Conv1dSpec,
+        w: &[f32],
+        b: &[f32],
+    ) -> Vec<f32> {
+        match self {
+            Dispatch::Scalar => scalar::conv1d(x, batch, s, w, b),
+            #[cfg(target_arch = "x86_64")]
+            Dispatch::Avx2 => unsafe { avx2::conv1d(x, batch, s, w, b) },
+            #[cfg(not(target_arch = "x86_64"))]
+            Dispatch::Avx2 => scalar::conv1d(x, batch, s, w, b),
+        }
+    }
+
+    pub fn dense(&self, x: &[f32], m: usize, s: &DenseSpec, w: &[f32], b: &[f32]) -> Vec<f32> {
+        match self {
+            Dispatch::Scalar => scalar::dense(x, m, s, w, b),
+            #[cfg(target_arch = "x86_64")]
+            Dispatch::Avx2 => unsafe { avx2::dense(x, m, s, w, b) },
+            #[cfg(not(target_arch = "x86_64"))]
+            Dispatch::Avx2 => scalar::dense(x, m, s, w, b),
+        }
+    }
+
+    pub fn gap(&self, x: &[f32], spatial: usize, c: usize) -> Vec<f32> {
+        match self {
+            Dispatch::Scalar => scalar::gap(x, spatial, c),
+            #[cfg(target_arch = "x86_64")]
+            Dispatch::Avx2 => unsafe { avx2::gap(x, spatial, c) },
+            #[cfg(not(target_arch = "x86_64"))]
+            Dispatch::Avx2 => scalar::gap(x, spatial, c),
+        }
+    }
+}
+
+fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EE head (python ee_head.py): dense -> softmax -> (conf, pred)
+// ---------------------------------------------------------------------------
+
+/// Classifier head output: softmax confidence + argmax prediction.
+#[derive(Debug, Clone)]
+pub struct HeadOut {
+    pub probs: Vec<f32>,
+    /// max softmax probability
+    pub conf: f32,
+    /// first argmax index of the logits
+    pub pred: i32,
+}
+
+/// GAP-feature classifier head: `logits = feats @ w + b`, softmax,
+/// confidence = max probability, prediction = first argmax. The
+/// softmax reduction itself is always scalar (it is O(classes)); only
+/// the dense contraction dispatches.
+pub fn ee_head(dispatch: Dispatch, feats: &[f32], w: &[f32], b: &[f32], classes: usize) -> HeadOut {
+    let spec = DenseSpec { k: feats.len(), n: classes, relu: false };
+    let logits = dispatch.dense(feats, 1, &spec, w, b);
+    let m = logits.iter().fold(f32::NEG_INFINITY, |a, &v| a.max(v));
+    let mut exps = vec![0.0f32; classes];
+    let mut sum = 0.0f32;
+    for (e, &l) in exps.iter_mut().zip(&logits) {
+        *e = (l - m).exp();
+        sum += *e;
+    }
+    let mut conf = 0.0f32;
+    let mut pred = 0usize;
+    for (i, e) in exps.iter_mut().enumerate() {
+        *e /= sum;
+        // first max index, like the python reference's argmax
+        if logits[i] > logits[pred] {
+            pred = i;
+        }
+        conf = conf.max(*e);
+    }
+    HeadOut { probs: exps, conf, pred: pred as i32 }
+}
+
+// ---------------------------------------------------------------------------
+// native model: seeded layer stacks mirroring the block graph
+// ---------------------------------------------------------------------------
+
+/// Scale / determinism knobs of the native backbone.
+#[derive(Debug, Clone, Copy)]
+pub struct NativeConfig {
+    /// Seed for the deterministic weight init (used when no artifact
+    /// weights exist — see `NativeModel::set_final_head` for loading
+    /// real head weights from `runtime::weights`).
+    pub seed: u64,
+    /// Input spatial extent (H = W). The block graph's cost model is
+    /// resolution-independent ratios; the backend picks the working
+    /// resolution.
+    pub spatial: usize,
+    /// Channel-width cap: bounds the per-request arithmetic so debug
+    /// test builds stay fast while release benches run full width.
+    pub max_width: usize,
+}
+
+impl NativeConfig {
+    /// Bench/serve scale: full ResNet widths at 8x8 input.
+    pub fn bench(seed: u64) -> Self {
+        NativeConfig { seed, spatial: 8, max_width: 64 }
+    }
+    /// Debug-test scale: tiny widths at 4x4 input.
+    pub fn test(seed: u64) -> Self {
+        NativeConfig { seed, spatial: 4, max_width: 8 }
+    }
+}
+
+/// One convolution unit: spec + owned weights.
+#[derive(Debug, Clone)]
+pub struct Conv2dUnit {
+    pub spec: Conv2dSpec,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl Conv2dUnit {
+    fn seeded(spec: Conv2dSpec, rng: &mut Rng) -> Self {
+        let fan_in = (spec.kh * spec.kw * spec.cin).max(1);
+        let scale = (2.0 / fan_in as f32).sqrt();
+        let w = (0..spec.weight_len()).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect();
+        let b = (0..spec.cout).map(|_| (rng.f32() - 0.5) * 0.02).collect();
+        Conv2dUnit { spec, w, b }
+    }
+    fn run(&self, x: &[f32], dispatch: Dispatch) -> Vec<f32> {
+        dispatch.conv2d(x, 1, &self.spec, &self.w, &self.b)
+    }
+}
+
+/// One backbone block: `conv1` (+ReLU), optional `conv2` + residual
+/// add (+ReLU) with an optional 1x1 projection on the skip — the
+/// native realization of one `BlockGraph` node, shaped exactly like
+/// `graph::fine::FineGraph::synthetic_resnet`'s blocks.
+#[derive(Debug, Clone)]
+pub struct BlockNet {
+    pub conv1: Conv2dUnit,
+    pub conv2: Option<Conv2dUnit>,
+    pub proj: Option<Conv2dUnit>,
+    /// Output dims (h, w, c).
+    pub out_dims: (usize, usize, usize),
+}
+
+impl BlockNet {
+    /// Run one sample (NHWC, batch 1). The residual add + final ReLU
+    /// are element-wise in a fixed order — identical across dispatch.
+    pub fn forward(&self, x: &[f32], dispatch: Dispatch) -> Vec<f32> {
+        let y1 = self.conv1.run(x, dispatch);
+        let Some(conv2) = &self.conv2 else {
+            return y1;
+        };
+        let mut y2 = conv2.run(&y1, dispatch);
+        let skip = match &self.proj {
+            Some(p) => p.run(x, dispatch),
+            None => x.to_vec(),
+        };
+        for (o, s) in y2.iter_mut().zip(&skip) {
+            *o = (*o + s).max(0.0);
+        }
+        y2
+    }
+
+    /// Exact multiply-accumulate count per sample.
+    pub fn macs(&self) -> u64 {
+        self.conv1.spec.macs()
+            + self.conv2.as_ref().map_or(0, |c| c.spec.macs())
+            + self.proj.as_ref().map_or(0, |c| c.spec.macs())
+    }
+}
+
+/// Seeded dense classifier head over GAP features.
+#[derive(Debug, Clone)]
+pub struct HeadNet {
+    pub c: usize,
+    pub classes: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl HeadNet {
+    fn seeded(c: usize, classes: usize, rng: &mut Rng) -> Self {
+        let scale = (2.0 / c.max(1) as f32).sqrt();
+        let w = (0..c * classes).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect();
+        let b = (0..classes).map(|_| (rng.f32() - 0.5) * 0.02).collect();
+        HeadNet { c, classes, w, b }
+    }
+
+    /// GAP -> dense -> softmax -> (conf, pred) on a block output.
+    pub fn run(&self, fm: &[f32], spatial: usize, dispatch: Dispatch) -> HeadOut {
+        let feats = dispatch.gap(fm, spatial, self.c);
+        ee_head(dispatch, &feats, &self.w, &self.b, self.classes)
+    }
+
+    /// GAP + dense MACs per evaluation.
+    pub fn macs(&self) -> u64 {
+        (self.c * self.classes) as u64
+    }
+}
+
+/// The full native backbone: one [`BlockNet`] per coarse block plus a
+/// classifier head per block boundary (heads beyond the chosen exits
+/// simply go unused by the serving path).
+#[derive(Debug, Clone)]
+pub struct NativeModel {
+    pub blocks: Vec<BlockNet>,
+    /// One head per block boundary, matching each block's output width.
+    pub heads: Vec<HeadNet>,
+    pub num_classes: usize,
+    /// Input dims (h, w, c).
+    pub in_dims: (usize, usize, usize),
+}
+
+impl NativeModel {
+    /// Build seeded-weight layer stacks mirroring `graph`. A block
+    /// count of `3n + 1` gets the full ResNet shape (stem + 3 stages,
+    /// stride-2 stage transitions, residual adds + projections —
+    /// exactly `FineGraph::synthetic_resnet`); any other graph gets
+    /// one SAME conv per block at that block's `gap_dim` width. Widths
+    /// are capped at `cfg.max_width`; weights are a pure function of
+    /// `cfg.seed` and the layer index.
+    pub fn build(graph: &BlockGraph, cfg: &NativeConfig) -> Self {
+        let nb = graph.blocks.len();
+        let resnet_n = if nb >= 4 && (nb - 1) % 3 == 0 { Some((nb - 1) / 3) } else { None };
+        let mut layer_seed = 0u64;
+        let mut unit_rng = |cfg: &NativeConfig| {
+            layer_seed += 1;
+            Rng::seeded(cfg.seed ^ layer_seed.wrapping_mul(0x9E3779B97F4A7C15))
+        };
+        let mut blocks = Vec::with_capacity(nb);
+        let mut heads = Vec::with_capacity(nb);
+        let mut hw = cfg.spatial.max(1);
+        let mut cin = 3usize;
+        let in_dims = (hw, hw, cin);
+        if let Some(n) = resnet_n {
+            let widths: Vec<usize> =
+                [16usize, 32, 64].iter().map(|&w| w.min(cfg.max_width).max(1)).collect();
+            // stem: conv + bias + relu
+            let spec = Conv2dSpec {
+                h: hw,
+                w: hw,
+                cin,
+                cout: widths[0],
+                kh: 3,
+                kw: 3,
+                stride: (1, 1),
+                pad: (1, 1),
+                relu: true,
+            };
+            blocks.push(BlockNet {
+                conv1: Conv2dUnit::seeded(spec, &mut unit_rng(cfg)),
+                conv2: None,
+                proj: None,
+                out_dims: (hw, hw, widths[0]),
+            });
+            cin = widths[0];
+            for (si, &w) in widths.iter().enumerate() {
+                for bi in 0..n {
+                    let stride = if si > 0 && bi == 0 { 2 } else { 1 };
+                    let in_hw = hw;
+                    if stride == 2 {
+                        hw = (hw / 2).max(1);
+                    }
+                    let conv1 = Conv2dSpec {
+                        h: in_hw,
+                        w: in_hw,
+                        cin,
+                        cout: w,
+                        kh: 3,
+                        kw: 3,
+                        stride: (stride, stride),
+                        pad: (1, 1),
+                        relu: true,
+                    };
+                    let (h1, w1) = conv1.out_dims();
+                    let conv2 = Conv2dSpec {
+                        h: h1,
+                        w: w1,
+                        cin: w,
+                        cout: w,
+                        kh: 3,
+                        kw: 3,
+                        stride: (1, 1),
+                        pad: (1, 1),
+                        relu: false,
+                    };
+                    let proj = (stride == 2 || cin != w).then_some(Conv2dSpec {
+                        h: in_hw,
+                        w: in_hw,
+                        cin,
+                        cout: w,
+                        kh: 1,
+                        kw: 1,
+                        stride: (stride, stride),
+                        pad: (0, 0),
+                        relu: false,
+                    });
+                    blocks.push(BlockNet {
+                        conv1: Conv2dUnit::seeded(conv1, &mut unit_rng(cfg)),
+                        conv2: Some(Conv2dUnit::seeded(conv2, &mut unit_rng(cfg))),
+                        proj: proj.map(|p| Conv2dUnit::seeded(p, &mut unit_rng(cfg))),
+                        out_dims: (h1, w1, w),
+                    });
+                    hw = h1;
+                    cin = w;
+                }
+            }
+        } else {
+            for block in &graph.blocks {
+                let cout = block.gap_dim.min(cfg.max_width).max(1);
+                let spec = Conv2dSpec {
+                    h: hw,
+                    w: hw,
+                    cin,
+                    cout,
+                    kh: 3,
+                    kw: 3,
+                    stride: (1, 1),
+                    pad: (1, 1),
+                    relu: true,
+                };
+                blocks.push(BlockNet {
+                    conv1: Conv2dUnit::seeded(spec, &mut unit_rng(cfg)),
+                    conv2: None,
+                    proj: None,
+                    out_dims: (hw, hw, cout),
+                });
+                cin = cout;
+            }
+        }
+        let num_classes = graph.num_classes.max(2);
+        for b in &blocks {
+            heads.push(HeadNet::seeded(b.out_dims.2, num_classes, &mut unit_rng(cfg)));
+        }
+        NativeModel { blocks, heads, num_classes, in_dims }
+    }
+
+    /// Install real (artifact) weights on the final classifier head —
+    /// the `runtime::weights` path. Ignored with a `false` return when
+    /// the dimensions don't match this model's final width.
+    pub fn set_final_head(&mut self, w: &[f32], b: &[f32]) -> bool {
+        let Some(head) = self.heads.last_mut() else {
+            return false;
+        };
+        if w.len() != head.c * head.classes || b.len() != head.classes {
+            return false;
+        }
+        head.w = w.to_vec();
+        head.b = b.to_vec();
+        true
+    }
+
+    /// Install real exit-head weights at a block boundary (e.g. from a
+    /// solution's trained `ExitHead`s). Same dimension guard.
+    pub fn set_exit_head(&mut self, loc: usize, w: &[f32], b: &[f32]) -> bool {
+        let Some(head) = self.heads.get_mut(loc) else {
+            return false;
+        };
+        if w.len() != head.c * head.classes || b.len() != head.classes {
+            return false;
+        }
+        head.w = w.to_vec();
+        head.b = b.to_vec();
+        true
+    }
+
+    /// Exact backbone MACs per block per sample.
+    pub fn block_macs(&self) -> Vec<u64> {
+        self.blocks.iter().map(|b| b.macs()).collect()
+    }
+
+    /// Per-segment MACs (backbone blocks + the boundary head evaluated
+    /// at the segment end) under `mapping` — the arithmetic one
+    /// request spends in each serving stage.
+    pub fn segment_macs(&self, mapping: &crate::mapping::Mapping) -> Vec<u64> {
+        let nseg = mapping.exits.len() + 1;
+        (0..nseg)
+            .map(|seg| {
+                let (lo, hi) = mapping.segment(seg, self.blocks.len());
+                let backbone: u64 = self.blocks[lo..=hi].iter().map(|b| b.macs()).sum();
+                backbone + self.heads[hi].macs()
+            })
+            .collect()
+    }
+
+    /// Run one sample through every block, returning each boundary's
+    /// GAP feature vector plus the final head's (conf, pred) — the
+    /// native path for exit-feature extraction (`na::features`).
+    pub fn forward_all(&self, x: &[f32], dispatch: Dispatch) -> (Vec<Vec<f32>>, f32, i32) {
+        let mut gaps = Vec::with_capacity(self.blocks.len());
+        let mut fm = self.blocks[0].forward(x, dispatch);
+        let mut dims = self.blocks[0].out_dims;
+        gaps.push(dispatch.gap(&fm, dims.0 * dims.1, dims.2));
+        for b in &self.blocks[1..] {
+            fm = b.forward(&fm, dispatch);
+            dims = b.out_dims;
+            gaps.push(dispatch.gap(&fm, dims.0 * dims.1, dims.2));
+        }
+        let head = self.heads.last().expect("model has blocks");
+        let out = ee_head(dispatch, gaps.last().unwrap(), &head.w, &head.b, head.classes);
+        (gaps, out.conf, out.pred)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::fine::FineGraph;
+
+    #[test]
+    fn dispatch_policy_honors_env_then_hardware() {
+        assert_eq!(dispatch_from(None, true), Dispatch::Avx2);
+        assert_eq!(dispatch_from(None, false), Dispatch::Scalar);
+        assert_eq!(dispatch_from(Some("1"), true), Dispatch::Scalar);
+        assert_eq!(dispatch_from(Some(""), true), Dispatch::Avx2);
+        assert_eq!(dispatch_from(Some("0"), true), Dispatch::Avx2);
+        // detect() must never pick an unsupported path
+        if !super::avx2_available() {
+            assert_eq!(Dispatch::detect(), Dispatch::Scalar);
+        }
+    }
+
+    #[test]
+    fn conv2d_identity_kernel_passes_input_through() {
+        // 1x1 kernel with identity channel mix: output == input
+        let s = Conv2dSpec {
+            h: 3,
+            w: 3,
+            cin: 2,
+            cout: 2,
+            kh: 1,
+            kw: 1,
+            stride: (1, 1),
+            pad: (0, 0),
+            relu: false,
+        };
+        let x: Vec<f32> = (0..18).map(|i| i as f32 * 0.25 - 2.0).collect();
+        let w = vec![1.0, 0.0, 0.0, 1.0]; // (1,1,2,2) identity
+        let b = vec![0.0, 0.0];
+        let y = scalar::conv2d(&x, 1, &s, &w, &b);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn conv2d_hand_example_with_padding() {
+        // 3x3 all-ones kernel over a 2x2 single-channel image, SAME
+        // pad: each output is the sum of the in-range neighbourhood
+        let s = Conv2dSpec {
+            h: 2,
+            w: 2,
+            cin: 1,
+            cout: 1,
+            kh: 3,
+            kw: 3,
+            stride: (1, 1),
+            pad: (1, 1),
+            relu: false,
+        };
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let w = vec![1.0; 9];
+        let y = scalar::conv2d(&x, 1, &s, &w, &[0.0]);
+        assert_eq!(y, vec![10.0, 10.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn dense_matches_hand_matmul() {
+        let s = DenseSpec { k: 3, n: 2, relu: false };
+        let x = vec![1.0, 2.0, 3.0];
+        let w = vec![1.0, 0.5, 0.0, -1.0, 2.0, 0.25]; // (3,2)
+        let b = vec![0.5, -0.5];
+        let y = scalar::dense(&x, 1, &s, &w, &b);
+        assert_eq!(y, vec![1.0 + 6.0 + 0.5, 0.5 - 2.0 + 0.75 - 0.5]);
+    }
+
+    #[test]
+    fn relu_clamps_negative_outputs() {
+        let s = DenseSpec { k: 1, n: 2, relu: true };
+        let y = scalar::dense(&[1.0], 1, &s, &[-2.0, 3.0], &[0.0, 0.0]);
+        assert_eq!(y, vec![0.0, 3.0]);
+    }
+
+    #[test]
+    fn ee_head_is_a_distribution_with_first_argmax() {
+        let feats = vec![1.0, -0.5, 0.25];
+        // weights force a tie between classes 0 and 2
+        let w = vec![1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let b = vec![0.0, -1.0, 0.0];
+        let out = ee_head(Dispatch::Scalar, &feats, &w, &b, 3);
+        let sum: f32 = out.probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "softmax must normalize: {sum}");
+        assert_eq!(out.pred, 0, "tie resolves to the first index");
+        let max = out.probs.iter().fold(f32::NEG_INFINITY, |a, &p| a.max(p));
+        assert_eq!(out.conf, max, "confidence is the max probability");
+    }
+
+    #[test]
+    fn resnet_shaped_model_mirrors_fine_graph_macs() {
+        // at the fine graph's native resolution (32x32, full widths)
+        // the seeded model's per-block MACs equal the fusion pass's
+        // analytic block costs exactly: the cost model the search
+        // optimizes is the arithmetic the backend runs
+        let n = 2;
+        let graph = BlockGraph::synthetic_resnet(10, n);
+        let cfg = NativeConfig { seed: 7, spatial: 32, max_width: 64 };
+        let model = NativeModel::build(&graph, &cfg);
+        assert_eq!(model.blocks.len(), graph.blocks.len());
+        let fine = FineGraph::synthetic_resnet(10, n).fuse();
+        for (i, (b, fb)) in model.blocks.iter().zip(&fine.blocks).enumerate() {
+            assert_eq!(b.macs(), fb.macs, "block {i} ({})", fb.name);
+        }
+    }
+
+    #[test]
+    fn generic_fallback_covers_non_resnet_block_counts() {
+        let mut graph = BlockGraph::synthetic_resnet(10, 2);
+        graph.blocks.pop(); // 6 blocks: not 3n+1
+        let model = NativeModel::build(&graph, &NativeConfig::test(3));
+        assert_eq!(model.blocks.len(), graph.blocks.len());
+        for b in &model.blocks {
+            assert!(b.conv2.is_none(), "generic blocks are single convs");
+        }
+    }
+
+    #[test]
+    fn weight_init_is_seed_deterministic() {
+        let graph = BlockGraph::synthetic_resnet(10, 2);
+        let a = NativeModel::build(&graph, &NativeConfig::test(11));
+        let b = NativeModel::build(&graph, &NativeConfig::test(11));
+        let c = NativeModel::build(&graph, &NativeConfig::test(12));
+        assert_eq!(a.blocks[1].conv1.w, b.blocks[1].conv1.w);
+        assert_eq!(a.heads[0].w, b.heads[0].w);
+        assert_ne!(a.blocks[1].conv1.w, c.blocks[1].conv1.w);
+    }
+
+    #[test]
+    fn head_weight_installation_guards_dimensions() {
+        let graph = BlockGraph::synthetic_resnet(4, 2);
+        let mut model = NativeModel::build(&graph, &NativeConfig::test(5));
+        let c = model.heads.last().unwrap().c;
+        let k = model.num_classes;
+        assert!(model.set_final_head(&vec![0.5; c * k], &vec![0.0; k]));
+        assert_eq!(model.heads.last().unwrap().w, vec![0.5; c * k]);
+        assert!(!model.set_final_head(&vec![0.5; c * k + 1], &vec![0.0; k]));
+        assert!(model.set_exit_head(1, &vec![0.25; model.heads[1].c * k], &vec![0.0; k]));
+        assert!(!model.set_exit_head(99, &[], &[]));
+    }
+
+    #[test]
+    fn forward_all_emits_one_gap_per_block() {
+        let graph = BlockGraph::synthetic_resnet(5, 2);
+        let cfg = NativeConfig::test(9);
+        let model = NativeModel::build(&graph, &cfg);
+        let x = vec![0.1f32; cfg.spatial * cfg.spatial * 3];
+        let (gaps, conf, pred) = model.forward_all(&x, Dispatch::Scalar);
+        assert_eq!(gaps.len(), model.blocks.len());
+        for (g, b) in gaps.iter().zip(&model.blocks) {
+            assert_eq!(g.len(), b.out_dims.2);
+        }
+        assert!(conf > 0.0 && conf <= 1.0);
+        assert!((0..5).contains(&pred));
+    }
+
+    #[test]
+    fn segment_macs_cover_the_backbone_plus_boundary_heads() {
+        let graph = BlockGraph::synthetic_resnet(10, 2);
+        let model = NativeModel::build(&graph, &NativeConfig::test(2));
+        let mapping =
+            crate::mapping::Mapping { exits: vec![2, 4], assignment: vec![0, 1, 2] };
+        let per_seg = model.segment_macs(&mapping);
+        assert_eq!(per_seg.len(), 3);
+        let backbone: u64 = model.block_macs().iter().sum();
+        let heads: u64 = model.heads[2].macs() + model.heads[4].macs()
+            + model.heads.last().unwrap().macs();
+        assert_eq!(per_seg.iter().sum::<u64>(), backbone + heads);
+    }
+}

@@ -1,0 +1,160 @@
+//! Portable scalar kernels — the **bit-exact reference** for the
+//! native backend.
+//!
+//! Every kernel fixes one summation order per output element — filter
+//! taps outermost (ky, then kx), input channels innermost ascending —
+//! mirroring the Python reference kernels in
+//! `python/compile/kernels/`, which accumulate per-tap contractions
+//! into the output. The AVX2 path ([`super::avx2`]) walks the *same*
+//! order per output channel lane; its only deviation is fused
+//! multiply-add rounding, which is why kernel parity is pinned at a
+//! relative tolerance instead of bit equality (GAP is add-only and
+//! stays bit-exact). Out-of-image taps are skipped, never multiplied
+//! as zeros, in both paths.
+
+use super::{Conv1dSpec, Conv2dSpec, DenseSpec, DwConv2dSpec};
+
+/// NHWC conv2d: x `(batch, h, w, cin)`, weights `(kh, kw, cin, cout)`,
+/// bias `(cout)`; returns `(batch, ho, wo, cout)`.
+pub fn conv2d(x: &[f32], batch: usize, s: &Conv2dSpec, wgt: &[f32], bias: &[f32]) -> Vec<f32> {
+    let (ho, wo) = s.out_dims();
+    let (sh, sw) = s.stride;
+    let (ph, pw) = s.pad;
+    let mut out = vec![0.0f32; batch * ho * wo * s.cout];
+    for bi in 0..batch {
+        let xb = &x[bi * s.h * s.w * s.cin..][..s.h * s.w * s.cin];
+        let ob = &mut out[bi * ho * wo * s.cout..][..ho * wo * s.cout];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let o = (oy * wo + ox) * s.cout;
+                for co in 0..s.cout {
+                    let mut acc = 0.0f32;
+                    for ky in 0..s.kh {
+                        let iy = (oy * sh + ky) as isize - ph as isize;
+                        if iy < 0 || iy >= s.h as isize {
+                            continue;
+                        }
+                        for kx in 0..s.kw {
+                            let ix = (ox * sw + kx) as isize - pw as isize;
+                            if ix < 0 || ix >= s.w as isize {
+                                continue;
+                            }
+                            let xoff = (iy as usize * s.w + ix as usize) * s.cin;
+                            let woff = ((ky * s.kw + kx) * s.cin) * s.cout + co;
+                            for ci in 0..s.cin {
+                                acc += xb[xoff + ci] * wgt[woff + ci * s.cout];
+                            }
+                        }
+                    }
+                    acc += bias[co];
+                    ob[o + co] = if s.relu { acc.max(0.0) } else { acc };
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Depthwise NHWC conv2d: x `(batch, h, w, c)`, weights `(kh, kw, c)`,
+/// bias `(c)`; returns `(batch, ho, wo, c)`.
+pub fn dwconv2d(x: &[f32], batch: usize, s: &DwConv2dSpec, wgt: &[f32], bias: &[f32]) -> Vec<f32> {
+    let (ho, wo) = s.out_dims();
+    let (sh, sw) = s.stride;
+    let (ph, pw) = s.pad;
+    let mut out = vec![0.0f32; batch * ho * wo * s.c];
+    for bi in 0..batch {
+        let xb = &x[bi * s.h * s.w * s.c..][..s.h * s.w * s.c];
+        let ob = &mut out[bi * ho * wo * s.c..][..ho * wo * s.c];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let o = (oy * wo + ox) * s.c;
+                for ci in 0..s.c {
+                    let mut acc = 0.0f32;
+                    for ky in 0..s.kh {
+                        let iy = (oy * sh + ky) as isize - ph as isize;
+                        if iy < 0 || iy >= s.h as isize {
+                            continue;
+                        }
+                        for kx in 0..s.kw {
+                            let ix = (ox * sw + kx) as isize - pw as isize;
+                            if ix < 0 || ix >= s.w as isize {
+                                continue;
+                            }
+                            acc += xb[(iy as usize * s.w + ix as usize) * s.c + ci]
+                                * wgt[(ky * s.kw + kx) * s.c + ci];
+                        }
+                    }
+                    acc += bias[ci];
+                    ob[o + ci] = if s.relu { acc.max(0.0) } else { acc };
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 1-D conv: x `(batch, l, cin)`, weights `(k, cin, cout)`, bias
+/// `(cout)`; returns `(batch, lo, cout)`.
+pub fn conv1d(x: &[f32], batch: usize, s: &Conv1dSpec, wgt: &[f32], bias: &[f32]) -> Vec<f32> {
+    let lo = s.out_len();
+    let mut out = vec![0.0f32; batch * lo * s.cout];
+    for bi in 0..batch {
+        let xb = &x[bi * s.l * s.cin..][..s.l * s.cin];
+        let ob = &mut out[bi * lo * s.cout..][..lo * s.cout];
+        for op in 0..lo {
+            let o = op * s.cout;
+            for co in 0..s.cout {
+                let mut acc = 0.0f32;
+                for kt in 0..s.k {
+                    let ip = (op * s.stride + kt) as isize - s.pad as isize;
+                    if ip < 0 || ip >= s.l as isize {
+                        continue;
+                    }
+                    let xoff = ip as usize * s.cin;
+                    let woff = kt * s.cin * s.cout + co;
+                    for ci in 0..s.cin {
+                        acc += xb[xoff + ci] * wgt[woff + ci * s.cout];
+                    }
+                }
+                acc += bias[co];
+                ob[o + co] = if s.relu { acc.max(0.0) } else { acc };
+            }
+        }
+    }
+    out
+}
+
+/// Dense: x `(m, k)` @ w `(k, n)` + b `(n)`; returns `(m, n)`.
+pub fn dense(x: &[f32], m: usize, s: &DenseSpec, wgt: &[f32], bias: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * s.n];
+    for i in 0..m {
+        let xr = &x[i * s.k..][..s.k];
+        let or_ = &mut out[i * s.n..][..s.n];
+        for j in 0..s.n {
+            let mut acc = 0.0f32;
+            for (ki, &xv) in xr.iter().enumerate() {
+                acc += xv * wgt[ki * s.n + j];
+            }
+            acc += bias[j];
+            or_[j] = if s.relu { acc.max(0.0) } else { acc };
+        }
+    }
+    out
+}
+
+/// Global average pool over the spatial axis: x `(spatial, c)` ->
+/// `(c)`. Additions run in ascending spatial order per channel — the
+/// AVX2 path keeps the identical order, so GAP is bit-exact across
+/// dispatch.
+pub fn gap(x: &[f32], spatial: usize, c: usize) -> Vec<f32> {
+    let inv = 1.0f32 / spatial.max(1) as f32;
+    let mut out = vec![0.0f32; c];
+    for (ci, o) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for p in 0..spatial {
+            acc += x[p * c + ci];
+        }
+        *o = acc * inv;
+    }
+    out
+}

@@ -42,9 +42,18 @@
 //!   wall-clock throughput scales with the cores the stage work can
 //!   use.
 //!
-//! Two interchangeable stage backends:
+//! Three interchangeable stage backends ([`Backend`]):
 //! * [`serve`] — real PJRT compute through B=1 / batched artifacts
-//!   (needs exported artifacts and the `pjrt` feature);
+//!   (needs exported artifacts and the `pjrt` feature; every dispatch
+//!   serializes on the single engine service thread);
+//! * [`serve_native`] — real pure-Rust SIMD compute
+//!   ([`crate::compute`]): each stage owns its segment's weights
+//!   outright and runs AVX2/scalar kernels on the exec plane with no
+//!   shared state, so `exec_workers = N` is N cores doing
+//!   multiply-accumulates. In its default calibrated mode the
+//!   termination verdicts are drawn from the same per-stage RNG
+//!   stream as the synthetic backend, making every sim-clock metric
+//!   byte-identical to [`serve_synthetic`];
 //! * [`serve_synthetic`] — a calibrated stochastic stand-in drawing
 //!   per-stage termination from the solution's expected rates, which
 //!   exercises the full executor (queues, escalation, clocks, traces)
@@ -72,8 +81,9 @@
 
 mod des;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
+use crate::compute::{BlockNet, Dispatch, HeadNet, NativeConfig, NativeModel};
 use crate::data::Split;
 use crate::eenn::EennSolution;
 use crate::graph::BlockGraph;
@@ -301,14 +311,15 @@ impl StageExec for PjrtStageExec {
 // synthetic stage backend
 // ---------------------------------------------------------------------------
 
-/// Calibrated stochastic stand-in for a segment: terminates with the
-/// solution's conditional termination probability and predicts the
-/// sample's label with the solution's expected accuracy. Lets the
-/// full executor (queues, escalation, device clocks, traces) run
-/// without artifacts or a PJRT build. Verdicts depend only on the
-/// order samples pass through the stage — which the event loop makes
-/// deterministic and (for a FIFO queue) independent of `batch_max`.
-struct SynthStageExec {
+/// The calibrated verdict stream shared by the synthetic backend and
+/// the native backend's calibrated mode: terminate with the
+/// solution's conditional termination probability, predict the
+/// sample's label with the solution's expected accuracy. One RNG per
+/// stage, seeded from `ServeConfig::seed` and the segment index only,
+/// so verdicts depend solely on the order samples pass through the
+/// stage — which the event loop makes deterministic and independent
+/// of `batch_max`, `exec_workers` and the compute backend.
+struct VerdictModel {
     rng: Rng,
     /// P(terminate here | reached here); the final stage ignores it.
     p_term: f64,
@@ -317,8 +328,28 @@ struct SynthStageExec {
     num_classes: usize,
 }
 
-impl StageExec for SynthStageExec {
-    fn run_single(&mut self, ifm: HostTensor, label: i32) -> StageOutput {
+impl VerdictModel {
+    fn for_stage(
+        seg: usize,
+        p_term: f64,
+        solution: &EennSolution,
+        cfg: &ServeConfig,
+        num_classes: usize,
+    ) -> VerdictModel {
+        let stage_seed = cfg.seed ^ (0x5eed_0000 + seg as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        VerdictModel {
+            rng: Rng::seeded(stage_seed),
+            p_term,
+            acc: solution.expected_acc.clamp(0.0, 1.0),
+            threshold: solution.thresholds.get(seg).copied().unwrap_or(0.5),
+            num_classes,
+        }
+    }
+
+    /// Draw one `(confidence, prediction)` verdict. Exactly three RNG
+    /// draws per sample, in a pinned order — the byte-identity
+    /// contract across backends hangs on this sequence.
+    fn verdict(&mut self, label: i32) -> (f64, i32) {
         let terminate = self.rng.f64() < self.p_term;
         let conf = if terminate {
             // in [threshold, 1)
@@ -332,9 +363,68 @@ impl StageExec for SynthStageExec {
         } else {
             (label + 1).rem_euclid(self.num_classes.max(2) as i32)
         };
+        (conf, pred)
+    }
+}
+
+/// Calibrated stochastic stand-in for a segment: [`VerdictModel`]
+/// verdicts, no arithmetic. Lets the full executor (queues,
+/// escalation, device clocks, traces) run without artifacts or a
+/// PJRT build.
+struct SynthStageExec {
+    verdicts: VerdictModel,
+}
+
+impl StageExec for SynthStageExec {
+    fn run_single(&mut self, ifm: HostTensor, label: i32) -> StageOutput {
+        let (conf, pred) = self.verdicts.verdict(label);
         // the payload moves straight through: no deep copy on the
         // serve hot path (pinned by tests/clone_budget.rs)
         StageOutput { ifm, conf, pred }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// native SIMD stage backend
+// ---------------------------------------------------------------------------
+
+/// Real-compute segment backend over the pure-Rust SIMD kernels
+/// ([`crate::compute`]): owns this segment's backbone blocks and
+/// boundary classifier head outright — weights, activations, verdict
+/// RNG — so N exec-plane lanes are N cores doing multiply-accumulates
+/// with zero shared state, unlike the PJRT backend's single engine
+/// service thread. In calibrated mode the termination verdicts come
+/// from the same [`VerdictModel`] stream as the synthetic backend, so
+/// every sim-clock metric is byte-identical to [`serve_synthetic`]
+/// across `exec_workers` counts *and* SIMD dispatch; measured mode
+/// reports the head's real softmax confidence/argmax instead (still
+/// schedule-invariant: a pure function of the sample and the fixed
+/// weights).
+struct NativeExec {
+    blocks: Vec<BlockNet>,
+    head: HeadNet,
+    dispatch: Dispatch,
+    /// `Some` = calibrated verdicts; `None` = measured.
+    verdicts: Option<VerdictModel>,
+    /// Output feature-map dims `(h, w, c)` of the segment's last block.
+    out_dims: (usize, usize, usize),
+}
+
+impl StageExec for NativeExec {
+    fn run_single(&mut self, ifm: HostTensor, label: i32) -> StageOutput {
+        let mut fm = ifm.to_f32();
+        for b in &self.blocks {
+            fm = b.forward(&fm, self.dispatch);
+        }
+        let (h, w, c) = self.out_dims;
+        let head_out = self.head.run(&fm, h * w, self.dispatch);
+        let (conf, pred) = match &mut self.verdicts {
+            Some(v) => v.verdict(label),
+            None => (head_out.conf as f64, head_out.pred),
+        };
+        // the escalation payload is the freshly computed feature map —
+        // the incoming tensor is consumed, never deep-copied
+        StageOutput { ifm: HostTensor::f32(&[1, h, w, c], &fm), conf, pred }
     }
 }
 
@@ -440,14 +530,15 @@ pub fn serve(
     })
 }
 
-/// Shared plan + calibrated-synthetic-backend construction behind
-/// [`serve_synthetic`] / [`serve_synthetic_burn`].
-fn synth_plan(
+/// Validate, simulate, and derive the per-stage calibrated verdict
+/// models — the shared front half of every hermetic backend
+/// ([`serve_synthetic`], [`serve_synthetic_burn`], [`serve_native`]).
+fn plan_and_verdicts(
     graph: &BlockGraph,
     solution: &EennSolution,
     platform: &Platform,
     cfg: &ServeConfig,
-) -> Result<(StagePlan, Vec<Box<dyn StageExec>>, usize)> {
+) -> Result<(StagePlan, Vec<VerdictModel>, usize)> {
     platform.validate()?;
     let mapping = solution.mapping();
     mapping.validate(platform)?;
@@ -462,25 +553,34 @@ fn synth_plan(
     } else {
         vec![1.0 / nseg as f64; nseg]
     };
-    let mut stages: Vec<Box<dyn StageExec>> = Vec::with_capacity(nseg);
+    let mut verdicts = Vec::with_capacity(nseg);
     let mut remaining = 1.0f64;
     for (seg, &rate) in rates.iter().enumerate() {
         let p_term = if remaining > 1e-12 { (rate / remaining).clamp(0.0, 1.0) } else { 1.0 };
         remaining -= rate;
-        let threshold = solution.thresholds.get(seg).copied().unwrap_or(0.5);
-        stages.push(Box::new(SynthStageExec {
-            rng: Rng::seeded(cfg.seed ^ (0x5eed_0000 + seg as u64).wrapping_mul(0x9E3779B97F4A7C15)),
-            p_term,
-            acc: solution.expected_acc.clamp(0.0, 1.0),
-            threshold,
-            num_classes,
-        }));
+        verdicts.push(VerdictModel::for_stage(seg, p_term, solution, cfg, num_classes));
     }
 
     let thresholds: Vec<Option<f64>> = (0..nseg)
         .map(|s| solution.thresholds.get(s).copied())
         .collect();
-    Ok((StagePlan { mapping, thresholds, sim: sim_report }, stages, num_classes))
+    Ok((StagePlan { mapping, thresholds, sim: sim_report }, verdicts, num_classes))
+}
+
+/// Shared plan + calibrated-synthetic-backend construction behind
+/// [`serve_synthetic`] / [`serve_synthetic_burn`].
+fn synth_plan(
+    graph: &BlockGraph,
+    solution: &EennSolution,
+    platform: &Platform,
+    cfg: &ServeConfig,
+) -> Result<(StagePlan, Vec<Box<dyn StageExec>>, usize)> {
+    let (plan, verdicts, num_classes) = plan_and_verdicts(graph, solution, platform, cfg)?;
+    let stages = verdicts
+        .into_iter()
+        .map(|verdicts| Box::new(SynthStageExec { verdicts }) as Box<dyn StageExec>)
+        .collect();
+    Ok((plan, stages, num_classes))
 }
 
 /// Serve through the same discrete-event executor with the calibrated
@@ -523,5 +623,128 @@ pub fn serve_synthetic_burn(
         .collect();
     run_executor(stages, &plan, platform, num_classes, cfg, move |_, rng| {
         (HostTensor::f32(&[1, 1], &[0.0]), rng.below(num_classes) as i32)
+    })
+}
+
+/// Which stage backend executes on the exec plane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Calibrated stochastic verdicts, no arithmetic.
+    Synthetic,
+    /// Pure-Rust SIMD kernels (`crate::compute`), lock-free per stage.
+    Native,
+    /// Real artifacts through the PJRT engine (single service thread).
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "synthetic" => Ok(Backend::Synthetic),
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => Err(anyhow!("unknown backend {other:?} (expected synthetic|native|pjrt)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Synthetic => "synthetic",
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Scale / dispatch / verdict knobs of [`serve_native`].
+#[derive(Debug, Clone)]
+pub struct NativeOptions {
+    pub compute: NativeConfig,
+    pub dispatch: Dispatch,
+    /// `false` (the default): calibrated verdict stream — all virtual
+    /// metrics byte-identical to [`serve_synthetic`]. `true`:
+    /// terminate on the heads' real softmax confidences instead.
+    pub measured: bool,
+    /// Real final-head weights `(w, b)` (e.g. from
+    /// `runtime::WeightStore`), installed when their dimensions match
+    /// the native model's final width.
+    pub final_head: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+impl NativeOptions {
+    /// Bench/serve scale: full widths, 8x8 input, detected dispatch,
+    /// calibrated verdicts.
+    pub fn bench(seed: u64) -> Self {
+        NativeOptions {
+            compute: NativeConfig::bench(seed),
+            dispatch: Dispatch::detect(),
+            measured: false,
+            final_head: None,
+        }
+    }
+
+    /// Debug-test scale: tiny widths, 4x4 input.
+    pub fn test(seed: u64) -> Self {
+        NativeOptions { compute: NativeConfig::test(seed), ..Self::bench(seed) }
+    }
+}
+
+/// Serve through the discrete-event executor with the native SIMD
+/// backend: every stage visit runs its segment's backbone blocks and
+/// boundary head for real on the exec plane (AVX2 when available,
+/// scalar otherwise) — hermetic, no artifacts, no PJRT, no locks
+/// shared between lanes. Backbone weights are deterministically
+/// seeded from `opts.compute.seed`; trained exit heads carried by the
+/// solution (and artifact final-head weights passed via
+/// [`NativeOptions::final_head`]) replace the seeded head weights
+/// whenever their dimensions match. Arrivals, labels and (in
+/// calibrated mode) verdicts consume the RNG exactly like
+/// [`serve_synthetic`], so the two backends' sim-clock metrics are
+/// byte-identical; input payloads come from a separate per-request
+/// stream and never touch the main RNG.
+pub fn serve_native(
+    graph: &BlockGraph,
+    solution: &EennSolution,
+    platform: &Platform,
+    cfg: &ServeConfig,
+    opts: &NativeOptions,
+) -> Result<ServeMetrics> {
+    let (plan, verdicts, num_classes) = plan_and_verdicts(graph, solution, platform, cfg)?;
+    let mut model = NativeModel::build(graph, &opts.compute);
+    for (seg, &loc) in plan.mapping.exits.iter().enumerate() {
+        if let Some(h) = solution.heads.get(seg) {
+            model.set_exit_head(loc, &h.w, &h.b);
+        }
+    }
+    if let Some((w, b)) = &opts.final_head {
+        model.set_final_head(w, b);
+    }
+    let in_dims = model.in_dims;
+    let heads = model.heads;
+    let mut blocks = model.blocks.into_iter();
+    let mut stages: Vec<Box<dyn StageExec>> = Vec::with_capacity(verdicts.len());
+    for (seg, verdict) in verdicts.into_iter().enumerate() {
+        let (lo, hi) = plan.mapping.segment(seg, graph.blocks.len());
+        let seg_blocks: Vec<BlockNet> = blocks.by_ref().take(hi - lo + 1).collect();
+        let out_dims = seg_blocks.last().expect("segment has blocks").out_dims;
+        stages.push(Box::new(NativeExec {
+            blocks: seg_blocks,
+            head: heads[hi].clone(),
+            dispatch: opts.dispatch,
+            verdicts: (!opts.measured).then_some(verdict),
+            out_dims,
+        }));
+    }
+    let seed = cfg.seed;
+    let payload_len = in_dims.0 * in_dims.1 * in_dims.2;
+    let shape = [1usize, in_dims.0, in_dims.1, in_dims.2];
+    run_executor(stages, &plan, platform, num_classes, cfg, move |id, rng| {
+        // one main-RNG draw per request, exactly like serve_synthetic,
+        // keeping arrivals and labels bit-identical across backends
+        let label = rng.below(num_classes) as i32;
+        let mut prng =
+            Rng::seeded(seed ^ (0xDA7A_0000 + id as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let data: Vec<f32> = (0..payload_len).map(|_| prng.f32() - 0.5).collect();
+        (HostTensor::f32(&shape, &data), label)
     })
 }

@@ -40,6 +40,20 @@
 //! `repro scenarios [--smoke]`, aggregated into
 //! `BENCH_scenarios.json` and guarded by the CI regression gate).
 //!
+//! Serving executes one of three stage backends
+//! ([`coordinator::Backend`], CLI `--backend {synthetic,native,pjrt}`):
+//! `synthetic` models time only; `pjrt` runs real artifacts but
+//! serializes every dispatch on the engine's single service thread;
+//! `native` ([`compute`]) runs pure-Rust SIMD kernels — runtime
+//! dispatch picks AVX2 (f32x8 + FMA) via `is_x86_feature_detected!`
+//! with a bit-exact scalar reference as fallback (force it with
+//! `RUST_PALLAS_FORCE_SCALAR=1`) — and owns its weights per stage, so
+//! `exec_workers = N` means N cores doing real multiply-accumulates
+//! with zero shared locks. In its calibrated mode the native
+//! backend's termination verdicts replay the synthetic backend's RNG
+//! stream, keeping every sim-clock metric byte-identical across
+//! backends, worker counts, and SIMD dispatch.
+//!
 //! ```no_run
 //! use eenn_na::prelude::*;
 //!
@@ -51,6 +65,7 @@
 //! println!("exits at {:?}, thresholds {:?}", out.solution.exits, out.solution.thresholds);
 //! ```
 
+pub mod compute;
 pub mod coordinator;
 pub mod data;
 pub mod eenn;

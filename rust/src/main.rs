@@ -15,9 +15,12 @@
 
 use anyhow::{anyhow, Result};
 
-use eenn_na::coordinator::{serve, ServeConfig};
+use eenn_na::coordinator::{
+    serve, serve_native, serve_synthetic, Backend, NativeOptions, ServeConfig,
+};
 use eenn_na::data::load_split;
 use eenn_na::eenn::EennSolution;
+use eenn_na::graph::BlockGraph;
 use eenn_na::na::{self, Calibration, EdgeModel, FlowConfig, Solver};
 use eenn_na::report;
 use eenn_na::runtime::{Engine, Manifest, WeightStore};
@@ -62,9 +65,15 @@ fn run() -> Result<()> {
                  \x20             [--exec-workers N]   (exec-plane threads running the stage\n\
                  \x20                              backends' wall work; 0 = one per core,\n\
                  \x20                              1 = inline — metrics identical either way)\n\
+                 \x20             [--backend pjrt|native|synthetic]\n\
+                 \x20                              pjrt: artifacts through the engine;\n\
+                 \x20                              native: pure-Rust SIMD kernels (AVX2 or\n\
+                 \x20                              scalar; RUST_PALLAS_FORCE_SCALAR=1 forces\n\
+                 \x20                              scalar), [--measured] for real-confidence\n\
+                 \x20                              verdicts; synthetic: verdicts only\n\
                  repro report  table2|fig4 [--model NAME]\n\
                  repro scenarios [--smoke] [--only PRESET] [--workers N]\n\
-                 \x20             [--exec-workers N]\n\
+                 \x20             [--exec-workers N] [--backend synthetic|native]\n\
                  \x20             [--out BENCH_scenarios.json]\n\
                  \x20             hermetic (no artifacts, no PJRT) end-to-end matrix:\n\
                  \x20               kws_psoc6           speech commands, PSoC6, 2.5s constraint\n\
@@ -197,9 +206,7 @@ fn serve_cmd(args: &Args) -> Result<()> {
         &format!("{model_name}_solution.json"),
     ))?;
     let platform = report::platform_for_task(&model.task);
-    let engine = Engine::new()?;
-    let ws = WeightStore::load(&man, model)?;
-    let test = load_split(&man, model, "test")?;
+    let backend = Backend::parse(&args.str("backend", "pjrt"))?;
     let cfg = ServeConfig {
         arrival_rate_hz: args.f64("rate", 10.0),
         n_requests: args.usize("n", 200),
@@ -210,7 +217,36 @@ fn serve_cmd(args: &Args) -> Result<()> {
         // is byte-identical to the inline (--exec-workers 1) run
         exec_workers: args.usize("exec-workers", 0),
     };
-    let m = serve(&engine, &man, model, &ws, &sol, &platform, &test, &cfg)?;
+    let m = match backend {
+        Backend::Pjrt => {
+            let engine = Engine::new()?;
+            let ws = WeightStore::load(&man, model)?;
+            let test = load_split(&man, model, "test")?;
+            serve(&engine, &man, model, &ws, &sol, &platform, &test, &cfg)?
+        }
+        Backend::Native => {
+            let graph = BlockGraph::from_manifest(model);
+            let mut opts = NativeOptions::bench(cfg.seed);
+            opts.measured = args.bool("measured");
+            // install real artifact head weights when present and
+            // dimension-compatible; the backbone stays seeded
+            if let Ok(ws) = WeightStore::load(&man, model) {
+                if let (Ok(w), Ok(b)) = (ws.get(&model.head_w), ws.get(&model.head_b)) {
+                    opts.final_head = Some((w.to_f32(), b.to_f32()));
+                }
+            }
+            println!(
+                "native backend: {} dispatch, {} verdicts",
+                opts.dispatch.name(),
+                if opts.measured { "measured" } else { "calibrated" }
+            );
+            serve_native(&graph, &sol, &platform, &cfg, &opts)?
+        }
+        Backend::Synthetic => {
+            let graph = BlockGraph::from_manifest(model);
+            serve_synthetic(&graph, &sol, &platform, &cfg)?
+        }
+    };
     println!(
         "completed {}/{} (shed {}), wall {:.2}s, {:.1} req/s",
         m.completed,
@@ -255,6 +291,7 @@ fn scenarios_cmd(args: &Args) -> Result<()> {
     // CI baselines (the deterministic payload is byte-identical for
     // any value anyway)
     let exec_workers = args.usize("exec-workers", 1);
+    let backend = Backend::parse(&args.str("backend", "synthetic"))?;
     let only = args.opt("only");
     let out_path = args.str("out", "BENCH_scenarios.json");
 
@@ -272,13 +309,14 @@ fn scenarios_cmd(args: &Args) -> Result<()> {
         ));
     }
     println!(
-        "=== scenario matrix ({} presets{}, {workers} workers) ===\n",
+        "=== scenario matrix ({} presets{}, {workers} workers, {} backend) ===\n",
         selected.len(),
-        if smoke { ", smoke" } else { "" }
+        if smoke { ", smoke" } else { "" },
+        backend.name()
     );
     let mut reports = Vec::with_capacity(selected.len());
     for sc in selected {
-        let r = scenarios::run_scenario(sc, workers, exec_workers, smoke)?;
+        let r = scenarios::run_scenario_with(sc, workers, exec_workers, smoke, backend)?;
         r.print();
         println!();
         reports.push(r);

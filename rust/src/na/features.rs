@@ -8,11 +8,15 @@
 //! outputs; all EE training/evaluation afterwards touches only these
 //! tiny cached vectors.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
 use super::profile::ExitProfile;
+use crate::compute::{Dispatch, NativeModel};
 use crate::data::Split;
 use crate::runtime::{Engine, HostTensor, Manifest, ModelInfo, WeightStore};
+use crate::util::threadpool::ThreadPool;
 
 /// Final-classifier pseudo-location marker.
 pub const FINAL_LOC: usize = usize::MAX;
@@ -86,6 +90,58 @@ impl FeatureCache {
             final_pred,
             labels: split.y.clone(),
             n: split.n,
+        })
+    }
+
+    /// Build the cache through the native SIMD backend instead of the
+    /// PJRT `backbone_all` artifact: one whole-backbone
+    /// [`NativeModel::forward_all`] pass per sample, fanned across
+    /// `workers` threads — true multi-client exit-feature extraction,
+    /// free of the engine's single service thread. The fan-out is an
+    /// order-preserving map over the samples, so the cache is
+    /// byte-identical for every worker count.
+    pub fn build_native(
+        model: &NativeModel,
+        dispatch: Dispatch,
+        xs: Vec<Vec<f32>>,
+        labels: &[i32],
+        workers: usize,
+    ) -> Result<Self> {
+        if xs.len() != labels.len() {
+            return Err(anyhow!("{} samples but {} labels", xs.len(), labels.len()));
+        }
+        let (h, w, c) = model.in_dims;
+        let expect = h * w * c;
+        if let Some(bad) = xs.iter().position(|x| x.len() != expect) {
+            return Err(anyhow!(
+                "sample {bad} has {} values, native model wants {expect} ({h}x{w}x{c})",
+                xs[bad].len()
+            ));
+        }
+        let n = xs.len();
+        let gap_dims: Vec<usize> = model.blocks.iter().map(|b| b.out_dims.2).collect();
+        let shared = Arc::new(model.clone());
+        let pool = ThreadPool::new(workers);
+        let rows = pool.map(xs, move |x| shared.forward_all(&x, dispatch));
+
+        let mut gaps: Vec<Vec<f32>> =
+            gap_dims.iter().map(|&d| Vec::with_capacity(n * d)).collect();
+        let mut final_conf = Vec::with_capacity(n);
+        let mut final_pred = Vec::with_capacity(n);
+        for (sample_gaps, conf, pred) in rows {
+            for (g, sg) in gaps.iter_mut().zip(sample_gaps) {
+                g.extend(sg);
+            }
+            final_conf.push(conf);
+            final_pred.push(pred);
+        }
+        Ok(FeatureCache {
+            gaps,
+            gap_dims,
+            final_conf,
+            final_pred,
+            labels: labels.to_vec(),
+            n,
         })
     }
 

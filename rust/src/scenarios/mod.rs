@@ -6,6 +6,10 @@
 //! simulation → stage-graph serving (`serve_synthetic`) — with no
 //! artifacts and no PJRT, and emits a structured [`ScenarioReport`]
 //! aggregated into `BENCH_scenarios.json` (CLI: `repro scenarios`).
+//! Serving defaults to the synthetic backend; `--backend native`
+//! ([`run_scenario_with`]) swaps in the pure-Rust SIMD kernels in
+//! calibrated mode, leaving the deterministic report byte-identical
+//! while the `timing` block measures real compute.
 //!
 //! | preset               | platform     | models the paper's…                              |
 //! |----------------------|--------------|--------------------------------------------------|
@@ -46,7 +50,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::{serve_synthetic, ServeConfig};
+use crate::coordinator::{serve_native, serve_synthetic, Backend, NativeOptions, ServeConfig};
 use crate::graph::BlockGraph;
 use crate::hw::{presets, Platform};
 use crate::na::{self, ExitBank, ExitProfile, FlowConfig, TrainedExit};
@@ -491,6 +495,23 @@ pub fn run_scenario(
     exec_workers: usize,
     smoke: bool,
 ) -> Result<ScenarioReport> {
+    run_scenario_with(sc, workers, exec_workers, smoke, Backend::Synthetic)
+}
+
+/// [`run_scenario`] with an explicit serving backend. `Synthetic`
+/// draws verdicts without arithmetic; `Native` runs the pure-Rust SIMD
+/// kernels on the exec plane in calibrated mode, so its deterministic
+/// report is byte-identical to the synthetic one while the wall-clock
+/// `timing` block measures real multiply-accumulate throughput (smoke
+/// runs use the tiny test-scale backbone, full runs the bench scale).
+/// `Pjrt` is rejected: presets are hermetic and have no artifacts.
+pub fn run_scenario_with(
+    sc: &Scenario,
+    workers: usize,
+    exec_workers: usize,
+    smoke: bool,
+    backend: Backend,
+) -> Result<ScenarioReport> {
     let bank = build_bank(sc);
     let cfg = FlowConfig {
         latency_constraint_s: sc.latency_constraint_s,
@@ -517,7 +538,22 @@ pub fn run_scenario(
         exec_workers,
     };
     let t0 = Instant::now();
-    let m = serve_synthetic(&sc.graph, sol, &sc.platform, &scfg)?;
+    let m = match backend {
+        Backend::Synthetic => serve_synthetic(&sc.graph, sol, &sc.platform, &scfg)?,
+        Backend::Native => {
+            let nopts = if smoke {
+                NativeOptions::test(sc.bank_seed)
+            } else {
+                NativeOptions::bench(sc.bank_seed)
+            };
+            serve_native(&sc.graph, sol, &sc.platform, &scfg, &nopts)?
+        }
+        Backend::Pjrt => bail!(
+            "{}: scenario presets are hermetic (no artifacts) — the pjrt backend \
+             only applies to `repro serve`",
+            sc.name
+        ),
+    };
     let serve_wall_s = t0.elapsed().as_secs_f64();
     if m.completed + m.dropped != n_requests {
         bail!(
@@ -583,7 +619,17 @@ pub fn run_scenario(
 
 /// Run every preset in [`all`] at the given worker counts.
 pub fn run_all(workers: usize, exec_workers: usize, smoke: bool) -> Result<Vec<ScenarioReport>> {
-    all().iter().map(|sc| run_scenario(sc, workers, exec_workers, smoke)).collect()
+    run_all_with(workers, exec_workers, smoke, Backend::Synthetic)
+}
+
+/// [`run_all`] with an explicit serving backend.
+pub fn run_all_with(
+    workers: usize,
+    exec_workers: usize,
+    smoke: bool,
+    backend: Backend,
+) -> Result<Vec<ScenarioReport>> {
+    all().iter().map(|sc| run_scenario_with(sc, workers, exec_workers, smoke, backend)).collect()
 }
 
 /// Aggregate reports into the `BENCH_scenarios.json` document. Keeps

@@ -10,7 +10,8 @@
 //! process-global, and sibling tests cloning tensors concurrently
 //! would pollute the budget.
 
-use eenn_na::coordinator::{serve_synthetic, ServeConfig};
+use eenn_na::compute::Dispatch;
+use eenn_na::coordinator::{serve_native, serve_synthetic, NativeOptions, ServeConfig};
 use eenn_na::eenn::EennSolution;
 use eenn_na::graph::BlockGraph;
 use eenn_na::hw::presets;
@@ -61,5 +62,35 @@ fn synthetic_serving_hot_path_performs_zero_tensor_clones() {
             "exec_workers {exec_workers}: serve hot path must move payloads, \
              not copy them ({clones} HostTensor clones over {visits} stage visits)"
         );
+    }
+
+    // native backend: same budget, but now the payloads are real
+    // weight-bearing feature maps and every stage visit runs actual
+    // kernels. `HostTensor::to_f32` materializes a fresh Vec (not a
+    // tensor clone) and the output tensor is built from it, so the
+    // executor-side discipline — queues, escalation, batching — must
+    // still move tensors, never copy them.
+    for exec_workers in [1usize, 4] {
+        let cfg = ServeConfig {
+            arrival_rate_hz: 2_000.0,
+            n_requests: 200,
+            queue_cap: 0,
+            batch_max: 4,
+            seed: 21,
+            exec_workers,
+        };
+        for dispatch in [Dispatch::detect(), Dispatch::Scalar] {
+            let opts = NativeOptions { dispatch, ..NativeOptions::test(21) };
+            clone_stats::reset();
+            let m = serve_native(&graph, &sol, &platform, &cfg, &opts).unwrap();
+            assert_eq!(m.completed, 200, "roomy queues serve everything");
+            let clones = clone_stats::count();
+            assert_eq!(
+                clones, 0,
+                "native backend (exec_workers {exec_workers}, {} dispatch): serve hot \
+                 path must move payloads, not copy them ({clones} HostTensor clones)",
+                dispatch.name()
+            );
+        }
     }
 }

@@ -371,6 +371,47 @@ fn every_preset_is_byte_identical_across_exec_worker_counts() {
 }
 
 #[test]
+fn native_backend_is_byte_identical_to_synthetic_when_calibrated() {
+    // the native backend runs real kernels on the exec plane, but in
+    // calibrated mode its verdict stream replays the synthetic
+    // backend's RNG draws exactly — so every virtual-clock metric must
+    // be byte-identical to serve_synthetic, for any exec-worker count
+    // and either SIMD dispatch. This is what lets the BENCH
+    // `deterministic` sections stay exact-gated across backends.
+    use eenn_na::compute::Dispatch;
+    use eenn_na::coordinator::{serve_native, NativeOptions};
+
+    let graph = BlockGraph::synthetic_resnet(10, 4);
+    let platform = presets::fog_cluster();
+    let sol = synth_solution(vec![1, 2, 3], vec![0, 1, 2, 3], vec![0.4, 0.3, 0.2, 0.1]);
+    for batch_max in [1usize, 4] {
+        let cfg = ServeConfig {
+            arrival_rate_hz: 1_500.0,
+            n_requests: 400,
+            queue_cap: 0, // roomy: every sample walks its full path
+            batch_max,
+            seed: 17,
+            exec_workers: 1,
+        };
+        let base = metric_bits(&serve_synthetic(&graph, &sol, &platform, &cfg).unwrap());
+        for exec_workers in [1usize, 2, 8] {
+            for dispatch in [Dispatch::detect(), Dispatch::Scalar] {
+                let scfg = ServeConfig { exec_workers, ..cfg.clone() };
+                let opts = NativeOptions { dispatch, ..NativeOptions::test(17) };
+                let m = serve_native(&graph, &sol, &platform, &scfg, &opts).unwrap();
+                assert_eq!(
+                    metric_bits(&m),
+                    base,
+                    "native backend (batch_max {batch_max}, exec_workers {exec_workers}, \
+                     {} dispatch) diverged from the synthetic backend",
+                    dispatch.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn shared_timeline_reproduces_prerefactor_replay_when_idle() {
     // exclusive-memory platform (one shared timeline): the disciplines
     // coincide whenever requests never overlap. The old replay

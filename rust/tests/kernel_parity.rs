@@ -1,0 +1,355 @@
+//! Kernel-parity property battery for the native SIMD backend.
+//!
+//! Two pinned contracts, swept over randomized shapes / strides /
+//! padding / relu / batch (mirroring the Python hypothesis suite in
+//! `python/compile/kernels/`):
+//!
+//! * **AVX2 vs scalar**: the runtime-dispatched f32x8 kernels must
+//!   agree with the bit-exact scalar reference within 1e-5 *relative*
+//!   tolerance (FMA contraction is the only permitted divergence);
+//!   `gap` reduces in the identical order on both paths and must be
+//!   bit-exact. The sweep only runs where the host actually dispatches
+//!   AVX2 — calling the AVX2 kernels on a CPU without the feature
+//!   would be undefined behaviour, and off x86_64 the enum falls back
+//!   to scalar anyway (under `RUST_PALLAS_FORCE_SCALAR=1` this battery
+//!   degenerates to the scalar-side invariants, which is intended).
+//! * **FLOP accounting vs the search**: for the SAME-style configs the
+//!   analytic `graph::fine` cost model prices (odd kernel, pad
+//!   `(k-1)/2`, stride 1, or stride 2 on even extents), the kernels'
+//!   exact `Spec::macs()` must equal `FineNode::macs()` — the numbers
+//!   the NA search and the GFLOP/s bench sections are built on.
+
+use eenn_na::compute::{
+    ee_head, scalar, Conv1dSpec, Conv2dSpec, DenseSpec, Dispatch, DwConv2dSpec, NativeConfig,
+    NativeModel,
+};
+use eenn_na::graph::{BlockGraph, FineNode, Layer};
+use eenn_na::na::FeatureCache;
+use eenn_na::util::prop::{self, assert_holds};
+use eenn_na::util::rng::Rng;
+
+/// The ISSUE-pinned AVX2-vs-scalar agreement: 1e-5 relative (with an
+/// absolute floor of 1e-5 near zero). `prop::assert_close` is
+/// absolute-only, so the sweep carries its own comparator.
+fn rel_close(a: f32, b: f32) -> bool {
+    let scale = a.abs().max(b.abs()).max(1.0);
+    (a - b).abs() <= 1e-5 * scale
+}
+
+fn all_rel_close(fast: &[f32], reference: &[f32], what: &str) -> Result<(), String> {
+    if fast.len() != reference.len() {
+        return Err(format!("{what}: {} outputs vs {} expected", fast.len(), reference.len()));
+    }
+    match fast.iter().zip(reference).position(|(a, b)| !rel_close(*a, *b)) {
+        None => Ok(()),
+        Some(i) => Err(format!("{what}: element {i}: {} vs {}", fast[i], reference[i])),
+    }
+}
+
+/// The SIMD path to compare against scalar, if this host has one.
+fn simd_dispatch() -> Option<Dispatch> {
+    match Dispatch::detect() {
+        Dispatch::Avx2 => Some(Dispatch::Avx2),
+        Dispatch::Scalar => None,
+    }
+}
+
+fn fill(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.f32() * 2.0 - 1.0).collect()
+}
+
+#[test]
+fn conv2d_simd_matches_scalar_across_swept_shapes() {
+    let Some(disp) = simd_dispatch() else {
+        eprintln!("kernel_parity: no AVX2+FMA dispatch on this host; conv2d sweep skipped");
+        return;
+    };
+    prop::check(60, |g| {
+        let kh = g.usize_in(1, 4);
+        let kw = g.usize_in(1, 4);
+        let s = Conv2dSpec {
+            h: g.usize_in(kh, kh + 6),
+            w: g.usize_in(kw, kw + 6),
+            cin: g.usize_in(1, 6),
+            // crosses the 8-lane boundary (remainder loop) both ways
+            cout: g.usize_in(1, 20),
+            kh,
+            kw,
+            stride: (g.usize_in(1, 3), g.usize_in(1, 3)),
+            pad: (g.usize_in(0, kh), g.usize_in(0, kw)),
+            relu: g.bool(),
+        };
+        let batch = g.usize_in(1, 3);
+        let x = fill(&mut g.rng, batch * s.h * s.w * s.cin);
+        let wgt = fill(&mut g.rng, s.weight_len());
+        let b = fill(&mut g.rng, s.cout);
+        let reference = scalar::conv2d(&x, batch, &s, &wgt, &b);
+        let (ho, wo) = s.out_dims();
+        assert_holds(reference.len() == batch * ho * wo * s.cout, "conv2d output shape")?;
+        if s.relu {
+            assert_holds(reference.iter().all(|&v| v >= 0.0), "relu clamps negatives")?;
+        }
+        let fast = disp.conv2d(&x, batch, &s, &wgt, &b);
+        all_rel_close(&fast, &reference, &format!("conv2d {s:?}"))
+    });
+}
+
+#[test]
+fn dwconv2d_simd_matches_scalar_across_swept_shapes() {
+    let Some(disp) = simd_dispatch() else {
+        eprintln!("kernel_parity: no AVX2+FMA dispatch on this host; dwconv2d sweep skipped");
+        return;
+    };
+    prop::check(60, |g| {
+        let kh = g.usize_in(1, 4);
+        let kw = g.usize_in(1, 4);
+        let s = DwConv2dSpec {
+            h: g.usize_in(kh, kh + 6),
+            w: g.usize_in(kw, kw + 6),
+            c: g.usize_in(1, 20),
+            kh,
+            kw,
+            stride: (g.usize_in(1, 3), g.usize_in(1, 3)),
+            pad: (g.usize_in(0, kh), g.usize_in(0, kw)),
+            relu: g.bool(),
+        };
+        let batch = g.usize_in(1, 3);
+        let x = fill(&mut g.rng, batch * s.h * s.w * s.c);
+        let wgt = fill(&mut g.rng, s.weight_len());
+        let b = fill(&mut g.rng, s.c);
+        let reference = scalar::dwconv2d(&x, batch, &s, &wgt, &b);
+        let (ho, wo) = s.out_dims();
+        assert_holds(reference.len() == batch * ho * wo * s.c, "dwconv2d output shape")?;
+        let fast = disp.dwconv2d(&x, batch, &s, &wgt, &b);
+        all_rel_close(&fast, &reference, &format!("dwconv2d {s:?}"))
+    });
+}
+
+#[test]
+fn conv1d_simd_matches_scalar_across_swept_shapes() {
+    let Some(disp) = simd_dispatch() else {
+        eprintln!("kernel_parity: no AVX2+FMA dispatch on this host; conv1d sweep skipped");
+        return;
+    };
+    prop::check(60, |g| {
+        let k = g.usize_in(1, 6);
+        let s = Conv1dSpec {
+            l: g.usize_in(k, k + 12),
+            cin: g.usize_in(1, 6),
+            cout: g.usize_in(1, 20),
+            k,
+            stride: g.usize_in(1, 3),
+            pad: g.usize_in(0, k),
+            relu: g.bool(),
+        };
+        let batch = g.usize_in(1, 3);
+        let x = fill(&mut g.rng, batch * s.l * s.cin);
+        let wgt = fill(&mut g.rng, s.weight_len());
+        let b = fill(&mut g.rng, s.cout);
+        let reference = scalar::conv1d(&x, batch, &s, &wgt, &b);
+        assert_holds(reference.len() == batch * s.out_len() * s.cout, "conv1d output shape")?;
+        let fast = disp.conv1d(&x, batch, &s, &wgt, &b);
+        all_rel_close(&fast, &reference, &format!("conv1d {s:?}"))
+    });
+}
+
+#[test]
+fn dense_simd_matches_scalar_across_swept_shapes() {
+    let Some(disp) = simd_dispatch() else {
+        eprintln!("kernel_parity: no AVX2+FMA dispatch on this host; dense sweep skipped");
+        return;
+    };
+    prop::check(80, |g| {
+        let s = DenseSpec {
+            k: g.usize_in(1, 24),
+            n: g.usize_in(1, 24),
+            relu: g.bool(),
+        };
+        let m = g.usize_in(1, 4);
+        let x = fill(&mut g.rng, m * s.k);
+        let wgt = fill(&mut g.rng, s.weight_len());
+        let b = fill(&mut g.rng, s.n);
+        let reference = scalar::dense(&x, m, &s, &wgt, &b);
+        assert_holds(reference.len() == m * s.n, "dense output shape")?;
+        if s.relu {
+            assert_holds(reference.iter().all(|&v| v >= 0.0), "relu clamps negatives")?;
+        }
+        let fast = disp.dense(&x, m, &s, &wgt, &b);
+        all_rel_close(&fast, &reference, &format!("dense {s:?}"))
+    });
+}
+
+#[test]
+fn gap_is_bit_exact_across_dispatch() {
+    let Some(disp) = simd_dispatch() else {
+        eprintln!("kernel_parity: no AVX2+FMA dispatch on this host; gap sweep skipped");
+        return;
+    };
+    // gap accumulates in the identical ascending order on both paths
+    // and applies the 1/spatial factor as a single multiply, so the
+    // SIMD result is pinned bit-exact, not just close.
+    prop::check(80, |g| {
+        let spatial = g.usize_in(1, 30);
+        let c = g.usize_in(1, 40);
+        let x = fill(&mut g.rng, spatial * c);
+        let reference = scalar::gap(&x, spatial, c);
+        let fast = disp.gap(&x, spatial, c);
+        assert_holds(reference.len() == c, "gap output shape")?;
+        let bits_equal = fast.len() == reference.len()
+            && fast
+                .iter()
+                .zip(&reference)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert_holds(bits_equal, "gap must be bit-exact across dispatch")
+    });
+}
+
+#[test]
+fn ee_head_invariants_and_dispatch_parity() {
+    let disp = simd_dispatch();
+    prop::check(60, move |g| {
+        let c = g.usize_in(1, 24);
+        let classes = g.usize_in(1, 12);
+        let feats = fill(&mut g.rng, c);
+        let w = fill(&mut g.rng, c * classes);
+        let b = fill(&mut g.rng, classes);
+        let out = ee_head(Dispatch::Scalar, &feats, &w, &b, classes);
+        assert_holds(out.probs.len() == classes, "one probability per class")?;
+        let sum: f32 = out.probs.iter().sum();
+        prop::assert_close(f64::from(sum), 1.0, 1e-4, "softmax normalizes")?;
+        let max = out.probs.iter().fold(f32::NEG_INFINITY, |a, &p| a.max(p));
+        assert_holds(out.conf.to_bits() == max.to_bits(), "confidence is the max probability")?;
+        assert_holds((0..classes as i32).contains(&out.pred), "pred is a valid class")?;
+        assert_holds(
+            rel_close(out.probs[out.pred as usize], max),
+            "pred's probability is the max (up to exp rounding)",
+        )?;
+        if let Some(disp) = disp {
+            let fast = ee_head(disp, &feats, &w, &b, classes);
+            all_rel_close(&fast.probs, &out.probs, "ee_head probs across dispatch")?;
+            assert_holds(
+                rel_close(fast.conf, out.conf),
+                "ee_head confidence across dispatch",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn spec_macs_match_fine_graph_accounting_on_same_configs() {
+    // the analytic model prices spatial_out as spatial_in / stride^2,
+    // which is exact precisely for SAME-style layers: odd kernel, pad
+    // (k-1)/2, and stride 1, or stride 2 on even extents. Those are
+    // the configs the synthetic graphs emit, so the kernels' exact
+    // MAC counts must reproduce the search's numbers there.
+    prop::check(120, |g| {
+        let k = [1usize, 3, 5][g.usize_in(0, 3)];
+        let stride = if g.bool() { 1 } else { 2 };
+        let h = 2 * g.usize_in(1, 8);
+        let w = 2 * g.usize_in(1, 8);
+        let cin = g.usize_in(1, 9);
+        let cout = g.usize_in(1, 9);
+        let pad = (k - 1) / 2;
+
+        let s2d = Conv2dSpec {
+            h,
+            w,
+            cin,
+            cout,
+            kh: k,
+            kw: k,
+            stride: (stride, stride),
+            pad: (pad, pad),
+            relu: true,
+        };
+        let n2d = FineNode {
+            layer: Layer::Conv2d { kh: k, kw: k, stride, cin, cout },
+            spatial_in: h * w,
+            block_end: false,
+            name: "prop.conv2d".into(),
+        };
+        assert_holds(
+            s2d.macs() == n2d.macs(),
+            &format!("conv2d MACs: kernel {} vs fine-graph {}", s2d.macs(), n2d.macs()),
+        )?;
+
+        let sdw = DwConv2dSpec {
+            h,
+            w,
+            c: cin,
+            kh: k,
+            kw: k,
+            stride: (stride, stride),
+            pad: (pad, pad),
+            relu: true,
+        };
+        let ndw = FineNode {
+            layer: Layer::DwConv2d { k, stride, c: cin },
+            spatial_in: h * w,
+            block_end: false,
+            name: "prop.dwconv2d".into(),
+        };
+        assert_holds(
+            sdw.macs() == ndw.macs(),
+            &format!("dwconv2d MACs: kernel {} vs fine-graph {}", sdw.macs(), ndw.macs()),
+        )?;
+
+        let l = 2 * g.usize_in(1, 32);
+        let s1d = Conv1dSpec { l, cin, cout, k, stride, pad, relu: true };
+        let n1d = FineNode {
+            layer: Layer::Conv1d { k, stride, cin, cout },
+            spatial_in: l,
+            block_end: false,
+            name: "prop.conv1d".into(),
+        };
+        assert_holds(
+            s1d.macs() == n1d.macs(),
+            &format!("conv1d MACs: kernel {} vs fine-graph {}", s1d.macs(), n1d.macs()),
+        )?;
+
+        let sd = DenseSpec { k: cin, n: cout, relu: false };
+        let nd = FineNode {
+            layer: Layer::Dense { cin, cout },
+            spatial_in: 1,
+            block_end: false,
+            name: "prop.dense".into(),
+        };
+        assert_holds(
+            sd.macs() == nd.macs(),
+            &format!("dense MACs: kernel {} vs fine-graph {}", sd.macs(), nd.macs()),
+        )
+    });
+}
+
+#[test]
+fn native_feature_cache_is_worker_count_invariant() {
+    let graph = BlockGraph::synthetic_resnet(6, 2);
+    let model = NativeModel::build(&graph, &NativeConfig::test(31));
+    let (h, w, c) = model.in_dims;
+    let mut rng = Rng::seeded(99);
+    let n = 24;
+    let xs: Vec<Vec<f32>> = (0..n).map(|_| fill(&mut rng, h * w * c)).collect();
+    let labels: Vec<i32> = (0..n).map(|_| rng.below(6) as i32).collect();
+
+    let one = FeatureCache::build_native(&model, Dispatch::Scalar, xs.clone(), &labels, 1)
+        .expect("single-worker cache");
+    let four = FeatureCache::build_native(&model, Dispatch::Scalar, xs.clone(), &labels, 4)
+        .expect("four-worker cache");
+    assert_eq!(one.n, n);
+    assert_eq!(one.gap_dims.len(), graph.blocks.len());
+    assert_eq!(one.gap_dims, four.gap_dims);
+    // the fan-out is an order-preserving map, so every cached vector
+    // must be byte-identical regardless of worker count
+    assert_eq!(one.gaps, four.gaps, "GAP features must not depend on worker count");
+    assert_eq!(one.final_conf, four.final_conf);
+    assert_eq!(one.final_pred, four.final_pred);
+    assert_eq!(one.labels, labels);
+
+    // malformed inputs are rejected, not silently truncated
+    assert!(FeatureCache::build_native(&model, Dispatch::Scalar, xs.clone(), &labels[..n - 1], 1)
+        .is_err());
+    let mut bad = xs;
+    bad[3].pop();
+    assert!(FeatureCache::build_native(&model, Dispatch::Scalar, bad, &labels, 1).is_err());
+}

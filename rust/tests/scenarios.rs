@@ -44,6 +44,30 @@ fn exec_workers_do_not_move_the_deterministic_report() {
 }
 
 #[test]
+fn native_backend_report_is_byte_identical_to_synthetic() {
+    // calibrated native serving replays the synthetic verdict stream,
+    // so the scenario-level deterministic report must not move when
+    // the preset is served through real kernels — loaded (stress_fog)
+    // and shedding (stress_fog_shed) alike, inline or pipelined
+    use eenn_na::coordinator::Backend;
+    for sc in [scenarios::stress_fog(), scenarios::stress_fog_shed()] {
+        let synth = scenarios::run_scenario(&sc, 1, 1, true).expect("synthetic run");
+        for exec_workers in [1usize, 4] {
+            let native =
+                scenarios::run_scenario_with(&sc, 1, exec_workers, true, Backend::Native)
+                    .expect("native run");
+            assert_eq!(
+                synth.deterministic_json().to_string(),
+                native.deterministic_json().to_string(),
+                "{}: native backend (exec_workers {exec_workers}) report differs \
+                 from synthetic",
+                sc.name
+            );
+        }
+    }
+}
+
+#[test]
 fn zero_workers_clamps_to_sequential_behaviour() {
     // the FlowConfig::workers >= 1 clamp: a zero worker count (failed
     // available_parallelism probe) must behave exactly like 1
