@@ -22,8 +22,12 @@ cargo bench --bench hotpath -- --backend native
 cargo run --release -p eenn-na --bin repro -- scenarios --smoke
 cargo run --release -p eenn-na --bin repro -- scenarios --smoke \
   --only stress_fog_shed --out BENCH_scenarios_shed.json
+cargo run --release -p eenn-na --bin repro -- scenarios --smoke \
+  --only multi_tenant_fog --out BENCH_scenarios_multi_tenant.json
+cargo run --release -p eenn-na --bin repro -- scenarios --smoke \
+  --only overload_storm --out BENCH_scenarios_storm.json
 
-for b in search_cost serving_throughput scenarios scenarios_shed hotpath hotpath_native; do
+for b in search_cost serving_throughput scenarios scenarios_shed scenarios_multi_tenant scenarios_storm hotpath hotpath_native; do
   if [ "$refresh" = 1 ] || [ ! -f "ci/baselines/BENCH_$b.json" ]; then
     cargo run --release -p xtask -- bench-update \
       --fresh "BENCH_$b.json" --baseline "ci/baselines/BENCH_$b.json"

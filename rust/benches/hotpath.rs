@@ -65,6 +65,7 @@ fn smoke_bench() -> anyhow::Result<()> {
         batch_max: 8,
         seed: sc.traffic.seed,
         exec_workers,
+        ..ServeConfig::default()
     };
 
     // raw executor overhead: synthetic backend, inline exec plane
@@ -127,6 +128,7 @@ fn smoke_native_bench(out_path: &str) -> anyhow::Result<()> {
         batch_max: 8,
         seed: sc.traffic.seed,
         exec_workers: 1,
+        ..ServeConfig::default()
     };
     let (m1, _m4, native_speedup, native_gflops) = common::native_measurements(
         &sc.graph,

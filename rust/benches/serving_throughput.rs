@@ -79,14 +79,15 @@ fn run_scenario(
         batch_max,
         seed: 42,
         exec_workers: 1,
+        ..ServeConfig::default()
     };
     let m = serve_synthetic(graph, sol, platform, &cfg).expect("serve");
     assert_eq!(
-        m.completed + m.dropped,
+        m.completed + m.shed,
         n_requests,
         "request accounting must balance"
     );
-    assert_eq!(m.dropped, 0, "roomy queues must not shed");
+    assert_eq!(m.shed, 0, "roomy queues must not shed");
     m
 }
 
@@ -95,7 +96,7 @@ fn run_scenario(
 fn deterministic_entry(m: &ServeMetrics) -> Json {
     let mut d = BTreeMap::new();
     d.insert("completed".to_string(), Json::Num(m.completed as f64));
-    d.insert("shed".to_string(), Json::Num(m.dropped as f64));
+    d.insert("shed".to_string(), Json::Num(m.shed as f64));
     d.insert(
         "term_hist".to_string(),
         Json::Arr(m.term_hist.iter().map(|&c| Json::Num(c as f64)).collect()),
@@ -184,6 +185,7 @@ fn main() {
         batch_max: 8,
         seed: 42,
         exec_workers: 1,
+        ..ServeConfig::default()
     };
     let (m1, m4, pipe_json) =
         common::pipeline_speedup(&fog_graph, &fog_sol, &fog, &pipe_cfg, burn_ns);

@@ -58,13 +58,14 @@ fn main() -> anyhow::Result<()> {
         batch_max: 8,
         seed: 7,
         exec_workers: 1,
+        ..ServeConfig::default()
     };
     let m = serve(&engine, &manifest, model, &ws, &out.solution, &platform, &test, &scfg)?;
 
     println!("\n== serving report ==");
     println!(
-        "completed {}/{} (dropped {}), wall {:.2}s -> {:.1} req/s compute throughput",
-        m.completed, n, m.dropped, m.wall_s, m.throughput_rps
+        "completed {}/{} (shed {}), wall {:.2}s -> {:.1} req/s compute throughput",
+        m.completed, n, m.shed, m.wall_s, m.throughput_rps
     );
     println!(
         "device-clock latency: p50 {:.2} ms, p90 {:.2} ms, p99 {:.2} ms",

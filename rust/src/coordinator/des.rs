@@ -54,6 +54,34 @@
 //!   escalation path — no deep copies on the hot path
 //!   (`tests/clone_budget.rs`).
 //!
+//! # Admission control (QoS)
+//!
+//! Every [`QosConfig`] policy runs at **enqueue time on the virtual
+//! plane**, reading only state the event loop already owns (timeline
+//! busy-until clocks, queue depths, token counts at virtual `now`) —
+//! never a wall clock, never exec-plane state — so enabling any policy
+//! keeps all metrics byte-identical across `exec_workers`. Checks run
+//! in a fixed order; the first to fire sheds the sample and counts it
+//! under exactly one reason:
+//!
+//! 1. **token bucket** (`shed_bucket`) — fresh arrivals only (stage 0):
+//!    tenant `id % tenants`, lazy refill `tokens = min(burst, tokens +
+//!    (now − last) · rate)`, admit iff a full token is available;
+//! 2. **deadline** (`shed_deadline`) — predict the sample's finish at
+//!    *this* stage: `max(timeline_free, now) + backlog · compute_s +
+//!    transfer_s + compute_s`. That is a lower bound on its path
+//!    completion (finishing this stage is necessary), so shedding when
+//!    it overruns `arrival + deadline_s` never falsely sheds a sample
+//!    an idle platform could still serve in time;
+//! 3. **bounded queue** (`shed_queue`) — the pre-QoS backpressure
+//!    check, unchanged.
+//!
+//! `priority_escalations` never sheds: it only changes which stage a
+//! freed timeline serves next (escalation queues outrank stage-0
+//! queues, ties still broken by enqueue ticket). Queue-depth and
+//! sojourn telemetry ([`QueueStats`]) accumulate on the same virtual
+//! instants the queues change, so they inherit the same determinism.
+//!
 //! # Panics
 //!
 //! A panicking backend never deadlocks the loop or poisons the pool:
@@ -89,7 +117,10 @@ use crate::util::rng::Rng;
 use crate::util::stats::summarize;
 use crate::util::threadpool::{Lanes, ThreadPool};
 
-use super::{RequestTrace, ServeConfig, ServeMetrics, StageCtx, StageExec, StageOutput, StagePlan};
+use super::{
+    ArrivalProcess, QueueStats, RequestTrace, ServeConfig, ServeMetrics, StageCtx, StageExec,
+    StageOutput, StagePlan,
+};
 
 /// One sample in flight through the stage graph.
 struct Job {
@@ -228,6 +259,64 @@ impl ExecPlane {
     }
 }
 
+/// Per-tenant token bucket, refilled lazily on the virtual clock.
+#[derive(Clone, Copy)]
+struct TokenBucket {
+    tokens: f64,
+    last_refill: f64,
+}
+
+/// Per-stage queue telemetry, accumulated on the virtual instants the
+/// queue changes (admission and dispatch) — exec-plane independent by
+/// construction.
+#[derive(Default)]
+struct QueueTrack {
+    /// Running depth · time integral up to `last_t`.
+    area: f64,
+    last_t: f64,
+    depth: usize,
+    max: usize,
+    /// Virtual wait from stage-queue entry to dispatch, per sample.
+    sojourns: Vec<f64>,
+    /// `(virtual time, depth after the change)`, time-ordered.
+    events: Vec<(f64, usize)>,
+}
+
+impl QueueTrack {
+    fn note(&mut self, now: f64, depth: usize) {
+        self.area += self.depth as f64 * (now - self.last_t);
+        self.last_t = now;
+        self.depth = depth;
+        self.max = self.max.max(depth);
+        self.events.push((now, depth));
+    }
+}
+
+/// Bucket a time-ordered depth-event trace into `nbuckets` equal
+/// windows over `[0, horizon]`; each bucket reports the **maximum**
+/// depth observed in its window, carrying the running depth into
+/// windows with no events so spikes and plateaus both survive the
+/// downsampling.
+fn depth_series(events: &[(f64, usize)], horizon: f64, nbuckets: usize) -> Vec<usize> {
+    let mut series = vec![0usize; nbuckets];
+    if !(horizon > 0.0) {
+        return series;
+    }
+    let mut cur = 0usize;
+    let mut i = 0;
+    for (b, slot) in series.iter_mut().enumerate() {
+        let end = horizon * (b + 1) as f64 / nbuckets as f64;
+        let mut mx = cur;
+        while i < events.len() && events[i].0 <= end {
+            cur = events[i].1;
+            mx = mx.max(cur);
+            i += 1;
+        }
+        *slot = mx;
+    }
+    series
+}
+
 /// Virtual-time bookkeeping of one dispatch awaiting its commits.
 struct Dispatch {
     seg: usize,
@@ -255,7 +344,22 @@ struct Des<'a> {
     seq: u64,
     enq_seq: u64,
     queue_cap: usize,
-    dropped: usize,
+    shed_queue: usize,
+    shed_deadline: usize,
+    shed_bucket: usize,
+    /// Admission deadline relative to arrival; `INFINITY` disables.
+    deadline_s: f64,
+    /// Escalation queues outrank stage-0 queues in dispatch order.
+    prio_escalations: bool,
+    /// One bucket per tenant (`id % buckets.len()`); empty disables.
+    buckets: Vec<TokenBucket>,
+    bucket_rate: f64,
+    bucket_burst: f64,
+    /// Per-stage queue telemetry (depth integral, sojourns, events).
+    qstats: Vec<QueueTrack>,
+    /// Largest virtual instant seen (arrivals and scheduled events):
+    /// the time axis the depth series is bucketed over.
+    horizon: f64,
     done: Vec<Done>,
     exec: ExecPlane,
     /// Dispatches whose commits are still pending, by exec ticket
@@ -266,14 +370,49 @@ struct Des<'a> {
 
 impl Des<'_> {
     fn schedule(&mut self, time: f64, kind: EventKind) {
+        self.horizon = self.horizon.max(time);
         self.heap.push(Event { time, seq: self.seq, kind });
         self.seq += 1;
     }
 
+    /// Admission in a fixed order — token bucket (fresh arrivals
+    /// only), deadline prediction, bounded queue — each shedding under
+    /// exactly one counter; an admitted sample is ticketed, queued,
+    /// and offered to its timeline at this virtual instant.
     fn enqueue(&mut self, now: f64, seg: usize, mut job: Job) {
+        self.horizon = self.horizon.max(now);
+        if seg == 0 && !self.buckets.is_empty() {
+            let rate = self.bucket_rate;
+            let burst = self.bucket_burst;
+            let b = &mut self.buckets[job.id % self.buckets.len()];
+            b.tokens = burst.min(b.tokens + (now - b.last_refill) * rate);
+            b.last_refill = now;
+            if b.tokens < 1.0 {
+                self.shed_bucket += 1;
+                return;
+            }
+            b.tokens -= 1.0;
+        }
+        if self.deadline_s.is_finite() {
+            // lower bound on this sample's finish at this stage: the
+            // timeline frees, the backlog ahead is served, then its
+            // own transfer + compute. Finishing the stage is necessary
+            // for finishing the path, so an overrun here is a sure
+            // deadline miss — shed now instead of wasting device time.
+            let StageCtx { compute_s, transfer_s, .. } = self.ctxs[seg];
+            let free = self.timelines.timeline_free_at(self.tl_of_seg[seg]).max(now);
+            let predicted = free
+                + self.queues[seg].len() as f64 * compute_s
+                + transfer_s
+                + compute_s;
+            if predicted > job.sim_arrival + self.deadline_s {
+                self.shed_deadline += 1;
+                return;
+            }
+        }
         if self.queues[seg].len() >= self.queue_cap {
             // bounded queue full at this virtual instant: shed
-            self.dropped += 1;
+            self.shed_queue += 1;
             return;
         }
         job.sim_ready = now;
@@ -281,6 +420,8 @@ impl Des<'_> {
         self.enq_seq += 1;
         let tl = self.tl_of_seg[seg];
         self.queues[seg].push_back(job);
+        let depth = self.queues[seg].len();
+        self.qstats[seg].note(now, depth);
         self.dispatch(now, tl);
     }
 
@@ -289,12 +430,19 @@ impl Des<'_> {
             return; // still reserved: a Wake fires when it frees
         }
         // FIFO across the timeline: serve the stage whose head sample
-        // got its enqueue ticket first
+        // got its enqueue ticket first. With priority escalations on,
+        // mid-pipeline queues (seg > 0) form a strictly higher class —
+        // work already holding partial compute outranks fresh arrivals
+        // — and the enqueue ticket still breaks ties within a class.
+        let prio = self.prio_escalations;
         let Some(&seg) = self
             .stages_on[tl]
             .iter()
             .filter(|&&s| !self.queues[s].is_empty())
-            .min_by_key(|&&s| self.queues[s].front().map(|j| j.enq_seq))
+            .min_by_key(|&&s| {
+                let class = if prio && s > 0 { 0u8 } else { 1u8 };
+                (class, self.queues[s].front().map(|j| j.enq_seq))
+            })
         else {
             return;
         };
@@ -309,6 +457,11 @@ impl Des<'_> {
         let take = batch_max.min(self.queues[seg].len());
         let mut batch: Vec<Job> = self.queues[seg].drain(..take).collect();
         let k = batch.len();
+        for j in &batch {
+            self.qstats[seg].sojourns.push(now - j.sim_ready);
+        }
+        let depth = self.queues[seg].len();
+        self.qstats[seg].note(now, depth);
 
         // virtual-time plane: every timestamp is derived here, from
         // the calibrated latencies, before the backend runs. A serial
@@ -516,24 +669,77 @@ pub(super) fn run_executor(
         enq_seq: 0,
         // 0 = unbounded (the scenario layer's "roomy" convention)
         queue_cap: if cfg.queue_cap == 0 { usize::MAX } else { cfg.queue_cap },
-        dropped: 0,
+        shed_queue: 0,
+        shed_deadline: 0,
+        shed_bucket: 0,
+        deadline_s: cfg.qos.deadline_s,
+        prio_escalations: cfg.qos.priority_escalations,
+        // buckets start full: a burst of `bucket_burst` fresh arrivals
+        // is admissible at t = 0 before the refill rate takes over
+        buckets: vec![
+            TokenBucket { tokens: cfg.qos.bucket_burst, last_refill: 0.0 };
+            cfg.qos.tenants
+        ],
+        bucket_rate: cfg.qos.bucket_rate_hz,
+        bucket_burst: cfg.qos.bucket_burst,
+        qstats: (0..nseg).map(|_| QueueTrack::default()).collect(),
+        horizon: 0.0,
         done: Vec::with_capacity(cfg.n_requests),
         exec,
         inflight: BTreeMap::new(),
         next_ticket: 0,
     };
 
-    // Lazy Poisson generator with the same RNG interleaving the
-    // inline executor always used — one exp() then one payload per
-    // request, in request order — but at most ONE undelivered arrival
-    // resident at a time: Poisson arrivals are time-ordered, so the
-    // merge below never needs to heap them, and payload tensors (real
-    // inputs on the PJRT path) only occupy memory once the virtual
-    // clock reaches them.
+    // Lazy arrival generator with the same RNG interleaving the
+    // inline executor always used — inter-arrival draws then one
+    // payload per request, in request order — but at most ONE
+    // undelivered arrival resident at a time: arrivals are
+    // time-ordered, so the merge below never needs to heap them, and
+    // payload tensors (real inputs on the PJRT path) only occupy
+    // memory once the virtual clock reaches them.
+    //
+    // Poisson consumes exactly one exp() per request — byte-identical
+    // to the pre-QoS stream. MMPP overlays a two-state Markov
+    // modulation: dwell in calm (`arrival_rate_hz`) or burst
+    // (`arrival_rate_hz · burst_factor`), with exponential dwell
+    // times. A candidate inter-arrival that would cross the next state
+    // switch is **discarded** and redrawn at the new state's rate from
+    // the switch instant — valid precisely because the exponential is
+    // memoryless, so the truncated draw carries no information.
     let mut rng = Rng::seeded(cfg.seed);
     let mut sim_now = 0.0;
+    let mut in_burst = false;
+    let mut switch_at: Option<f64> = None;
     let mut draw = |i: usize, sim_now: &mut f64, rng: &mut Rng| -> Job {
-        *sim_now += rng.exp(cfg.arrival_rate_hz);
+        match cfg.arrival {
+            ArrivalProcess::Poisson => {
+                *sim_now += rng.exp(cfg.arrival_rate_hz);
+            }
+            ArrivalProcess::Mmpp { burst_factor, mean_burst_s, mean_calm_s } => {
+                debug_assert!(mean_burst_s > 0.0 && mean_calm_s > 0.0 && burst_factor > 0.0);
+                // the process starts calm; the first dwell is drawn on
+                // first use so a Poisson run's stream stays untouched
+                let mut sw = *switch_at
+                    .get_or_insert_with(|| *sim_now + rng.exp(1.0 / mean_calm_s));
+                loop {
+                    let rate = if in_burst {
+                        cfg.arrival_rate_hz * burst_factor
+                    } else {
+                        cfg.arrival_rate_hz
+                    };
+                    let dt = rng.exp(rate);
+                    if *sim_now + dt <= sw {
+                        *sim_now += dt;
+                        break;
+                    }
+                    *sim_now = sw;
+                    in_burst = !in_burst;
+                    let dwell = if in_burst { mean_burst_s } else { mean_calm_s };
+                    sw = sw + rng.exp(1.0 / dwell);
+                    switch_at = Some(sw);
+                }
+            }
+        }
         let (ifm, label) = next_job(i, rng);
         Job {
             id: i,
@@ -610,11 +816,33 @@ pub(super) fn run_executor(
         });
     }
     let completed = traces.len();
-    debug_assert_eq!(completed + des.dropped, cfg.n_requests);
+    let shed = des.shed_queue + des.shed_deadline + des.shed_bucket;
+    debug_assert_eq!(completed + shed, cfg.n_requests);
+
+    // close each stage's depth integral at the horizon and bucket its
+    // event trace — virtual-plane data only, so byte-identical across
+    // exec-worker counts like every other metric
+    let horizon = des.horizon;
+    let queue_stats: Vec<QueueStats> = des
+        .qstats
+        .iter()
+        .map(|t| {
+            let area = t.area + t.depth as f64 * (horizon - t.last_t);
+            QueueStats {
+                max_depth: t.max,
+                mean_depth: if horizon > 0.0 { area / horizon } else { 0.0 },
+                sojourn: summarize(&t.sojourns),
+                depth_series: depth_series(&t.events, horizon, 16),
+            }
+        })
+        .collect();
 
     Ok(ServeMetrics {
         completed,
-        dropped: des.dropped,
+        shed,
+        shed_queue: des.shed_queue,
+        shed_deadline: des.shed_deadline,
+        shed_bucket: des.shed_bucket,
         wall_s,
         throughput_rps: if wall_s > 0.0 { completed as f64 / wall_s } else { 0.0 },
         sim_latency: summarize(&sim_lat),
@@ -625,6 +853,7 @@ pub(super) fn run_executor(
         quality: Quality::from_confusion(&conf),
         traces,
         proc_busy_s: des.timelines.into_busy_totals(),
+        queue_stats,
     })
 }
 
@@ -686,6 +915,7 @@ mod tests {
             batch_max,
             seed: 7,
             exec_workers: 1,
+            ..ServeConfig::default()
         }
     }
 
@@ -706,7 +936,7 @@ mod tests {
         })
         .unwrap();
         assert_eq!(m.completed, 6);
-        assert_eq!(m.dropped, 0);
+        assert_eq!(m.shed, 0);
         assert_eq!(m.term_hist, vec![6, 0]);
         for t in &m.traces {
             assert_eq!(t.sim_wait_s, 0.0, "no contention at 1e-9 req/s");
@@ -752,8 +982,9 @@ mod tests {
             (dummy(), rng.below(4) as i32)
         })
         .unwrap();
-        assert!(m.dropped > 0, "expected shed under burst");
-        assert_eq!(m.completed + m.dropped, 50, "shed + completed == offered");
+        assert!(m.shed > 0, "expected shed under burst");
+        assert_eq!(m.shed, m.shed_queue, "only the bounded queue sheds here");
+        assert_eq!(m.completed + m.shed, 50, "shed + completed == offered");
         // shed samples never reserve device time
         assert!((m.proc_busy_s[0] - m.completed as f64 * p.sim.stages[0].compute_s).abs() < 1e-12);
     }
@@ -808,7 +1039,7 @@ mod tests {
         };
         let (a, b) = (run(), run());
         assert_eq!(a.completed, b.completed);
-        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.shed, b.shed);
         assert_eq!(a.term_hist, b.term_hist);
         assert_eq!(a.proc_busy_s, b.proc_busy_s);
         let lat = |m: &ServeMetrics| m.traces.iter().map(|t| t.sim_latency_s).collect::<Vec<_>>();
@@ -838,11 +1069,11 @@ mod tests {
             .unwrap()
         };
         let base = run(1);
-        assert!(base.dropped > 0, "the fixture must exercise shedding");
+        assert!(base.shed > 0, "the fixture must exercise shedding");
         for w in [2, 8] {
             let m = run(w);
             assert_eq!(m.completed, base.completed, "workers {w}");
-            assert_eq!(m.dropped, base.dropped, "workers {w}");
+            assert_eq!(m.shed, base.shed, "workers {w}");
             assert_eq!(m.term_hist, base.term_hist, "workers {w}");
             let bits = |m: &ServeMetrics| {
                 m.traces
@@ -898,7 +1129,204 @@ mod tests {
                 (dummy(), rng.below(4) as i32)
             })
             .unwrap();
-            assert_eq!(m.completed + m.dropped, 16);
+            assert_eq!(m.completed + m.shed, 16);
         }
+    }
+
+    #[test]
+    fn deadline_admission_sheds_latecomers() {
+        let graph = BlockGraph::synthetic_resnet(4, 2);
+        let platform = presets::psoc6();
+        let p = plan(&graph, Mapping::chain(vec![2]), &platform);
+        let stages: Vec<Box<dyn StageExec>> =
+            vec![Box::new(ScriptExec { conf: 1.0 }), Box::new(ScriptExec { conf: 1.0 })];
+        // burst arrivals into an *unbounded* queue, but a deadline of
+        // 1.5x the unloaded stage-0 latency: the first request is
+        // uncontended and must be admitted (its prediction is exactly
+        // the unloaded latency); almost everything behind it predicts
+        // an overrun and is shed at admission, never reserving device
+        // time
+        let mut c = cfg(1e9, 50, 0, 1);
+        c.qos.deadline_s = p.sim.stages[0].cum_latency_s * 1.5;
+        let m = run_executor(stages, &p, &platform, 4, &c, |_, rng| {
+            (dummy(), rng.below(4) as i32)
+        })
+        .unwrap();
+        assert!(m.completed >= 1, "the uncontended head of the burst is always on time");
+        assert_eq!(m.traces.first().map(|t| t.id), Some(0));
+        assert!(m.shed_deadline > 0, "the backlog must overrun a 1.5x deadline");
+        assert_eq!(m.shed_queue, 0, "the queue is unbounded");
+        assert_eq!(m.shed_bucket, 0, "no token buckets configured");
+        assert_eq!(m.shed, m.shed_deadline);
+        assert_eq!(m.completed + m.shed, 50, "every request is accounted once");
+        // shed samples never touch the timeline
+        assert!((m.proc_busy_s[0] - m.completed as f64 * p.sim.stages[0].compute_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn priority_escalations_put_mid_pipeline_work_first() {
+        // psoc6 is exclusive-memory: both stages share ONE timeline, so
+        // the dispatch order between stage-0 arrivals and stage-1
+        // escalations is fully observable. Stage 0 always escalates;
+        // under a burst, plain FIFO serves every stage-0 sample (their
+        // tickets are all earlier) before any escalation, so sample 0
+        // finishes only after ~n stage-0 services. With priority on,
+        // its escalation jumps the line and it finishes after just one.
+        let graph = BlockGraph::synthetic_resnet(4, 2);
+        let platform = presets::psoc6();
+        let p = plan(&graph, Mapping::chain(vec![2]), &platform);
+        let n = 40;
+        let run = |priority: bool| {
+            let stages: Vec<Box<dyn StageExec>> =
+                vec![Box::new(ScriptExec { conf: 0.0 }), Box::new(ScriptExec { conf: 1.0 })];
+            let mut c = cfg(1e9, n, 0, 1);
+            c.qos.priority_escalations = priority;
+            run_executor(stages, &p, &platform, 4, &c, |_, rng| {
+                (dummy(), rng.below(4) as i32)
+            })
+            .unwrap()
+        };
+        let fifo = run(false);
+        let prio = run(true);
+        // priority only reorders — it never sheds and every sample
+        // still walks both stages
+        assert_eq!(fifo.completed, n);
+        assert_eq!(prio.completed, n);
+        assert_eq!(fifo.shed + prio.shed, 0);
+        assert_eq!(fifo.term_hist, prio.term_hist);
+        let first = |m: &ServeMetrics| m.traces[0].sim_latency_s;
+        assert!(
+            first(&prio) < first(&fifo),
+            "sample 0 must finish earlier under priority: {} vs {}",
+            first(&prio),
+            first(&fifo)
+        );
+    }
+
+    #[test]
+    fn token_buckets_admit_exactly_the_burst_capacity() {
+        let graph = BlockGraph::synthetic_resnet(4, 2);
+        let platform = presets::rk3588_cloud();
+        let p = plan(&graph, Mapping::chain(vec![2]), &platform);
+        let stages: Vec<Box<dyn StageExec>> =
+            vec![Box::new(ScriptExec { conf: 1.0 }), Box::new(ScriptExec { conf: 1.0 })];
+        // two tenants, one token each, zero refill: exactly requests 0
+        // (tenant 0) and 1 (tenant 1) are admitted, the other eight
+        // shed on empty buckets — exact accounting, independent of
+        // arrival timing
+        let mut c = cfg(1e9, 10, 0, 1);
+        c.qos.tenants = 2;
+        c.qos.bucket_burst = 1.0;
+        c.qos.bucket_rate_hz = 0.0;
+        let m = run_executor(stages, &p, &platform, 4, &c, |_, rng| {
+            (dummy(), rng.below(4) as i32)
+        })
+        .unwrap();
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.shed_bucket, 8);
+        assert_eq!((m.shed_queue, m.shed_deadline), (0, 0));
+        assert_eq!(m.shed, 8);
+        let ids: Vec<usize> = m.traces.iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![0, 1], "one token per tenant, spent by the first arrival of each");
+    }
+
+    #[test]
+    fn token_buckets_refill_on_virtual_time() {
+        let graph = BlockGraph::synthetic_resnet(4, 2);
+        let platform = presets::rk3588_cloud();
+        let p = plan(&graph, Mapping::chain(vec![2]), &platform);
+        let stages: Vec<Box<dyn StageExec>> =
+            vec![Box::new(ScriptExec { conf: 1.0 }), Box::new(ScriptExec { conf: 1.0 })];
+        // one token of burst but an enormous refill rate: even the
+        // smallest representable inter-arrival gap (exp() floors its
+        // uniform draw, so dt >= ~1e-17 s at 10 req/s) restores a full
+        // token before the next arrival — nothing ever sheds
+        let mut c = cfg(10.0, 20, 0, 1);
+        c.qos.tenants = 1;
+        c.qos.bucket_burst = 1.0;
+        c.qos.bucket_rate_hz = 1e18;
+        let m = run_executor(stages, &p, &platform, 4, &c, |_, rng| {
+            (dummy(), rng.below(4) as i32)
+        })
+        .unwrap();
+        assert_eq!(m.completed, 20);
+        assert_eq!(m.shed, 0);
+    }
+
+    #[test]
+    fn queue_telemetry_tracks_depth_and_sojourns() {
+        let graph = BlockGraph::synthetic_resnet(4, 2);
+        let platform = presets::rk3588_cloud();
+        let p = plan(&graph, Mapping::chain(vec![2]), &platform);
+        let stages: Vec<Box<dyn StageExec>> =
+            vec![Box::new(ScriptExec { conf: 1.0 }), Box::new(ScriptExec { conf: 1.0 })];
+        // a burst of 20 into an unbounded per-sample queue: the head
+        // dispatches instantly (sojourn 0), the tail stacks up behind
+        // millisecond-scale services, so the stage-0 queue visibly
+        // deepens and every admitted sample records one sojourn
+        let n = 20;
+        let m = run_executor(stages, &p, &platform, 4, &cfg(1e9, n, 0, 1), |_, rng| {
+            (dummy(), rng.below(4) as i32)
+        })
+        .unwrap();
+        assert_eq!(m.completed, n);
+        assert_eq!(m.queue_stats.len(), 2);
+        let q0 = &m.queue_stats[0];
+        assert_eq!(q0.sojourn.n, n, "one sojourn per dispatched sample");
+        assert_eq!(q0.sojourn.min, 0.0, "the uncontended head never waits");
+        assert!(q0.sojourn.max > 0.0, "the tail of the burst must wait");
+        assert!(q0.max_depth >= 2, "the burst must stack up behind the first service");
+        assert!(q0.mean_depth > 0.0);
+        assert_eq!(q0.depth_series.len(), 16);
+        assert_eq!(
+            q0.depth_series.iter().max().copied(),
+            Some(q0.max_depth),
+            "the bucketed series preserves the peak"
+        );
+        // conf 1.0 terminates everything at stage 0: stage 1 stays idle
+        let q1 = &m.queue_stats[1];
+        assert_eq!((q1.max_depth, q1.sojourn.n), (0, 0));
+        assert_eq!(q1.mean_depth, 0.0);
+    }
+
+    #[test]
+    fn disabled_qos_with_mmpp_still_accounts_exactly() {
+        // MMPP only reshapes arrival times; with no QoS and a roomy
+        // queue every request completes, and repeated runs are
+        // byte-identical (the modulation consumes the RNG
+        // deterministically)
+        let graph = BlockGraph::synthetic_resnet(4, 2);
+        let platform = presets::fog_cluster();
+        let p = plan(&graph, Mapping::chain(vec![1, 2, 3]), &platform);
+        let run = || {
+            let stages: Vec<Box<dyn StageExec>> = vec![
+                Box::new(ScriptExec { conf: 0.0 }),
+                Box::new(ScriptExec { conf: 0.0 }),
+                Box::new(ScriptExec { conf: 0.0 }),
+                Box::new(ScriptExec { conf: 1.0 }),
+            ];
+            let mut c = cfg(2_000.0, 200, 0, 1);
+            c.arrival = ArrivalProcess::Mmpp {
+                burst_factor: 8.0,
+                mean_burst_s: 0.002,
+                mean_calm_s: 0.01,
+            };
+            run_executor(stages, &p, &platform, 4, &c, |_, rng| {
+                (dummy(), rng.below(4) as i32)
+            })
+            .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.completed, 200);
+        assert_eq!(a.shed, 0);
+        assert_eq!(a.term_hist, b.term_hist);
+        let arr = |m: &ServeMetrics| {
+            m.traces.iter().map(|t| t.sim_arrival_s.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(arr(&a), arr(&b), "MMPP arrival stream is deterministic");
+        // arrival times are monotone in virtual time (inter-arrival
+        // gaps are positive; <= tolerates f64 rounding of a tiny gap)
+        let times: Vec<f64> = a.traces.iter().map(|t| t.sim_arrival_s).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
     }
 }

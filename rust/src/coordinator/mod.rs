@@ -42,6 +42,38 @@
 //!   wall-clock throughput scales with the cores the stage work can
 //!   use.
 //!
+//! On top of the bounded queues sits an **admission-control / QoS
+//! layer** ([`QosConfig`]), evaluated entirely inside the virtual-time
+//! plane at enqueue so every policy is a pure function of state the
+//! event loop already owns (and therefore byte-identical across
+//! `exec_workers` and `batch_max`):
+//!
+//! * **deadline-aware shedding** — predict a request's completion from
+//!   its stage timeline's busy-until clock, the queue backlog ahead of
+//!   it and the calibrated stage latencies; shed at enqueue when the
+//!   prediction overruns `deadline_s` past the request's arrival
+//!   (counted as `shed_deadline`, separate from queue-full sheds);
+//! * **per-tenant token buckets** — fresh arrivals hash to
+//!   `id % tenants`; each bucket refills at `bucket_rate_hz` tokens
+//!   per *virtual* second up to `bucket_burst` and an arrival without
+//!   a token is shed as `shed_bucket` (escalations never re-pay);
+//! * **priority classes** — with `priority_escalations` set,
+//!   mid-pipeline escalations outrank fresh arrivals when a timeline
+//!   picks its next stage to serve, tie-broken by enqueue ticket so
+//!   dispatch order stays deterministic;
+//! * **queue telemetry** — per-stage depth series on virtual time,
+//!   max/mean depth and sojourn-time summaries, surfaced as
+//!   [`QueueStats`] in [`ServeMetrics::queue_stats`].
+//!
+//! The accounting identity is exact:
+//! `completed + shed_queue + shed_deadline + shed_bucket ==
+//! n_requests`, and with every policy disabled (the [`QosConfig`]
+//! default) the executor's behavior — including its RNG streams — is
+//! bit-for-bit what it was without the layer. Arrivals are Poisson by
+//! default; [`ArrivalProcess::Mmpp`] switches the generator to a
+//! two-state Markov-modulated Poisson process (bursty traffic) while
+//! consuming the same generator RNG stream discipline.
+//!
 //! Three interchangeable stage backends ([`Backend`]):
 //! * [`serve`] — real PJRT compute through B=1 / batched artifacts
 //!   (needs exported artifacts and the `pjrt` feature; every dispatch
@@ -99,13 +131,16 @@ use des::run_executor;
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Poisson arrival rate, requests per second of *sim* time.
+    /// Arrival rate, requests per second of *sim* time. For
+    /// [`ArrivalProcess::Mmpp`] this is the *calm-state* rate; bursts
+    /// multiply it by the process's `burst_factor`.
     pub arrival_rate_hz: f64,
     pub n_requests: usize,
     /// Per-queue capacity (backpressure bound). An enqueue — fresh
     /// arrival or escalation — that finds its target queue full at
     /// that virtual instant is shed. `0` = unbounded (the scenario
-    /// layer's "roomy" convention: nothing can shed).
+    /// layer's "roomy" convention: nothing sheds on queue depth,
+    /// though QoS policies may still shed).
     pub queue_cap: usize,
     /// Micro-batch bound per dispatch (1 = strictly per-sample).
     pub batch_max: usize,
@@ -116,6 +151,12 @@ pub struct ServeConfig {
     /// sim-clock metric is byte-identical for every value — only the
     /// wall-clock throughput moves.
     pub exec_workers: usize,
+    /// Admission-control / QoS policies, all evaluated on virtual
+    /// time at enqueue. The default disables every policy and is
+    /// bit-for-bit equivalent to the pre-QoS executor.
+    pub qos: QosConfig,
+    /// Arrival-process shape (Poisson by default).
+    pub arrival: ArrivalProcess,
 }
 
 impl Default for ServeConfig {
@@ -127,8 +168,103 @@ impl Default for ServeConfig {
             batch_max: 8,
             seed: 0,
             exec_workers: 1,
+            qos: QosConfig::default(),
+            arrival: ArrivalProcess::Poisson,
         }
     }
+}
+
+/// Admission-control / QoS knobs of the discrete-event executor. Every
+/// policy is a pure function of virtual-time state (timeline clocks,
+/// queue depths, token counts), so enabling any of them keeps all
+/// sim-clock metrics byte-identical across `exec_workers` and
+/// `batch_max`. The default disables everything.
+#[derive(Debug, Clone, Copy)]
+pub struct QosConfig {
+    /// End-to-end deadline per request, seconds of sim time from its
+    /// arrival. At every enqueue (fresh arrival or escalation) the
+    /// executor predicts the request's completion — timeline
+    /// busy-until, plus the backlog ahead of it at calibrated
+    /// per-sample cost, plus its own transfer + compute — and sheds
+    /// it (`shed_deadline`) when the prediction overruns the
+    /// deadline. `f64::INFINITY` = off.
+    pub deadline_s: f64,
+    /// Escalations outrank fresh arrivals when a timeline picks its
+    /// next stage to serve (tie-broken by enqueue ticket, preserving
+    /// determinism). Off = strict global enqueue order.
+    pub priority_escalations: bool,
+    /// Number of tenants sharing the ingress. Fresh arrivals belong to
+    /// tenant `id % tenants` and must take one token from their
+    /// tenant's bucket; an empty bucket sheds the arrival
+    /// (`shed_bucket`). `0` = no token buckets.
+    pub tenants: usize,
+    /// Per-tenant token refill rate, tokens per *virtual* second.
+    pub bucket_rate_hz: f64,
+    /// Per-tenant bucket capacity; buckets start full.
+    pub bucket_burst: f64,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            deadline_s: f64::INFINITY,
+            priority_escalations: false,
+            tenants: 0,
+            bucket_rate_hz: 0.0,
+            bucket_burst: 0.0,
+        }
+    }
+}
+
+impl QosConfig {
+    /// True when some policy can actually shed traffic (deadline or
+    /// token buckets — priority only reorders, it never sheds).
+    pub fn can_shed(&self) -> bool {
+        self.deadline_s.is_finite() || self.tenants > 0
+    }
+
+    /// True when any policy is active at all.
+    pub fn enabled(&self) -> bool {
+        self.can_shed() || self.priority_escalations
+    }
+}
+
+/// Arrival-process shape for the request generator. Both variants
+/// consume the generator RNG deterministically, so a given
+/// `(seed, process)` pair always produces the same arrival times.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at `arrival_rate_hz`.
+    Poisson,
+    /// Two-state Markov-modulated Poisson process: exponential dwell
+    /// times alternate between a *calm* state arriving at
+    /// `arrival_rate_hz` and a *burst* state arriving at
+    /// `arrival_rate_hz * burst_factor`. The process starts calm.
+    Mmpp {
+        /// Burst-state rate multiplier (> 1 for storms).
+        burst_factor: f64,
+        /// Mean burst dwell, seconds of sim time.
+        mean_burst_s: f64,
+        /// Mean calm dwell, seconds of sim time.
+        mean_calm_s: f64,
+    },
+}
+
+/// Per-stage queue telemetry accumulated on the virtual clock.
+#[derive(Debug, Clone, Default)]
+pub struct QueueStats {
+    /// Largest depth the stage queue ever reached.
+    pub max_depth: usize,
+    /// Time-weighted mean depth over the serving horizon
+    /// (integral of depth over virtual time / horizon).
+    pub mean_depth: f64,
+    /// Sojourn time of samples dispatched from this queue: virtual
+    /// enqueue-ready to dispatch, seconds.
+    pub sojourn: Summary,
+    /// Depth sampled into fixed windows over the virtual horizon
+    /// (each bucket holds the max depth seen in its window) — a
+    /// coarse virtual-time series for reports.
+    pub depth_series: Vec<usize>,
 }
 
 /// Per-request record (wired from the job id through the pipeline).
@@ -158,10 +294,19 @@ pub struct RequestTrace {
 #[derive(Debug)]
 pub struct ServeMetrics {
     pub completed: usize,
-    /// Requests shed at a full bounded queue (arrival-side sheds plus
-    /// mid-pipeline escalation drops); `completed + dropped` always
+    /// Total requests shed for any reason — the sum of `shed_queue`,
+    /// `shed_deadline` and `shed_bucket`; `completed + shed` always
     /// equals the offered `n_requests`.
-    pub dropped: usize,
+    pub shed: usize,
+    /// Sheds at a full bounded queue (arrival-side plus mid-pipeline
+    /// escalation drops).
+    pub shed_queue: usize,
+    /// Sheds by the deadline-aware admission predictor
+    /// ([`QosConfig::deadline_s`]).
+    pub shed_deadline: usize,
+    /// Fresh arrivals rejected by an empty per-tenant token bucket
+    /// ([`QosConfig::tenants`]).
+    pub shed_bucket: usize,
     pub wall_s: f64,
     pub throughput_rps: f64,
     /// Sim-clock end-to-end latency (arrival -> verdict), seconds.
@@ -180,6 +325,9 @@ pub struct ServeMetrics {
     /// Total reserved device time per processor on the sim clock —
     /// which cores the escalation path actually exercised.
     pub proc_busy_s: Vec<f64>,
+    /// Per-stage queue-depth / sojourn telemetry on the virtual clock
+    /// (one entry per segment, in stage order).
+    pub queue_stats: Vec<QueueStats>,
 }
 
 /// One sample's outcome at a stage: the boundary IFM to escalate with,

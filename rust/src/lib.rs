@@ -29,16 +29,23 @@
 //! exec-plane workers (`ServeConfig::exec_workers`) while the virtual
 //! clock stays single-threaded and authoritative, and every sim-clock
 //! number is deterministic for every worker count (bit-identical to
-//! the analytic sim whenever a request never waits).
+//! the analytic sim whenever a request never waits). QoS admission
+//! control (`ServeConfig::qos`) runs in the same virtual-time plane:
+//! deadline-aware shedding at enqueue, per-tenant token buckets
+//! refilled on virtual time, and priority dispatch for mid-pipeline
+//! escalations — each shed carries exactly one reason
+//! (`shed_queue`/`shed_deadline`/`shed_bucket`) and queue
+//! depth/sojourn telemetry rides the same deterministic clock.
 //!
 //! The [`scenarios`] module closes the loop per use case: a registry
 //! of hermetic workload presets modeled on the paper's evaluation
 //! (`kws_psoc6`, `ecg_mcu`, `cifar_rk3588_cloud`, `stress_fog`,
-//! `stress_fog_shed` — see the preset table in its docs), each
-//! running search → mapping co-search → analytic sim → synthetic
-//! serving and emitting a bit-reproducible `ScenarioReport` (CLI:
-//! `repro scenarios [--smoke]`, aggregated into
-//! `BENCH_scenarios.json` and guarded by the CI regression gate).
+//! `stress_fog_shed`, `multi_tenant_fog`, `overload_storm` — see the
+//! preset table in its docs), each running search → mapping co-search
+//! → analytic sim → synthetic serving and emitting a bit-reproducible
+//! `ScenarioReport` (CLI: `repro scenarios [--smoke]`, aggregated
+//! into `BENCH_scenarios.json` and guarded by the CI regression
+//! gate).
 //!
 //! Serving executes one of three stage backends
 //! ([`coordinator::Backend`], CLI `--backend {synthetic,native,pjrt}`):

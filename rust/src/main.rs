@@ -10,13 +10,15 @@
 //!   scenarios                    hermetic end-to-end scenario matrix
 //!                                (kws_psoc6 / ecg_mcu /
 //!                                cifar_rk3588_cloud / stress_fog /
-//!                                stress_fog_shed),
+//!                                stress_fog_shed / multi_tenant_fog /
+//!                                overload_storm),
 //!                                writes BENCH_scenarios.json
 
 use anyhow::{anyhow, Result};
 
 use eenn_na::coordinator::{
-    serve, serve_native, serve_synthetic, Backend, NativeOptions, ServeConfig,
+    serve, serve_native, serve_synthetic, ArrivalProcess, Backend, NativeOptions, QosConfig,
+    ServeConfig,
 };
 use eenn_na::data::load_split;
 use eenn_na::eenn::EennSolution;
@@ -71,6 +73,14 @@ fn run() -> Result<()> {
                  \x20                              scalar; RUST_PALLAS_FORCE_SCALAR=1 forces\n\
                  \x20                              scalar), [--measured] for real-confidence\n\
                  \x20                              verdicts; synthetic: verdicts only\n\
+                 \x20             QoS admission (all on the deterministic virtual clock):\n\
+                 \x20             [--deadline S]   shed when predicted completion overruns\n\
+                 \x20                              arrival + S seconds (default: off)\n\
+                 \x20             [--priority]     escalations outrank fresh arrivals\n\
+                 \x20             [--tenants N --bucket-rate HZ --bucket-burst B]\n\
+                 \x20                              per-tenant token buckets on arrivals\n\
+                 \x20             [--burst-factor F --burst-s S --calm-s S]\n\
+                 \x20                              MMPP arrivals: bursts of F x rate\n\
                  repro report  table2|fig4 [--model NAME]\n\
                  repro scenarios [--smoke] [--only PRESET] [--workers N]\n\
                  \x20             [--exec-workers N] [--backend synthetic|native]\n\
@@ -80,7 +90,9 @@ fn run() -> Result<()> {
                  \x20               ecg_mcu             easy majority: 100% early termination\n\
                  \x20               cifar_rk3588_cloud  CIFAR-10 fog offload\n\
                  \x20               stress_fog          high-traffic four-tier fog serving\n\
-                 \x20               stress_fog_shed     bounded queues: deterministic shedding"
+                 \x20               stress_fog_shed     bounded queues: deterministic shedding\n\
+                 \x20               multi_tenant_fog    per-tenant token buckets + priority\n\
+                 \x20               overload_storm      MMPP storm tamed by deadline admission"
             );
             Ok(())
         }
@@ -207,6 +219,18 @@ fn serve_cmd(args: &Args) -> Result<()> {
     ))?;
     let platform = report::platform_for_task(&model.task);
     let backend = Backend::parse(&args.str("backend", "pjrt"))?;
+    // MMPP arrivals when any burst knob is given; --rate stays the calm
+    // rate and --burst-factor scales it inside bursts
+    let burst_factor = args.f64("burst-factor", 0.0);
+    let arrival = if burst_factor > 1.0 {
+        ArrivalProcess::Mmpp {
+            burst_factor,
+            mean_burst_s: args.f64("burst-s", 0.01),
+            mean_calm_s: args.f64("calm-s", 0.05),
+        }
+    } else {
+        ArrivalProcess::Poisson
+    };
     let cfg = ServeConfig {
         arrival_rate_hz: args.f64("rate", 10.0),
         n_requests: args.usize("n", 200),
@@ -216,6 +240,14 @@ fn serve_cmd(args: &Args) -> Result<()> {
         // 0 = one exec-plane worker per core; every sim-clock metric
         // is byte-identical to the inline (--exec-workers 1) run
         exec_workers: args.usize("exec-workers", 0),
+        arrival,
+        qos: QosConfig {
+            deadline_s: args.f64("deadline", f64::INFINITY),
+            priority_escalations: args.bool("priority"),
+            tenants: args.usize("tenants", 0),
+            bucket_rate_hz: args.f64("bucket-rate", 0.0),
+            bucket_burst: args.f64("bucket-burst", 0.0),
+        },
     };
     let m = match backend {
         Backend::Pjrt => {
@@ -251,10 +283,20 @@ fn serve_cmd(args: &Args) -> Result<()> {
         "completed {}/{} (shed {}), wall {:.2}s, {:.1} req/s",
         m.completed,
         cfg.n_requests,
-        m.dropped,
+        m.shed,
         m.wall_s,
         m.throughput_rps
     );
+    if m.shed > 0 {
+        println!(
+            "shed breakdown: queue {} deadline {} bucket {}",
+            m.shed_queue, m.shed_deadline, m.shed_bucket
+        );
+        println!(
+            "queue max depth per stage {:?}",
+            m.queue_stats.iter().map(|q| q.max_depth).collect::<Vec<_>>()
+        );
+    }
     println!(
         "sim latency  p50 {:.4}s p90 {:.4}s p99 {:.4}s (deterministic virtual clock)",
         m.sim_latency.p50, m.sim_latency.p90, m.sim_latency.p99

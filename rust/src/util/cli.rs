@@ -2,8 +2,21 @@
 //!
 //! Supports `--key value`, `--key=value`, bare `--flag`, and
 //! positional arguments, with typed getters and defaults.
+//!
+//! Boolean switches are ambiguous in this grammar: `--smoke out.json`
+//! could mean "smoke = out.json" or "smoke on, then a positional".
+//! [`BOOL_FLAGS`] resolves it — names listed there never consume a
+//! following token as their value (use `--flag=value` to force one);
+//! every other `--key value` pair keeps working unchanged.
 
 use std::collections::BTreeMap;
+
+/// Flags that are on/off switches across every `repro` subcommand and
+/// bench binary. A bare occurrence means `true` and the next token —
+/// even a non-flag — stays positional. `--flag=value` still overrides
+/// explicitly.
+pub const BOOL_FLAGS: &[&str] =
+    &["smoke", "verbose", "measured", "no-refine", "priority"];
 
 #[derive(Debug, Default)]
 pub struct Args {
@@ -19,6 +32,8 @@ impl Args {
             if let Some(rest) = a.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
+                } else if BOOL_FLAGS.contains(&rest) {
+                    out.flags.insert(rest.to_string(), "true".to_string());
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
@@ -128,11 +143,51 @@ mod tests {
 
     #[test]
     fn flag_before_positional() {
-        // a bare flag followed by a positional consumes it as a value;
-        // `--flag` followed by another --flag stays boolean
+        // an unknown bare flag followed by a positional consumes it as
+        // a value; `--flag` followed by another --flag stays boolean
         let a = parse("--x --y val pos");
         assert!(a.bool("x"));
         assert_eq!(a.str("y", ""), "val");
         assert_eq!(a.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn known_boolean_flags_never_eat_positionals() {
+        // the `repro scenarios --smoke out.json` footgun: --smoke is a
+        // switch, so the trailing path must stay positional and the
+        // flag must read as true (it used to become smoke="out.json")
+        let a = parse("scenarios --smoke out.json");
+        assert!(a.bool("smoke"));
+        assert_eq!(a.positional, vec!["scenarios", "out.json"]);
+
+        let a = parse("augment --verbose sol.json --no-refine x");
+        assert!(a.bool("verbose"));
+        assert!(a.bool("no-refine"));
+        assert_eq!(a.positional, vec!["augment", "sol.json", "x"]);
+
+        // --measured and --priority are switches too
+        let a = parse("serve --measured --priority 7");
+        assert!(a.bool("measured"));
+        assert!(a.bool("priority"));
+        assert_eq!(a.positional, vec!["serve", "7"]);
+    }
+
+    #[test]
+    fn bool_flag_equals_form_still_overrides() {
+        // the escape hatch: an explicit `=` assigns even a known switch
+        let a = parse("scenarios --smoke=false out.json");
+        assert!(!a.bool("smoke"));
+        assert_eq!(a.str("smoke", ""), "false");
+        assert_eq!(a.positional, vec!["scenarios", "out.json"]);
+    }
+
+    #[test]
+    fn value_flags_still_take_the_next_token() {
+        // the fix must not break ordinary `--key value` pairs
+        let a = parse("scenarios --only stress_fog --out BENCH.json --smoke");
+        assert_eq!(a.str("only", ""), "stress_fog");
+        assert_eq!(a.str("out", ""), "BENCH.json");
+        assert!(a.bool("smoke"));
+        assert_eq!(a.positional, vec!["scenarios"]);
     }
 }

@@ -46,10 +46,15 @@ impl Rng {
     }
 
     /// Uniform integer in [0, n).
+    ///
+    /// `f64()` is strictly below 1.0 (its largest value is
+    /// (2^53 − 1) / 2^53), so `f64() * n` truncates to at most
+    /// `n − 1` for every `n` representable here — no wrap-around
+    /// guard is needed and exactly one draw is consumed.
     #[inline]
     pub fn below(&mut self, n: usize) -> usize {
         debug_assert!(n > 0);
-        (self.f64() * n as f64) as usize % n
+        (self.f64() * n as f64) as usize
     }
 
     /// Uniform in [lo, hi).
@@ -76,8 +81,23 @@ impl Rng {
     }
 
     /// Sample an index from unnormalized weights.
+    ///
+    /// The weights need not sum to 1. An empty slice is a caller bug
+    /// (debug_assert; release builds return 0 instead of underflowing
+    /// `w.len() - 1`). A degenerate total — zero, negative, or
+    /// non-finite (a NaN weight poisons the sum) — carries no
+    /// preference information, so it falls back to a uniform draw over
+    /// the indices rather than silently returning index 0. Every path
+    /// consumes exactly one draw, keeping downstream streams aligned.
     pub fn weighted(&mut self, w: &[f64]) -> usize {
+        debug_assert!(!w.is_empty(), "weighted() needs at least one weight");
+        if w.is_empty() {
+            return 0;
+        }
         let total: f64 = w.iter().sum();
+        if !(total > 0.0) || !total.is_finite() {
+            return self.below(w.len());
+        }
         let mut x = self.f64() * total;
         for (i, &wi) in w.iter().enumerate() {
             x -= wi;
@@ -127,6 +147,64 @@ mod tests {
         for _ in 0..1000 {
             assert!(r.below(7) < 7);
         }
+    }
+
+    #[test]
+    fn below_extreme_state_stays_in_range() {
+        // the adversarial case for the truncation in `below`: a state
+        // whose next output is u64::MAX yields the largest f64() value,
+        // (2^53 − 1) / 2^53, and the product must still truncate below n
+        let mut r = Rng { s: [u64::MAX, 0] };
+        let x = r.f64();
+        assert_eq!(x, (((1u64 << 53) - 1) as f64) / (1u64 << 53) as f64);
+        let mut r = Rng { s: [u64::MAX, 0] };
+        assert_eq!(r.below(8), 7);
+        for n in [1usize, 2, 3, 1000, 1 << 20] {
+            let mut r = Rng { s: [u64::MAX, 0] };
+            assert!(r.below(n) < n, "n={n}");
+        }
+    }
+
+    #[test]
+    fn weighted_prefers_heavy_index() {
+        let mut r = Rng::seeded(11);
+        let mut hits = [0usize; 3];
+        for _ in 0..3000 {
+            hits[r.weighted(&[0.1, 0.8, 0.1])] += 1;
+        }
+        assert!(hits[1] > hits[0] + hits[2], "{hits:?}");
+    }
+
+    #[test]
+    fn weighted_degenerate_totals_fall_back_to_uniform() {
+        // all-zero and NaN totals carry no preference: uniform draw,
+        // always in range, never pinned to index 0
+        let mut r = Rng::seeded(13);
+        let mut seen_nonzero = false;
+        for _ in 0..200 {
+            let i = r.weighted(&[0.0, 0.0, 0.0, 0.0]);
+            assert!(i < 4);
+            seen_nonzero |= i != 0;
+        }
+        assert!(seen_nonzero, "all-zero weights must not pin the draw to index 0");
+        for _ in 0..200 {
+            let i = r.weighted(&[1.0, f64::NAN, 1.0]);
+            assert!(i < 3);
+        }
+        // degenerate paths still consume exactly one draw: streams of
+        // equal seeds stay aligned whatever branch fires
+        let mut a = Rng::seeded(17);
+        let mut b = Rng::seeded(17);
+        a.weighted(&[0.0, 0.0]);
+        b.weighted(&[0.5, 0.5]);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "at least one weight")]
+    fn weighted_empty_panics_in_debug() {
+        Rng::seeded(1).weighted(&[]);
     }
 
     #[test]

@@ -13,6 +13,16 @@ pub struct Summary {
     pub p99: f64,
 }
 
+/// Nearest-rank percentile over an already-sorted slice.
+///
+/// The convention the exact-gated CI baselines depend on: the index is
+/// `round(p/100 · (n − 1))` with ties rounded half away from zero (so
+/// `n = 2, p = 50` picks the *upper* element), and the returned value
+/// is always an element of the input — never an interpolation. `p = 0`
+/// returns the minimum, `p = 100` the maximum, and an empty slice
+/// returns NaN. Callers sort with `total_cmp`, which places NaN after
+/// every finite value, so NaN inputs surface in the top percentiles
+/// instead of poisoning the whole summary.
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;
@@ -21,6 +31,10 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[idx.min(sorted.len() - 1)]
 }
 
+/// Moments plus nearest-rank percentiles (see [`percentile`] for the
+/// exact convention). Sorting uses `total_cmp`, so NaN inputs land at
+/// the top of the order: `max` (and high percentiles) become NaN while
+/// `min` and the low percentiles stay finite.
 pub fn summarize(xs: &[f64]) -> Summary {
     if xs.is_empty() {
         return Summary::default();
@@ -82,6 +96,52 @@ mod tests {
     #[test]
     fn empty_is_default() {
         assert_eq!(summarize(&[]).n, 0);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn single_element_is_every_percentile() {
+        let s = summarize(&[4.25]);
+        assert_eq!(s.n, 1);
+        assert_eq!(s.mean, 4.25);
+        assert_eq!(s.std, 0.0);
+        for p in [0.0, 50.0, 90.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[4.25], p), 4.25, "p={p}");
+        }
+    }
+
+    #[test]
+    fn two_elements_round_half_up_at_the_median() {
+        // nearest-rank with round-half-away-from-zero: p=50 on n=2
+        // lands on index round(0.5) = 1, the upper element
+        let xs = [1.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 49.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 3.0);
+        let s = summarize(&xs);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!((s.min, s.max), (1.0, 3.0));
+    }
+
+    #[test]
+    fn extreme_percentiles_are_min_and_max() {
+        let xs: Vec<f64> = (1..=37).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 37.0);
+        // out-of-range p is clamped at the top, never out of bounds
+        assert_eq!(percentile(&xs, 250.0), 37.0);
+    }
+
+    #[test]
+    fn nan_inputs_surface_at_the_top_of_the_order() {
+        // total_cmp sorts NaN after every finite value: max goes NaN,
+        // min and the low percentiles stay finite
+        let s = summarize(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+        assert_eq!(s.p50, 2.0);
+        assert!(s.p99.is_nan());
     }
 
     #[test]

@@ -17,7 +17,9 @@
 //!   float rounding, loaded or idle — a reference copy of that replay
 //!   lives below as the regression oracle.
 
-use eenn_na::coordinator::{serve_synthetic, RequestTrace, ServeConfig, ServeMetrics};
+use eenn_na::coordinator::{
+    serve_synthetic, ArrivalProcess, QosConfig, RequestTrace, ServeConfig, ServeMetrics,
+};
 use eenn_na::eenn::EennSolution;
 use eenn_na::graph::BlockGraph;
 use eenn_na::hw::{presets, Platform};
@@ -130,6 +132,7 @@ fn random_mappings_match_analytic_sim_when_uncontended() {
             batch_max: 1,
             seed: 100 + case as u64,
             exec_workers: 1,
+            ..ServeConfig::default()
         };
         let m = serve_synthetic(&graph, &sol, platform, &cfg).unwrap();
         assert_eq!(m.completed, 40, "case {case}: roomy queues, no shed");
@@ -170,6 +173,7 @@ fn every_preset_solution_matches_analytic_sim_when_uncontended() {
             batch_max: 1,
             seed: sc.traffic.seed,
             exec_workers: 1,
+            ..ServeConfig::default()
         };
         let m = serve_synthetic(&sc.graph, sol, &sc.platform, &scfg).unwrap();
         assert_eq!(m.completed, 50, "{}: isolated serving must not shed", sc.name);
@@ -187,6 +191,7 @@ fn every_preset_solution_matches_analytic_sim_when_uncontended() {
             batch_max: 1,
             seed: sc.traffic.seed,
             exec_workers: 1,
+            ..ServeConfig::default()
         };
         let lm = serve_synthetic(&sc.graph, sol, &sc.platform, &loaded).unwrap();
         assert_fast_path(&lm, &sim, &format!("{} (loaded)", sc.name));
@@ -248,6 +253,7 @@ fn chain_mapping_reproduces_prerefactor_replay_under_load() {
         batch_max: 1,
         seed: 17,
         exec_workers: 1,
+        ..ServeConfig::default()
     };
     let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
     assert_eq!(m.completed, 800);
@@ -292,18 +298,129 @@ fn chain_mapping_reproduces_prerefactor_replay_under_load() {
     }
 }
 
+#[test]
+fn every_qos_policy_is_byte_identical_across_exec_worker_counts() {
+    // each admission policy — and all of them together under MMPP
+    // arrivals — is a pure function of virtual-time state, so every
+    // shed counter, queue-telemetry series and trace must stay
+    // bit-equal when the exec plane fans out, per-sample and batched
+    let graph = BlockGraph::synthetic_resnet(10, 4);
+    let platform = presets::fog_cluster();
+    let sol = synth_solution(vec![1, 2, 3], vec![0, 1, 2, 3], vec![0.4, 0.3, 0.2, 0.1]);
+    let sim = simulate(&graph, &sol.mapping(), &platform);
+    let worst_path_s = sim.stages.last().unwrap().cum_latency_s;
+    let policies: [(&str, QosConfig, ArrivalProcess); 4] = [
+        (
+            "deadline",
+            QosConfig { deadline_s: 2.0 * worst_path_s, ..QosConfig::default() },
+            ArrivalProcess::Poisson,
+        ),
+        (
+            "priority",
+            QosConfig { priority_escalations: true, ..QosConfig::default() },
+            ArrivalProcess::Poisson,
+        ),
+        (
+            "buckets",
+            QosConfig {
+                tenants: 3,
+                bucket_rate_hz: 400.0,
+                bucket_burst: 20.0,
+                ..QosConfig::default()
+            },
+            ArrivalProcess::Poisson,
+        ),
+        (
+            "all+mmpp",
+            QosConfig {
+                deadline_s: 2.0 * worst_path_s,
+                priority_escalations: true,
+                tenants: 3,
+                bucket_rate_hz: 400.0,
+                bucket_burst: 20.0,
+            },
+            ArrivalProcess::Mmpp {
+                burst_factor: 6.0,
+                mean_burst_s: 0.004,
+                mean_calm_s: 0.02,
+            },
+        ),
+    ];
+    for (name, qos, arrival) in policies {
+        for batch_max in [1usize, 4] {
+            let serve = |exec_workers: usize| {
+                let scfg = ServeConfig {
+                    arrival_rate_hz: 1_500.0,
+                    n_requests: 500,
+                    queue_cap: 0,
+                    batch_max,
+                    seed: 23,
+                    exec_workers,
+                    arrival,
+                    qos,
+                };
+                serve_synthetic(&graph, &sol, &platform, &scfg).unwrap()
+            };
+            let base = serve(1);
+            assert!(base.completed > 0, "{name}: nothing served");
+            assert_eq!(
+                base.completed + base.shed,
+                500,
+                "{name} (batch_max {batch_max}): offered = completed + shed"
+            );
+            assert_eq!(
+                base.shed,
+                base.shed_queue + base.shed_deadline + base.shed_bucket,
+                "{name} (batch_max {batch_max}): one reason per shed"
+            );
+            assert_eq!(base.shed_queue, 0, "{name}: unbounded queues never shed on depth");
+            let base_bits = metric_bits(&base);
+            for w in [2usize, 8] {
+                assert_eq!(
+                    metric_bits(&serve(w)),
+                    base_bits,
+                    "{name} (batch_max {batch_max}): exec_workers {w} diverged from inline"
+                );
+            }
+        }
+    }
+}
+
 /// One trace reduced to bits: (id, exit, procs, arrival, latency, wait).
 type TraceBits = (usize, usize, Vec<usize>, u64, u64, u64);
-/// (completed, shed, term_hist, busy bits, per-trace bits).
-type MetricBits = (usize, usize, Vec<usize>, Vec<u64>, Vec<TraceBits>);
+/// One stage's queue telemetry: (max depth, mean-depth bits, sojourn
+/// count, sojourn-p99 bits, depth series).
+type QueueBits = (usize, u64, usize, u64, Vec<usize>);
+/// (completed, shed breakdown, term_hist, busy bits, queue bits,
+/// per-trace bits).
+type MetricBits = (
+    usize,
+    (usize, usize, usize, usize),
+    Vec<usize>,
+    Vec<u64>,
+    Vec<QueueBits>,
+    Vec<TraceBits>,
+);
 
 /// Everything the virtual clock produces, reduced to comparable bits.
 fn metric_bits(m: &ServeMetrics) -> MetricBits {
     (
         m.completed,
-        m.dropped,
+        (m.shed, m.shed_queue, m.shed_deadline, m.shed_bucket),
         m.term_hist.clone(),
         m.proc_busy_s.iter().map(|b| b.to_bits()).collect(),
+        m.queue_stats
+            .iter()
+            .map(|q| {
+                (
+                    q.max_depth,
+                    q.mean_depth.to_bits(),
+                    q.sojourn.n,
+                    q.sojourn.p99.to_bits(),
+                    q.depth_series.clone(),
+                )
+            })
+            .collect(),
         m.traces
             .iter()
             .map(|t| {
@@ -339,6 +456,9 @@ fn every_preset_is_byte_identical_across_exec_worker_counts() {
         let out = na::augment_prepared(&bank, &sc.graph, sc.name, &sc.platform, &cfg, None)
             .expect("search must run hermetically");
         let sol = &out.solution;
+        let sim = simulate(&sc.graph, &sol.mapping(), &sc.platform);
+        let worst_path_s = sim.stages.last().map(|s| s.cum_latency_s).unwrap_or(0.0);
+        let qos = sc.resolve_qos(worst_path_s);
         for batch_max in [1usize, 4] {
             let serve = |exec_workers: usize| {
                 let scfg = ServeConfig {
@@ -348,13 +468,35 @@ fn every_preset_is_byte_identical_across_exec_worker_counts() {
                     batch_max,
                     seed: sc.traffic.seed,
                     exec_workers,
+                    arrival: sc.traffic.arrival,
+                    qos,
                 };
                 serve_synthetic(&sc.graph, sol, &sc.platform, &scfg).unwrap()
             };
             let base = serve(1);
             assert!(base.completed > 0, "{}: nothing served", sc.name);
+            assert_eq!(
+                base.completed + base.shed,
+                sc.traffic.smoke_n_requests,
+                "{}: offered = completed + shed, exactly",
+                sc.name
+            );
+            assert_eq!(
+                base.shed,
+                base.shed_queue + base.shed_deadline + base.shed_bucket,
+                "{}: every shed carries exactly one reason",
+                sc.name
+            );
             if sc.queue_cap > 0 {
-                assert!(base.dropped > 0, "{}: shed preset must shed", sc.name);
+                assert!(base.shed > 0, "{}: shed preset must shed", sc.name);
+            }
+            if sc.qos.tenants > 0 {
+                assert!(base.shed_bucket > 0, "{}: bucket preset must throttle", sc.name);
+            }
+            // deadline shedding depends on service pacing, so only the
+            // per-sample discipline is provably overloaded here
+            if sc.qos.deadline_s.is_finite() && batch_max == 1 {
+                assert!(base.shed_deadline > 0, "{}: storm preset must shed", sc.name);
             }
             let base_bits = metric_bits(&base);
             for w in [2usize, 8] {
@@ -392,6 +534,7 @@ fn native_backend_is_byte_identical_to_synthetic_when_calibrated() {
             batch_max,
             seed: 17,
             exec_workers: 1,
+            ..ServeConfig::default()
         };
         let base = metric_bits(&serve_synthetic(&graph, &sol, &platform, &cfg).unwrap());
         for exec_workers in [1usize, 2, 8] {
@@ -428,6 +571,7 @@ fn shared_timeline_reproduces_prerefactor_replay_when_idle() {
         batch_max: 1,
         seed: 3,
         exec_workers: 1,
+        ..ServeConfig::default()
     };
     let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
     assert_eq!(m.completed, 60);

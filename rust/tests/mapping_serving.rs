@@ -71,10 +71,11 @@ fn co_searched_mapping_serves_end_to_end() {
         batch_max: 4,
         seed: 11,
         exec_workers: 1,
+        ..ServeConfig::default()
     };
     let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
-    assert_eq!(m.completed + m.dropped, cfg.n_requests);
-    assert_eq!(m.dropped, 0, "roomy queues must not shed");
+    assert_eq!(m.completed + m.shed, cfg.n_requests);
+    assert_eq!(m.shed, 0, "roomy queues must not shed");
     assert_eq!(m.term_hist.len(), 2);
 
     // termination histogram consistent with the simulator's
@@ -117,9 +118,10 @@ fn shared_processor_serializes_both_segments() {
         batch_max: 1,
         seed: 5,
         exec_workers: 1,
+        ..ServeConfig::default()
     };
     let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
-    assert_eq!(m.completed + m.dropped, cfg.n_requests);
+    assert_eq!(m.completed + m.shed, cfg.n_requests);
     // both segments live on processor 1: all device time there,
     // none anywhere else
     assert!(m.proc_busy_s[1] > 0.0);
@@ -141,9 +143,10 @@ fn identity_chain_still_serves() {
         batch_max: 1,
         seed: 3,
         exec_workers: 1,
+        ..ServeConfig::default()
     };
     let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
-    assert_eq!(m.completed + m.dropped, cfg.n_requests);
+    assert_eq!(m.completed + m.shed, cfg.n_requests);
     let frac0 = m.term_hist[0] as f64 / m.completed as f64;
     assert!((frac0 - 0.7).abs() < 0.08, "{frac0}");
     // traces come back ordered by request id, one per completion
@@ -165,14 +168,15 @@ fn executor_backpressure_sheds_under_overload() {
         batch_max: 1,
         seed: 1,
         exec_workers: 1,
+        ..ServeConfig::default()
     };
     let m = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
-    assert!(m.dropped > 0, "expected drops under overload");
-    assert_eq!(m.completed + m.dropped, cfg.n_requests);
+    assert!(m.shed > 0, "expected drops under overload");
+    assert_eq!(m.completed + m.shed, cfg.n_requests);
     // shedding is part of the virtual clock now: the count, the
     // surviving ids and their latencies are all schedule-independent
     let again = serve_synthetic(&graph, &sol, &platform, &cfg).unwrap();
-    assert_eq!(m.dropped, again.dropped);
+    assert_eq!(m.shed, again.shed);
     assert_eq!(m.term_hist, again.term_hist);
     let ids = |m: &eenn_na::coordinator::ServeMetrics| {
         m.traces.iter().map(|t| t.id).collect::<Vec<_>>()
@@ -193,14 +197,15 @@ fn per_stage_micro_batching_preserves_accounting() {
             batch_max,
             seed: 9,
             exec_workers: 1,
+            ..ServeConfig::default()
         };
         serve_synthetic(&graph, &sol, &platform, &cfg).unwrap()
     };
     let single = run(1);
     let batched = run(8);
     // batching changes scheduling, never conservation
-    assert_eq!(single.completed + single.dropped, 600);
-    assert_eq!(batched.completed + batched.dropped, 600);
+    assert_eq!(single.completed + single.shed, 600);
+    assert_eq!(batched.completed + batched.shed, 600);
     assert_eq!(batched.traces.len(), batched.completed);
     // both routes served through the same processors
     assert!(batched.proc_busy_s[0] > 0.0 && batched.proc_busy_s[1] > 0.0);

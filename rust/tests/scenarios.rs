@@ -108,12 +108,46 @@ fn ecg_mcu_terminates_all_traffic_early() {
 fn reports_are_internally_consistent() {
     for sc in scenarios::all() {
         let bounded = sc.queue_cap > 0;
+        let can_shed = bounded || sc.qos.can_shed() || sc.deadline_slack > 0.0;
         let r = run(&sc, 2);
         assert_eq!(r.completed + r.shed, r.n_requests, "{}: shed accounting", sc.name);
+        assert_eq!(
+            r.shed,
+            r.shed_queue + r.shed_deadline + r.shed_bucket,
+            "{}: every shed carries exactly one reason",
+            sc.name
+        );
         if bounded {
             assert!(r.shed > 0, "{}: bounded queues under overload must shed", sc.name);
         } else {
-            assert_eq!(r.shed, 0, "{}: roomy queues must not shed", sc.name);
+            assert_eq!(
+                r.shed_queue, 0,
+                "{}: unbounded queues must never shed on depth",
+                sc.name
+            );
+        }
+        if !can_shed {
+            assert_eq!(r.shed, 0, "{}: roomy queues, no admission policy: no shed", sc.name);
+        }
+        assert_eq!(
+            r.queue_max_depth.len(),
+            r.exits.len() + 1,
+            "{}: one depth track per stage",
+            sc.name
+        );
+        for (s, series) in r.queue_depth_series.iter().enumerate() {
+            assert_eq!(series.len(), 16, "{}: stage {s} depth series buckets", sc.name);
+            assert_eq!(
+                series.iter().max().copied().unwrap_or(0),
+                r.queue_max_depth[s],
+                "{}: stage {s} series peak must equal max depth",
+                sc.name
+            );
+            assert!(
+                r.queue_mean_depth[s] <= r.queue_max_depth[s] as f64,
+                "{}: stage {s} mean depth above max",
+                sc.name
+            );
         }
         assert_eq!(
             r.term_hist.iter().sum::<usize>(),
@@ -133,9 +167,10 @@ fn reports_are_internally_consistent() {
         assert!(r.sim_latency_p50_s > 0.0, "{}", sc.name);
         assert!(r.accuracy > 0.0 && r.accuracy <= 1.0, "{}", sc.name);
         for (p, &busy) in r.proc_busy_s.iter().enumerate() {
-            if bounded {
+            if can_shed {
                 // escalations can execute a segment and then be shed at
-                // the next queue, so only the weaker direction holds:
+                // the next queue (full, or past deadline), so only the
+                // weaker direction holds:
                 // device time implies the processor was assigned
                 let assigned = r.assignment.contains(&p);
                 assert!(assigned || busy == 0.0, "{}: unassigned proc {p} busy {busy}", sc.name);
@@ -181,6 +216,35 @@ fn stress_fog_shed_sheds_deterministically() {
         a.deterministic_json().to_string(),
         b.deterministic_json().to_string(),
         "shed report must be byte-identical across worker counts"
+    );
+}
+
+#[test]
+fn qos_presets_shed_for_their_designed_reason_only() {
+    // multi_tenant_fog: the per-tenant token buckets are the only
+    // admission policy that can bind — queues are unbounded and the
+    // slack deadline is generous, so every shed is a bucket shed
+    let sc = scenarios::multi_tenant_fog();
+    let r = run(&sc, 2);
+    assert!(r.shed_bucket > 0, "token buckets must throttle the offered load");
+    assert_eq!(r.shed_queue, 0, "unbounded queues must never shed on depth");
+    assert_eq!(r.completed + r.shed, r.n_requests, "exact accounting");
+    assert_eq!(r.shed, r.shed_queue + r.shed_deadline + r.shed_bucket);
+    assert!(r.completed > 0, "admitted tenants must still be served");
+
+    // overload_storm: no buckets, unbounded queues — the MMPP storm is
+    // tamed purely by deadline-aware admission
+    let sc = scenarios::overload_storm();
+    let r = run(&sc, 2);
+    assert!(r.shed_deadline > 0, "the storm must overrun the deadline");
+    assert_eq!(r.shed_queue, 0, "unbounded queues must never shed on depth");
+    assert_eq!(r.shed_bucket, 0, "no tenants configured, no bucket sheds");
+    assert_eq!(r.shed, r.shed_deadline, "deadline is the only live policy");
+    assert_eq!(r.completed + r.shed, r.n_requests, "exact accounting");
+    assert!(r.completed > 0, "in-deadline requests must still complete");
+    assert!(
+        r.sojourn_p99_s[0] >= 0.0 && r.sojourn_p99_s[0].is_finite(),
+        "admitted storm traffic must leave stage-0 sojourn telemetry"
     );
 }
 

@@ -42,11 +42,12 @@ fn serves_all_requests_with_replay_quality() {
         batch_max: 4,
         seed: 3,
         exec_workers: 1,
+        ..ServeConfig::default()
     };
     let m = serve(&engine, &man, model, &ws, &sol, &platform, &test, &cfg).unwrap();
 
-    assert_eq!(m.completed + m.dropped, cfg.n_requests);
-    assert!(m.dropped < cfg.n_requests / 10, "dropped {}", m.dropped);
+    assert_eq!(m.completed + m.shed, cfg.n_requests);
+    assert!(m.shed < cfg.n_requests / 10, "shed {}", m.shed);
     assert!(m.quality.accuracy > 0.85, "acc {}", m.quality.accuracy);
     // termination histogram covers all classifiers and sums to completed
     assert_eq!(m.term_hist.iter().sum::<usize>(), m.completed);
@@ -75,10 +76,11 @@ fn backpressure_drops_when_overloaded() {
         batch_max: 1,
         seed: 1,
         exec_workers: 1,
+        ..ServeConfig::default()
     };
     let m = serve(&engine, &man, model, &ws, &sol, &platform, &test, &cfg).unwrap();
-    assert!(m.dropped > 0, "expected drops under overload");
-    assert_eq!(m.completed + m.dropped, cfg.n_requests);
+    assert!(m.shed > 0, "expected drops under overload");
+    assert_eq!(m.completed + m.shed, cfg.n_requests);
 }
 
 #[test]
@@ -100,6 +102,7 @@ fn queueing_increases_sim_latency_under_load() {
             batch_max: 1,
             seed: 9,
             exec_workers: 1,
+            ..ServeConfig::default()
         };
         serve(&engine, &man, model, &ws, &sol, &platform, &test, &cfg).unwrap()
     };
@@ -130,8 +133,9 @@ fn cloud_batching_on_distributed_platform() {
         batch_max: 8,
         seed: 2,
         exec_workers: 1,
+        ..ServeConfig::default()
     };
     let m = serve(&engine, &man, model, &ws, &sol, &platform, &test, &scfg).unwrap();
-    assert_eq!(m.completed + m.dropped, scfg.n_requests);
+    assert_eq!(m.completed + m.shed, scfg.n_requests);
     assert!(m.quality.accuracy > 0.5);
 }
