@@ -26,8 +26,12 @@ cargo run --release -p eenn-na --bin repro -- scenarios --smoke \
   --only multi_tenant_fog --out BENCH_scenarios_multi_tenant.json
 cargo run --release -p eenn-na --bin repro -- scenarios --smoke \
   --only overload_storm --out BENCH_scenarios_storm.json
+cargo run --release -p eenn-na --bin repro -- scenarios --smoke \
+  --only fleet_rebalance --out BENCH_scenarios_fleet.json
 
-for b in search_cost serving_throughput scenarios scenarios_shed scenarios_multi_tenant scenarios_storm hotpath hotpath_native; do
+# the bench list comes from xtask — the same GATED_BENCHES constant the
+# CI regression gate (`bench-check --all`) and arming step iterate
+for b in $(cargo run --release -p xtask -- bench-list); do
   if [ "$refresh" = 1 ] || [ ! -f "ci/baselines/BENCH_$b.json" ]; then
     cargo run --release -p xtask -- bench-update \
       --fresh "BENCH_$b.json" --baseline "ci/baselines/BENCH_$b.json"

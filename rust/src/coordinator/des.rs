@@ -102,6 +102,19 @@
 //! bit-exact zero, not an epsilon — so its reported latency equals
 //! `SimReport::stages[exit].cum_latency_s` bit-for-bit. That is the
 //! closed-form-fast-path contract `tests/des_equivalence.rs` asserts.
+//!
+//! # Fleet generalization
+//!
+//! The same event loop serves N **replicas** of the platform behind a
+//! [`super::router::Route`] front-end: every per-stage structure is
+//! indexed by the global stage `g = replica * nseg + seg`, timelines
+//! and busy ledgers are namespaced through [`crate::hw::FleetLayout`]
+//! (optionally sharing the cloud tier as one contended fleet-global
+//! timeline), and heap events merge by `(time, replica, seq)` so the
+//! schedule is independent of replica iteration order. The
+//! single-platform [`run_executor`] is the N=1 instantiation of the
+//! identical code path (replica 0 everywhere), which is why a
+//! 1-replica fleet is bit-for-bit the bare executor.
 
 use std::cmp::Ordering;
 use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
@@ -110,13 +123,14 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::hw::{Platform, Timelines};
+use crate::hw::{FleetLayout, Platform, Timelines};
 use crate::metrics::{Confusion, Quality};
 use crate::runtime::HostTensor;
 use crate::util::rng::Rng;
 use crate::util::stats::summarize;
 use crate::util::threadpool::{Lanes, ThreadPool};
 
+use super::router::{KeyDist, Route, SingleReplica};
 use super::{
     ArrivalProcess, QueueStats, RequestTrace, ServeConfig, ServeMetrics, StageCtx, StageExec,
     StageOutput, StagePlan,
@@ -146,7 +160,10 @@ struct Job {
 
 struct Done {
     id: usize,
+    /// Local exit segment (`g % nseg`).
     exit_index: usize,
+    /// Replica that served the request (always 0 single-platform).
+    replica: usize,
     label: i32,
     pred: i32,
     sim_arrival: f64,
@@ -164,11 +181,18 @@ enum EventKind {
     Commit { ticket: u64, slot: usize },
 }
 
-/// Heap entry, min-ordered by `(time, seq)`. `seq` is the global
-/// scheduling counter, so simultaneous events fire in the order they
-/// were scheduled — deterministic regardless of host scheduling.
+/// Heap entry, min-ordered by `(time, replica, seq)`. `replica`
+/// namespaces simultaneous events across the fleet (the shared cloud
+/// timeline uses the sentinel `replicas`, sorting after every
+/// replica), so the merged schedule is a property of the fleet, not
+/// of any replica iteration order; `seq` is the global scheduling
+/// counter, so simultaneous same-replica events fire in the order
+/// they were scheduled — deterministic regardless of host scheduling.
+/// Single-platform, `replica` is 0 everywhere and the order reduces
+/// to the historical `(time, seq)` bit-for-bit.
 struct Event {
     time: f64,
+    replica: usize,
     seq: u64,
     kind: EventKind,
 }
@@ -187,11 +211,12 @@ impl PartialOrd for Event {
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap pops the maximum: invert so the earliest
-        // (time, seq) comes out first. Times are finite by
+        // (time, replica, seq) comes out first. Times are finite by
         // construction (arrivals, reservation ends).
         other
             .time
             .total_cmp(&self.time)
+            .then(other.replica.cmp(&self.replica))
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -333,11 +358,26 @@ struct Dispatch {
 }
 
 struct Des<'a> {
+    /// Per-**local** segment contexts (replicas share the plan); a
+    /// global stage `g` resolves to `ctxs[g % nseg]`.
     ctxs: &'a [StageCtx],
-    /// Timeline index of each segment's processor.
+    /// Segments per replica; global stage `g = replica * nseg + seg`.
+    nseg: usize,
+    /// Fleet timeline/processor namespacing (1-replica single-mode).
+    layout: FleetLayout,
+    /// Timeline index of each global stage's processor.
     tl_of_seg: Vec<usize>,
-    /// Segments served by each timeline, ascending.
+    /// Global stages served by each timeline, ascending.
     stages_on: Vec<Vec<usize>>,
+    /// Replica that owns each timeline (sentinel `replicas` for the
+    /// shared cloud timeline): tags Wake events for the heap order.
+    replica_of_tl: Vec<usize>,
+    /// Replicas lost mid-trace: no routing, queues drained, in-flight
+    /// work rerouted at commit.
+    dead: Vec<bool>,
+    /// Requests that left the modeled fleet at an epoch flip (their
+    /// replica died while they were queued or in flight).
+    rerouted: usize,
     queues: Vec<VecDeque<Job>>,
     timelines: Timelines,
     heap: BinaryHeap<Event>,
@@ -369,19 +409,23 @@ struct Des<'a> {
 }
 
 impl Des<'_> {
-    fn schedule(&mut self, time: f64, kind: EventKind) {
+    fn schedule(&mut self, time: f64, replica: usize, kind: EventKind) {
         self.horizon = self.horizon.max(time);
-        self.heap.push(Event { time, seq: self.seq, kind });
+        self.heap.push(Event { time, replica, seq: self.seq, kind });
         self.seq += 1;
     }
 
     /// Admission in a fixed order — token bucket (fresh arrivals
     /// only), deadline prediction, bounded queue — each shedding under
     /// exactly one counter; an admitted sample is ticketed, queued,
-    /// and offered to its timeline at this virtual instant.
+    /// and offered to its timeline at this virtual instant. `seg` is
+    /// the **global** stage index; buckets stay fleet-global (one
+    /// front door per tenant) while deadline and queue admission are
+    /// per replica-stage.
     fn enqueue(&mut self, now: f64, seg: usize, mut job: Job) {
         self.horizon = self.horizon.max(now);
-        if seg == 0 && !self.buckets.is_empty() {
+        debug_assert!(!self.dead[seg / self.nseg], "enqueue onto a dead replica");
+        if seg % self.nseg == 0 && !self.buckets.is_empty() {
             let rate = self.bucket_rate;
             let burst = self.bucket_burst;
             let b = &mut self.buckets[job.id % self.buckets.len()];
@@ -399,7 +443,7 @@ impl Des<'_> {
             // own transfer + compute. Finishing the stage is necessary
             // for finishing the path, so an overrun here is a sure
             // deadline miss — shed now instead of wasting device time.
-            let StageCtx { compute_s, transfer_s, .. } = self.ctxs[seg];
+            let StageCtx { compute_s, transfer_s, .. } = self.ctxs[seg % self.nseg];
             let free = self.timelines.timeline_free_at(self.tl_of_seg[seg]).max(now);
             let predicted = free
                 + self.queues[seg].len() as f64 * compute_s
@@ -435,17 +479,19 @@ impl Des<'_> {
         // work already holding partial compute outranks fresh arrivals
         // — and the enqueue ticket still breaks ties within a class.
         let prio = self.prio_escalations;
+        let nseg = self.nseg;
         let Some(&seg) = self
             .stages_on[tl]
             .iter()
             .filter(|&&s| !self.queues[s].is_empty())
             .min_by_key(|&&s| {
-                let class = if prio && s > 0 { 0u8 } else { 1u8 };
+                let class = if prio && s % nseg > 0 { 0u8 } else { 1u8 };
                 (class, self.queues[s].front().map(|j| j.enq_seq))
             })
         else {
             return;
         };
+        let replica = seg / nseg;
         let StageCtx {
             proc,
             compute_s,
@@ -453,7 +499,8 @@ impl Des<'_> {
             batch_serial_frac,
             batch_max,
             ..
-        } = self.ctxs[seg];
+        } = self.ctxs[seg % nseg];
+        let gproc = self.layout.global_proc(replica, proc);
         let take = batch_max.min(self.queues[seg].len());
         let mut batch: Vec<Job> = self.queues[seg].drain(..take).collect();
         let k = batch.len();
@@ -474,7 +521,9 @@ impl Des<'_> {
         if k == 1 || batch_serial_frac >= 1.0 - 1e-9 {
             spans = batch
                 .iter()
-                .map(|j| self.timelines.reserve(proc, j.sim_ready + transfer_s, compute_s))
+                .map(|j| {
+                    self.timelines.reserve_on(tl, gproc, j.sim_ready + transfer_s, compute_s)
+                })
                 .collect();
             batch_stretch = 0.0;
         } else {
@@ -484,12 +533,13 @@ impl Des<'_> {
                 .fold(0.0f64, f64::max);
             let duration =
                 compute_s * ((1.0 - batch_serial_frac) + batch_serial_frac * k as f64);
-            spans = vec![self.timelines.reserve(proc, ready, duration); k];
+            spans = vec![self.timelines.reserve_on(tl, gproc, ready, duration); k];
             batch_stretch = duration - compute_s;
         }
         // the timeline frees at the batch's last end: keep draining
         let end_of_batch = spans.last().map(|s| s.1).unwrap_or(now);
-        self.schedule(end_of_batch, EventKind::Wake { timeline: tl });
+        let wake_replica = self.replica_of_tl[tl];
+        self.schedule(end_of_batch, wake_replica, EventKind::Wake { timeline: tl });
 
         // exec plane: move the payloads out of the queued jobs and
         // ship them to the stage backend (on a worker when pooled);
@@ -503,7 +553,7 @@ impl Des<'_> {
             .collect();
         self.exec.submit(seg, ticket, inputs);
         for (slot, &(_, end)) in spans.iter().enumerate() {
-            self.schedule(end, EventKind::Commit { ticket, slot });
+            self.schedule(end, replica, EventKind::Commit { ticket, slot });
         }
         self.inflight.insert(
             ticket,
@@ -551,7 +601,17 @@ impl Des<'_> {
         if emptied {
             self.inflight.remove(&ticket);
         }
-        let StageCtx { is_last, threshold, compute_s, transfer_s, .. } = self.ctxs[seg];
+        let replica = seg / self.nseg;
+        if self.dead[replica] {
+            // the sample was in flight (dispatched, not yet committed)
+            // when its replica died: the batch still drains on the
+            // exec plane above, but the request leaves the modeled
+            // fleet — rerouted, never completed or shed
+            self.rerouted += 1;
+            return;
+        }
+        let StageCtx { is_last, threshold, compute_s, transfer_s, .. } =
+            self.ctxs[seg % self.nseg];
 
         // latency split: `base_s` follows the analytic sim's
         // accumulation order; every schedule-induced delay lands in
@@ -566,7 +626,8 @@ impl Des<'_> {
         if terminate {
             self.done.push(Done {
                 id: job.id,
-                exit_index: seg,
+                exit_index: seg % self.nseg,
+                replica,
                 label: job.label,
                 pred: out.pred,
                 sim_arrival: job.sim_arrival,
@@ -608,19 +669,97 @@ impl Des<'_> {
         let (_, lowest) = failures.into_iter().next().expect("at least the observed failure");
         resume_unwind(lowest);
     }
+
+    /// Epoch flip: `replica` is gone. Drain its queues — every queued
+    /// sample is rerouted outside the modeled trace — and mark it dead
+    /// so in-flight dispatches reroute at commit instead of
+    /// terminating or escalating. A request is queued XOR in flight at
+    /// the flip instant, so nothing is ever double-counted; that is
+    /// the exact-conservation invariant
+    /// `completed + shed + rerouted == offered`.
+    fn fail_replica(&mut self, replica: usize, now: f64) {
+        if self.dead[replica] {
+            return;
+        }
+        self.dead[replica] = true;
+        self.horizon = self.horizon.max(now);
+        for seg in 0..self.nseg {
+            let g = replica * self.nseg + seg;
+            let drained = self.queues[g].len();
+            if drained > 0 {
+                self.queues[g].clear();
+                self.rerouted += drained;
+                self.qstats[g].note(now, 0);
+            }
+        }
+    }
 }
 
-/// Run the full event loop for `cfg.n_requests` Poisson arrivals.
+/// Fleet composition the generalized executor runs under.
+/// [`run_executor`] wires the 1-replica identity (identity router,
+/// uniform keys, no failure), making the single-platform path the
+/// same code, not a fork.
+pub(super) struct FleetSpec<'r> {
+    pub layout: FleetLayout,
+    /// Arrival front-end: shard key -> owning replica.
+    pub router: &'r mut dyn Route,
+    pub keys: KeyDist,
+    /// `(replica, offered-request index)`: the replica dies the
+    /// instant that request arrives (before it is routed).
+    pub fail: Option<(usize, usize)>,
+}
+
+/// Fleet-level outcome alongside the merged [`ServeMetrics`].
+pub(super) struct FleetOutcome {
+    pub rerouted: usize,
+    pub epoch: u64,
+    pub offered_per_replica: Vec<usize>,
+    pub completed_per_replica: Vec<usize>,
+}
+
+/// Run the full event loop for `cfg.n_requests` arrivals on a single
+/// platform — the 1-replica instantiation of [`run_fleet_executor`].
 pub(super) fn run_executor(
     stages: Vec<Box<dyn StageExec>>,
     plan: &StagePlan,
     platform: &Platform,
     num_classes: usize,
     cfg: &ServeConfig,
-    mut next_job: impl FnMut(usize, &mut Rng) -> (HostTensor, i32),
+    next_job: impl FnMut(usize, &mut Rng) -> (HostTensor, i32),
 ) -> Result<ServeMetrics> {
+    let mut router = SingleReplica;
+    let spec = FleetSpec {
+        layout: FleetLayout::single(platform),
+        router: &mut router,
+        keys: KeyDist::Uniform,
+        fail: None,
+    };
+    let (metrics, outcome) =
+        run_fleet_executor(stages, plan, platform, num_classes, cfg, spec, next_job)?;
+    debug_assert_eq!(outcome.rerouted, 0);
+    Ok(metrics)
+}
+
+/// Run the full event loop for `cfg.n_requests` arrivals routed over
+/// a replica fleet. Every deterministic metric is a function of
+/// `(cfg, plan, fleet)` only — byte-identical across runs, hosts,
+/// exec-worker counts and replica iteration order.
+pub(super) fn run_fleet_executor(
+    stages: Vec<Box<dyn StageExec>>,
+    plan: &StagePlan,
+    platform: &Platform,
+    num_classes: usize,
+    cfg: &ServeConfig,
+    mut fleet: FleetSpec,
+    mut next_job: impl FnMut(usize, &mut Rng) -> (HostTensor, i32),
+) -> Result<(ServeMetrics, FleetOutcome)> {
     let nseg = plan.mapping.n_segments();
-    assert_eq!(stages.len(), nseg, "one stage per segment");
+    let replicas = fleet.layout.replicas();
+    assert_eq!(stages.len(), replicas * nseg, "one stage per replica-segment");
+    if let Some((fr, _)) = fleet.fail {
+        assert!(fr < replicas, "failing replica out of range");
+        assert!(replicas > 1, "cannot fail the only replica");
+    }
     let batch_max = cfg.batch_max.max(1);
 
     let ctxs: Vec<StageCtx> = (0..nseg)
@@ -637,12 +776,18 @@ pub(super) fn run_executor(
             }
         })
         .collect();
-    let tl_of_seg: Vec<usize> =
-        ctxs.iter().map(|c| platform.timeline_of(c.proc)).collect();
-    let mut stages_on: Vec<Vec<usize>> = vec![Vec::new(); platform.n_timelines()];
+    // global stage g = replica * nseg + seg; timelines and busy
+    // ledgers resolve through the fleet layout (identity at N=1)
+    let tl_of_seg: Vec<usize> = (0..replicas * nseg)
+        .map(|g| fleet.layout.timeline_of(g / nseg, ctxs[g % nseg].proc))
+        .collect();
+    let mut stages_on: Vec<Vec<usize>> = vec![Vec::new(); fleet.layout.n_timelines()];
     for (seg, &tl) in tl_of_seg.iter().enumerate() {
         stages_on[tl].push(seg);
     }
+    let replica_of_tl: Vec<usize> = (0..fleet.layout.n_timelines())
+        .map(|tl| fleet.layout.replica_of_timeline(tl))
+        .collect();
 
     // exec plane: 0 = one worker per core, 1 = inline (pre-pipeline
     // discipline), N > 1 = a pool of N. Metrics are byte-identical
@@ -660,10 +805,15 @@ pub(super) fn run_executor(
 
     let mut des = Des {
         ctxs: &ctxs,
+        nseg,
+        layout: fleet.layout,
         tl_of_seg,
         stages_on,
-        queues: (0..nseg).map(|_| VecDeque::new()).collect(),
-        timelines: Timelines::new(platform),
+        replica_of_tl,
+        dead: vec![false; replicas],
+        rerouted: 0,
+        queues: (0..replicas * nseg).map(|_| VecDeque::new()).collect(),
+        timelines: Timelines::for_layout(&fleet.layout),
         heap: BinaryHeap::new(),
         seq: 0,
         enq_seq: 0,
@@ -682,7 +832,7 @@ pub(super) fn run_executor(
         ],
         bucket_rate: cfg.qos.bucket_rate_hz,
         bucket_burst: cfg.qos.bucket_burst,
-        qstats: (0..nseg).map(|_| QueueTrack::default()).collect(),
+        qstats: (0..replicas * nseg).map(|_| QueueTrack::default()).collect(),
         horizon: 0.0,
         done: Vec::with_capacity(cfg.n_requests),
         exec,
@@ -706,10 +856,14 @@ pub(super) fn run_executor(
     // switch is **discarded** and redrawn at the new state's rate from
     // the switch instant — valid precisely because the exponential is
     // memoryless, so the truncated draw carries no information.
+    // Diurnal shares the discard-and-redraw mechanism, but its phase
+    // boundaries are a fixed grid rather than random switch times.
     let mut rng = Rng::seeded(cfg.seed);
     let mut sim_now = 0.0;
     let mut in_burst = false;
     let mut switch_at: Option<f64> = None;
+    let mut di_phase = 0usize;
+    let mut di_next: Option<f64> = None;
     let mut draw = |i: usize, sim_now: &mut f64, rng: &mut Rng| -> Job {
         match cfg.arrival {
             ArrivalProcess::Poisson => {
@@ -739,6 +893,34 @@ pub(super) fn run_executor(
                     switch_at = Some(sw);
                 }
             }
+            ArrivalProcess::Diurnal { period_s, peak_factor, phases } => {
+                debug_assert!(period_s > 0.0 && peak_factor >= 1.0 && phases >= 1);
+                // piecewise-constant diurnal modulation: the period
+                // splits into `phases` equal slices whose rate follows
+                // a triangular (tent) profile, base at slice 0 up to
+                // base · peak_factor mid-period and back. The profile
+                // is exact f64 arithmetic on small integers — no libm
+                // transcendentals — so the stream is bit-identical
+                // across hosts. A draw that would cross the next slice
+                // boundary is discarded and redrawn at the new slice's
+                // rate from the boundary (memoryless, like MMPP above).
+                let phases = phases.max(1);
+                let slice = period_s / phases as f64;
+                let mut next = *di_next.get_or_insert(slice);
+                loop {
+                    let tri = 1.0 - ((2 * di_phase) as f64 / phases as f64 - 1.0).abs();
+                    let rate = cfg.arrival_rate_hz * (1.0 + (peak_factor - 1.0) * tri);
+                    let dt = rng.exp(rate);
+                    if *sim_now + dt <= next {
+                        *sim_now += dt;
+                        break;
+                    }
+                    *sim_now = next;
+                    di_phase = (di_phase + 1) % phases;
+                    next += slice;
+                    di_next = Some(next);
+                }
+            }
         }
         let (ifm, label) = next_job(i, rng);
         Job {
@@ -762,6 +944,7 @@ pub(super) fn run_executor(
     // ordering and accounting come from the virtual clock; backends do
     // their real work on the exec plane and rejoin at commit events.
     let wall0 = Instant::now();
+    let mut offered_per_replica = vec![0usize; replicas];
     loop {
         let arrival_due = match (&pending, des.heap.peek()) {
             (Some(j), Some(ev)) => j.sim_arrival <= ev.time,
@@ -772,7 +955,22 @@ pub(super) fn run_executor(
         if arrival_due {
             let job = pending.take().expect("arrival_due implies a pending job");
             let t = job.sim_arrival;
-            des.enqueue(t, 0, job);
+            // replica loss fires the instant its trigger request
+            // arrives, BEFORE that request is routed: the trigger and
+            // everything after it route under the bumped epoch
+            if let Some((fr, at)) = fleet.fail {
+                if job.id == at {
+                    des.fail_replica(fr, t);
+                    fleet.router.mark_failed(fr);
+                }
+            }
+            // the shard key is a pure function of the request id, and
+            // the router only ever returns alive replicas — routing
+            // consumes no RNG and perturbs no arrival or verdict draw
+            let r = fleet.router.route(fleet.keys.key_of(job.id));
+            debug_assert!(r < replicas && !des.dead[r], "routed to a dead replica");
+            offered_per_replica[r] += 1;
+            des.enqueue(t, r * nseg, job);
             if next_id < cfg.n_requests {
                 pending = Some(draw(next_id, &mut sim_now, &mut rng));
                 next_id += 1;
@@ -792,6 +990,7 @@ pub(super) fn run_executor(
     // --- collect ----------------------------------------------------------
     des.done.sort_by_key(|d| d.id);
     let mut term_hist = vec![0usize; nseg];
+    let mut completed_per_replica = vec![0usize; replicas];
     let mut sim_lat = Vec::with_capacity(des.done.len());
     let mut waits = Vec::with_capacity(des.done.len());
     let mut wall_lat = Vec::with_capacity(des.done.len());
@@ -800,6 +999,7 @@ pub(super) fn run_executor(
     let mut traces = Vec::with_capacity(des.done.len());
     for d in &des.done {
         term_hist[d.exit_index] += 1;
+        completed_per_replica[d.replica] += 1;
         sim_lat.push(d.sim_latency);
         waits.push(d.sim_wait);
         wall_lat.push(d.wall_latency);
@@ -817,7 +1017,11 @@ pub(super) fn run_executor(
     }
     let completed = traces.len();
     let shed = des.shed_queue + des.shed_deadline + des.shed_bucket;
-    debug_assert_eq!(completed + shed, cfg.n_requests);
+    debug_assert_eq!(
+        completed + shed + des.rerouted,
+        cfg.n_requests,
+        "exact request conservation: completed + shed + rerouted == offered"
+    );
 
     // close each stage's depth integral at the horizon and bucket its
     // event trace — virtual-plane data only, so byte-identical across
@@ -837,7 +1041,18 @@ pub(super) fn run_executor(
         })
         .collect();
 
-    Ok(ServeMetrics {
+    // aggregate fleet-global busy ledgers per base processor in
+    // ascending replica order — a fixed summation order, so the f64
+    // totals are as deterministic as their inputs (and the N=1 sum is
+    // the bare per-processor total bit-for-bit)
+    let nproc = platform.processors.len();
+    let mut proc_busy_s = vec![0.0f64; nproc];
+    for (gproc, busy) in des.timelines.into_busy_totals().into_iter().enumerate() {
+        proc_busy_s[gproc % nproc] += busy;
+    }
+
+    let rerouted = des.rerouted;
+    let metrics = ServeMetrics {
         completed,
         shed,
         shed_queue: des.shed_queue,
@@ -852,9 +1067,16 @@ pub(super) fn run_executor(
         term_hist,
         quality: Quality::from_confusion(&conf),
         traces,
-        proc_busy_s: des.timelines.into_busy_totals(),
+        proc_busy_s,
         queue_stats,
-    })
+    };
+    let outcome = FleetOutcome {
+        rerouted,
+        epoch: fleet.router.epoch(),
+        offered_per_replica,
+        completed_per_replica,
+    };
+    Ok((metrics, outcome))
 }
 
 #[cfg(test)]

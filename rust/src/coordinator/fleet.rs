@@ -1,0 +1,219 @@
+//! Fleet-scale sharded serving: N replicas of the single-platform
+//! stage-graph executor behind a deterministic consistent-hash
+//! router ([`super::router`]).
+//!
+//! Each replica runs the *unchanged* stage graph — same mapping,
+//! thresholds and calibrated latencies — on its own namespaced device
+//! timelines ([`crate::hw::FleetLayout`]). Arrivals are drawn from
+//! one fleet-global generator, keyed by a pure function of the
+//! request id ([`super::router::KeyDist`]), and routed to the replica
+//! that owns the key on the hash ring. With
+//! [`FleetConfig::shared_cloud`], the platform's last processor
+//! becomes a single fleet-global cloud timeline that cross-replica
+//! escalations contend on.
+//!
+//! # Determinism
+//!
+//! Every sim-clock number in [`FleetMetrics`] is a pure function of
+//! `(graph, solution, platform, ServeConfig, FleetConfig)`:
+//! byte-identical across runs, hosts, search/exec worker counts and
+//! replica iteration order (heap events merge by
+//! `(time, replica, seq)`; ring points are sorted). A 1-replica fleet
+//! reproduces [`super::serve_synthetic`]'s metrics **bit-for-bit** —
+//! the single-platform executor is the N=1 instantiation of the same
+//! code path, not a sibling implementation.
+//!
+//! # Rebalance and exact conservation
+//!
+//! [`FleetConfig::fail`] kills one replica mid-trace: the shard map
+//! bumps its epoch and rebuilds the ring from the survivors (only the
+//! dead replica's keys move), the dead replica's queues drain, and
+//! its in-flight dispatches are dropped at their commit instants.
+//! Every such request counts as **rerouted** — it leaves the modeled
+//! fleet (re-dispatched outside the trace) and is neither completed
+//! nor shed. Each offered request lands in exactly one bucket:
+//! `completed + shed + rerouted == offered`, asserted here and gated
+//! in CI via the `fleet_rebalance` scenario.
+
+use anyhow::{bail, Result};
+
+use crate::eenn::EennSolution;
+use crate::graph::BlockGraph;
+use crate::hw::{FleetLayout, Platform};
+use crate::runtime::HostTensor;
+
+use super::des::{run_fleet_executor, FleetSpec};
+use super::router::{KeyDist, ShardMap};
+use super::{plan_and_fleet_verdicts, ServeConfig, ServeMetrics, StageExec, SynthStageExec};
+
+/// Mid-trace replica loss for rebalance scenarios.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetFailure {
+    /// Replica that dies.
+    pub replica: usize,
+    /// Fraction of the offered trace after which it dies: the loss
+    /// fires the instant request `floor(at_frac * n_requests)`
+    /// arrives, before that request is routed — so the trigger scales
+    /// with smoke-sized fixtures automatically.
+    pub at_frac: f64,
+}
+
+impl FleetFailure {
+    fn at_index(&self, n_requests: usize) -> usize {
+        ((self.at_frac * n_requests as f64) as usize).min(n_requests.saturating_sub(1))
+    }
+}
+
+/// Fleet composition: replica count, hash-ring shape, shard-key
+/// distribution, optional cloud-tier sharing and optional mid-trace
+/// replica loss.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetConfig {
+    /// Replica count (>= 1); `1` reproduces the bare executor.
+    pub replicas: usize,
+    /// Virtual nodes per replica on the hash ring.
+    pub vnodes: usize,
+    /// Ring/key hash seed — independent of the traffic seed, so the
+    /// shard layout can vary without touching arrival or verdict RNG.
+    pub hash_seed: u64,
+    /// Serve every replica's last (cloud) tier on one fleet-global
+    /// timeline that cross-replica escalations contend on.
+    pub shared_cloud: bool,
+    pub keys: KeyDist,
+    pub fail: Option<FleetFailure>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            replicas: 1,
+            vnodes: 64,
+            hash_seed: 0xF1EE_7D00,
+            shared_cloud: false,
+            keys: KeyDist::Uniform,
+            fail: None,
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.replicas == 0 {
+            bail!("fleet needs at least one replica");
+        }
+        if self.vnodes == 0 {
+            bail!("fleet needs at least one vnode per replica");
+        }
+        if let Some(f) = self.fail {
+            if self.replicas == 1 {
+                bail!("cannot fail the only replica");
+            }
+            if f.replica >= self.replicas {
+                bail!(
+                    "failing replica {} out of range (replicas = {})",
+                    f.replica,
+                    self.replicas
+                );
+            }
+            if !(0.0..=1.0).contains(&f.at_frac) {
+                bail!("fail.at_frac must be in [0, 1], got {}", f.at_frac);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Fleet-level serving outcome: the merged [`ServeMetrics`] (shared
+/// shapes with the single-platform executor: `proc_busy_s` aggregates
+/// per base processor, `queue_stats` is replica-major per global
+/// stage) plus routing and rebalance accounting.
+///
+/// Exact conservation, checked by the executor and the scenario
+/// layer: `metrics.completed + metrics.shed + rerouted ==
+/// ServeConfig::n_requests`.
+#[derive(Debug)]
+pub struct FleetMetrics {
+    pub metrics: ServeMetrics,
+    /// Requests that left the modeled fleet at an epoch flip — their
+    /// replica died while they were queued or in flight, and they are
+    /// re-dispatched outside the modeled trace (see the module docs
+    /// for why this is a ceiling, not a retry model).
+    pub rerouted: usize,
+    /// Final shard-map epoch == number of rebalances that fired.
+    pub epoch: u64,
+    /// Arrivals routed to each replica (sums to `n_requests`).
+    pub offered_per_replica: Vec<usize>,
+    /// Completions served by each replica (sums to
+    /// `metrics.completed`).
+    pub completed_per_replica: Vec<usize>,
+}
+
+/// Serve `cfg.n_requests` arrivals through a consistent-hash-routed
+/// replica fleet with the calibrated synthetic backend — the fleet
+/// counterpart of [`super::serve_synthetic`]. Replica 0's verdict
+/// streams equal the single-platform streams bit-for-bit; higher
+/// replicas draw independent streams from replica-mixed stage seeds.
+pub fn serve_fleet_synthetic(
+    graph: &BlockGraph,
+    solution: &EennSolution,
+    platform: &Platform,
+    cfg: &ServeConfig,
+    fleet: &FleetConfig,
+) -> Result<FleetMetrics> {
+    fleet.validate()?;
+    let (plan, verdicts, num_classes) =
+        plan_and_fleet_verdicts(graph, solution, platform, cfg, fleet.replicas)?;
+    let stages: Vec<Box<dyn StageExec>> = verdicts
+        .into_iter()
+        .map(|verdicts| Box::new(SynthStageExec { verdicts }) as Box<dyn StageExec>)
+        .collect();
+    let mut router = ShardMap::new(fleet.replicas, fleet.vnodes, fleet.hash_seed);
+    let spec = FleetSpec {
+        layout: FleetLayout::fleet(platform, fleet.replicas, fleet.shared_cloud),
+        router: &mut router,
+        keys: fleet.keys,
+        fail: fleet.fail.map(|f| (f.replica, f.at_index(cfg.n_requests))),
+    };
+    let (metrics, out) =
+        run_fleet_executor(stages, &plan, platform, num_classes, cfg, spec, move |_, rng| {
+            (HostTensor::f32(&[1, 1], &[0.0]), rng.below(num_classes) as i32)
+        })?;
+    Ok(FleetMetrics {
+        metrics,
+        rerouted: out.rerouted,
+        epoch: out.epoch,
+        offered_per_replica: out.offered_per_replica,
+        completed_per_replica: out.completed_per_replica,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_config_validation_catches_bad_failures() {
+        assert!(FleetConfig::default().validate().is_ok());
+        let mut c = FleetConfig { replicas: 0, ..FleetConfig::default() };
+        assert!(c.validate().is_err());
+        c.replicas = 1;
+        c.fail = Some(FleetFailure { replica: 0, at_frac: 0.5 });
+        assert!(c.validate().is_err(), "cannot fail the only replica");
+        c.replicas = 3;
+        c.fail = Some(FleetFailure { replica: 3, at_frac: 0.5 });
+        assert!(c.validate().is_err(), "replica out of range");
+        c.fail = Some(FleetFailure { replica: 1, at_frac: 1.5 });
+        assert!(c.validate().is_err(), "at_frac out of range");
+        c.fail = Some(FleetFailure { replica: 1, at_frac: 0.5 });
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn failure_index_scales_with_the_trace() {
+        let f = FleetFailure { replica: 1, at_frac: 0.5 };
+        assert_eq!(f.at_index(600), 300);
+        assert_eq!(f.at_index(6000), 3000);
+        let late = FleetFailure { replica: 1, at_frac: 1.0 };
+        assert_eq!(late.at_index(600), 599, "clamped inside the trace");
+    }
+}

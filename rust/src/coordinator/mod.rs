@@ -110,8 +110,16 @@
 //! separately as `sim_wait_s`); under load it generalizes the closed
 //! form with queueing, batching and backpressure (equivalence
 //! asserted by `tests/des_equivalence.rs`).
+//!
+//! The fleet layer ([`fleet`] + [`router`]) scales the same executor
+//! to N sharded replicas behind a deterministic consistent-hash
+//! router, with optional cloud-tier sharing and epoch-versioned
+//! rebalance — see those modules for the routing and exact-request-
+//! conservation contracts.
 
 mod des;
+pub mod fleet;
+pub mod router;
 
 use anyhow::{anyhow, Result};
 
@@ -128,6 +136,9 @@ use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
 use des::run_executor;
+
+pub use fleet::{serve_fleet_synthetic, FleetConfig, FleetFailure, FleetMetrics};
+pub use router::KeyDist;
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -229,8 +240,8 @@ impl QosConfig {
     }
 }
 
-/// Arrival-process shape for the request generator. Both variants
-/// consume the generator RNG deterministically, so a given
+/// Arrival-process shape for the request generator. Every variant
+/// consumes the generator RNG deterministically, so a given
 /// `(seed, process)` pair always produces the same arrival times.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ArrivalProcess {
@@ -247,6 +258,21 @@ pub enum ArrivalProcess {
         mean_burst_s: f64,
         /// Mean calm dwell, seconds of sim time.
         mean_calm_s: f64,
+    },
+    /// Deterministically modulated Poisson process on a diurnal load
+    /// curve: each period splits into `phases` equal slices whose
+    /// rate follows a triangular profile from `arrival_rate_hz`
+    /// (period start) up to `arrival_rate_hz * peak_factor`
+    /// (mid-period) and back. The profile is computed with exact f64
+    /// arithmetic on small integers — no transcendentals — so the
+    /// arrival stream is bit-identical across hosts.
+    Diurnal {
+        /// Length of one full day-night cycle, seconds of sim time.
+        period_s: f64,
+        /// Peak-rate multiplier at mid-period (>= 1).
+        peak_factor: f64,
+        /// Piecewise-constant slices per period.
+        phases: usize,
     },
 }
 
@@ -484,7 +510,27 @@ impl VerdictModel {
         cfg: &ServeConfig,
         num_classes: usize,
     ) -> VerdictModel {
-        let stage_seed = cfg.seed ^ (0x5eed_0000 + seg as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        Self::for_replica_stage(0, seg, p_term, solution, cfg, num_classes)
+    }
+
+    /// Replica-aware seeding for the fleet: replica 0 keeps the
+    /// single-platform stage stream **bit-for-bit** (the 1-replica
+    /// fleet == bare executor contract hangs on this), while higher
+    /// replicas mix the replica index into the stage seed so their
+    /// verdict streams are independent.
+    fn for_replica_stage(
+        replica: usize,
+        seg: usize,
+        p_term: f64,
+        solution: &EennSolution,
+        cfg: &ServeConfig,
+        num_classes: usize,
+    ) -> VerdictModel {
+        let mut stage_seed =
+            cfg.seed ^ (0x5eed_0000 + seg as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        if replica > 0 {
+            stage_seed ^= (0xF1EE_7000 + replica as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        }
         VerdictModel {
             rng: Rng::seeded(stage_seed),
             p_term,
@@ -687,6 +733,21 @@ fn plan_and_verdicts(
     platform: &Platform,
     cfg: &ServeConfig,
 ) -> Result<(StagePlan, Vec<VerdictModel>, usize)> {
+    plan_and_fleet_verdicts(graph, solution, platform, cfg, 1)
+}
+
+/// Fleet-shaped variant of [`plan_and_verdicts`]: one [`StagePlan`]
+/// (replicas share the solution and its calibration) plus a
+/// **replica-major** verdict-model vector, `replicas * nseg` long —
+/// index `replica * nseg + seg`, matching the executor's global stage
+/// index. `replicas == 1` is exactly the single-platform front half.
+fn plan_and_fleet_verdicts(
+    graph: &BlockGraph,
+    solution: &EennSolution,
+    platform: &Platform,
+    cfg: &ServeConfig,
+    replicas: usize,
+) -> Result<(StagePlan, Vec<VerdictModel>, usize)> {
     platform.validate()?;
     let mapping = solution.mapping();
     mapping.validate(platform)?;
@@ -701,12 +762,22 @@ fn plan_and_verdicts(
     } else {
         vec![1.0 / nseg as f64; nseg]
     };
-    let mut verdicts = Vec::with_capacity(nseg);
-    let mut remaining = 1.0f64;
-    for (seg, &rate) in rates.iter().enumerate() {
-        let p_term = if remaining > 1e-12 { (rate / remaining).clamp(0.0, 1.0) } else { 1.0 };
-        remaining -= rate;
-        verdicts.push(VerdictModel::for_stage(seg, p_term, solution, cfg, num_classes));
+    let mut verdicts = Vec::with_capacity(replicas * nseg);
+    for replica in 0..replicas {
+        let mut remaining = 1.0f64;
+        for (seg, &rate) in rates.iter().enumerate() {
+            let p_term =
+                if remaining > 1e-12 { (rate / remaining).clamp(0.0, 1.0) } else { 1.0 };
+            remaining -= rate;
+            verdicts.push(VerdictModel::for_replica_stage(
+                replica,
+                seg,
+                p_term,
+                solution,
+                cfg,
+                num_classes,
+            ));
+        }
     }
 
     let thresholds: Vec<Option<f64>> = (0..nseg)

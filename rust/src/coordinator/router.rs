@@ -1,0 +1,245 @@
+//! Deterministic consistent-hash request routing for the fleet layer.
+//!
+//! A [`HashRing`] places `vnodes` pseudo-random points per replica on
+//! the `u64` circle and routes each key to the first point clockwise
+//! of the key's hash. [`ShardMap`] layers epoch-versioned liveness on
+//! top: removing a replica bumps the epoch and rebuilds the ring from
+//! the survivors, so only keys owned by the dead replica move
+//! (consistent hashing's minimal-movement property — verified by a
+//! unit test below, not assumed).
+//!
+//! Everything here is pure integer arithmetic on fixed seeds:
+//! identical across runs, hosts, worker counts and — because ring
+//! points are sorted — replica *insertion order*. The [`Route`] trait
+//! is the executor's extracted arrival front-end; the single-platform
+//! executor wires the identity [`SingleReplica`] router and is
+//! bit-for-bit unchanged.
+
+/// SplitMix64 finalizer: a bijective, host-independent `u64` mixer
+/// (the same construction `util::rng::Rng::seeded` uses to expand
+/// seeds). Bijectivity means distinct inputs never collide.
+pub fn hash64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The executor's arrival front-end: maps a shard key to the replica
+/// that owns it under the current (epoch-versioned) shard map.
+pub trait Route {
+    /// Replica that owns `key` under the current shard map. Must only
+    /// ever return an alive replica.
+    fn route(&mut self, key: u64) -> usize;
+
+    /// Current shard-map epoch; bumped on every rebalance.
+    fn epoch(&self) -> u64 {
+        0
+    }
+
+    /// Remove a replica from the map, rebuilding ownership so no
+    /// future key routes to it. Idempotent.
+    fn mark_failed(&mut self, _replica: usize) {}
+}
+
+/// Identity router for a 1-replica fleet: every key maps to replica
+/// 0, so the fleet code path degenerates to the single-platform
+/// executor without a behavioural fork.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct SingleReplica;
+
+impl Route for SingleReplica {
+    fn route(&mut self, _key: u64) -> usize {
+        0
+    }
+}
+
+/// Consistent-hash ring: sorted `(point, replica)` pairs on the
+/// `u64` circle. Sorting makes the ring a pure function of the
+/// replica *set* — permuting construction order changes nothing.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    points: Vec<(u64, usize)>,
+    hash_seed: u64,
+}
+
+impl HashRing {
+    /// Place `vnodes` points for every replica in `replicas`.
+    pub fn build(
+        replicas: impl IntoIterator<Item = usize>,
+        vnodes: usize,
+        hash_seed: u64,
+    ) -> HashRing {
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::new();
+        for r in replicas {
+            for v in 0..vnodes {
+                let point = hash64(hash_seed ^ hash64(((r as u64) << 20) | v as u64));
+                points.push((point, r));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points, hash_seed }
+    }
+
+    /// Owner of `key`: the first ring point at or clockwise of the
+    /// key's hash, wrapping past the top of the circle.
+    pub fn route(&self, key: u64) -> usize {
+        assert!(!self.points.is_empty(), "routing over an empty ring");
+        let h = hash64(self.hash_seed ^ hash64(key));
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        let i = if i == self.points.len() { 0 } else { i };
+        self.points[i].1
+    }
+}
+
+/// Epoch-versioned shard map over a consistent-hash ring. This is
+/// the fleet's default router: epoch 0 covers all replicas; every
+/// [`Route::mark_failed`] bumps the epoch and rebuilds the ring from
+/// the survivors.
+#[derive(Debug, Clone)]
+pub struct ShardMap {
+    epoch: u64,
+    alive: Vec<bool>,
+    vnodes: usize,
+    hash_seed: u64,
+    ring: HashRing,
+}
+
+impl ShardMap {
+    pub fn new(replicas: usize, vnodes: usize, hash_seed: u64) -> ShardMap {
+        assert!(replicas >= 1, "a shard map needs at least one replica");
+        let ring = HashRing::build(0..replicas, vnodes, hash_seed);
+        ShardMap { epoch: 0, alive: vec![true; replicas], vnodes, hash_seed, ring }
+    }
+
+    pub fn n_alive(&self) -> usize {
+        self.alive.iter().filter(|a| **a).count()
+    }
+
+    pub fn is_alive(&self, replica: usize) -> bool {
+        self.alive[replica]
+    }
+}
+
+impl Route for ShardMap {
+    fn route(&mut self, key: u64) -> usize {
+        self.ring.route(key)
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn mark_failed(&mut self, replica: usize) {
+        if !self.alive[replica] {
+            return;
+        }
+        self.alive[replica] = false;
+        assert!(self.alive.iter().any(|&a| a), "cannot fail the last alive replica");
+        self.epoch += 1;
+        let survivors: Vec<usize> = (0..self.alive.len()).filter(|&r| self.alive[r]).collect();
+        self.ring = HashRing::build(survivors, self.vnodes, self.hash_seed);
+    }
+}
+
+/// Shard-key distribution for synthetic fleet traffic. Keys are a
+/// **pure function of the request id** — no RNG stream is consumed,
+/// so switching distributions cannot perturb arrival times, payloads
+/// or verdict draws.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KeyDist {
+    /// Every request carries its own key (`key = id`): load spreads
+    /// across the ring in proportion to replica ownership.
+    Uniform,
+    /// `hot_frac` of requests collapse onto `hot_keys` distinct keys,
+    /// concentrating that share of the load on at most `hot_keys`
+    /// shards while the remainder stays uniform.
+    Hotspot { hot_frac: f64, hot_keys: u64 },
+}
+
+impl KeyDist {
+    pub fn key_of(&self, id: usize) -> u64 {
+        match *self {
+            KeyDist::Uniform => id as u64,
+            KeyDist::Hotspot { hot_frac, hot_keys } => {
+                let hot_keys = hot_keys.max(1);
+                let h = hash64(0xD15C_0000 ^ id as u64);
+                // top 53 bits -> [0,1): exact dyadic arithmetic
+                let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+                if u < hot_frac {
+                    hash64(h) % hot_keys
+                } else {
+                    // cold keys start past the hot range, never aliasing it
+                    hot_keys + id as u64
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_routing_is_deterministic_and_covers_every_replica() {
+        let mut a = ShardMap::new(4, 64, 0xBEEF);
+        let mut b = ShardMap::new(4, 64, 0xBEEF);
+        let ra: Vec<usize> = (0..256u64).map(|k| a.route(k)).collect();
+        let rb: Vec<usize> = (0..256u64).map(|k| b.route(k)).collect();
+        assert_eq!(ra, rb);
+        assert!(ra.iter().all(|&r| r < 4));
+        for r in 0..4 {
+            assert!(ra.contains(&r), "replica {r} owns no keys at 64 vnodes");
+        }
+    }
+
+    #[test]
+    fn ring_is_independent_of_insertion_order() {
+        let fwd = HashRing::build(0..4, 32, 7);
+        let rev = HashRing::build((0..4).rev(), 32, 7);
+        for k in 0..512u64 {
+            assert_eq!(fwd.route(k), rev.route(k));
+        }
+    }
+
+    #[test]
+    fn failure_moves_only_the_dead_replicas_keys() {
+        let mut m = ShardMap::new(4, 64, 42);
+        let before: Vec<usize> = (0..1024u64).map(|k| m.route(k)).collect();
+        m.mark_failed(2);
+        assert_eq!(m.epoch(), 1);
+        assert_eq!(m.n_alive(), 3);
+        assert!(!m.is_alive(2));
+        let after: Vec<usize> = (0..1024u64).map(|k| m.route(k)).collect();
+        for (k, (&b, &a)) in before.iter().zip(&after).enumerate() {
+            if b == 2 {
+                assert_ne!(a, 2, "key {k} still routed to the dead replica");
+            } else {
+                assert_eq!(b, a, "key {k} moved off a surviving replica");
+            }
+        }
+        // idempotent: a second failure report changes nothing
+        m.mark_failed(2);
+        assert_eq!(m.epoch(), 1);
+    }
+
+    #[test]
+    fn hotspot_keys_are_pure_and_concentrated() {
+        let d = KeyDist::Hotspot { hot_frac: 0.7, hot_keys: 2 };
+        let keys: Vec<u64> = (0..1000).map(|id| d.key_of(id)).collect();
+        let again: Vec<u64> = (0..1000).map(|id| d.key_of(id)).collect();
+        assert_eq!(keys, again);
+        let hot = keys.iter().filter(|&&k| k < 2).count();
+        assert!((550..850).contains(&hot), "hot share {hot}/1000 misses the 70% band");
+        assert_eq!(KeyDist::Uniform.key_of(17), 17);
+    }
+
+    #[test]
+    fn single_replica_router_is_the_identity() {
+        let mut r = SingleReplica;
+        assert_eq!(r.route(0xDEAD), 0);
+        assert_eq!(r.epoch(), 0);
+    }
+}

@@ -115,6 +115,105 @@ impl Platform {
     }
 }
 
+/// Timeline/processor namespacing for a replica **fleet**: N copies
+/// of one platform, each with its own device timelines, optionally
+/// sharing the platform's *last* processor (the cloud tier) as one
+/// fleet-global, contended device.
+///
+/// The layout is pure index arithmetic, chosen so that a 1-replica
+/// fleet reproduces the single-platform numbering exactly (with or
+/// without `shared_cloud` — at N=1 both formulas collapse to
+/// `timeline == proc`), which is what lets the fleet executor be
+/// bit-identical to the bare executor at N=1.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetLayout {
+    nproc: usize,
+    replicas: usize,
+    exclusive: bool,
+    shared_cloud: bool,
+}
+
+impl FleetLayout {
+    /// The degenerate 1-replica layout of the single-platform executor.
+    pub fn single(platform: &Platform) -> FleetLayout {
+        Self::fleet(platform, 1, false)
+    }
+
+    pub fn fleet(platform: &Platform, replicas: usize, shared_cloud: bool) -> FleetLayout {
+        assert!(replicas >= 1, "a fleet needs at least one replica");
+        let nproc = platform.processors.len();
+        // a shared cloud tier needs a distinct local tier to exist and
+        // is meaningless when exclusive memory collapses every proc
+        // onto one timeline already
+        let shared_cloud = shared_cloud && nproc >= 2 && !platform.exclusive_memory;
+        FleetLayout { nproc, replicas, exclusive: platform.exclusive_memory, shared_cloud }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    pub fn n_procs(&self) -> usize {
+        self.nproc
+    }
+
+    pub fn shared_cloud(&self) -> bool {
+        self.shared_cloud
+    }
+
+    /// Independent device timelines across the whole fleet.
+    pub fn n_timelines(&self) -> usize {
+        if self.exclusive {
+            self.replicas
+        } else if self.shared_cloud {
+            self.replicas * (self.nproc - 1) + 1
+        } else {
+            self.replicas * self.nproc
+        }
+    }
+
+    /// Timeline that replica `replica`'s processor `proc` reserves on.
+    /// With `shared_cloud`, the last processor of *every* replica maps
+    /// to the single fleet-global cloud timeline.
+    pub fn timeline_of(&self, replica: usize, proc: usize) -> usize {
+        if self.exclusive {
+            replica
+        } else if self.shared_cloud {
+            if proc == self.nproc - 1 {
+                self.replicas * (self.nproc - 1)
+            } else {
+                replica * (self.nproc - 1) + proc
+            }
+        } else {
+            replica * self.nproc + proc
+        }
+    }
+
+    /// Fleet-global processor index (busy-time accounting): replica-
+    /// major, so totals aggregate per base processor in a fixed order.
+    pub fn global_proc(&self, replica: usize, proc: usize) -> usize {
+        replica * self.nproc + proc
+    }
+
+    /// Replica that owns timeline `tl` — used to tag timeline wake
+    /// events with a replica for the `(time, replica, seq)` event
+    /// order. The shared cloud timeline belongs to no replica and
+    /// reports the sentinel `replicas` (sorting after all of them).
+    pub fn replica_of_timeline(&self, tl: usize) -> usize {
+        if self.exclusive {
+            tl
+        } else if self.shared_cloud {
+            if tl == self.replicas * (self.nproc - 1) {
+                self.replicas
+            } else {
+                tl / (self.nproc - 1)
+            }
+        } else {
+            tl / self.nproc
+        }
+    }
+}
+
 /// Mutable device-timeline state shared by the analytic serving
 /// layers: one busy-until clock per timeline (see
 /// [`Platform::n_timelines`]) plus per-**processor** reserved-time
@@ -139,10 +238,17 @@ pub struct Timelines {
 
 impl Timelines {
     pub fn new(platform: &Platform) -> Self {
+        Self::for_layout(&FleetLayout::single(platform))
+    }
+
+    /// Fleet-shaped state: one clock per [`FleetLayout::n_timelines`]
+    /// and one busy total per fleet-global processor. For the
+    /// 1-replica layout this is identical to [`Timelines::new`].
+    pub fn for_layout(layout: &FleetLayout) -> Self {
         Timelines {
-            free_at: vec![0.0; platform.n_timelines()],
-            busy_total: vec![0.0; platform.processors.len()],
-            exclusive: platform.exclusive_memory,
+            free_at: vec![0.0; layout.n_timelines()],
+            busy_total: vec![0.0; layout.replicas() * layout.n_procs()],
+            exclusive: layout.exclusive,
         }
     }
 
@@ -150,12 +256,29 @@ impl Timelines {
     /// earlier than `ready`; returns `(start, end)`. When the timeline
     /// is idle at `ready`, `start == ready` bit-exactly (no epsilon) —
     /// the property the DES↔analytic-sim equivalence tests rely on.
+    ///
+    /// Single-platform convenience over [`Timelines::reserve_on`]
+    /// (where `timeline == proc` unless memory is exclusive).
     pub fn reserve(&mut self, proc: usize, ready: f64, duration: f64) -> (f64, f64) {
         let idx = if self.exclusive { 0 } else { proc };
-        let start = self.free_at[idx].max(ready);
+        self.reserve_on(idx, proc, ready, duration)
+    }
+
+    /// Reserve on an explicit `(timeline, global processor)` pair —
+    /// the fleet executor resolves both through a [`FleetLayout`], so
+    /// a shared cloud timeline can serialize work across replicas
+    /// while busy time still lands on the right replica's ledger.
+    pub fn reserve_on(
+        &mut self,
+        timeline: usize,
+        gproc: usize,
+        ready: f64,
+        duration: f64,
+    ) -> (f64, f64) {
+        let start = self.free_at[timeline].max(ready);
         let end = start + duration;
-        self.free_at[idx] = end;
-        self.busy_total[proc] += duration;
+        self.free_at[timeline] = end;
+        self.busy_total[gproc] += duration;
         (start, end)
     }
 
@@ -447,5 +570,73 @@ mod tests {
         assert_eq!(s1, e0);
         assert_eq!(tl.busy_totals(), &[1.0, 2.0]);
         assert_eq!(tl.into_busy_totals(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn fleet_layout_at_one_replica_matches_the_platform() {
+        let fog = presets::fog_cluster();
+        for shared in [false, true] {
+            let l = FleetLayout::fleet(&fog, 1, shared);
+            assert_eq!(l.n_timelines(), fog.n_timelines());
+            for p in 0..4 {
+                assert_eq!(l.timeline_of(0, p), fog.timeline_of(p));
+                assert_eq!(l.global_proc(0, p), p);
+            }
+        }
+        let psoc = presets::psoc6();
+        let l = FleetLayout::single(&psoc);
+        assert_eq!(l.n_timelines(), 1);
+        assert_eq!(l.timeline_of(0, 1), 0);
+    }
+
+    #[test]
+    fn fleet_layout_namespaces_replicas_and_shares_the_cloud() {
+        let fog = presets::fog_cluster();
+        // private clouds: 3 replicas x 4 procs = 12 timelines
+        let l = FleetLayout::fleet(&fog, 3, false);
+        assert_eq!(l.n_timelines(), 12);
+        assert_eq!(l.timeline_of(2, 1), 9);
+        assert_eq!(l.replica_of_timeline(9), 2);
+        // shared cloud: 3 x 3 local + 1 global cloud timeline
+        let l = FleetLayout::fleet(&fog, 3, true);
+        assert!(l.shared_cloud());
+        assert_eq!(l.n_timelines(), 10);
+        let cloud = l.timeline_of(0, 3);
+        assert_eq!(cloud, 9);
+        for r in 0..3 {
+            assert_eq!(l.timeline_of(r, 3), cloud, "replica {r} cloud not shared");
+        }
+        assert_eq!(l.replica_of_timeline(cloud), 3, "cloud sorts after every replica");
+        assert_eq!(l.replica_of_timeline(l.timeline_of(1, 2)), 1);
+        // busy accounting stays per-replica even on the shared timeline
+        assert_ne!(l.global_proc(0, 3), l.global_proc(1, 3));
+        // exclusive memory: one timeline per replica, no cloud sharing
+        let psoc = presets::psoc6();
+        let l = FleetLayout::fleet(&psoc, 2, true);
+        assert!(!l.shared_cloud());
+        assert_eq!(l.n_timelines(), 2);
+        assert_eq!(l.timeline_of(1, 0), 1);
+        assert_eq!(l.replica_of_timeline(1), 1);
+    }
+
+    #[test]
+    fn shared_cloud_reservations_contend_across_replicas() {
+        let fog = presets::fog_cluster();
+        let l = FleetLayout::fleet(&fog, 2, true);
+        let mut tl = Timelines::for_layout(&l);
+        // replica 0 books the cloud; replica 1's cloud work queues
+        // behind it on the same timeline
+        let cloud = l.timeline_of(0, 3);
+        let (_, e0) = tl.reserve_on(cloud, l.global_proc(0, 3), 0.0, 1.0);
+        let (s1, _) = tl.reserve_on(cloud, l.global_proc(1, 3), 0.5, 1.0);
+        assert_eq!(s1, e0);
+        // but each replica's local tiers stay independent
+        let (s2, _) = tl.reserve_on(l.timeline_of(1, 0), l.global_proc(1, 0), 0.25, 1.0);
+        assert_eq!(s2, 0.25);
+        let busy = tl.into_busy_totals();
+        assert_eq!(busy.len(), 8);
+        assert_eq!(busy[3], 1.0);
+        assert_eq!(busy[7], 1.0);
+        assert_eq!(busy[4], 1.0);
     }
 }

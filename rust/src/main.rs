@@ -17,8 +17,8 @@
 use anyhow::{anyhow, Result};
 
 use eenn_na::coordinator::{
-    serve, serve_native, serve_synthetic, ArrivalProcess, Backend, NativeOptions, QosConfig,
-    ServeConfig,
+    serve, serve_fleet_synthetic, serve_native, serve_synthetic, ArrivalProcess, Backend,
+    FleetConfig, FleetFailure, KeyDist, NativeOptions, QosConfig, ServeConfig,
 };
 use eenn_na::data::load_split;
 use eenn_na::eenn::EennSolution;
@@ -81,10 +81,18 @@ fn run() -> Result<()> {
                  \x20                              per-tenant token buckets on arrivals\n\
                  \x20             [--burst-factor F --burst-s S --calm-s S]\n\
                  \x20                              MMPP arrivals: bursts of F x rate\n\
+                 \x20             Fleet serving (synthetic backend only):\n\
+                 \x20             [--replicas N]   consistent-hash route over N replicas\n\
+                 \x20             [--vnodes 64 --hash-seed S --shared-cloud]\n\
+                 \x20             [--hot-frac F --hot-keys K]   skewed shard keys\n\
+                 \x20             [--fail-replica R --fail-at 0.5]   kill R mid-trace\n\
                  repro report  table2|fig4 [--model NAME]\n\
                  repro scenarios [--smoke] [--only PRESET] [--workers N]\n\
                  \x20             [--exec-workers N] [--backend synthetic|native]\n\
-                 \x20             [--out BENCH_scenarios.json]\n\
+                 \x20             [--out BENCH_scenarios.json] [--deterministic]\n\
+                 \x20             --only takes an exact name or a trailing-* glob\n\
+                 \x20             (--only 'fleet_*'); --deterministic strips the\n\
+                 \x20             volatile timing/workers keys from the document\n\
                  \x20             hermetic (no artifacts, no PJRT) end-to-end matrix:\n\
                  \x20               kws_psoc6           speech commands, PSoC6, 2.5s constraint\n\
                  \x20               ecg_mcu             easy majority: 100% early termination\n\
@@ -92,7 +100,13 @@ fn run() -> Result<()> {
                  \x20               stress_fog          high-traffic four-tier fog serving\n\
                  \x20               stress_fog_shed     bounded queues: deterministic shedding\n\
                  \x20               multi_tenant_fog    per-tenant token buckets + priority\n\
-                 \x20               overload_storm      MMPP storm tamed by deadline admission"
+                 \x20               overload_storm      MMPP storm tamed by deadline admission\n\
+                 \x20             fleet matrix (writes a scenarios_fleet document):\n\
+                 \x20               fleet_fog           4 replicas behind the ring, shared cloud\n\
+                 \x20               fleet_diurnal       diurnal tent-profile arrivals\n\
+                 \x20               fleet_hotkey        70% of traffic on two hot keys\n\
+                 \x20               fleet_rebalance     replica loss mid-trace, exact\n\
+                 \x20                                   completed+shed+rerouted==offered"
             );
             Ok(())
         }
@@ -249,6 +263,65 @@ fn serve_cmd(args: &Args) -> Result<()> {
             bucket_burst: args.f64("bucket-burst", 0.0),
         },
     };
+    // fleet serving: route the trace over N replicas of the stage
+    // graph through the consistent-hash front-end, then report the
+    // fleet ledger instead of the single-platform summary
+    let replicas = args.usize("replicas", 1);
+    if replicas > 1 {
+        if !matches!(backend, Backend::Synthetic) {
+            return Err(anyhow!(
+                "--replicas {replicas} needs --backend synthetic: the fleet layer \
+                 multiplies the discrete-event plane, not the compute backends"
+            ));
+        }
+        let graph = BlockGraph::from_manifest(model);
+        let hot_frac = args.f64("hot-frac", 0.0);
+        let keys = if hot_frac > 0.0 {
+            KeyDist::Hotspot { hot_frac, hot_keys: args.usize("hot-keys", 2) as u64 }
+        } else {
+            KeyDist::Uniform
+        };
+        let fail = match args.opt("fail-replica") {
+            Some(r) => Some(FleetFailure {
+                replica: r.parse()?,
+                at_frac: args.f64("fail-at", 0.5),
+            }),
+            None => None,
+        };
+        let fleet = FleetConfig {
+            replicas,
+            vnodes: args.usize("vnodes", 64),
+            hash_seed: args.usize("hash-seed", 0xF1EE_7D00) as u64,
+            shared_cloud: args.bool("shared-cloud"),
+            keys,
+            fail,
+        };
+        let fm = serve_fleet_synthetic(&graph, &sol, &platform, &cfg, &fleet)?;
+        let m = &fm.metrics;
+        println!(
+            "fleet: {replicas} replicas, {} vnodes/replica{}, epoch {}",
+            fleet.vnodes,
+            if fleet.shared_cloud { ", shared cloud" } else { "" },
+            fm.epoch
+        );
+        println!(
+            "completed {}/{} (shed {}, rerouted {}), wall {:.2}s, {:.1} req/s",
+            m.completed, cfg.n_requests, m.shed, fm.rerouted, m.wall_s, m.throughput_rps
+        );
+        println!(
+            "per replica: offered {:?} completed {:?}",
+            fm.offered_per_replica, fm.completed_per_replica
+        );
+        println!(
+            "sim latency  p50 {:.4}s p90 {:.4}s p99 {:.4}s (deterministic virtual clock)",
+            m.sim_latency.p50, m.sim_latency.p90, m.sim_latency.p99
+        );
+        println!(
+            "mean energy {:.2}mJ, term hist {:?}, acc {:.4}",
+            m.mean_energy_mj, m.term_hist, m.quality.accuracy
+        );
+        return Ok(());
+    }
     let m = match backend {
         Backend::Pjrt => {
             let engine = Engine::new()?;
@@ -324,6 +397,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
 /// Run the hermetic scenario matrix (search → mapping co-search →
 /// analytic sim → synthetic serving per preset) and aggregate the
 /// reports into `BENCH_scenarios.json`. No artifacts or PJRT needed.
+/// `--only` takes an exact preset name or a trailing-`*` glob; fleet
+/// presets (`--only 'fleet_*'`) run the replicated executor and write
+/// a `scenarios_fleet` document instead.
 fn scenarios_cmd(args: &Args) -> Result<()> {
     use eenn_na::scenarios;
 
@@ -335,35 +411,76 @@ fn scenarios_cmd(args: &Args) -> Result<()> {
     let exec_workers = args.usize("exec-workers", 1);
     let backend = Backend::parse(&args.str("backend", "synthetic"))?;
     let only = args.opt("only");
+    let deterministic = args.bool("deterministic");
     let out_path = args.str("out", "BENCH_scenarios.json");
 
-    let presets = scenarios::all();
-    let selected: Vec<_> = presets
-        .iter()
-        .filter(|sc| only.map(|o| o == sc.name).unwrap_or(true))
-        .collect();
-    if selected.is_empty() {
-        let names: Vec<&str> = presets.iter().map(|s| s.name).collect();
+    // exact name or trailing-* prefix glob
+    let matches_only = |name: &str| match only {
+        None => true,
+        Some(o) => match o.strip_suffix('*') {
+            Some(prefix) => name.starts_with(prefix),
+            None => name == o,
+        },
+    };
+
+    let base = scenarios::all();
+    let fleet = scenarios::fleet_all();
+    let sel_base: Vec<_> = base.iter().filter(|sc| matches_only(sc.name)).collect();
+    // the default run (no --only) is the base matrix, unchanged; the
+    // fleet matrix is opted into by name or glob
+    let sel_fleet: Vec<_> = match only {
+        None => Vec::new(),
+        Some(_) => fleet.iter().filter(|fs| matches_only(fs.base.name)).collect(),
+    };
+    if sel_base.is_empty() && sel_fleet.is_empty() {
+        let mut names: Vec<&str> = base.iter().map(|s| s.name).collect();
+        names.extend(fleet.iter().map(|s| s.base.name));
         return Err(anyhow!(
-            "unknown preset {:?}; available: {}",
+            "no preset matches {:?}; available: {}",
             only.unwrap_or(""),
             names.join(", ")
         ));
     }
+    if !sel_base.is_empty() && !sel_fleet.is_empty() {
+        return Err(anyhow!(
+            "base and fleet presets aggregate into different bench documents \
+             (scenarios vs scenarios_fleet); run them as separate invocations"
+        ));
+    }
+    if !sel_fleet.is_empty() && !matches!(backend, Backend::Synthetic) {
+        return Err(anyhow!("fleet presets serve on the synthetic backend only"));
+    }
+
     println!(
         "=== scenario matrix ({} presets{}, {workers} workers, {} backend) ===\n",
-        selected.len(),
+        sel_base.len() + sel_fleet.len(),
         if smoke { ", smoke" } else { "" },
         backend.name()
     );
-    let mut reports = Vec::with_capacity(selected.len());
-    for sc in selected {
-        let r = scenarios::run_scenario_with(sc, workers, exec_workers, smoke, backend)?;
-        r.print();
-        println!();
-        reports.push(r);
-    }
-    std::fs::write(&out_path, scenarios::bench_json(&reports, smoke).to_string())?;
+    let doc = if sel_fleet.is_empty() {
+        let mut reports = Vec::with_capacity(sel_base.len());
+        for sc in sel_base {
+            let r = scenarios::run_scenario_with(sc, workers, exec_workers, smoke, backend)?;
+            r.print();
+            println!();
+            reports.push(r);
+        }
+        if deterministic {
+            scenarios::bench_json_deterministic(&reports, smoke)
+        } else {
+            scenarios::bench_json(&reports, smoke)
+        }
+    } else {
+        let mut reports = Vec::with_capacity(sel_fleet.len());
+        for fs in sel_fleet {
+            let r = scenarios::run_fleet_scenario(fs, workers, exec_workers, smoke)?;
+            r.print();
+            println!();
+            reports.push(r);
+        }
+        scenarios::fleet_bench_json(&reports, smoke, deterministic)
+    };
+    std::fs::write(&out_path, doc.to_string())?;
     println!("wrote {out_path}");
     Ok(())
 }

@@ -34,6 +34,24 @@
 //! |                      |              | the admission predictor (`shed_deadline`) is the |
 //! |                      |              | only thing standing between storm and collapse   |
 //!
+//! The **fleet matrix** ([`fleet_all`], CLI: `repro scenarios --only
+//! 'fleet_*'`, artifact `BENCH_scenarios_fleet.json`) scales the fog
+//! preset out to replica fleets behind the deterministic
+//! consistent-hash router ([`crate::coordinator::fleet`]):
+//!
+//! | preset            | fleet   | models…                                          |
+//! |-------------------|---------|--------------------------------------------------|
+//! | `fleet_fog`       | fog x4  | sharded fleet serving with a shared cloud tier   |
+//! |                   |         | that cross-replica escalations contend on        |
+//! | `fleet_diurnal`   | fog x4  | time-varying (diurnal tent-profile) arrivals     |
+//! |                   |         | sweeping the fleet through load and lull         |
+//! | `fleet_hotkey`    | fog x4  | skewed shard keys: 70% of traffic on two keys,   |
+//! |                   |         | so ring ownership — not the mean rate — decides  |
+//! |                   |         | which replica saturates                          |
+//! | `fleet_rebalance` | fog x3  | mid-trace replica loss: epoch bump, survivors    |
+//! |                   |         | absorb the keys, **exact** conservation          |
+//! |                   |         | `completed + shed + rerouted == offered`         |
+//!
 //! # Determinism
 //!
 //! A [`ScenarioReport`] is **bit-reproducible**: running a preset
@@ -59,7 +77,8 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::coordinator::{
-    serve_native, serve_synthetic, ArrivalProcess, Backend, NativeOptions, QosConfig, ServeConfig,
+    serve_fleet_synthetic, serve_native, serve_synthetic, ArrivalProcess, Backend, FleetConfig,
+    FleetFailure, KeyDist, NativeOptions, QosConfig, ServeConfig,
 };
 use crate::graph::BlockGraph;
 use crate::hw::{presets, Platform};
@@ -547,14 +566,16 @@ pub struct ScenarioReport {
     pub throughput_rps: f64,
 }
 
+fn farr(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+}
+
+fn uarr(v: &[usize]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
 impl ScenarioReport {
     pub fn to_json(&self) -> Json {
-        fn farr(v: &[f64]) -> Json {
-            Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
-        }
-        fn uarr(v: &[usize]) -> Json {
-            Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
-        }
         let mut m = BTreeMap::new();
         m.insert("scenario".into(), Json::Str(self.scenario.clone()));
         m.insert("platform".into(), Json::Str(self.platform.clone()));
@@ -842,22 +863,546 @@ pub fn run_all_with(
 /// machine's core count, and an environment-derived value must not
 /// sit in an exact-match-gated artifact.
 pub fn bench_json(reports: &[ScenarioReport], smoke: bool) -> Json {
-    let mut scenarios = BTreeMap::new();
-    for r in reports {
+    let entries = reports.iter().map(|r| {
         let mut j = r.to_json();
         if let Json::Obj(m) = &mut j {
             m.remove("workers");
         }
-        scenarios.insert(r.scenario.clone(), j);
-    }
+        (r.scenario.clone(), j)
+    });
+    bench_doc("scenarios", smoke, entries.collect())
+}
+
+/// [`bench_json`] carrying only the byte-reproducible payload per
+/// entry (no `timing`, no `workers`) — for byte-diffing runs.
+pub fn bench_json_deterministic(reports: &[ScenarioReport], smoke: bool) -> Json {
+    bench_doc(
+        "scenarios",
+        smoke,
+        reports.iter().map(|r| (r.scenario.clone(), r.deterministic_json())).collect(),
+    )
+}
+
+/// Shared shell of every scenario bench document: `bench` name,
+/// `fixture` tag and the per-preset `scenarios` map. One builder so
+/// the base and fleet artifacts cannot drift structurally.
+fn bench_doc(bench: &str, smoke: bool, scenarios: BTreeMap<String, Json>) -> Json {
     let mut top = BTreeMap::new();
-    top.insert("bench".to_string(), Json::Str("scenarios".to_string()));
+    top.insert("bench".to_string(), Json::Str(bench.to_string()));
     top.insert(
         "fixture".to_string(),
         Json::Str(if smoke { "smoke" } else { "full" }.to_string()),
     );
     top.insert("scenarios".to_string(), Json::Obj(scenarios));
     Json::Obj(top)
+}
+
+// ---------------------------------------------------------------------------
+// fleet scenario matrix
+// ---------------------------------------------------------------------------
+
+/// A fleet preset: a base [`Scenario`] (search shaping + traffic)
+/// replicated behind the consistent-hash router per a
+/// [`FleetConfig`]. All replicas serve the *same* searched solution —
+/// the fleet scales the serving plane out, not the search.
+#[derive(Debug, Clone)]
+pub struct FleetScenario {
+    pub base: Scenario,
+    pub fleet: FleetConfig,
+}
+
+/// Shared base of every fleet preset: the `stress_fog` search-shaping
+/// knobs (same graph, platform, bank seed and constraint set, so the
+/// searched solution is identical across the whole fleet matrix and
+/// to `stress_fog` itself) with preset-specific traffic and queueing.
+fn fog_fleet_base(
+    name: &'static str,
+    description: &'static str,
+    traffic: TrafficTrace,
+    queue_cap: usize,
+) -> Scenario {
+    Scenario {
+        name,
+        description,
+        graph: BlockGraph::synthetic_resnet(10, 4),
+        platform: presets::fog_cluster(),
+        bank_seed: 404,
+        n_cal: 400,
+        confidence: ConfidenceModel::Ramp { lo: 0.50, hi: 0.90 },
+        latency_constraint_s: f64::INFINITY,
+        w_eff: 0.9,
+        w_acc: 0.1,
+        traffic,
+        queue_cap,
+        qos: QosConfig::default(),
+        deadline_slack: 0.0,
+    }
+}
+
+/// Four fog replicas behind the ring, cloud tier shared: uniform keys
+/// spread ~4.8k req/s across the fleet while every replica's
+/// escalations contend on one fleet-global cloud timeline.
+pub fn fleet_fog() -> FleetScenario {
+    FleetScenario {
+        base: fog_fleet_base(
+            "fleet_fog",
+            "four fog replicas behind the hash ring, shared cloud tier",
+            TrafficTrace {
+                arrival_rate_hz: 4_800.0,
+                n_requests: 8_000,
+                smoke_n_requests: 800,
+                seed: 37,
+                arrival: ArrivalProcess::Poisson,
+            },
+            0,
+        ),
+        fleet: FleetConfig {
+            replicas: 4,
+            vnodes: 64,
+            hash_seed: 0xF1EE_7001,
+            shared_cloud: true,
+            keys: KeyDist::Uniform,
+            fail: None,
+        },
+    }
+}
+
+/// Time-varying arrivals: a diurnal tent profile sweeps the fleet
+/// from lull (1.2k req/s) to six-fold peak every 50 ms of sim time,
+/// so queue depths breathe with the cycle instead of settling into a
+/// stationary regime.
+pub fn fleet_diurnal() -> FleetScenario {
+    FleetScenario {
+        base: fog_fleet_base(
+            "fleet_diurnal",
+            "diurnal tent-profile arrivals sweeping the four-replica fleet",
+            TrafficTrace {
+                arrival_rate_hz: 1_200.0,
+                n_requests: 8_000,
+                smoke_n_requests: 800,
+                seed: 41,
+                arrival: ArrivalProcess::Diurnal {
+                    period_s: 0.05,
+                    peak_factor: 6.0,
+                    phases: 8,
+                },
+            },
+            0,
+        ),
+        fleet: FleetConfig {
+            replicas: 4,
+            vnodes: 64,
+            hash_seed: 0xF1EE_7002,
+            shared_cloud: true,
+            keys: KeyDist::Uniform,
+            fail: None,
+        },
+    }
+}
+
+/// Skewed shard keys: 70% of the traffic collapses onto two hot keys,
+/// so ring ownership — not the fleet-mean rate — decides which
+/// replica saturates its bounded queues while the cold replicas idle.
+pub fn fleet_hotkey() -> FleetScenario {
+    FleetScenario {
+        base: fog_fleet_base(
+            "fleet_hotkey",
+            "hot-key skew: 70% of traffic on two keys, bounded queues",
+            TrafficTrace {
+                arrival_rate_hz: 48_000.0,
+                n_requests: 6_000,
+                smoke_n_requests: 600,
+                seed: 43,
+                arrival: ArrivalProcess::Poisson,
+            },
+            64,
+        ),
+        fleet: FleetConfig {
+            replicas: 4,
+            vnodes: 64,
+            hash_seed: 0xF1EE_7003,
+            shared_cloud: false,
+            keys: KeyDist::Hotspot { hot_frac: 0.7, hot_keys: 2 },
+            fail: None,
+        },
+    }
+}
+
+/// Mid-trace replica loss under heavy load: replica 1 dies when half
+/// the trace has arrived, the shard map bumps to epoch 1 and the
+/// survivors absorb its keys. The offered rate swamps every replica's
+/// first-segment capacity, so the dead replica is guaranteed a
+/// backlog to drain — `rerouted > 0` — and the report asserts the
+/// exact conservation `completed + shed + rerouted == offered`.
+pub fn fleet_rebalance() -> FleetScenario {
+    FleetScenario {
+        base: fog_fleet_base(
+            "fleet_rebalance",
+            "replica loss mid-trace: epoch bump, survivors absorb, exact conservation",
+            TrafficTrace {
+                arrival_rate_hz: 240_000.0,
+                n_requests: 6_000,
+                smoke_n_requests: 600,
+                seed: 47,
+                arrival: ArrivalProcess::Poisson,
+            },
+            0,
+        ),
+        fleet: FleetConfig {
+            replicas: 3,
+            vnodes: 64,
+            hash_seed: 0xF1EE_7004,
+            shared_cloud: false,
+            keys: KeyDist::Uniform,
+            fail: Some(FleetFailure { replica: 1, at_frac: 0.5 }),
+        },
+    }
+}
+
+/// The fleet scenario matrix, in reporting order.
+pub fn fleet_all() -> Vec<FleetScenario> {
+    vec![fleet_fog(), fleet_diurnal(), fleet_hotkey(), fleet_rebalance()]
+}
+
+/// Per-fleet-preset outcome: the search half of [`ScenarioReport`]
+/// plus fleet-level serving accounting. Everything except the
+/// `"timing"` block is bit-reproducible across runs, hosts, worker
+/// counts and replica-iteration order.
+#[derive(Debug, Clone)]
+pub struct FleetScenarioReport {
+    pub scenario: String,
+    pub platform: String,
+    pub model: String,
+    /// Search worker threads (input parameter; excluded from
+    /// [`Self::deterministic_json`] alongside the timings).
+    pub workers: usize,
+    pub replicas: usize,
+    pub vnodes: usize,
+    pub shared_cloud: bool,
+    pub n_requests: usize,
+    pub arrival_rate_hz: f64,
+    // --- search outcome (shared by all replicas) -------------------------
+    pub exits: Vec<usize>,
+    pub assignment: Vec<usize>,
+    pub thresholds: Vec<f64>,
+    pub score: f64,
+    // --- fleet serving outcome -------------------------------------------
+    pub completed: usize,
+    pub shed: usize,
+    pub shed_queue: usize,
+    pub shed_deadline: usize,
+    pub shed_bucket: usize,
+    /// Requests dropped-and-redirected out of the modeled fleet when
+    /// their replica died (`completed + shed + rerouted ==
+    /// n_requests`, exactly).
+    pub rerouted: usize,
+    /// Final shard-map epoch (= rebalances fired).
+    pub epoch: u64,
+    pub offered_per_replica: Vec<usize>,
+    pub completed_per_replica: Vec<usize>,
+    pub term_hist: Vec<usize>,
+    pub accuracy: f64,
+    pub mean_energy_mj: f64,
+    /// Reserved device time per *base* processor, aggregated over
+    /// replicas (plus the shared cloud timeline, when enabled).
+    pub proc_busy_s: Vec<f64>,
+    pub sim_latency_p50_s: f64,
+    pub sim_latency_p99_s: f64,
+    /// Largest depth each stage queue reached, replica-major per
+    /// global stage (`replica * nseg + seg`).
+    pub queue_max_depth: Vec<usize>,
+    // --- volatile wall-clock measurements -------------------------------
+    pub search_wall_s: f64,
+    pub serve_wall_s: f64,
+    pub throughput_rps: f64,
+}
+
+impl FleetScenarioReport {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("scenario".into(), Json::Str(self.scenario.clone()));
+        m.insert("platform".into(), Json::Str(self.platform.clone()));
+        m.insert("model".into(), Json::Str(self.model.clone()));
+        m.insert("workers".into(), Json::Num(self.workers as f64));
+        m.insert("replicas".into(), Json::Num(self.replicas as f64));
+        m.insert("vnodes".into(), Json::Num(self.vnodes as f64));
+        m.insert("shared_cloud".into(), Json::Bool(self.shared_cloud));
+        m.insert("n_requests".into(), Json::Num(self.n_requests as f64));
+        m.insert("arrival_rate_hz".into(), Json::Num(self.arrival_rate_hz));
+        m.insert("exits".into(), uarr(&self.exits));
+        m.insert("assignment".into(), uarr(&self.assignment));
+        m.insert("thresholds".into(), farr(&self.thresholds));
+        m.insert("score".into(), Json::Num(self.score));
+        m.insert("completed".into(), Json::Num(self.completed as f64));
+        m.insert("shed".into(), Json::Num(self.shed as f64));
+        m.insert("shed_queue".into(), Json::Num(self.shed_queue as f64));
+        m.insert("shed_deadline".into(), Json::Num(self.shed_deadline as f64));
+        m.insert("shed_bucket".into(), Json::Num(self.shed_bucket as f64));
+        m.insert("rerouted".into(), Json::Num(self.rerouted as f64));
+        m.insert("epoch".into(), Json::Num(self.epoch as f64));
+        m.insert("offered_per_replica".into(), uarr(&self.offered_per_replica));
+        m.insert("completed_per_replica".into(), uarr(&self.completed_per_replica));
+        m.insert("term_hist".into(), uarr(&self.term_hist));
+        m.insert("accuracy".into(), Json::Num(self.accuracy));
+        m.insert("mean_energy_mj".into(), Json::Num(self.mean_energy_mj));
+        m.insert("proc_busy_s".into(), farr(&self.proc_busy_s));
+        m.insert("sim_latency_p50_s".into(), Json::Num(self.sim_latency_p50_s));
+        m.insert("sim_latency_p99_s".into(), Json::Num(self.sim_latency_p99_s));
+        m.insert("queue_max_depth".into(), uarr(&self.queue_max_depth));
+        let mut t = BTreeMap::new();
+        t.insert("search_wall_s".into(), Json::Num(self.search_wall_s));
+        t.insert("serve_wall_s".into(), Json::Num(self.serve_wall_s));
+        t.insert("throughput_rps".into(), Json::Num(self.throughput_rps));
+        m.insert("timing".into(), Json::Obj(t));
+        Json::Obj(m)
+    }
+
+    /// [`Self::to_json`] minus the volatile keys (`timing`,
+    /// `workers`): the byte-reproducible payload the fleet
+    /// determinism CI leg byte-diffs across worker counts.
+    pub fn deterministic_json(&self) -> Json {
+        let mut j = self.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.remove("timing");
+            m.remove("workers");
+        }
+        j
+    }
+
+    pub fn print(&self) {
+        println!(
+            "=== {} — {} on {} x{}{} ===",
+            self.scenario,
+            self.model,
+            self.platform,
+            self.replicas,
+            if self.shared_cloud { " (shared cloud)" } else { "" }
+        );
+        println!(
+            "  search: exits {:?} -> procs {:?} (score {:.4}, {:.2}s)",
+            self.exits, self.assignment, self.score, self.search_wall_s
+        );
+        println!(
+            "  fleet: {}/{} completed ({} shed, {} rerouted, epoch {}) at {:.0} req/s",
+            self.completed,
+            self.n_requests,
+            self.shed,
+            self.rerouted,
+            self.epoch,
+            self.arrival_rate_hz
+        );
+        println!(
+            "  per replica: offered {:?} completed {:?}",
+            self.offered_per_replica, self.completed_per_replica
+        );
+        if self.shed > 0 {
+            println!(
+                "  shed breakdown: {} queue-full / {} deadline / {} bucket",
+                self.shed_queue, self.shed_deadline, self.shed_bucket
+            );
+        }
+        println!(
+            "  sim latency p50 {:.4}s p99 {:.4}s | acc {:.4} | term hist {:?}",
+            self.sim_latency_p50_s, self.sim_latency_p99_s, self.accuracy, self.term_hist
+        );
+    }
+}
+
+/// Run one fleet preset through the closed loop: synthetic bank →
+/// search (once — replicas share the solution) → analytic sim →
+/// [`serve_fleet_synthetic`] through the fleet executor. Fleet
+/// serving is synthetic-backend only: the fleet layer multiplies the
+/// *discrete-event* plane, and calibrated-mode compute backends add
+/// nothing to it but wall-clock. Every conservation identity is
+/// enforced here as a hard failure, not a report field.
+pub fn run_fleet_scenario(
+    fs: &FleetScenario,
+    workers: usize,
+    exec_workers: usize,
+    smoke: bool,
+) -> Result<FleetScenarioReport> {
+    let sc = &fs.base;
+    let fleet = &fs.fleet;
+    fleet.validate()?;
+    let bank = build_bank(sc);
+    let cfg = FlowConfig {
+        latency_constraint_s: sc.latency_constraint_s,
+        w_eff: sc.w_eff,
+        w_acc: sc.w_acc,
+        workers,
+        ..FlowConfig::default()
+    };
+    let t0 = Instant::now();
+    let out = na::augment_prepared(&bank, &sc.graph, sc.name, &sc.platform, &cfg, None)?;
+    let search_wall_s = t0.elapsed().as_secs_f64();
+    let sol = &out.solution;
+
+    let mapping = sol.mapping();
+    let sim = simulate(&sc.graph, &mapping, &sc.platform);
+    let worst_path_s = sim.stages.last().map(|s| s.cum_latency_s).unwrap_or(0.0);
+    let qos = sc.resolve_qos(worst_path_s);
+
+    let n_requests = if smoke { sc.traffic.smoke_n_requests } else { sc.traffic.n_requests };
+    let scfg = ServeConfig {
+        arrival_rate_hz: sc.traffic.arrival_rate_hz,
+        n_requests,
+        queue_cap: sc.queue_cap,
+        batch_max: 1,
+        seed: sc.traffic.seed,
+        exec_workers,
+        qos,
+        arrival: sc.traffic.arrival,
+    };
+    let t0 = Instant::now();
+    let fm = serve_fleet_synthetic(&sc.graph, sol, &sc.platform, &scfg, fleet)?;
+    let serve_wall_s = t0.elapsed().as_secs_f64();
+    let m = &fm.metrics;
+
+    if m.completed + m.shed + fm.rerouted != n_requests {
+        bail!(
+            "{}: fleet conservation broken ({} completed + {} shed + {} rerouted != {} offered)",
+            sc.name,
+            m.completed,
+            m.shed,
+            fm.rerouted,
+            n_requests
+        );
+    }
+    if m.shed != m.shed_queue + m.shed_deadline + m.shed_bucket {
+        bail!(
+            "{}: shed breakdown broken ({} != {} + {} + {})",
+            sc.name,
+            m.shed,
+            m.shed_queue,
+            m.shed_deadline,
+            m.shed_bucket
+        );
+    }
+    if fm.offered_per_replica.iter().sum::<usize>() != n_requests {
+        bail!("{}: per-replica offered counts do not sum to the trace", sc.name);
+    }
+    if fm.completed_per_replica.iter().sum::<usize>() != m.completed {
+        bail!("{}: per-replica completions do not sum to the total", sc.name);
+    }
+    match fleet.fail {
+        None => {
+            if fm.rerouted != 0 || fm.epoch != 0 {
+                bail!(
+                    "{}: no replica failed, yet {} rerouted at epoch {}",
+                    sc.name,
+                    fm.rerouted,
+                    fm.epoch
+                );
+            }
+        }
+        Some(f) => {
+            if fm.epoch != 1 {
+                bail!("{}: one failure must land at epoch 1, got {}", sc.name, fm.epoch);
+            }
+            if fm.rerouted == 0 {
+                bail!("{}: replica {} died with nothing to reroute", sc.name, f.replica);
+            }
+            // with nothing shed, every request offered to the dead
+            // replica either completed there or was rerouted
+            if m.shed == 0
+                && fm.completed_per_replica[f.replica] + fm.rerouted
+                    != fm.offered_per_replica[f.replica]
+            {
+                bail!(
+                    "{}: dead-replica ledger broken ({} completed + {} rerouted != {} offered)",
+                    sc.name,
+                    fm.completed_per_replica[f.replica],
+                    fm.rerouted,
+                    fm.offered_per_replica[f.replica]
+                );
+            }
+        }
+    }
+    if sc.queue_cap == 0 && m.shed_queue != 0 {
+        bail!("{}: unbounded queues must not shed on depth ({} shed)", sc.name, m.shed_queue);
+    }
+    if sc.queue_cap == 0 && !qos.can_shed() && m.shed != 0 {
+        bail!("{}: roomy queues without QoS must not shed ({} shed)", sc.name, m.shed);
+    }
+    if let KeyDist::Hotspot { .. } = fleet.keys {
+        let max = fm.offered_per_replica.iter().copied().max().unwrap_or(0);
+        let fair = n_requests as f64 / fleet.replicas as f64;
+        if (max as f64) < 1.2 * fair {
+            bail!(
+                "{}: hot-key preset shows no skew (max offered {} vs fair share {:.0})",
+                sc.name,
+                max,
+                fair
+            );
+        }
+    }
+    if m.completed == 0 {
+        bail!("{}: nothing served (all {} offered requests lost)", sc.name, n_requests);
+    }
+
+    Ok(FleetScenarioReport {
+        scenario: sc.name.to_string(),
+        platform: sc.platform.name.clone(),
+        model: sc.graph.model.clone(),
+        workers: out.report.workers,
+        replicas: fleet.replicas,
+        vnodes: fleet.vnodes,
+        shared_cloud: fleet.shared_cloud,
+        n_requests,
+        arrival_rate_hz: sc.traffic.arrival_rate_hz,
+        exits: sol.exits.clone(),
+        assignment: sol.assignment.clone(),
+        thresholds: sol.thresholds.clone(),
+        score: sol.score,
+        completed: m.completed,
+        shed: m.shed,
+        shed_queue: m.shed_queue,
+        shed_deadline: m.shed_deadline,
+        shed_bucket: m.shed_bucket,
+        rerouted: fm.rerouted,
+        epoch: fm.epoch,
+        offered_per_replica: fm.offered_per_replica.clone(),
+        completed_per_replica: fm.completed_per_replica.clone(),
+        term_hist: m.term_hist.clone(),
+        accuracy: m.quality.accuracy,
+        mean_energy_mj: m.mean_energy_mj,
+        proc_busy_s: m.proc_busy_s.clone(),
+        sim_latency_p50_s: m.sim_latency.p50,
+        sim_latency_p99_s: m.sim_latency.p99,
+        queue_max_depth: m.queue_stats.iter().map(|q| q.max_depth).collect(),
+        search_wall_s,
+        serve_wall_s,
+        throughput_rps: m.throughput_rps,
+    })
+}
+
+/// Run every fleet preset in [`fleet_all`].
+pub fn run_fleet_all(
+    workers: usize,
+    exec_workers: usize,
+    smoke: bool,
+) -> Result<Vec<FleetScenarioReport>> {
+    fleet_all().iter().map(|fs| run_fleet_scenario(fs, workers, exec_workers, smoke)).collect()
+}
+
+/// Aggregate fleet reports into the `BENCH_scenarios_fleet.json`
+/// document (same shell as [`bench_json`], `bench` name
+/// `scenarios_fleet`). With `deterministic`, entries carry only the
+/// byte-reproducible payload — the document the CI determinism leg
+/// byte-diffs across worker counts.
+pub fn fleet_bench_json(
+    reports: &[FleetScenarioReport],
+    smoke: bool,
+    deterministic: bool,
+) -> Json {
+    let entries = reports.iter().map(|r| {
+        let mut j = if deterministic { r.deterministic_json() } else { r.to_json() };
+        if let Json::Obj(m) = &mut j {
+            m.remove("workers");
+        }
+        (r.scenario.clone(), j)
+    });
+    bench_doc("scenarios_fleet", smoke, entries.collect())
 }
 
 #[cfg(test)]
@@ -961,6 +1506,67 @@ mod tests {
             assert!(
                 admitted_bound < 0.7 * n as f64,
                 "admission bound ({admitted_bound:.0}) must stay below the trace ({n})"
+            );
+        }
+    }
+
+    #[test]
+    fn fleet_presets_are_wellformed() {
+        let ps = fleet_all();
+        assert_eq!(ps.len(), 4);
+        let mut names: Vec<&str> = ps.iter().map(|s| s.base.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), 4, "fleet preset names must be unique");
+        for fs in &ps {
+            assert!(fs.base.name.starts_with("fleet_"), "{}: fleet namespace", fs.base.name);
+            fs.fleet.validate().unwrap();
+            fs.base.platform.validate().unwrap();
+            assert!(fs.fleet.replicas > 1, "{}: a fleet preset needs a fleet", fs.base.name);
+            assert!(fs.base.traffic.smoke_n_requests > 0);
+            assert!(fs.base.traffic.smoke_n_requests <= fs.base.traffic.n_requests);
+            assert!(!fs.base.qos.enabled(), "fleet presets shed by queue depth, not QoS");
+        }
+        let failing: Vec<&str> =
+            ps.iter().filter(|s| s.fleet.fail.is_some()).map(|s| s.base.name).collect();
+        assert_eq!(failing, vec!["fleet_rebalance"]);
+        let skewed: Vec<&str> = ps
+            .iter()
+            .filter(|s| matches!(s.fleet.keys, KeyDist::Hotspot { .. }))
+            .map(|s| s.base.name)
+            .collect();
+        assert_eq!(skewed, vec!["fleet_hotkey"]);
+        let diurnal: Vec<&str> = ps
+            .iter()
+            .filter(|s| matches!(s.base.traffic.arrival, ArrivalProcess::Diurnal { .. }))
+            .map(|s| s.base.name)
+            .collect();
+        assert_eq!(diurnal, vec!["fleet_diurnal"]);
+    }
+
+    #[test]
+    fn rebalance_preset_guarantees_a_backlog_at_the_flip() {
+        let fs = fleet_rebalance();
+        let sc = &fs.base;
+        assert_eq!(sc.queue_cap, 0, "conservation must come from rerouting, not shedding");
+        assert!(!sc.qos.can_shed());
+        let f = fs.fleet.fail.expect("rebalance preset fails a replica");
+        assert!(f.at_frac > 0.0 && f.at_frac < 1.0, "the loss must land mid-trace");
+        // the offered rate swamps the *fleet-aggregate* first-segment
+        // capacity of every local tier with a wide margin, so whatever
+        // key shares the hash seed deals, the dying replica has queued
+        // or in-flight work to reroute when the flip fires
+        let seg0_macs: f64 = sc.graph.blocks[..=1].iter().map(|b| b.macs as f64).sum();
+        for proc in &sc.platform.processors[..3] {
+            let service_hz = proc.macs_per_sec / seg0_macs;
+            assert!(
+                sc.traffic.arrival_rate_hz > 4.0 * fs.fleet.replicas as f64 * service_hz,
+                "{}: {} req/s must swamp {} x{} ({:.0} req/s aggregate)",
+                sc.name,
+                sc.traffic.arrival_rate_hz,
+                proc.name,
+                fs.fleet.replicas,
+                fs.fleet.replicas as f64 * service_hz
             );
         }
     }

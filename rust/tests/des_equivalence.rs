@@ -18,7 +18,8 @@
 //!   lives below as the regression oracle.
 
 use eenn_na::coordinator::{
-    serve_synthetic, ArrivalProcess, QosConfig, RequestTrace, ServeConfig, ServeMetrics,
+    serve_fleet_synthetic, serve_synthetic, ArrivalProcess, FleetConfig, FleetFailure,
+    FleetMetrics, KeyDist, QosConfig, RequestTrace, ServeConfig, ServeMetrics,
 };
 use eenn_na::eenn::EennSolution;
 use eenn_na::graph::BlockGraph;
@@ -552,6 +553,189 @@ fn native_backend_is_byte_identical_to_synthetic_when_calibrated() {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// fleet battery
+// ---------------------------------------------------------------------------
+
+/// A fleet outcome reduced to comparable bits: the merged metrics
+/// plus the routing/rebalance ledger.
+fn fleet_bits(fm: &FleetMetrics) -> (MetricBits, usize, u64, Vec<usize>, Vec<usize>) {
+    (
+        metric_bits(&fm.metrics),
+        fm.rerouted,
+        fm.epoch,
+        fm.offered_per_replica.clone(),
+        fm.completed_per_replica.clone(),
+    )
+}
+
+fn fleet_cfg(replicas: usize) -> FleetConfig {
+    FleetConfig {
+        replicas,
+        vnodes: 32,
+        hash_seed: 0xF1EE_7,
+        shared_cloud: true,
+        keys: KeyDist::Uniform,
+        fail: None,
+    }
+}
+
+/// The canonical loaded fixture of this file (stress_fog regime on a
+/// chain mapping), served through the fleet front-end.
+fn serve_fleet(
+    fleet: &FleetConfig,
+    n: usize,
+    rate: f64,
+    queue_cap: usize,
+    ew: usize,
+) -> FleetMetrics {
+    let graph = BlockGraph::synthetic_resnet(10, 4);
+    let platform = presets::fog_cluster();
+    let sol = synth_solution(vec![1, 2, 3], vec![0, 1, 2, 3], vec![0.4, 0.3, 0.2, 0.1]);
+    let cfg = ServeConfig {
+        arrival_rate_hz: rate,
+        n_requests: n,
+        queue_cap,
+        batch_max: 1,
+        seed: 17,
+        exec_workers: ew,
+        ..ServeConfig::default()
+    };
+    serve_fleet_synthetic(&graph, &sol, &platform, &cfg, fleet).unwrap()
+}
+
+#[test]
+fn one_replica_fleet_is_bit_identical_to_the_bare_executor() {
+    // the fleet layer's ground rule: N = 1 is not a near-copy of the
+    // single-platform executor, it IS the single-platform executor —
+    // every trace, busy total and queue series must match bit-for-bit,
+    // with and without the (vacuous at N = 1) shared-cloud layout
+    let graph = BlockGraph::synthetic_resnet(10, 4);
+    let platform = presets::fog_cluster();
+    let sol = synth_solution(vec![1, 2, 3], vec![0, 1, 2, 3], vec![0.4, 0.3, 0.2, 0.1]);
+    let cfg = ServeConfig {
+        arrival_rate_hz: 1_500.0,
+        n_requests: 400,
+        queue_cap: 0,
+        batch_max: 1,
+        seed: 17,
+        exec_workers: 1,
+        ..ServeConfig::default()
+    };
+    let bare = metric_bits(&serve_synthetic(&graph, &sol, &platform, &cfg).unwrap());
+    for shared_cloud in [false, true] {
+        let fleet = FleetConfig { shared_cloud, ..fleet_cfg(1) };
+        let fm = serve_fleet_synthetic(&graph, &sol, &platform, &cfg, &fleet).unwrap();
+        assert_eq!(
+            metric_bits(&fm.metrics),
+            bare,
+            "1-replica fleet (shared_cloud {shared_cloud}) diverged from serve_synthetic"
+        );
+        assert_eq!(fm.rerouted, 0);
+        assert_eq!(fm.epoch, 0);
+        assert_eq!(fm.offered_per_replica, vec![400]);
+        assert_eq!(fm.completed_per_replica, vec![fm.metrics.completed]);
+    }
+}
+
+#[test]
+fn fleet_metrics_are_byte_identical_across_replica_and_worker_counts() {
+    // the fleet determinism contract: for every replica count, the
+    // merged metrics and the per-replica ledger are pure functions of
+    // the config — identical across repeated runs and across exec
+    // worker counts (the exec plane only reorders wall work)
+    for replicas in [1usize, 2, 4] {
+        let fleet = fleet_cfg(replicas);
+        let base = fleet_bits(&serve_fleet(&fleet, 400, 1_500.0, 0, 1));
+        let again = fleet_bits(&serve_fleet(&fleet, 400, 1_500.0, 0, 1));
+        assert_eq!(base, again, "{replicas} replicas: repeated run diverged");
+        for ew in [2usize, 8] {
+            assert_eq!(
+                fleet_bits(&serve_fleet(&fleet, 400, 1_500.0, 0, ew)),
+                base,
+                "{replicas} replicas: exec_workers {ew} diverged from inline"
+            );
+        }
+        let fm = serve_fleet(&fleet, 400, 1_500.0, 0, 1);
+        assert_eq!(fm.metrics.completed + fm.metrics.shed, 400);
+        assert_eq!(fm.offered_per_replica.iter().sum::<usize>(), 400);
+        assert_eq!(fm.completed_per_replica.iter().sum::<usize>(), fm.metrics.completed);
+        if replicas > 1 {
+            let spread = fm.offered_per_replica.iter().filter(|&&o| o > 0).count();
+            assert!(spread > 1, "{replicas} replicas: the ring routed everything to one");
+        }
+    }
+}
+
+#[test]
+fn hot_keys_skew_the_fleet_deterministically() {
+    let fleet = FleetConfig {
+        keys: KeyDist::Hotspot { hot_frac: 0.7, hot_keys: 2 },
+        ..fleet_cfg(4)
+    };
+    let fm = serve_fleet(&fleet, 400, 1_500.0, 0, 1);
+    assert_eq!(fm.metrics.completed + fm.metrics.shed, 400);
+    let max = fm.offered_per_replica.iter().copied().max().unwrap();
+    assert!(
+        max as f64 > 1.2 * 100.0,
+        "hot keys must concentrate load (max offered {max} of 400 over 4 replicas)"
+    );
+    assert_eq!(
+        fleet_bits(&serve_fleet(&fleet, 400, 1_500.0, 0, 8)),
+        fleet_bits(&fm),
+        "hot-key fleet diverged across exec worker counts"
+    );
+}
+
+#[test]
+fn rebalance_conserves_every_request_and_stays_deterministic() {
+    // replica 1 dies when half the trace has arrived. The offered rate
+    // swamps the fleet-aggregate first-segment capacity, so the dying
+    // replica is guaranteed queued/in-flight work: rerouted > 0. Every
+    // request lands in exactly one bucket — completed, shed or
+    // rerouted — and the dead replica's own ledger closes exactly.
+    let fleet = FleetConfig {
+        shared_cloud: false,
+        fail: Some(FleetFailure { replica: 1, at_frac: 0.5 }),
+        ..fleet_cfg(3)
+    };
+    let fm = serve_fleet(&fleet, 600, 240_000.0, 0, 1);
+    assert_eq!(fm.epoch, 1, "one failure, one rebalance");
+    assert!(fm.rerouted > 0, "the dead replica must have had work to reroute");
+    assert_eq!(fm.metrics.shed, 0, "unbounded queues, no QoS: nothing sheds");
+    assert_eq!(
+        fm.metrics.completed + fm.rerouted,
+        600,
+        "exact conservation: completed + rerouted == offered"
+    );
+    assert_eq!(fm.offered_per_replica.iter().sum::<usize>(), 600);
+    assert_eq!(
+        fm.completed_per_replica[1] + fm.rerouted,
+        fm.offered_per_replica[1],
+        "the dead replica's ledger must close: completed + rerouted == offered to it"
+    );
+    // post-flip arrivals land only on survivors
+    assert!(fm.completed_per_replica[0] > 0 && fm.completed_per_replica[2] > 0);
+    let base = fleet_bits(&fm);
+    for ew in [2usize, 8] {
+        assert_eq!(
+            fleet_bits(&serve_fleet(&fleet, 600, 240_000.0, 0, ew)),
+            base,
+            "rebalance run diverged at exec_workers {ew}"
+        );
+    }
+    // bounded queues: shedding and rerouting coexist, still exact
+    let bounded = serve_fleet(&fleet, 600, 240_000.0, 32, 1);
+    assert_eq!(bounded.epoch, 1);
+    assert!(bounded.metrics.shed > 0, "32-deep queues at this rate must shed");
+    assert_eq!(bounded.metrics.shed, bounded.metrics.shed_queue);
+    assert_eq!(
+        bounded.metrics.completed + bounded.metrics.shed + bounded.rerouted,
+        600,
+        "exact conservation with shedding: completed + shed + rerouted == offered"
+    );
 }
 
 #[test]

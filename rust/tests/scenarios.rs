@@ -249,6 +249,76 @@ fn qos_presets_shed_for_their_designed_reason_only() {
 }
 
 #[test]
+fn fleet_presets_run_their_guards_end_to_end() {
+    // run_fleet_scenario enforces the fleet invariants as hard
+    // failures (conservation, per-replica ledgers, hot-key skew, the
+    // rebalance epoch); this drives every preset through them once
+    for fs in scenarios::fleet_all() {
+        let r = scenarios::run_fleet_scenario(&fs, 2, 1, true)
+            .expect("fleet preset must run hermetically");
+        assert_eq!(
+            r.completed + r.shed + r.rerouted,
+            r.n_requests,
+            "{}: exact conservation",
+            r.scenario
+        );
+        assert_eq!(r.offered_per_replica.len(), r.replicas, "{}", r.scenario);
+        assert_eq!(r.completed_per_replica.len(), r.replicas, "{}", r.scenario);
+        assert!(r.completed > 0, "{}", r.scenario);
+    }
+}
+
+#[test]
+fn fleet_rebalance_smoke_conserves_and_is_deterministic() {
+    // the CI-gated claim behind BENCH_scenarios_fleet.json: replica
+    // loss mid-trace reroutes a deterministic, nonzero share and the
+    // report is byte-identical across search and exec worker counts
+    let fs = scenarios::fleet_rebalance();
+    let a = scenarios::run_fleet_scenario(&fs, 1, 1, true).expect("fleet rebalance runs");
+    assert!(a.rerouted > 0, "the dead replica must reroute work");
+    assert_eq!(a.epoch, 1, "one loss, one rebalance");
+    assert_eq!(a.shed, 0, "unbounded queues, no QoS: conservation is pure rerouting");
+    assert_eq!(a.completed + a.rerouted, a.n_requests, "exact conservation");
+    let b = scenarios::run_fleet_scenario(&fs, 4, 8, true).expect("fleet rebalance runs");
+    assert_eq!(
+        a.deterministic_json().to_string(),
+        b.deterministic_json().to_string(),
+        "fleet rebalance report must be byte-identical across worker counts"
+    );
+}
+
+#[test]
+fn fleet_bench_doc_has_the_scenarios_fleet_shape() {
+    let reports: Vec<_> = [scenarios::fleet_fog(), scenarios::fleet_rebalance()]
+        .iter()
+        .map(|fs| scenarios::run_fleet_scenario(fs, 2, 1, true).expect("fleet run"))
+        .collect();
+    let doc = scenarios::fleet_bench_json(&reports, true, false);
+    let parsed = eenn_na::util::json::Json::parse(&doc.to_string()).expect("valid json");
+    assert_eq!(parsed.req("bench").unwrap().as_str(), Some("scenarios_fleet"));
+    assert_eq!(parsed.req("fixture").unwrap().as_str(), Some("smoke"));
+    let scen = parsed.req("scenarios").unwrap().as_obj().expect("scenarios object");
+    assert_eq!(scen.len(), 2);
+    for (name, entry) in scen {
+        assert!(entry.get("rerouted").is_some(), "{name}: rerouted ledger present");
+        assert!(entry.get("epoch").is_some(), "{name}: epoch present");
+        assert!(entry.get("timing").is_some(), "{name}: timing block present in bench json");
+        assert!(
+            entry.get("workers").is_none(),
+            "{name}: environment-derived workers must not reach the gated artifact"
+        );
+    }
+    // the deterministic variant strips the volatile keys entirely —
+    // the document the CI determinism leg byte-diffs
+    let det = scenarios::fleet_bench_json(&reports, true, true);
+    let det = eenn_na::util::json::Json::parse(&det.to_string()).expect("valid json");
+    let scen = det.req("scenarios").unwrap().as_obj().expect("scenarios object");
+    for (name, entry) in scen {
+        assert!(entry.get("timing").is_none(), "{name}: deterministic doc keeps no timing");
+    }
+}
+
+#[test]
 fn bench_json_carries_per_preset_ops_reduction() {
     // the acceptance-criterion shape of BENCH_scenarios.json
     let reports: Vec<ScenarioReport> =

@@ -21,9 +21,18 @@
 //! as the baseline to arm the gate). A missing *fresh* file always
 //! fails — the bench did not run.
 //!
+//! The gated artifact set has exactly one source of truth:
+//! [`GATED_BENCHES`]. `bench-list` prints it (the CI arming step and
+//! `ci/baselines/arm.sh` iterate over that output), and `bench-check
+//! --all` gates every name in it in one invocation — the gate and the
+//! arming step cannot drift apart.
+//!
 //! ```text
 //! cargo run -p xtask -- bench-check --fresh BENCH_scenarios.json \
 //!     --baseline ci/baselines/BENCH_scenarios.json [--tol 0.15]
+//! cargo run -p xtask -- bench-check --all [--fresh-dir .] \
+//!     [--baseline-dir ci/baselines] [--tol 0.15]
+//! cargo run -p xtask -- bench-list
 //! cargo run -p xtask -- bench-update --fresh BENCH_scenarios.json \
 //!     --baseline ci/baselines/BENCH_scenarios.json
 //! ```
@@ -33,16 +42,42 @@ use std::process::exit;
 use eenn_na::util::cli::Args;
 use eenn_na::util::json::Json;
 
+/// Every CI-gated bench artifact, by `BENCH_<name>.json` stem — the
+/// single source of truth shared by the regression gate
+/// (`bench-check --all`), the CI arming step and `arm.sh` (both loop
+/// over `bench-list`). Adding a bench = adding one entry here.
+const GATED_BENCHES: &[&str] = &[
+    "search_cost",
+    "serving_throughput",
+    "scenarios",
+    "scenarios_shed",
+    "scenarios_multi_tenant",
+    "scenarios_storm",
+    "scenarios_fleet",
+    "hotpath",
+    "hotpath_native",
+];
+
 fn main() {
     let args = Args::from_env();
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "bench-check" => bench_check(&args),
         "bench-update" => bench_update(&args),
+        "bench-list" => {
+            for name in GATED_BENCHES {
+                println!("{name}");
+            }
+            0
+        }
         _ => {
             eprintln!(
-                "usage: cargo run -p xtask -- <bench-check|bench-update> \
-                 --fresh F.json --baseline B.json [--tol 0.15]"
+                "usage: cargo run -p xtask -- <bench-check|bench-update|bench-list>\n\
+                 \x20 bench-check --fresh F.json --baseline B.json [--tol 0.15]\n\
+                 \x20 bench-check --all [--fresh-dir .] [--baseline-dir ci/baselines] \
+                 [--tol 0.15]\n\
+                 \x20 bench-update --fresh F.json --baseline B.json\n\
+                 \x20 bench-list   (print the gated artifact stems, one per line)"
             );
             2
         }
@@ -60,14 +95,31 @@ fn required(args: &Args, key: &str) -> Option<String> {
 }
 
 fn bench_check(args: &Args) -> i32 {
+    let tol = args.f64("tol", 0.15);
+    if args.bool("all") {
+        let fresh_dir = args.str("fresh-dir", ".");
+        let base_dir = args.str("baseline-dir", "ci/baselines");
+        let mut worst = 0;
+        for name in GATED_BENCHES {
+            let fresh = format!("{fresh_dir}/BENCH_{name}.json");
+            let base = format!("{base_dir}/BENCH_{name}.json");
+            worst = worst.max(check_one(&fresh, &base, tol));
+        }
+        if worst == 0 {
+            println!("bench-check: all {} gated benches OK", GATED_BENCHES.len());
+        }
+        return worst;
+    }
     let (Some(fresh_path), Some(base_path)) =
         (required(args, "fresh"), required(args, "baseline"))
     else {
         return 2;
     };
-    let tol = args.f64("tol", 0.15);
+    check_one(&fresh_path, &base_path, tol)
+}
 
-    let Ok(fresh_text) = std::fs::read_to_string(&fresh_path) else {
+fn check_one(fresh_path: &str, base_path: &str, tol: f64) -> i32 {
+    let Ok(fresh_text) = std::fs::read_to_string(fresh_path) else {
         eprintln!("bench-check: FAIL — fresh file {fresh_path} missing (bench did not run?)");
         return 1;
     };
@@ -225,6 +277,16 @@ mod tests {
         let mut out = Vec::new();
         compare("$", &j(fresh), &j(base), tol, &mut out);
         out
+    }
+
+    #[test]
+    fn gated_bench_list_is_unique_and_covers_the_fleet_artifact() {
+        let mut sorted: Vec<&str> = GATED_BENCHES.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), GATED_BENCHES.len(), "duplicate gated bench name");
+        assert!(GATED_BENCHES.contains(&"scenarios_fleet"));
+        assert!(GATED_BENCHES.iter().all(|n| !n.is_empty() && !n.contains('/')));
     }
 
     #[test]
