@@ -28,6 +28,8 @@ cargo run --release -p eenn-na --bin repro -- scenarios --smoke \
   --only overload_storm --out BENCH_scenarios_storm.json
 cargo run --release -p eenn-na --bin repro -- scenarios --smoke \
   --only fleet_rebalance --out BENCH_scenarios_fleet.json
+cargo run --release -p eenn-na --bin repro -- scenarios --smoke \
+  --only mesh_cifar --out BENCH_scenarios_mesh.json
 
 # the bench list comes from xtask — the same GATED_BENCHES constant the
 # CI regression gate (`bench-check --all`) and arming step iterate

@@ -30,7 +30,9 @@ use std::time::Instant;
 
 use eenn_na::graph::BlockGraph;
 use eenn_na::hw::presets;
-use eenn_na::mapping::sweep_assignments_with;
+use eenn_na::mapping::{
+    sweep_assignments_obj, sweep_assignments_with, MapSearch, MappingObjective,
+};
 use eenn_na::na::{
     self, count_search_space, score_candidates, threshold_grid, EdgeModel, ExitMasks,
     FlowConfig, SearchInput, Solver,
@@ -256,7 +258,7 @@ fn main() {
     // --- streamed mapping sweep: wall + allocation cost ------------------
     // 6 segments on the 4-tier fog cluster = 4096 assignments, the
     // full-enumeration ceiling. The sweep streams fixed-size chunks
-    // (mapping::SWEEP_CHUNK) instead of materializing the space, so
+    // (mapping::DEFAULT_SWEEP_CHUNK) instead of materializing the space, so
     // live memory — and with it total allocation traffic — stays
     // O(workers x chunk); the bytes recorded here are the regression
     // guard on that win.
@@ -279,6 +281,87 @@ fn main() {
         "sweep allocates {:.2} MB per pass (best assignment {:?})",
         sweep_alloc as f64 / 1e6,
         sweep_best
+    );
+
+    // --- branch-and-bound vs exhaustive mapping search -------------------
+    // same fog 4^6 space, both strategies: the winner must be
+    // bit-identical, and the deterministic pruning counters (exact-
+    // gated below) record how much of the space the bound search
+    // never touched. The wall-clock speedup lives under `timing`.
+    println!("\n--- mapping search: branch-and-bound vs exhaustive (fog 4^6) ---");
+    let obj_ex = MappingObjective { search: MapSearch::Exhaustive, ..MappingObjective::default() };
+    let obj_bnb = MappingObjective { search: MapSearch::BnB, ..MappingObjective::default() };
+    let t0 = Instant::now();
+    let ex = sweep_assignments_obj(
+        &graph,
+        &sweep_exits,
+        &fog,
+        f64::INFINITY,
+        &obj_ex,
+        Some(&sweep_pool),
+    );
+    let fog_ex_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let bnb = sweep_assignments_obj(
+        &graph,
+        &sweep_exits,
+        &fog,
+        f64::INFINITY,
+        &obj_bnb,
+        Some(&sweep_pool),
+    );
+    let fog_bnb_s = t0.elapsed().as_secs_f64();
+    let (ex_map, ex_rep) = ex.best.expect("fog sweep is feasible");
+    let (bnb_map, bnb_rep) = bnb.best.expect("fog sweep is feasible");
+    assert_eq!(ex_map, bnb_map, "B&B must return the exhaustive winner");
+    assert_eq!(
+        ex_rep.worst_case_s.to_bits(),
+        bnb_rep.worst_case_s.to_bits(),
+        "B&B winner cost must be bit-identical to the exhaustive sweep"
+    );
+    let fog_stats = bnb.stats.expect("bounded searches record SearchStats");
+    let fog_space = MappingObjective::space(sweep_exits.len() + 1, fog.processors.len());
+    println!(
+        "fog: exhaustive {} simulated in {:.1} ms; B&B {} leaves / {} expanded \
+         ({} bound-pruned, {} infeasible) in {:.1} ms — {:.1}x",
+        ex.evaluated,
+        fog_ex_s * 1e3,
+        fog_stats.leaves_evaluated,
+        fog_stats.nodes_expanded,
+        fog_stats.pruned_bound,
+        fog_stats.pruned_infeasible,
+        fog_bnb_s * 1e3,
+        fog_ex_s / fog_bnb_s
+    );
+
+    // the exhaustively intractable case: 6 segments over the 16-tile
+    // mesh = 16.7M assignments. B&B must touch well under 1% of them
+    // (the scenario-smoke gate behind the mesh_cifar preset).
+    let mesh = presets::mesh_accel();
+    let mesh_space = MappingObjective::space(sweep_exits.len() + 1, mesh.processors.len());
+    let t0 = Instant::now();
+    let msweep = sweep_assignments_obj(
+        &graph,
+        &sweep_exits,
+        &mesh,
+        f64::INFINITY,
+        &obj_bnb,
+        Some(&sweep_pool),
+    );
+    let mesh_bnb_s = t0.elapsed().as_secs_f64();
+    let mesh_stats = msweep.stats.expect("bounded searches record SearchStats");
+    assert!(msweep.best.is_some(), "mesh sweep is feasible");
+    let touched = mesh_stats.nodes_expanded + mesh_stats.leaves_evaluated;
+    assert!(
+        touched * 100 < mesh_space,
+        "B&B must touch < 1% of the mesh space ({touched} of {mesh_space})"
+    );
+    println!(
+        "mesh: 16^6 = {mesh_space} assignments; B&B touched {touched} \
+         ({:.4}% of the space, bound tightness {:.4}) in {:.1} ms",
+        100.0 * touched as f64 / mesh_space as f64,
+        mesh_stats.root_bound / mesh_stats.best_cost,
+        mesh_bnb_s * 1e3
     );
 
     // --- BENCH_search_cost.json -----------------------------------------
@@ -304,12 +387,38 @@ fn main() {
     );
     top.insert("scoring_seconds_1_worker".to_string(), Json::Num(search_s));
     top.insert("threads_sweep".to_string(), Json::Obj(results));
+    // deterministic pruning effectiveness of the bounded search: every
+    // counter is bit-stable for the fixture at any worker count, so
+    // the CI gate pins these exactly
+    let search_entry = |space: u64, s: &eenn_na::mapping::SearchStats| {
+        let mut e = BTreeMap::new();
+        e.insert("space".to_string(), Json::Num(space as f64));
+        e.insert("nodes_expanded".to_string(), Json::Num(s.nodes_expanded as f64));
+        e.insert("leaves_evaluated".to_string(), Json::Num(s.leaves_evaluated as f64));
+        e.insert("pruned_bound".to_string(), Json::Num(s.pruned_bound as f64));
+        e.insert("pruned_infeasible".to_string(), Json::Num(s.pruned_infeasible as f64));
+        e.insert(
+            "pruned_fraction".to_string(),
+            Json::Num((space - s.leaves_evaluated.min(space)) as f64 / space as f64),
+        );
+        e.insert("bound_tightness".to_string(), Json::Num(s.root_bound / s.best_cost));
+        Json::Obj(e)
+    };
+    let mut search = BTreeMap::new();
+    search.insert("fog".to_string(), search_entry(fog_space, &fog_stats));
+    search.insert("mesh".to_string(), search_entry(mesh_space, &mesh_stats));
+    top.insert("mapping_search".to_string(), Json::Obj(search));
     // allocation traffic of the streamed assignment sweep: wall-clock
     // adjacent (allocator/platform dependent), so it lives under
-    // `timing` where the CI gate applies its tolerance band
+    // `timing` where the CI gate applies its tolerance band — as do
+    // the B&B wall times and the speedup over the exhaustive sweep
     let mut timing = BTreeMap::new();
     timing.insert("mapping_sweep_seconds".to_string(), Json::Num(sweep_s));
     timing.insert("mapping_sweep_alloc_bytes".to_string(), Json::Num(sweep_alloc as f64));
+    timing.insert("mapping_exhaustive_seconds".to_string(), Json::Num(fog_ex_s));
+    timing.insert("mapping_bnb_seconds".to_string(), Json::Num(fog_bnb_s));
+    timing.insert("mapping_bnb_speedup".to_string(), Json::Num(fog_ex_s / fog_bnb_s));
+    timing.insert("mapping_mesh_bnb_seconds".to_string(), Json::Num(mesh_bnb_s));
     top.insert("timing".to_string(), Json::Obj(timing));
     let path = "BENCH_search_cost.json";
     std::fs::write(path, Json::Obj(top).to_string()).expect("write bench json");

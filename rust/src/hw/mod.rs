@@ -463,6 +463,45 @@ pub mod presets {
         }
     }
 
+    /// 16-tile mesh accelerator in the style of the many-core RISC-V
+    /// inference fabrics the related work targets (Zniber et al. —
+    /// see PAPERS.md): a linear NoC of heterogeneous compute tiles,
+    /// each with private SRAM+DRAM. At 6 segments the assignment
+    /// space is `16^6` ≈ 16.7M — far past [`crate::mapping`]'s
+    /// exhaustive regime, the platform the branch-and-bound co-search
+    /// exists for. The tiles are deliberately *strictly*
+    /// heterogeneous (no two equal compute rates): identical tiles
+    /// would create exact cost-tie plateaus that neutralize bound
+    /// pruning, which is unrepresentative of binned silicon and would
+    /// hide the search's value.
+    pub fn mesh_accel() -> Platform {
+        let processors = (0..16)
+            .map(|i| Processor {
+                name: format!("mesh-tile-{i:02}"),
+                // 2.0 → 12.5 GMAC/s across the mesh, strictly rising
+                macs_per_sec: 2e9 * (1.0 + 0.35 * i as f64),
+                active_mw: 900.0 + 140.0 * i as f64,
+                sleep_mw: 3.0,
+                mem_bytes: 512 * 1024 * 1024,
+                batch_serial_frac: 0.1,
+            })
+            .collect();
+        let links = (0..15)
+            .map(|i| Link {
+                name: format!("noc-{i:02}"),
+                bandwidth_bps: 32e9,
+                latency_s: 200e-9,
+                active_mw: 25.0,
+            })
+            .collect();
+        Platform {
+            name: "mesh-accel-16".into(),
+            processors,
+            links,
+            exclusive_memory: false,
+        }
+    }
+
     /// Single-processor platform wrapping one device (baseline target).
     pub fn single(proc: Processor) -> Platform {
         Platform {
@@ -483,6 +522,23 @@ mod tests {
         presets::psoc6().validate().unwrap();
         presets::rk3588_cloud().validate().unwrap();
         presets::fog_cluster().validate().unwrap();
+        presets::mesh_accel().validate().unwrap();
+    }
+
+    #[test]
+    fn mesh_accel_is_strictly_heterogeneous() {
+        let p = presets::mesh_accel();
+        assert_eq!(p.processors.len(), 16);
+        assert_eq!(p.links.len(), 15);
+        assert!(!p.exclusive_memory);
+        assert_eq!(p.max_classifiers(), 16);
+        // strictly rising compute rates: no exact cost-tie plateaus
+        // (they would neutralize the co-search's bound pruning)
+        for w in p.processors.windows(2) {
+            assert!(w[1].macs_per_sec > w[0].macs_per_sec);
+        }
+        // a NoC hop is orders of magnitude cheaper than the fog WAN
+        assert!(p.route_transfer_s(0, 1, 64 * 1024) < 1e-4);
     }
 
     #[test]

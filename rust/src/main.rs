@@ -23,6 +23,7 @@ use eenn_na::coordinator::{
 use eenn_na::data::load_split;
 use eenn_na::eenn::EennSolution;
 use eenn_na::graph::BlockGraph;
+use eenn_na::mapping::{MapSearch, MappingObjective};
 use eenn_na::na::{self, Calibration, EdgeModel, FlowConfig, Solver};
 use eenn_na::report;
 use eenn_na::runtime::{Engine, Manifest, WeightStore};
@@ -60,6 +61,10 @@ fn run() -> Result<()> {
                  repro augment --model dscnn [--calibration val|train --factor 1.0]\n\
                  \x20             [--w-eff 0.9 --w-acc 0.1 --latency 2.5]\n\
                  \x20             [--solver bf|dijkstra|exhaustive] [--out sol.json]\n\
+                 \x20             [--map-search auto|exhaustive|bnb|beam]\n\
+                 \x20                              assignment-space strategy for both\n\
+                 \x20                              mapping call sites; auto upgrades\n\
+                 \x20                              oversized sweeps to branch-and-bound\n\
                  \x20             [--workers N]   (search parallelism; default: all cores,\n\
                  \x20                              1 = sequential, same result either way)\n\
                  repro eval    --model dscnn --solution sol.json\n\
@@ -106,7 +111,11 @@ fn run() -> Result<()> {
                  \x20               fleet_diurnal       diurnal tent-profile arrivals\n\
                  \x20               fleet_hotkey        70% of traffic on two hot keys\n\
                  \x20               fleet_rebalance     replica loss mid-trace, exact\n\
-                 \x20                                   completed+shed+rerouted==offered"
+                 \x20                                   completed+shed+rerouted==offered\n\
+                 \x20             mesh preset (writes a scenarios_mesh document):\n\
+                 \x20               mesh_cifar          16-tile accelerator mesh, 16^6\n\
+                 \x20                                   assignments per subset — needs the\n\
+                 \x20                                   branch-and-bound mapping search"
             );
             Ok(())
         }
@@ -130,7 +139,7 @@ fn info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn flow_config(args: &Args, task: &str) -> FlowConfig {
+fn flow_config(args: &Args, task: &str) -> Result<FlowConfig> {
     let calibration = match args.str("calibration", "val").as_str() {
         "train" => Calibration::TrainFallback { factor: args.f64("factor", 1.0) },
         _ => Calibration::ValSplit,
@@ -144,7 +153,14 @@ fn flow_config(args: &Args, task: &str) -> FlowConfig {
         "independent" => EdgeModel::Independent,
         _ => EdgeModel::Pairwise,
     };
-    FlowConfig {
+    // one strategy knob drives both mapping call sites: the
+    // enumeration-time feasibility sweeps and the deployment-time
+    // co-search
+    let mapping = MappingObjective {
+        search: MapSearch::parse(&args.str("map-search", "auto"))?,
+        ..MappingObjective::default()
+    };
+    Ok(FlowConfig {
         calibration,
         latency_constraint_s: args
             .f64("latency", report::latency_constraint_for_task(task)),
@@ -152,12 +168,13 @@ fn flow_config(args: &Args, task: &str) -> FlowConfig {
         w_acc: args.f64("w-acc", 0.1),
         solver,
         edge_model,
+        mapping,
         refine: !args.bool("no-refine"),
         finetune_epochs: args.usize("finetune", 0),
         workers: args.usize("workers", na::default_workers()),
         verbose: args.bool("verbose"),
         ..FlowConfig::default()
-    }
+    })
 }
 
 fn augment(args: &Args) -> Result<()> {
@@ -167,7 +184,7 @@ fn augment(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("--model required"))?;
     let model = man.model(model_name)?;
     let platform = report::platform_for_task(&model.task);
-    let cfg = flow_config(args, &model.task);
+    let cfg = flow_config(args, &model.task)?;
     let engine = Engine::new()?;
     let out = na::augment(&engine, &man, model_name, &platform, &cfg)?;
     println!(
@@ -399,7 +416,9 @@ fn serve_cmd(args: &Args) -> Result<()> {
 /// reports into `BENCH_scenarios.json`. No artifacts or PJRT needed.
 /// `--only` takes an exact preset name or a trailing-`*` glob; fleet
 /// presets (`--only 'fleet_*'`) run the replicated executor and write
-/// a `scenarios_fleet` document instead.
+/// a `scenarios_fleet` document instead; the mesh preset (`--only
+/// mesh_cifar`) exercises the branch-and-bound mapping search and
+/// writes a `scenarios_mesh` document.
 fn scenarios_cmd(args: &Args) -> Result<()> {
     use eenn_na::scenarios;
 
@@ -425,26 +444,35 @@ fn scenarios_cmd(args: &Args) -> Result<()> {
 
     let base = scenarios::all();
     let fleet = scenarios::fleet_all();
+    let mesh = scenarios::mesh_all();
     let sel_base: Vec<_> = base.iter().filter(|sc| matches_only(sc.name)).collect();
     // the default run (no --only) is the base matrix, unchanged; the
-    // fleet matrix is opted into by name or glob
+    // fleet and mesh matrices are opted into by name or glob
     let sel_fleet: Vec<_> = match only {
         None => Vec::new(),
         Some(_) => fleet.iter().filter(|fs| matches_only(fs.base.name)).collect(),
     };
-    if sel_base.is_empty() && sel_fleet.is_empty() {
+    let sel_mesh: Vec<_> = match only {
+        None => Vec::new(),
+        Some(_) => mesh.iter().filter(|sc| matches_only(sc.name)).collect(),
+    };
+    if sel_base.is_empty() && sel_fleet.is_empty() && sel_mesh.is_empty() {
         let mut names: Vec<&str> = base.iter().map(|s| s.name).collect();
         names.extend(fleet.iter().map(|s| s.base.name));
+        names.extend(mesh.iter().map(|s| s.name));
         return Err(anyhow!(
             "no preset matches {:?}; available: {}",
             only.unwrap_or(""),
             names.join(", ")
         ));
     }
-    if !sel_base.is_empty() && !sel_fleet.is_empty() {
+    let classes =
+        [!sel_base.is_empty(), !sel_fleet.is_empty(), !sel_mesh.is_empty()];
+    if classes.iter().filter(|&&c| c).count() > 1 {
         return Err(anyhow!(
-            "base and fleet presets aggregate into different bench documents \
-             (scenarios vs scenarios_fleet); run them as separate invocations"
+            "base, fleet and mesh presets aggregate into different bench documents \
+             (scenarios / scenarios_fleet / scenarios_mesh); run them as separate \
+             invocations"
         ));
     }
     if !sel_fleet.is_empty() && !matches!(backend, Backend::Synthetic) {
@@ -453,11 +481,29 @@ fn scenarios_cmd(args: &Args) -> Result<()> {
 
     println!(
         "=== scenario matrix ({} presets{}, {workers} workers, {} backend) ===\n",
-        sel_base.len() + sel_fleet.len(),
+        sel_base.len() + sel_fleet.len() + sel_mesh.len(),
         if smoke { ", smoke" } else { "" },
         backend.name()
     );
-    let doc = if sel_fleet.is_empty() {
+    let doc = if !sel_fleet.is_empty() {
+        let mut reports = Vec::with_capacity(sel_fleet.len());
+        for fs in sel_fleet {
+            let r = scenarios::run_fleet_scenario(fs, workers, exec_workers, smoke)?;
+            r.print();
+            println!();
+            reports.push(r);
+        }
+        scenarios::fleet_bench_json(&reports, smoke, deterministic)
+    } else if !sel_mesh.is_empty() {
+        let mut reports = Vec::with_capacity(sel_mesh.len());
+        for sc in sel_mesh {
+            let r = scenarios::run_scenario_with(sc, workers, exec_workers, smoke, backend)?;
+            r.print();
+            println!();
+            reports.push(r);
+        }
+        scenarios::mesh_bench_json(&reports, smoke, deterministic)
+    } else {
         let mut reports = Vec::with_capacity(sel_base.len());
         for sc in sel_base {
             let r = scenarios::run_scenario_with(sc, workers, exec_workers, smoke, backend)?;
@@ -470,15 +516,6 @@ fn scenarios_cmd(args: &Args) -> Result<()> {
         } else {
             scenarios::bench_json(&reports, smoke)
         }
-    } else {
-        let mut reports = Vec::with_capacity(sel_fleet.len());
-        for fs in sel_fleet {
-            let r = scenarios::run_fleet_scenario(fs, workers, exec_workers, smoke)?;
-            r.print();
-            println!();
-            reports.push(r);
-        }
-        scenarios::fleet_bench_json(&reports, smoke, deterministic)
     };
     std::fs::write(&out_path, doc.to_string())?;
     println!("wrote {out_path}");

@@ -25,18 +25,72 @@
 //!   chain is always part of the search space, so the chosen mapping
 //!   never costs more than the seed behaviour.
 //!
-//! The search space is `nproc^nseg` assignments; platforms stay small
-//! (the paper's testbeds have 2–3 targets and at most one classifier
-//! per processor), so exhaustive enumeration is cheap. Past
-//! [`MAX_ASSIGNMENTS`] the space is restricted to pipeline-ordered
-//! (non-decreasing) assignments as a tractable fallback. Either way
-//! the space is **streamed** ([`AssignmentIter`]), never materialized:
-//! the sweeps simulate fixed-size chunks as they are generated, so
-//! the enumeration/simulation working set stays O(workers × chunk)
-//! instead of O(assignments). (The *feasible survivors* are still
-//! retained — the co-search needs the full feasible set for its
-//! normalization and argmin — so a loose constraint keeps
-//! O(feasible) mapping+report pairs live.)
+//! # Search strategies
+//!
+//! The assignment space is `nproc^nseg`. [`MappingObjective::search`]
+//! selects how it is covered (CLI: `repro augment --map-search
+//! {auto,exhaustive,bnb,beam}`):
+//!
+//! * [`MapSearch::Exhaustive`] — stream every assignment
+//!   ([`AssignmentIter`]) and simulate each in fixed-size chunks
+//!   ([`MappingObjective::sweep_chunk`]) fanned out over the thread
+//!   pool. Past [`MAX_ASSIGNMENTS`] the stream is restricted to
+//!   pipeline-ordered (non-decreasing) assignments as a tractable
+//!   fallback, so above that threshold exhaustion is *not* complete.
+//! * [`MapSearch::BnB`] — branch-and-bound: depth-first search over
+//!   segment→processor prefixes that prunes a subtree when
+//!   `committed_prefix_cost + optimistic_remainder` cannot beat the
+//!   incumbent, with the memory-budget and worst-case-latency
+//!   feasibility checks applied incrementally at each prefix
+//!   extension. Searches the **full** product space (no monotone
+//!   fallback) and reaches 16-processor meshes (`16^6` ≈ 16.7M) in
+//!   milliseconds. Parallelized by fanning the top-level branches
+//!   (segment 0's processor) over the pool with a deterministic
+//!   in-branch-order argmin merge.
+//! * [`MapSearch::Beam`] — bounded-width heuristic: keep the
+//!   [`MappingObjective::beam_width`] best-bounded prefixes per
+//!   segment. Never worse than the identity chain (the chain seeds the
+//!   incumbent) and exact when the width covers the whole space, but
+//!   otherwise carries no optimality guarantee.
+//!
+//! [`MapSearch::Auto`] (the default) picks `Exhaustive` while
+//! `nproc^nseg` stays within [`MappingObjective::auto_threshold`]
+//! (default [`MAX_ASSIGNMENTS`], i.e. exactly the regime the seed
+//! enumerated completely) and `BnB` beyond it — so small platforms keep
+//! their historical bit-exact sweep and large ones upgrade from the
+//! monotone-subspace fallback to a complete bounded search.
+//!
+//! # Bound admissibility
+//!
+//! Both objectives are **chain-decomposable**: with `tail(t)` the
+//! termination mass at classifier `t` or later, the expected
+//! scalarized cost is `Σ_t tail(t)·(α·stage_lat(t,q,p) +
+//! β·stage_energy(t,q,p))` where stage `t`'s latency/energy depend
+//! only on `t`, the previous segment's processor `q` and its own
+//! processor `p` (worst-case latency is the same sum with `α=1, β=0,
+//! tail≡1`). [`SearchTables`] precomputes every `stage(t,q,p)` from
+//! the analytic sim's per-segment latency/energy/memory model, and a
+//! suffix DP computes `suffix(t,q)` = the exact minimum of stages
+//! `t..` over *all* completions given segment `t-1` on `q`, with the
+//! memory and latency constraints dropped. Dropping constraints only
+//! enlarges the feasible set, so `committed(prefix) +
+//! suffix(t,q)` is an admissible (never over-estimating) lower bound
+//! on every completion of the prefix — a subtree is pruned only when
+//! even its constraint-free optimum cannot beat the incumbent.
+//!
+//! Determinism and exactness discipline: leaves are evaluated through
+//! the same `sim::simulate` call as the exhaustive sweep, so the
+//! winner and its cost carry the exhaustive path's exact f64 bits —
+//! the bounds only ever *prune*. Table sums and the simulator
+//! accumulate in different orders, so every bound comparison is
+//! guarded by a relative slack ([`BOUND_SLACK`]) that dwarfs the
+//! worst-case rounding drift; consequently no assignment the
+//! exhaustive argmin would strictly accept is ever pruned, and
+//! mappings whose costs differ by less than ~1 part in 10^12 may
+//! resolve to either candidate (real platform tables separate
+//! candidates at ≥1e-3 relative). The search space is **streamed** in
+//! both strategies — chunks for the exhaustive sweep, a DFS stack for
+//! B&B — never materialized.
 
 use std::sync::Arc;
 
@@ -45,7 +99,7 @@ use anyhow::{bail, Result};
 use crate::graph::BlockGraph;
 use crate::hw::Platform;
 use crate::sim::{simulate, SimReport};
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{map_maybe, ThreadPool};
 
 /// Index into `Platform::processors`.
 pub type ProcId = usize;
@@ -133,9 +187,22 @@ impl Mapping {
     }
 }
 
-/// Above this many assignments, enumeration falls back to
-/// pipeline-ordered (non-decreasing) assignments only.
+/// Above this many assignments, exhaustive enumeration falls back to
+/// pipeline-ordered (non-decreasing) assignments only (and
+/// [`MapSearch::Auto`] switches to branch-and-bound instead).
 pub const MAX_ASSIGNMENTS: usize = 4096;
+
+/// Strict-improvement window of the deterministic argmin: a candidate
+/// must beat the incumbent by more than this to displace it.
+const COST_TIE: f64 = 1e-15;
+
+/// Relative slack applied to every analytic lower bound before it is
+/// compared against the incumbent or the latency constraint. Covers
+/// the summation-order drift between the bound tables and the
+/// simulator (≤ a few ulps per stage, ~1e-14 relative at worst), so a
+/// leaf the exhaustive argmin would strictly accept can never be
+/// pruned by its table-side bound.
+const BOUND_SLACK: f64 = 1.0 - 1e-12;
 
 /// Streaming enumeration of segment→processor assignments, in the
 /// exact order [`enumerate_assignments`] materializes: full
@@ -143,25 +210,56 @@ pub const MAX_ASSIGNMENTS: usize = 4096;
 /// [`MAX_ASSIGNMENTS`]; non-decreasing (pipeline-ordered) assignments
 /// only beyond that. One live `Vec` of state, one allocation per item
 /// yielded — the sweep layers consume it in bounded chunks so the
-/// co-search never materializes the exponential space.
+/// co-search never materializes the exponential space. The remaining
+/// length is known exactly up front (saturating at `usize::MAX`), so
+/// `size_hint` is exact and the iterator is [`ExactSizeIterator`] —
+/// chunked sweeps can size their buffers without over-allocating.
 pub struct AssignmentIter {
     next: Option<Vec<ProcId>>,
     nproc: usize,
     /// Non-decreasing fallback mode (space too large for full
     /// enumeration).
     monotone: bool,
+    /// Items not yet yielded (exact, saturating at `usize::MAX`).
+    remaining: usize,
+}
+
+/// `nproc^nseg`, saturating.
+fn full_space(nseg: usize, nproc: usize) -> u128 {
+    (nproc as u128).checked_pow(nseg as u32).unwrap_or(u128::MAX)
+}
+
+/// Number of non-decreasing assignments: `C(nseg + nproc - 1, nseg)`,
+/// saturating.
+fn monotone_space(nseg: usize, nproc: usize) -> u128 {
+    // multiplicative binomial with the smaller symmetric index; each
+    // intermediate product is divisible by i so the division is exact
+    let b = nseg.min(nproc - 1) as u128;
+    let a = (nseg + nproc - 1) as u128;
+    let mut c: u128 = 1;
+    for i in 1..=b {
+        c = match c.checked_mul(a - b + i) {
+            Some(v) => v / i,
+            None => return u128::MAX,
+        };
+    }
+    c
 }
 
 impl AssignmentIter {
     pub fn new(nseg: usize, nproc: usize) -> Self {
         if nseg == 0 || nproc == 0 {
-            return AssignmentIter { next: None, nproc, monotone: false };
+            return AssignmentIter { next: None, nproc, monotone: false, remaining: 0 };
         }
-        let full = (nproc as u64)
-            .checked_pow(nseg as u32)
-            .map(|s| s <= MAX_ASSIGNMENTS as u64)
-            .unwrap_or(false);
-        AssignmentIter { next: Some(vec![0; nseg]), nproc, monotone: !full }
+        let space = full_space(nseg, nproc);
+        let full = space <= MAX_ASSIGNMENTS as u128;
+        let remaining = if full { space } else { monotone_space(nseg, nproc) };
+        AssignmentIter {
+            next: Some(vec![0; nseg]),
+            nproc,
+            monotone: !full,
+            remaining: usize::try_from(remaining).unwrap_or(usize::MAX),
+        }
     }
 }
 
@@ -212,9 +310,16 @@ impl Iterator for AssignmentIter {
         if advanced {
             self.next = Some(succ);
         }
+        self.remaining = self.remaining.saturating_sub(1);
         Some(cur)
     }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining, Some(self.remaining))
+    }
 }
+
+impl ExactSizeIterator for AssignmentIter {}
 
 /// Every segment→processor assignment for `nseg` segments on `nproc`
 /// processors, materialized in [`AssignmentIter`] order. Kept for the
@@ -222,6 +327,47 @@ impl Iterator for AssignmentIter {
 /// iterator instead.
 pub fn enumerate_assignments(nseg: usize, nproc: usize) -> Vec<Vec<ProcId>> {
     AssignmentIter::new(nseg, nproc).collect()
+}
+
+/// Deterministic pruning/expansion counters of a bounded search run.
+/// Every field is bit-stable for a given (graph, exits, platform,
+/// objective) at any worker count — the CI bench gate pins them
+/// exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchStats {
+    /// Internal prefix nodes whose children were generated (the root
+    /// counts once).
+    pub nodes_expanded: u64,
+    /// Complete assignments scored through `sim::simulate` (includes
+    /// the incumbent-seeding chain).
+    pub leaves_evaluated: u64,
+    /// Subtrees cut because their admissible bound could not beat the
+    /// incumbent (for beam: also prefixes dropped by width
+    /// truncation).
+    pub pruned_bound: u64,
+    /// Subtrees cut by the incremental memory-budget or
+    /// worst-case-latency feasibility checks.
+    pub pruned_infeasible: u64,
+    /// Admissible bound at the root (constraint-free optimum of the
+    /// whole space).
+    pub root_bound: f64,
+    /// Cost of the returned winner (`INFINITY` when nothing was
+    /// feasible). `root_bound / best_cost` ≤ 1 measures bound
+    /// tightness.
+    pub best_cost: f64,
+}
+
+impl Default for SearchStats {
+    fn default() -> Self {
+        SearchStats {
+            nodes_expanded: 0,
+            leaves_evaluated: 0,
+            pruned_bound: 0,
+            pruned_infeasible: 0,
+            root_bound: f64::INFINITY,
+            best_cost: f64::INFINITY,
+        }
+    }
 }
 
 /// Feasibility sweep over every assignment of one architecture.
@@ -235,6 +381,9 @@ pub struct FeasibilitySweep {
     pub any_memory_ok: bool,
     /// Assignments simulated.
     pub evaluated: usize,
+    /// Pruning counters when a bounded strategy ran (`None` for the
+    /// exhaustive sweep).
+    pub stats: Option<SearchStats>,
 }
 
 /// Shared enumerate-simulate-filter pass: every assignment of `exits`
@@ -246,7 +395,8 @@ struct AssignmentSweep {
 }
 
 /// The per-assignment unit of work, shared verbatim by the pooled and
-/// inline arms of [`feasible_assignments`].
+/// inline arms of [`feasible_assignments`] and by every bounded-search
+/// leaf — one simulator entry point keeps all strategies bit-aligned.
 fn simulate_assignment(
     graph: &BlockGraph,
     exits: &[usize],
@@ -258,23 +408,23 @@ fn simulate_assignment(
     (mapping, report)
 }
 
-/// Assignments simulated per streamed chunk: the enumeration buffer
-/// and in-flight simulation reports are bounded at
-/// O(workers × SWEEP_CHUNK) instead of the whole (potentially
-/// exponential) assignment space, while each pooled dispatch still
-/// amortizes its fan-out overhead over a full chunk. (Feasible
-/// survivors are accumulated on top — see the module docs.)
-const SWEEP_CHUNK: usize = 64;
+/// Default for [`MappingObjective::sweep_chunk`]: assignments
+/// simulated per streamed chunk, bounding the enumeration buffer and
+/// in-flight reports at O(workers × chunk) while each pooled dispatch
+/// still amortizes its fan-out overhead over a full chunk.
+pub const DEFAULT_SWEEP_CHUNK: usize = 64;
 
 fn feasible_assignments(
     graph: &BlockGraph,
     exits: &[usize],
     platform: &Platform,
     latency_constraint_s: f64,
+    chunk_size: usize,
     pool: Option<&ThreadPool>,
 ) -> AssignmentSweep {
     let nseg = exits.len() + 1;
     let nproc = platform.processors.len();
+    let chunk_size = chunk_size.max(1);
     // streamed enumeration: chunks are generated on the fly and the
     // per-assignment simulation fans out over the pool per chunk; both
     // arms run the same `simulate_assignment` body in enumeration
@@ -290,7 +440,8 @@ fn feasible_assignments(
     let mut any_memory_ok = false;
     let mut evaluated = 0usize;
     loop {
-        let chunk: Vec<Vec<ProcId>> = iter.by_ref().take(SWEEP_CHUNK).collect();
+        let take = chunk_size.min(iter.len().max(1));
+        let chunk: Vec<Vec<ProcId>> = iter.by_ref().take(take).collect();
         if chunk.is_empty() {
             break;
         }
@@ -328,10 +479,10 @@ fn select_best<T>(items: &[(Mapping, T)], cost: impl Fn(&T) -> f64) -> Option<us
         let better = match best {
             None => true,
             Some((bi, bc)) => {
-                c < bc - 1e-15
+                c < bc - COST_TIE
                     || (mapping.is_chain()
                         && !items[bi].0.is_chain()
-                        && (c - bc).abs() <= 1e-15)
+                        && (c - bc).abs() <= COST_TIE)
             }
         };
         if better {
@@ -339,6 +490,766 @@ fn select_best<T>(items: &[(Mapping, T)], cost: impl Fn(&T) -> f64) -> Option<us
         }
     }
     best.map(|(i, _)| i)
+}
+
+// ---------------------------------------------------------------------------
+// Bounded search: shared analytic tables, admissible suffix bounds, and
+// the branch-and-bound / beam engines.
+// ---------------------------------------------------------------------------
+
+/// Per-stage latency/energy/memory tables mirroring `sim::simulate`'s
+/// cost model: stage `t` on processor `p` after stage `t-1` on `q`
+/// contributes `stage_lat(t,q,p)` seconds and `stage_energy(t,q,p)`
+/// millijoules (compute energy includes the platform-wide sleep floor
+/// exactly as the simulator charges it). Memory is exact `u64`
+/// arithmetic, so the incremental prefix checks reproduce the
+/// simulator's final verdict bit-for-bit.
+struct SearchTables {
+    nseg: usize,
+    nproc: usize,
+    /// Stage 0 (ingress transfer from processor 0 + compute) per
+    /// processor.
+    lat0: Vec<f64>,
+    energy0: Vec<f64>,
+    /// Stage `t ≥ 1`: `lat[t-1][q][p]` (transfer `q→p` + compute).
+    lat: Vec<Vec<Vec<f64>>>,
+    energy: Vec<Vec<Vec<f64>>>,
+    /// Parameter bytes a stage pins on its processor (segment + head).
+    mem_params: Vec<u64>,
+    /// Peak activation bytes of a stage.
+    seg_act: Vec<u64>,
+    /// Per-processor memory budgets.
+    mem_bytes: Vec<u64>,
+}
+
+impl SearchTables {
+    fn build(graph: &BlockGraph, exits: &[usize], platform: &Platform) -> SearchTables {
+        let nseg = exits.len() + 1;
+        let nproc = platform.processors.len();
+        let nb = graph.blocks.len();
+        let bounds = |t: usize| -> (usize, usize) {
+            let lo = if t == 0 { 0 } else { exits[t - 1] + 1 };
+            let hi = if t < exits.len() { exits[t] } else { nb - 1 };
+            (lo, hi)
+        };
+        let sleep_sum: f64 = platform.processors.iter().map(|p| p.sleep_mw).sum();
+        let mut comp_s = vec![vec![0.0f64; nproc]; nseg];
+        let mut comp_e = vec![vec![0.0f64; nproc]; nseg];
+        let mut mem_params = vec![0u64; nseg];
+        let mut seg_act = vec![0u64; nseg];
+        for t in 0..nseg {
+            let (lo, hi) = bounds(t);
+            let blocks = &graph.blocks[lo..=hi];
+            let macs: u64 =
+                blocks.iter().map(|b| b.macs).sum::<u64>() + graph.head_macs(hi);
+            mem_params[t] = blocks.iter().map(|b| b.param_bytes).sum::<u64>()
+                + graph.head_param_bytes(hi);
+            seg_act[t] = blocks.iter().map(|b| b.act_bytes).max().unwrap_or(0);
+            for (p, proc) in platform.processors.iter().enumerate() {
+                let cs = macs as f64 / proc.macs_per_sec;
+                comp_s[t][p] = cs;
+                // the simulator charges the active processor plus the
+                // sleep floor of every *other* processor for the
+                // stage's duration
+                comp_e[t][p] = cs * (proc.active_mw + (sleep_sum - proc.sleep_mw));
+            }
+        }
+        let in_bytes = graph.blocks[0].act_bytes.saturating_sub(graph.blocks[0].ifm_bytes);
+        let lat0: Vec<f64> = (0..nproc)
+            .map(|p| platform.route_transfer_s(0, p, in_bytes) + comp_s[0][p])
+            .collect();
+        let energy0: Vec<f64> = (0..nproc)
+            .map(|p| platform.route_transfer_energy_mj(0, p, in_bytes) + comp_e[0][p])
+            .collect();
+        let mut lat = Vec::with_capacity(nseg.saturating_sub(1));
+        let mut energy = Vec::with_capacity(nseg.saturating_sub(1));
+        for t in 1..nseg {
+            let (lo, _) = bounds(t);
+            let bytes = graph.blocks[lo - 1].ifm_bytes;
+            lat.push(
+                (0..nproc)
+                    .map(|q| {
+                        (0..nproc)
+                            .map(|p| platform.route_transfer_s(q, p, bytes) + comp_s[t][p])
+                            .collect()
+                    })
+                    .collect(),
+            );
+            energy.push(
+                (0..nproc)
+                    .map(|q| {
+                        (0..nproc)
+                            .map(|p| {
+                                platform.route_transfer_energy_mj(q, p, bytes) + comp_e[t][p]
+                            })
+                            .collect()
+                    })
+                    .collect(),
+            );
+        }
+        let mem_bytes = platform.processors.iter().map(|p| p.mem_bytes).collect();
+        SearchTables { nseg, nproc, lat0, energy0, lat, energy, mem_params, seg_act, mem_bytes }
+    }
+
+    fn stage_lat(&self, t: usize, q: ProcId, p: ProcId) -> f64 {
+        if t == 0 {
+            self.lat0[p]
+        } else {
+            self.lat[t - 1][q][p]
+        }
+    }
+}
+
+/// `tails[s] = Σ_{t ≥ s} term[t]`: probability the input reaches
+/// segment `s` (all-ones for the worst-case objective).
+fn tails_of(term: &[f64]) -> Vec<f64> {
+    let mut tails = vec![0.0; term.len()];
+    let mut acc = 0.0;
+    for t in (0..term.len()).rev() {
+        acc += term[t];
+        tails[t] = acc;
+    }
+    tails
+}
+
+/// Strategy- and worker-invariant normalization for the bounded
+/// co-search: the cost of running every stage on its *worst*
+/// `(q, p)` pairing, weighted by reach probability. Derived purely
+/// from the analytic tables, so it does not depend on which subset of
+/// assignments a search happens to visit (the exhaustive
+/// feasible-maximum normalization is incompatible with pruning).
+fn analytic_norms(tables: &SearchTables, tails: &[f64]) -> (f64, f64) {
+    let mut lat_norm = 0.0;
+    let mut e_norm = 0.0;
+    for t in 0..tables.nseg {
+        let (lmax, emax) = if t == 0 {
+            (
+                tables.lat0.iter().cloned().fold(f64::MIN, f64::max),
+                tables.energy0.iter().cloned().fold(f64::MIN, f64::max),
+            )
+        } else {
+            (
+                tables.lat[t - 1]
+                    .iter()
+                    .flatten()
+                    .cloned()
+                    .fold(f64::MIN, f64::max),
+                tables.energy[t - 1]
+                    .iter()
+                    .flatten()
+                    .cloned()
+                    .fold(f64::MIN, f64::max),
+            )
+        };
+        lat_norm += tails[t] * lmax;
+        e_norm += tails[t] * emax;
+    }
+    (lat_norm.max(1e-12), e_norm.max(1e-12))
+}
+
+/// Admissible lower bounds for the bounded searches: `suffix[t][q]` is
+/// the exact constraint-free optimum of stages `t..` given stage `t-1`
+/// on `q` (`suffix[nseg]` ≡ 0), for the weighted objective and for raw
+/// worst-case latency (which backs the incremental latency-feasibility
+/// prune).
+struct BoundModel {
+    /// Weighted stage-0 cost per processor.
+    w0: Vec<f64>,
+    /// Weighted stage cost `w[t-1][q][p]` for `t ≥ 1`.
+    w: Vec<Vec<Vec<f64>>>,
+    suffix: Vec<Vec<f64>>,
+    wc_suffix: Vec<Vec<f64>>,
+    root_bound: f64,
+}
+
+/// Layered shortest-path DP over `stage[t-1][q][p]` tables (the
+/// constraint-relaxed assignment problem is exactly a layered graph).
+fn suffix_dp(stage: &[Vec<Vec<f64>>], nseg: usize, nproc: usize) -> Vec<Vec<f64>> {
+    let mut suffix = vec![vec![0.0f64; nproc]; nseg + 1];
+    for t in (1..nseg).rev() {
+        for q in 0..nproc {
+            let mut m = f64::INFINITY;
+            for p in 0..nproc {
+                let v = stage[t - 1][q][p] + suffix[t + 1][p];
+                if v < m {
+                    m = v;
+                }
+            }
+            suffix[t][q] = m;
+        }
+    }
+    suffix
+}
+
+impl BoundModel {
+    /// `alpha`/`beta` scalarize latency/energy (`1, 0` for the
+    /// worst-case sweep); `tails` weights each stage by its reach
+    /// probability.
+    fn build(tables: &SearchTables, tails: &[f64], alpha: f64, beta: f64) -> BoundModel {
+        let (nseg, nproc) = (tables.nseg, tables.nproc);
+        let w0: Vec<f64> = (0..nproc)
+            .map(|p| tails[0] * (alpha * tables.lat0[p] + beta * tables.energy0[p]))
+            .collect();
+        let w: Vec<Vec<Vec<f64>>> = (1..nseg)
+            .map(|t| {
+                (0..nproc)
+                    .map(|q| {
+                        (0..nproc)
+                            .map(|p| {
+                                tails[t]
+                                    * (alpha * tables.lat[t - 1][q][p]
+                                        + beta * tables.energy[t - 1][q][p])
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let suffix = suffix_dp(&w, nseg, nproc);
+        let wc_suffix = suffix_dp(&tables.lat, nseg, nproc);
+        let root_bound = (0..nproc)
+            .map(|p| w0[p] + suffix[1][p])
+            .fold(f64::INFINITY, f64::min);
+        BoundModel { w0, w, suffix, wc_suffix, root_bound }
+    }
+
+    fn wstage(&self, t: usize, q: ProcId, p: ProcId) -> f64 {
+        if t == 0 {
+            self.w0[p]
+        } else {
+            self.w[t - 1][q][p]
+        }
+    }
+}
+
+/// How a complete assignment is scored at a leaf. Both variants read
+/// the exact `SimReport`, so leaf costs carry the exhaustive sweep's
+/// f64 bits.
+#[derive(Clone)]
+enum LeafCost {
+    /// Enumeration-time sweep: minimize worst-case latency.
+    WorstCase,
+    /// Deployment-time co-search: scalarized expected latency/energy
+    /// under the termination distribution, with fixed (analytic)
+    /// normalization.
+    Expected { w_latency: f64, w_energy: f64, lat_norm: f64, e_norm: f64, term: Vec<f64> },
+}
+
+impl LeafCost {
+    fn eval(&self, report: &SimReport) -> f64 {
+        match self {
+            LeafCost::WorstCase => report.worst_case_s,
+            LeafCost::Expected { w_latency, w_energy, lat_norm, e_norm, term } => {
+                let (lat, e, _) = report.expected(term);
+                w_latency * lat / lat_norm + w_energy * e / e_norm
+            }
+        }
+    }
+}
+
+/// Everything a branch worker needs, shared read-only across the
+/// top-level fan-out.
+struct SearchCtx {
+    graph: BlockGraph,
+    exits: Vec<usize>,
+    platform: Platform,
+    tables: SearchTables,
+    bounds: BoundModel,
+    leaf: LeafCost,
+    constraint: f64,
+    /// Incumbent seed: the identity chain's exact cost (`INFINITY`
+    /// when the chain is missing or infeasible).
+    chain_cost: f64,
+}
+
+/// Result of a bounded search, common to both engines.
+struct SearchOutcome {
+    best: Option<(Mapping, SimReport, f64)>,
+    chain_cost: f64,
+    any_memory_ok: bool,
+    stats: SearchStats,
+}
+
+/// Simulate the identity chain once to seed the incumbent (only valid
+/// when there are at least as many processors as segments). Returns
+/// `(feasible entry, chain memory ok, chain simulated)`.
+fn chain_seed(
+    graph: &BlockGraph,
+    exits: &[usize],
+    platform: &Platform,
+    constraint: f64,
+    leaf: &LeafCost,
+) -> (Option<(Mapping, SimReport, f64)>, bool, bool) {
+    let nseg = exits.len() + 1;
+    if nseg > platform.processors.len() {
+        return (None, false, false);
+    }
+    let (m, r) = simulate_assignment(graph, exits, platform, (0..nseg).collect());
+    let memory_ok = r.memory_ok.iter().all(|&ok| ok);
+    if memory_ok && r.worst_case_s <= constraint {
+        let c = leaf.eval(&r);
+        (Some((m, r, c)), true, true)
+    } else {
+        (None, memory_ok, true)
+    }
+}
+
+/// One top-level branch of the DFS (segment 0 pinned to `p0`), fully
+/// sequential and deterministic: children are tried in increasing
+/// processor id, so the branch-local best is the lex-smallest strict
+/// optimum of its subtree.
+struct BranchDfs<'a> {
+    ctx: &'a SearchCtx,
+    assign: Vec<ProcId>,
+    params: Vec<u64>,
+    act: Vec<u64>,
+    inc: f64,
+    best: Option<(Vec<ProcId>, f64)>,
+    stats: SearchStats,
+    any_leaf: bool,
+}
+
+impl BranchDfs<'_> {
+    fn run(ctx: &SearchCtx, p0: ProcId) -> (Option<(Vec<ProcId>, f64)>, SearchStats, bool) {
+        let mut dfs = BranchDfs {
+            ctx,
+            assign: vec![0; ctx.tables.nseg],
+            params: vec![0; ctx.tables.nproc],
+            act: vec![0; ctx.tables.nproc],
+            inc: ctx.chain_cost,
+            best: None,
+            stats: SearchStats { root_bound: ctx.bounds.root_bound, ..Default::default() },
+            any_leaf: false,
+        };
+        dfs.extend(0, 0, p0, 0.0, 0.0);
+        (dfs.best, dfs.stats, dfs.any_leaf)
+    }
+
+    /// Try to place stage `t` (previous stage on `q`) on `p`, with
+    /// `cost`/`wc` the committed weighted cost and worst-case latency
+    /// of stages `0..t`. Check order is fixed (memory → latency →
+    /// bound) so the per-reason counters are deterministic.
+    fn extend(&mut self, t: usize, q: ProcId, p: ProcId, cost: f64, wc: f64) {
+        let tables = &self.ctx.tables;
+        let bounds = &self.ctx.bounds;
+        let new_params = self.params[p] + tables.mem_params[t];
+        let new_act = self.act[p].max(tables.seg_act[t]);
+        if new_params + new_act > tables.mem_bytes[p] {
+            self.stats.pruned_infeasible += 1;
+            return;
+        }
+        let wc2 = wc + tables.stage_lat(t, q, p);
+        if (wc2 + bounds.wc_suffix[t + 1][p]) * BOUND_SLACK > self.ctx.constraint {
+            self.stats.pruned_infeasible += 1;
+            return;
+        }
+        let cost2 = cost + bounds.wstage(t, q, p);
+        if (cost2 + bounds.suffix[t + 1][p]) * BOUND_SLACK >= self.inc - COST_TIE {
+            self.stats.pruned_bound += 1;
+            return;
+        }
+        let (save_params, save_act) = (self.params[p], self.act[p]);
+        self.params[p] = new_params;
+        self.act[p] = new_act;
+        self.assign[t] = p;
+        if t + 1 == tables.nseg {
+            self.leaf();
+        } else {
+            self.stats.nodes_expanded += 1;
+            for p2 in 0..tables.nproc {
+                self.extend(t + 1, p, p2, cost2, wc2);
+            }
+        }
+        self.params[p] = save_params;
+        self.act[p] = save_act;
+    }
+
+    fn leaf(&mut self) {
+        self.stats.leaves_evaluated += 1;
+        // every prefix memory check passed, so this assignment is
+        // memory-feasible by the simulator's own arithmetic
+        self.any_leaf = true;
+        let ctx = self.ctx;
+        let (_, report) =
+            simulate_assignment(&ctx.graph, &ctx.exits, &ctx.platform, self.assign.clone());
+        debug_assert!(report.memory_ok.iter().all(|&ok| ok));
+        if report.worst_case_s <= ctx.constraint {
+            let c = ctx.leaf.eval(&report);
+            if c < self.inc - COST_TIE {
+                self.inc = c;
+                self.best = Some((self.assign.clone(), c));
+            }
+        }
+    }
+}
+
+/// Cap on the dedicated memory-feasibility witness search (run only
+/// when the chain is memory-infeasible *and* pruning kept the DFS from
+/// reaching any leaf). Conservative `false` on cap exhaustion — an
+/// honest residual: a pathologically tight 16-way mesh could be
+/// reported memory-infeasible without exhausting the space.
+const WITNESS_NODE_CAP: u64 = 2_000_000;
+
+/// Does any assignment satisfy the memory budgets (latency ignored)?
+/// Exact `u64` prefix arithmetic, lex DFS, bounded by
+/// [`WITNESS_NODE_CAP`]; `None` means the cap was hit first.
+fn memory_witness(
+    tables: &SearchTables,
+    t: usize,
+    params: &mut [u64],
+    act: &mut [u64],
+    nodes: &mut u64,
+) -> Option<bool> {
+    if *nodes == 0 {
+        return None;
+    }
+    *nodes -= 1;
+    if t == tables.nseg {
+        return Some(true);
+    }
+    for p in 0..tables.nproc {
+        let np = params[p] + tables.mem_params[t];
+        let na = act[p].max(tables.seg_act[t]);
+        if np + na > tables.mem_bytes[p] {
+            continue;
+        }
+        let (sp, sa) = (params[p], act[p]);
+        params[p] = np;
+        act[p] = na;
+        let r = memory_witness(tables, t + 1, params, act, nodes);
+        params[p] = sp;
+        act[p] = sa;
+        match r {
+            Some(true) => return Some(true),
+            None => return None,
+            Some(false) => {}
+        }
+    }
+    Some(false)
+}
+
+/// Branch-and-bound over the full `nproc^nseg` space: top-level
+/// branches (segment 0's processor) fan out over the pool, each runs
+/// the sequential lex-order DFS seeded with the chain incumbent, and
+/// the results merge in branch order under the strict-improvement
+/// rule — byte-identical winner and stats at any worker count.
+#[allow(clippy::too_many_arguments)]
+fn branch_and_bound(
+    graph: &BlockGraph,
+    exits: &[usize],
+    platform: &Platform,
+    tables: SearchTables,
+    bounds: BoundModel,
+    leaf: LeafCost,
+    constraint: f64,
+    pool: Option<&ThreadPool>,
+) -> SearchOutcome {
+    let nproc = platform.processors.len();
+    let (chain_entry, chain_memory_ok, chain_simulated) =
+        chain_seed(graph, exits, platform, constraint, &leaf);
+    let chain_cost = chain_entry.as_ref().map(|e| e.2).unwrap_or(f64::INFINITY);
+    let ctx = Arc::new(SearchCtx {
+        graph: graph.clone(),
+        exits: exits.to_vec(),
+        platform: platform.clone(),
+        tables,
+        bounds,
+        leaf,
+        constraint,
+        chain_cost,
+    });
+    let worker_ctx = Arc::clone(&ctx);
+    let branches = map_maybe(pool, (0..nproc).collect(), move |p0| {
+        BranchDfs::run(&worker_ctx, p0)
+    });
+    // deterministic merge: branch order is processor order, each
+    // branch best already beats the chain strictly, and only a
+    // strictly lower cost displaces — so the outcome (lex-smallest
+    // strict argmin, chain on ties) matches the sequential exhaustive
+    // argmin independent of worker count.
+    let mut stats = SearchStats {
+        nodes_expanded: 1,
+        leaves_evaluated: chain_simulated as u64,
+        root_bound: ctx.bounds.root_bound,
+        ..Default::default()
+    };
+    let mut any_memory_ok = chain_memory_ok;
+    let mut inc = chain_cost;
+    let mut best: Option<(Vec<ProcId>, f64)> = None;
+    for (branch_best, branch_stats, branch_leaf) in branches {
+        stats.nodes_expanded += branch_stats.nodes_expanded;
+        stats.leaves_evaluated += branch_stats.leaves_evaluated;
+        stats.pruned_bound += branch_stats.pruned_bound;
+        stats.pruned_infeasible += branch_stats.pruned_infeasible;
+        any_memory_ok |= branch_leaf;
+        if let Some((assignment, c)) = branch_best {
+            if c < inc - COST_TIE {
+                inc = c;
+                best = Some((assignment, c));
+            }
+        }
+    }
+    let best = match best {
+        Some((assignment, c)) => {
+            let (m, r) = simulate_assignment(graph, exits, platform, assignment);
+            Some((m, r, c))
+        }
+        None => chain_entry,
+    };
+    stats.best_cost = best.as_ref().map(|b| b.2).unwrap_or(f64::INFINITY);
+    if !any_memory_ok {
+        // bound prunes require a finite incumbent (i.e. a feasible
+        // chain), so reaching this point means pruning was purely
+        // infeasibility-driven — ask the dedicated witness whether
+        // memory alone admits any assignment.
+        let mut params = vec![0u64; ctx.tables.nproc];
+        let mut act = vec![0u64; ctx.tables.nproc];
+        let mut cap = WITNESS_NODE_CAP;
+        any_memory_ok =
+            memory_witness(&ctx.tables, 0, &mut params, &mut act, &mut cap) == Some(true);
+    }
+    SearchOutcome { best, chain_cost, any_memory_ok, stats }
+}
+
+/// Deterministic beam search: keep the `width` best-bounded prefixes
+/// per segment (ties broken lex), then score the surviving complete
+/// assignments exactly. Sequential by construction, so trivially
+/// worker-invariant; exact whenever `width` covers the whole layer,
+/// and never worse than the identity chain (which seeds the
+/// incumbent) otherwise.
+struct BeamState {
+    assign: Vec<ProcId>,
+    params: Vec<u64>,
+    act: Vec<u64>,
+    cost: f64,
+    wc: f64,
+    bound: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn beam_search(
+    graph: &BlockGraph,
+    exits: &[usize],
+    platform: &Platform,
+    tables: SearchTables,
+    bounds: BoundModel,
+    leaf: LeafCost,
+    constraint: f64,
+    width: usize,
+) -> SearchOutcome {
+    let nproc = platform.processors.len();
+    let width = width.max(1);
+    let (chain_entry, chain_memory_ok, chain_simulated) =
+        chain_seed(graph, exits, platform, constraint, &leaf);
+    let chain_cost = chain_entry.as_ref().map(|e| e.2).unwrap_or(f64::INFINITY);
+    let mut stats = SearchStats {
+        leaves_evaluated: chain_simulated as u64,
+        root_bound: bounds.root_bound,
+        ..Default::default()
+    };
+    let mut any_memory_ok = chain_memory_ok;
+    let mut states = vec![BeamState {
+        assign: Vec::new(),
+        params: vec![0; nproc],
+        act: vec![0; nproc],
+        cost: 0.0,
+        wc: 0.0,
+        bound: bounds.root_bound,
+    }];
+    for t in 0..tables.nseg {
+        let mut children: Vec<BeamState> = Vec::new();
+        for st in &states {
+            stats.nodes_expanded += 1;
+            let q = st.assign.last().copied().unwrap_or(0);
+            for p in 0..nproc {
+                let new_params = st.params[p] + tables.mem_params[t];
+                let new_act = st.act[p].max(tables.seg_act[t]);
+                if new_params + new_act > tables.mem_bytes[p] {
+                    stats.pruned_infeasible += 1;
+                    continue;
+                }
+                let wc2 = st.wc + tables.stage_lat(t, q, p);
+                if (wc2 + bounds.wc_suffix[t + 1][p]) * BOUND_SLACK > constraint {
+                    stats.pruned_infeasible += 1;
+                    continue;
+                }
+                let cost2 = st.cost + bounds.wstage(t, q, p);
+                let bound = cost2 + bounds.suffix[t + 1][p];
+                if bound * BOUND_SLACK >= chain_cost - COST_TIE {
+                    stats.pruned_bound += 1;
+                    continue;
+                }
+                let mut assign = st.assign.clone();
+                assign.push(p);
+                let mut params = st.params.clone();
+                params[p] = new_params;
+                let mut act = st.act.clone();
+                act[p] = new_act;
+                children.push(BeamState { assign, params, act, cost: cost2, wc: wc2, bound });
+            }
+        }
+        children.sort_by(|a, b| {
+            a.bound.total_cmp(&b.bound).then_with(|| a.assign.cmp(&b.assign))
+        });
+        if children.len() > width {
+            stats.pruned_bound += (children.len() - width) as u64;
+            children.truncate(width);
+        }
+        states = children;
+    }
+    // exact leaf evaluation in lex order under the strict rule — the
+    // same acceptance discipline as the DFS engine
+    states.sort_by(|a, b| a.assign.cmp(&b.assign));
+    let mut inc = chain_cost;
+    let mut best: Option<(Vec<ProcId>, f64)> = None;
+    for st in &states {
+        stats.leaves_evaluated += 1;
+        any_memory_ok = true; // prefix memory checks all passed
+        let (_, report) =
+            simulate_assignment(graph, exits, platform, st.assign.clone());
+        if report.worst_case_s <= constraint {
+            let c = leaf.eval(&report);
+            if c < inc - COST_TIE {
+                inc = c;
+                best = Some((st.assign.clone(), c));
+            }
+        }
+    }
+    let best = match best {
+        Some((assignment, c)) => {
+            let (m, r) = simulate_assignment(graph, exits, platform, assignment);
+            Some((m, r, c))
+        }
+        None => chain_entry,
+    };
+    stats.best_cost = best.as_ref().map(|b| b.2).unwrap_or(f64::INFINITY);
+    if !any_memory_ok {
+        let mut params = vec![0u64; tables.nproc];
+        let mut act = vec![0u64; tables.nproc];
+        let mut cap = WITNESS_NODE_CAP;
+        any_memory_ok =
+            memory_witness(&tables, 0, &mut params, &mut act, &mut cap) == Some(true);
+    }
+    SearchOutcome { best, chain_cost, any_memory_ok, stats }
+}
+
+// ---------------------------------------------------------------------------
+// Public search API: strategy selection + the sweep / co-search entry
+// points.
+// ---------------------------------------------------------------------------
+
+/// Assignment-space search strategy (CLI: `repro augment --map-search`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapSearch {
+    /// `Exhaustive` within [`MappingObjective::auto_threshold`], `BnB`
+    /// beyond it.
+    Auto,
+    /// Stream and simulate the whole space (monotone fallback past
+    /// [`MAX_ASSIGNMENTS`]).
+    Exhaustive,
+    /// Branch-and-bound with admissible analytic bounds (full space,
+    /// exact winner).
+    BnB,
+    /// Width-bounded beam (heuristic below full width).
+    Beam,
+}
+
+impl MapSearch {
+    pub fn parse(s: &str) -> Result<MapSearch> {
+        Ok(match s {
+            "auto" => MapSearch::Auto,
+            "exhaustive" => MapSearch::Exhaustive,
+            "bnb" => MapSearch::BnB,
+            "beam" => MapSearch::Beam,
+            other => bail!("unknown map-search strategy {other:?} (want auto|exhaustive|bnb|beam)"),
+        })
+    }
+}
+
+/// Co-search cost normalization.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapNorm {
+    /// Legacy: normalize latency/energy by the maximum among feasible
+    /// assignments. Requires scoring the whole feasible set, so it is
+    /// only available with the exhaustive strategy; kept as the
+    /// default for bit-compatibility with every earlier sweep.
+    FeasibleMax,
+    /// Normalize by the analytic worst-stage tables (see
+    /// `analytic_norms`): strategy- and worker-invariant, and the norm
+    /// the bounded searches always use.
+    Analytic,
+}
+
+/// Scalarization of the deployment-time mapping objective plus the
+/// search-strategy knobs threaded through both call sites.
+#[derive(Debug, Clone)]
+pub struct MappingObjective {
+    pub w_latency: f64,
+    pub w_energy: f64,
+    /// How the assignment space is covered.
+    pub search: MapSearch,
+    /// Cost normalization for the exhaustive co-search (bounded
+    /// strategies always use [`MapNorm::Analytic`]).
+    pub norm: MapNorm,
+    /// Chunk size of the streamed exhaustive sweep (default
+    /// [`DEFAULT_SWEEP_CHUNK`]).
+    pub sweep_chunk: usize,
+    /// [`MapSearch::Auto`] switches from exhaustive to B&B once
+    /// `nproc^nseg` exceeds this.
+    pub auto_threshold: u64,
+    /// Beam width for [`MapSearch::Beam`].
+    pub beam_width: usize,
+}
+
+impl Default for MappingObjective {
+    fn default() -> Self {
+        MappingObjective {
+            w_latency: 0.5,
+            w_energy: 0.5,
+            search: MapSearch::Auto,
+            norm: MapNorm::FeasibleMax,
+            sweep_chunk: DEFAULT_SWEEP_CHUNK,
+            auto_threshold: MAX_ASSIGNMENTS as u64,
+            beam_width: DEFAULT_SWEEP_CHUNK,
+        }
+    }
+}
+
+impl MappingObjective {
+    /// `nproc^nseg`, saturating at `u64::MAX`.
+    pub fn space(nseg: usize, nproc: usize) -> u64 {
+        (nproc as u64).checked_pow(nseg as u32).unwrap_or(u64::MAX)
+    }
+
+    /// Resolve [`MapSearch::Auto`] against the concrete space size.
+    pub fn resolved_search(&self, nseg: usize, nproc: usize) -> MapSearch {
+        match self.search {
+            MapSearch::Auto => {
+                if Self::space(nseg, nproc) <= self.auto_threshold {
+                    MapSearch::Exhaustive
+                } else {
+                    MapSearch::BnB
+                }
+            }
+            s => s,
+        }
+    }
+}
+
+/// Outcome of the deployment-time mapping co-search.
+#[derive(Debug, Clone)]
+pub struct MappingChoice {
+    pub mapping: Mapping,
+    /// Scalarized expected cost of the chosen mapping.
+    pub expected_cost: f64,
+    /// Same scalarization for the identity chain (`f64::INFINITY`
+    /// when the chain itself is infeasible on this platform).
+    pub chain_cost: f64,
+    /// Assignments simulated.
+    pub evaluated: usize,
+    /// Pruning counters when a bounded strategy ran (`None` for the
+    /// exhaustive sweep).
+    pub stats: Option<SearchStats>,
 }
 
 /// Enumerate every assignment of `exits` onto `platform`, simulate
@@ -362,39 +1273,79 @@ pub fn sweep_assignments_with(
     latency_constraint_s: f64,
     pool: Option<&ThreadPool>,
 ) -> FeasibilitySweep {
-    let AssignmentSweep { mut feasible, any_memory_ok, evaluated } =
-        feasible_assignments(graph, exits, platform, latency_constraint_s, pool);
-    let best_idx = select_best(&feasible, |r| r.worst_case_s);
-    let best = best_idx.map(|i| feasible.swap_remove(i));
-    FeasibilitySweep { best, any_memory_ok, evaluated }
+    sweep_assignments_obj(
+        graph,
+        exits,
+        platform,
+        latency_constraint_s,
+        &MappingObjective::default(),
+        pool,
+    )
 }
 
-/// Scalarization of the deployment-time mapping objective. Latency and
-/// energy are normalized by the maximum among feasible assignments, so
-/// the weights trade off relative (not unit-bearing) quantities.
-#[derive(Debug, Clone)]
-pub struct MappingObjective {
-    pub w_latency: f64,
-    pub w_energy: f64,
-}
-
-impl Default for MappingObjective {
-    fn default() -> Self {
-        MappingObjective { w_latency: 0.5, w_energy: 0.5 }
+/// [`sweep_assignments_with`] under an explicit search strategy. The
+/// winner (mapping, report bits, `any_memory_ok`) is identical across
+/// strategies and worker counts; only `evaluated`/`stats` reflect how
+/// much work the strategy did.
+pub fn sweep_assignments_obj(
+    graph: &BlockGraph,
+    exits: &[usize],
+    platform: &Platform,
+    latency_constraint_s: f64,
+    obj: &MappingObjective,
+    pool: Option<&ThreadPool>,
+) -> FeasibilitySweep {
+    let nseg = exits.len() + 1;
+    let nproc = platform.processors.len();
+    match obj.resolved_search(nseg, nproc) {
+        MapSearch::Auto => unreachable!("resolved_search returns a concrete strategy"),
+        MapSearch::Exhaustive => {
+            let AssignmentSweep { mut feasible, any_memory_ok, evaluated } = feasible_assignments(
+                graph,
+                exits,
+                platform,
+                latency_constraint_s,
+                obj.sweep_chunk,
+                pool,
+            );
+            let best_idx = select_best(&feasible, |r| r.worst_case_s);
+            let best = best_idx.map(|i| feasible.swap_remove(i));
+            FeasibilitySweep { best, any_memory_ok, evaluated, stats: None }
+        }
+        strategy => {
+            let tables = SearchTables::build(graph, exits, platform);
+            let tails = vec![1.0; nseg];
+            let bounds = BoundModel::build(&tables, &tails, 1.0, 0.0);
+            let out = match strategy {
+                MapSearch::BnB => branch_and_bound(
+                    graph,
+                    exits,
+                    platform,
+                    tables,
+                    bounds,
+                    LeafCost::WorstCase,
+                    latency_constraint_s,
+                    pool,
+                ),
+                _ => beam_search(
+                    graph,
+                    exits,
+                    platform,
+                    tables,
+                    bounds,
+                    LeafCost::WorstCase,
+                    latency_constraint_s,
+                    obj.beam_width,
+                ),
+            };
+            FeasibilitySweep {
+                best: out.best.map(|(m, r, _)| (m, r)),
+                any_memory_ok: out.any_memory_ok,
+                evaluated: out.stats.leaves_evaluated as usize,
+                stats: Some(out.stats),
+            }
+        }
     }
-}
-
-/// Outcome of the deployment-time mapping co-search.
-#[derive(Debug, Clone)]
-pub struct MappingChoice {
-    pub mapping: Mapping,
-    /// Scalarized expected cost of the chosen mapping.
-    pub expected_cost: f64,
-    /// Same scalarization for the identity chain (`f64::INFINITY`
-    /// when the chain itself is infeasible on this platform).
-    pub chain_cost: f64,
-    /// Assignments simulated.
-    pub evaluated: usize,
 }
 
 /// Score every feasible assignment of `exits` by the expected
@@ -416,7 +1367,9 @@ pub fn co_search(
 /// over `pool`. The feasible set keeps enumeration order and the
 /// argmin tie-breaks on the identity chain exactly as in the
 /// sequential path, so the chosen mapping is identical for any worker
-/// count.
+/// count — for the bounded strategies the per-branch incumbents are
+/// chain-seeded and merged in branch order, preserving the same
+/// property.
 #[allow(clippy::too_many_arguments)]
 pub fn co_search_with(
     graph: &BlockGraph,
@@ -429,22 +1382,98 @@ pub fn co_search_with(
 ) -> Option<MappingChoice> {
     let nseg = exits.len() + 1;
     assert_eq!(term.len(), nseg, "termination distribution must have one mass per segment");
+    let nproc = platform.processors.len();
+    match obj.resolved_search(nseg, nproc) {
+        MapSearch::Auto => unreachable!("resolved_search returns a concrete strategy"),
+        MapSearch::Exhaustive => {
+            co_search_exhaustive(graph, exits, platform, term, latency_constraint_s, obj, pool)
+        }
+        strategy => {
+            let tables = SearchTables::build(graph, exits, platform);
+            let tails = tails_of(term);
+            let (lat_norm, e_norm) = analytic_norms(&tables, &tails);
+            let bounds = BoundModel::build(
+                &tables,
+                &tails,
+                obj.w_latency / lat_norm,
+                obj.w_energy / e_norm,
+            );
+            let leaf = LeafCost::Expected {
+                w_latency: obj.w_latency,
+                w_energy: obj.w_energy,
+                lat_norm,
+                e_norm,
+                term: term.to_vec(),
+            };
+            let out = match strategy {
+                MapSearch::BnB => branch_and_bound(
+                    graph,
+                    exits,
+                    platform,
+                    tables,
+                    bounds,
+                    leaf,
+                    latency_constraint_s,
+                    pool,
+                ),
+                _ => beam_search(
+                    graph,
+                    exits,
+                    platform,
+                    tables,
+                    bounds,
+                    leaf,
+                    latency_constraint_s,
+                    obj.beam_width,
+                ),
+            };
+            let (mapping, _, expected_cost) = out.best?;
+            Some(MappingChoice {
+                mapping,
+                expected_cost,
+                chain_cost: out.chain_cost,
+                evaluated: out.stats.leaves_evaluated as usize,
+                stats: Some(out.stats),
+            })
+        }
+    }
+}
 
-    let sweep = feasible_assignments(graph, exits, platform, latency_constraint_s, pool);
+/// Legacy exhaustive co-search body: score the whole feasible set,
+/// normalize, argmin. Bit-identical to the pre-strategy implementation
+/// under [`MapNorm::FeasibleMax`].
+fn co_search_exhaustive(
+    graph: &BlockGraph,
+    exits: &[usize],
+    platform: &Platform,
+    term: &[f64],
+    latency_constraint_s: f64,
+    obj: &MappingObjective,
+    pool: Option<&ThreadPool>,
+) -> Option<MappingChoice> {
+    let sweep =
+        feasible_assignments(graph, exits, platform, latency_constraint_s, obj.sweep_chunk, pool);
     if sweep.feasible.is_empty() {
         return None;
     }
     // expectation under the termination distribution, then normalize
-    // each axis by the feasible maximum and scalarize
+    // each axis and scalarize
     let mut scored: Vec<(Mapping, (f64, f64))> = Vec::with_capacity(sweep.feasible.len());
     for (mapping, report) in sweep.feasible {
         let (lat, energy, _) = report.expected(term);
         scored.push((mapping, (lat, energy)));
     }
-    let lat_max = scored.iter().map(|s| s.1 .0).fold(f64::MIN, f64::max).max(1e-12);
-    let e_max = scored.iter().map(|s| s.1 .1).fold(f64::MIN, f64::max).max(1e-12);
+    let (lat_norm, e_norm) = match obj.norm {
+        MapNorm::FeasibleMax => (
+            scored.iter().map(|s| s.1 .0).fold(f64::MIN, f64::max).max(1e-12),
+            scored.iter().map(|s| s.1 .1).fold(f64::MIN, f64::max).max(1e-12),
+        ),
+        MapNorm::Analytic => {
+            analytic_norms(&SearchTables::build(graph, exits, platform), &tails_of(term))
+        }
+    };
     let cost_of =
-        |&(lat, e): &(f64, f64)| obj.w_latency * lat / lat_max + obj.w_energy * e / e_max;
+        |&(lat, e): &(f64, f64)| obj.w_latency * lat / lat_norm + obj.w_energy * e / e_norm;
 
     let chain_cost = scored
         .iter()
@@ -454,7 +1483,13 @@ pub fn co_search_with(
     let i = select_best(&scored, &cost_of).expect("nonempty feasible set");
     let expected_cost = cost_of(&scored[i].1);
     let (mapping, _) = scored.swap_remove(i);
-    Some(MappingChoice { mapping, expected_cost, chain_cost, evaluated: sweep.evaluated })
+    Some(MappingChoice {
+        mapping,
+        expected_cost,
+        chain_cost,
+        evaluated: sweep.evaluated,
+        stats: None,
+    })
 }
 
 #[cfg(test)]
@@ -555,6 +1590,48 @@ mod tests {
     }
 
     #[test]
+    fn assignment_iter_size_hint_is_exact() {
+        // full space
+        let mut it = AssignmentIter::new(2, 3);
+        assert_eq!(it.len(), 9);
+        it.next();
+        it.next();
+        assert_eq!(it.size_hint(), (7, Some(7)));
+        assert_eq!(it.count(), 7);
+        // monotone fallback: C(13 + 1, 13) = 14
+        let it = AssignmentIter::new(13, 2);
+        assert_eq!(it.len(), 14);
+        assert_eq!(it.count(), 14);
+        // monotone mid-size: C(14 + 2, 14) = 120
+        let it = AssignmentIter::new(14, 3);
+        assert_eq!(it.len(), 120);
+        assert_eq!(it.count(), 120);
+        // empty constructions
+        assert_eq!(AssignmentIter::new(0, 3).len(), 0);
+        assert_eq!(AssignmentIter::new(3, 0).len(), 0);
+        // astronomically large fallback spaces saturate instead of
+        // overflowing
+        let it = AssignmentIter::new(200, 64);
+        assert!(it.len() > MAX_ASSIGNMENTS);
+    }
+
+    #[test]
+    fn map_search_parse_and_auto_resolution() {
+        assert_eq!(MapSearch::parse("auto").unwrap(), MapSearch::Auto);
+        assert_eq!(MapSearch::parse("exhaustive").unwrap(), MapSearch::Exhaustive);
+        assert_eq!(MapSearch::parse("bnb").unwrap(), MapSearch::BnB);
+        assert_eq!(MapSearch::parse("beam").unwrap(), MapSearch::Beam);
+        assert!(MapSearch::parse("dfs").is_err());
+        let obj = MappingObjective::default();
+        // 4^6 = 4096 sits exactly at the default threshold: exhaustive
+        assert_eq!(obj.resolved_search(6, 4), MapSearch::Exhaustive);
+        // 16^6 is far beyond it: branch-and-bound
+        assert_eq!(obj.resolved_search(6, 16), MapSearch::BnB);
+        let forced = MappingObjective { search: MapSearch::Beam, ..MappingObjective::default() };
+        assert_eq!(forced.resolved_search(6, 4), MapSearch::Beam);
+    }
+
+    #[test]
     fn streamed_sweep_matches_pooled_and_sequential() {
         // the chunked streaming path must keep enumeration order for
         // any worker count (tie-breaks depend on it)
@@ -572,6 +1649,22 @@ mod tests {
     }
 
     #[test]
+    fn sweep_chunk_is_threaded_through_objective() {
+        // an awkward chunk size must not change the result or the
+        // evaluation count — only the dispatch granularity
+        let g = BlockGraph::synthetic_resnet(10, 3);
+        let p = presets::fog_cluster();
+        let small = MappingObjective { sweep_chunk: 7, ..MappingObjective::default() };
+        let a = sweep_assignments(&g, &[1, 4], &p, f64::INFINITY);
+        let b = sweep_assignments_obj(&g, &[1, 4], &p, f64::INFINITY, &small, None);
+        assert_eq!(a.evaluated, b.evaluated);
+        let (am, ar) = a.best.expect("feasible");
+        let (bm, br) = b.best.expect("feasible");
+        assert_eq!(am, bm);
+        assert_eq!(ar.worst_case_s.to_bits(), br.worst_case_s.to_bits());
+    }
+
+    #[test]
     fn sweep_prefers_fast_processor() {
         // rk3588: proc 1 (Mali, 22 GMAC/s) beats the chain's proc 0
         // (CPU, 8 GMAC/s) for a single-segment model
@@ -582,6 +1675,155 @@ mod tests {
         assert_eq!(best.assignment, vec![1], "expected the Mali to win");
         assert!(sweep.any_memory_ok);
         assert_eq!(sweep.evaluated, 3);
+    }
+
+    #[test]
+    fn bnb_and_beam_sweeps_match_exhaustive_on_presets() {
+        let g = BlockGraph::synthetic_resnet(10, 3);
+        let cases: Vec<(Platform, Vec<Vec<usize>>)> = vec![
+            (presets::psoc6(), vec![vec![], vec![2], vec![1, 5]]),
+            (presets::rk3588_cloud(), vec![vec![], vec![2], vec![1, 4]]),
+            (presets::fog_cluster(), vec![vec![2], vec![1, 4], vec![1, 3, 6]]),
+        ];
+        for (platform, exit_sets) in cases {
+            for exits in exit_sets {
+                for constraint in [f64::INFINITY, 0.050] {
+                    let ex = sweep_assignments(&g, &exits, &platform, constraint);
+                    for search in [MapSearch::BnB, MapSearch::Beam] {
+                        let obj = MappingObjective {
+                            search,
+                            // width covering the whole space keeps the
+                            // beam exact
+                            beam_width: MAX_ASSIGNMENTS,
+                            ..MappingObjective::default()
+                        };
+                        let got =
+                            sweep_assignments_obj(&g, &exits, &platform, constraint, &obj, None);
+                        assert_eq!(
+                            ex.any_memory_ok, got.any_memory_ok,
+                            "{search:?} {} {exits:?}",
+                            platform.name
+                        );
+                        match (&ex.best, &got.best) {
+                            (None, None) => {}
+                            (Some((em, er)), Some((gm, gr))) => {
+                                assert_eq!(em, gm, "{search:?} {} {exits:?}", platform.name);
+                                assert_eq!(
+                                    er.worst_case_s.to_bits(),
+                                    gr.worst_case_s.to_bits(),
+                                    "{search:?} {} {exits:?}",
+                                    platform.name
+                                );
+                            }
+                            (e, g) => panic!(
+                                "{search:?} {} {exits:?}: exhaustive {e:?} vs bounded {g:?}",
+                                platform.name
+                            ),
+                        }
+                        let stats = got.stats.expect("bounded strategies report stats");
+                        assert!(stats.leaves_evaluated as usize <= ex.evaluated + 1);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bnb_co_search_matches_exhaustive_under_analytic_norm() {
+        let g = BlockGraph::synthetic_resnet(10, 3);
+        for platform in [presets::rk3588_cloud(), presets::fog_cluster()] {
+            for exits in [vec![], vec![2], vec![1, 4]] {
+                let term = match exits.len() {
+                    0 => vec![1.0],
+                    1 => vec![0.6, 0.4],
+                    _ => vec![0.5, 0.3, 0.2],
+                };
+                let ex_obj = MappingObjective {
+                    search: MapSearch::Exhaustive,
+                    norm: MapNorm::Analytic,
+                    ..MappingObjective::default()
+                };
+                let ex = co_search(&g, &exits, &platform, &term, f64::INFINITY, &ex_obj)
+                    .expect("feasible");
+                let bnb_obj =
+                    MappingObjective { search: MapSearch::BnB, ..MappingObjective::default() };
+                let got = co_search(&g, &exits, &platform, &term, f64::INFINITY, &bnb_obj)
+                    .expect("feasible");
+                assert_eq!(ex.mapping, got.mapping, "{} {exits:?}", platform.name);
+                assert_eq!(
+                    ex.expected_cost.to_bits(),
+                    got.expected_cost.to_bits(),
+                    "{} {exits:?}",
+                    platform.name
+                );
+                assert_eq!(
+                    ex.chain_cost.to_bits(),
+                    got.chain_cost.to_bits(),
+                    "{} {exits:?}",
+                    platform.name
+                );
+                assert!(got.evaluated <= ex.evaluated + 1, "{} {exits:?}", platform.name);
+            }
+        }
+    }
+
+    #[test]
+    fn bnb_is_worker_invariant_including_stats() {
+        let g = BlockGraph::synthetic_resnet(10, 3);
+        let p = presets::fog_cluster();
+        let obj = MappingObjective { search: MapSearch::BnB, ..MappingObjective::default() };
+        let base = sweep_assignments_obj(&g, &[1, 3, 6], &p, f64::INFINITY, &obj, None);
+        let base_best = base.best.expect("feasible");
+        let base_stats = base.stats.expect("stats");
+        for workers in [1, 2, 8] {
+            let pool = ThreadPool::new(workers);
+            let got = sweep_assignments_obj(&g, &[1, 3, 6], &p, f64::INFINITY, &obj, Some(&pool));
+            let (gm, gr) = got.best.expect("feasible");
+            assert_eq!(base_best.0, gm, "workers={workers}");
+            assert_eq!(base_best.1.worst_case_s.to_bits(), gr.worst_case_s.to_bits());
+            assert_eq!(base_stats, got.stats.expect("stats"), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn zero_weight_co_search_degenerates_to_chain() {
+        // all stage weights zero ⇒ every assignment costs exactly 0.0
+        // and both strategies must keep the tie-breaking chain
+        let g = BlockGraph::synthetic_resnet(10, 3);
+        let p = presets::fog_cluster();
+        let term = vec![0.5, 0.3, 0.2];
+        for search in [MapSearch::Exhaustive, MapSearch::BnB] {
+            let obj = MappingObjective {
+                w_latency: 0.0,
+                w_energy: 0.0,
+                search,
+                norm: MapNorm::Analytic,
+                ..MappingObjective::default()
+            };
+            let choice =
+                co_search(&g, &[1, 4], &p, &term, f64::INFINITY, &obj).expect("feasible");
+            assert!(choice.mapping.is_chain(), "{search:?}: {:?}", choice.mapping);
+        }
+    }
+
+    #[test]
+    fn bnb_prunes_most_of_a_mesh_space() {
+        // 16 heterogeneous tiles × 5 segments = 16^5 ≈ 1.05M
+        // assignments; the admissible bound must cut effectively all
+        // of it
+        let g = BlockGraph::synthetic_resnet(10, 3);
+        let p = presets::mesh_accel();
+        let obj = MappingObjective { search: MapSearch::BnB, ..MappingObjective::default() };
+        let sweep = sweep_assignments_obj(&g, &[1, 3, 5, 7], &p, f64::INFINITY, &obj, None);
+        assert!(sweep.best.is_some());
+        let stats = sweep.stats.expect("stats");
+        let space = MappingObjective::space(5, 16);
+        let touched = stats.nodes_expanded + stats.leaves_evaluated;
+        assert!(
+            touched * 100 < space,
+            "B&B touched {touched} of {space} states (≥1%)"
+        );
+        assert!(stats.root_bound <= stats.best_cost * (1.0 + 1e-9));
     }
 
     #[test]

@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use crate::graph::BlockGraph;
 use crate::hw::Platform;
-use crate::mapping::{sweep_assignments, Mapping};
+use crate::mapping::{sweep_assignments_obj, Mapping, MappingObjective};
 use crate::util::threadpool::{map_maybe, ThreadPool};
 
 #[derive(Debug, Clone)]
@@ -83,6 +83,22 @@ pub fn enumerate_with(
     latency_constraint_s: f64,
     pool: Option<&ThreadPool>,
 ) -> (Vec<Candidate>, PruneStats) {
+    enumerate_with_obj(graph, platform, latency_constraint_s, &MappingObjective::default(), pool)
+}
+
+/// [`enumerate_with`] under an explicit mapping-search strategy: each
+/// per-subset feasibility sweep runs the strategy `obj` selects (the
+/// default `Auto` keeps small platforms on the historical exhaustive
+/// sweep and upgrades large meshes to branch-and-bound). The kept
+/// candidate set and its mappings are identical across strategies;
+/// only `assignments_evaluated` reflects how much work pruning saved.
+pub fn enumerate_with_obj(
+    graph: &BlockGraph,
+    platform: &Platform,
+    latency_constraint_s: f64,
+    obj: &MappingObjective,
+    pool: Option<&ThreadPool>,
+) -> (Vec<Candidate>, PruneStats) {
     let max_ee = platform.max_classifiers().saturating_sub(1);
     let mut subsets: Vec<Vec<usize>> = Vec::new();
     for_each_subset(&graph.ee_locations, max_ee, |exits| subsets.push(exits.to_vec()));
@@ -90,12 +106,15 @@ pub fn enumerate_with(
     // (exit subset, best feasible mapping, any assignment fit memory,
     // assignments simulated) — each job returns its subset so nothing
     // needs cloning up front; map_maybe runs the one closure on the
-    // pool or inline, order-preserved either way
+    // pool or inline, order-preserved either way. The per-subset sweep
+    // itself stays sequential (pool = None): the fan-out is across
+    // subsets, and nesting a second fan-out inside a pool job would
+    // only oversubscribe it.
     type Outcome = (Vec<usize>, Option<Mapping>, bool, usize);
-    let ctx = Arc::new((graph.clone(), platform.clone(), latency_constraint_s));
+    let ctx = Arc::new((graph.clone(), platform.clone(), latency_constraint_s, obj.clone()));
     let outcomes: Vec<Outcome> = map_maybe(pool, subsets, move |exits| {
-        let (graph, platform, latency) = &*ctx;
-        let sweep = sweep_assignments(graph, &exits, platform, *latency);
+        let (graph, platform, latency, obj) = &*ctx;
+        let sweep = sweep_assignments_obj(graph, &exits, platform, *latency, obj, None);
         (exits, sweep.best.map(|(m, _)| m), sweep.any_memory_ok, sweep.evaluated)
     });
 
@@ -206,6 +225,35 @@ mod tests {
         assert_eq!(seq_stats.latency_pruned, par_stats.latency_pruned);
         assert_eq!(seq_stats.memory_pruned, par_stats.memory_pruned);
         assert_eq!(seq_stats.assignments_evaluated, par_stats.assignments_evaluated);
+    }
+
+    #[test]
+    fn bnb_enumeration_keeps_the_same_candidates() {
+        // forcing branch-and-bound into the per-subset sweeps must
+        // not change which architectures survive or which mapping
+        // each one carries — only how many assignments were simulated
+        let g = BlockGraph::synthetic_resnet(10, 3);
+        let p = presets::rk3588_cloud();
+        let (base, base_stats) = enumerate(&g, &p, 0.5);
+        let obj = crate::mapping::MappingObjective {
+            search: crate::mapping::MapSearch::BnB,
+            ..MappingObjective::default()
+        };
+        let (bnb, bnb_stats) = enumerate_with_obj(&g, &p, 0.5, &obj, None);
+        assert_eq!(base.len(), bnb.len());
+        for (a, b) in base.iter().zip(&bnb) {
+            assert_eq!(a.exits, b.exits);
+            assert_eq!(a.mapping, b.mapping);
+        }
+        assert_eq!(base_stats.kept, bnb_stats.kept);
+        assert_eq!(base_stats.latency_pruned, bnb_stats.latency_pruned);
+        assert_eq!(base_stats.memory_pruned, bnb_stats.memory_pruned);
+        // the chain seed can add one extra simulation per subset, but
+        // pruning must never cost more than that
+        assert!(
+            bnb_stats.assignments_evaluated
+                <= base_stats.assignments_evaluated + bnb_stats.generated as u64
+        );
     }
 
     #[test]

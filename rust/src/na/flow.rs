@@ -61,7 +61,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::candidates::{enumerate_with, Candidate, PruneStats};
+use super::candidates::{enumerate_with_obj, Candidate, PruneStats};
 use super::features::FeatureCache;
 use super::profile::{threshold_grid, ExitMasks, ExitProfile, GRID_POINTS};
 use super::threshold::{
@@ -394,9 +394,11 @@ pub fn augment_prepared(
     let mut exits = bank.exits.clone();
     let mut profiles = bank.profiles.clone();
 
-    // 4. architecture enumeration + pruning (parallel over subsets) -------
+    // 4. architecture enumeration + pruning (parallel over subsets;
+    // the per-subset sweep strategy — exhaustive, B&B or beam — comes
+    // from cfg.mapping) -------
     let (cands, prune) =
-        enumerate_with(graph, platform, cfg.latency_constraint_s, pool.as_ref());
+        enumerate_with_obj(graph, platform, cfg.latency_constraint_s, &cfg.mapping, pool.as_ref());
     log!(
         "{} candidates ({} latency-pruned, {} memory-pruned)",
         prune.kept,
@@ -861,7 +863,7 @@ mod tests {
 
         let graph = BlockGraph::synthetic_resnet(10, 2);
         let platform = presets::rk3588_cloud();
-        let (cands, _) = enumerate_with(&graph, &platform, f64::INFINITY, None);
+        let (cands, _) = crate::na::enumerate_with(&graph, &platform, f64::INFINITY, None);
         let grid = threshold_grid(10);
         let mut rng = Rng::seeded(17);
         let masks: BTreeMap<usize, ExitMasks> = graph

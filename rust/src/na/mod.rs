@@ -12,7 +12,9 @@ pub mod profile;
 pub mod threshold;
 pub mod trainer;
 
-pub use candidates::{count_search_space, enumerate, enumerate_with, Candidate, PruneStats};
+pub use candidates::{
+    count_search_space, enumerate, enumerate_with, enumerate_with_obj, Candidate, PruneStats,
+};
 pub use features::{FeatureCache, FINAL_LOC};
 pub use flow::{
     augment, augment_prepared, default_workers, score_candidates, AugmentOutcome,

@@ -52,6 +52,19 @@
 //! |                   |         | absorb the keys, **exact** conservation          |
 //! |                   |         | `completed + shed + rerouted == offered`         |
 //!
+//! The **mesh preset** ([`mesh_all`], CLI: `repro scenarios --only
+//! mesh_cifar`, artifact `BENCH_scenarios_mesh.json`) exercises the
+//! branch-and-bound mapping co-search at a scale the exhaustive
+//! assignment sweep cannot touch:
+//!
+//! | preset       | platform      | models…                                         |
+//! |--------------|---------------|-------------------------------------------------|
+//! | `mesh_cifar` | mesh-accel-16 | CIFAR-style offload across a 16-tile            |
+//! |              |               | accelerator mesh: up to 16^6 ≈ 16.7M            |
+//! |              |               | assignments per exit subset — exhaustively      |
+//! |              |               | intractable, seconds under branch-and-bound     |
+//! |              |               | (`MapSearch::Auto` upgrades automatically)      |
+//!
 //! # Determinism
 //!
 //! A [`ScenarioReport`] is **bit-reproducible**: running a preset
@@ -422,6 +435,74 @@ pub fn all() -> Vec<Scenario> {
         multi_tenant_fog(),
         overload_storm(),
     ]
+}
+
+/// CIFAR-style offload across the 16-tile accelerator mesh
+/// ([`presets::mesh_accel`]). With five EE locations and sixteen
+/// processors the mapping sweeps behind the search face up to
+/// 16^6 ≈ 16.7M assignments per exit subset — far past the exhaustive
+/// enumerator's [`crate::mapping::MAX_ASSIGNMENTS`] cap — so the
+/// default [`crate::mapping::MapSearch::Auto`] strategy upgrades every
+/// oversized sweep to branch-and-bound and the whole preset completes
+/// in seconds. Kept out of [`all`] (own artifact,
+/// `BENCH_scenarios_mesh.json`): the base matrix is pinned to the
+/// paper's seven use cases.
+pub fn mesh_cifar() -> Scenario {
+    Scenario {
+        name: "mesh_cifar",
+        description: "CIFAR offload on the 16-tile mesh: B&B-scale mapping search",
+        graph: BlockGraph::synthetic_resnet(10, 2),
+        platform: presets::mesh_accel(),
+        bank_seed: 606,
+        n_cal: 400,
+        confidence: ConfidenceModel::Ramp { lo: 0.50, hi: 0.90 },
+        latency_constraint_s: f64::INFINITY,
+        w_eff: 0.9,
+        w_acc: 0.1,
+        traffic: TrafficTrace {
+            arrival_rate_hz: 200.0,
+            n_requests: 4_000,
+            smoke_n_requests: 400,
+            seed: 53,
+            arrival: ArrivalProcess::Poisson,
+        },
+        queue_cap: 0,
+        qos: QosConfig::default(),
+        deadline_slack: 0.0,
+    }
+}
+
+/// The mesh scenario matrix, in reporting order.
+pub fn mesh_all() -> Vec<Scenario> {
+    vec![mesh_cifar()]
+}
+
+/// Run every mesh preset in [`mesh_all`].
+pub fn run_mesh_all(
+    workers: usize,
+    exec_workers: usize,
+    smoke: bool,
+    backend: Backend,
+) -> Result<Vec<ScenarioReport>> {
+    mesh_all()
+        .iter()
+        .map(|sc| run_scenario_with(sc, workers, exec_workers, smoke, backend))
+        .collect()
+}
+
+/// Aggregate mesh reports into the `BENCH_scenarios_mesh.json`
+/// document (same shell as [`bench_json`], `bench` name
+/// `scenarios_mesh`). With `deterministic`, entries carry only the
+/// byte-reproducible payload.
+pub fn mesh_bench_json(reports: &[ScenarioReport], smoke: bool, deterministic: bool) -> Json {
+    let entries = reports.iter().map(|r| {
+        let mut j = if deterministic { r.deterministic_json() } else { r.to_json() };
+        if let Json::Obj(m) = &mut j {
+            m.remove("workers");
+        }
+        (r.scenario.clone(), j)
+    });
+    bench_doc("scenarios_mesh", smoke, entries.collect())
 }
 
 /// Calibration profile where every sample clears the top of the
@@ -1431,6 +1512,34 @@ mod tests {
         let qos: Vec<&str> =
             ps.iter().filter(|s| s.qos.enabled()).map(|s| s.name).collect();
         assert_eq!(qos, vec!["multi_tenant_fog", "overload_storm"]);
+    }
+
+    #[test]
+    fn mesh_preset_is_exhaustively_intractable_but_roomy() {
+        use crate::mapping::{MapSearch, MappingObjective};
+        let ps = mesh_all();
+        assert_eq!(ps.len(), 1);
+        let sc = &ps[0];
+        assert_eq!(sc.name, "mesh_cifar");
+        sc.platform.validate().unwrap();
+        assert_eq!(sc.platform.processors.len(), 16);
+        // roomy serving: no queue bound, no QoS — the preset must
+        // never shed, so the accounting guards in run_scenario_with
+        // stay hard assertions
+        assert_eq!(sc.queue_cap, 0);
+        assert!(!sc.qos.enabled() && sc.deadline_slack == 0.0);
+        assert!(sc.traffic.smoke_n_requests > 0);
+        assert!(sc.traffic.smoke_n_requests <= sc.traffic.n_requests);
+        // the point of the preset: the largest per-subset assignment
+        // space (all five EEs taken -> 6 segments over 16 tiles) is
+        // far past the exhaustive cap, so Auto resolves to B&B there
+        let max_nseg = sc.graph.ee_locations.len() + 1;
+        assert_eq!(max_nseg, 6);
+        let obj = MappingObjective::default();
+        assert!(MappingObjective::space(max_nseg, 16) > obj.auto_threshold);
+        assert_eq!(obj.resolved_search(max_nseg, 16), MapSearch::BnB);
+        // …while small subsets stay on the bit-frozen exhaustive path
+        assert_eq!(obj.resolved_search(3, 16), MapSearch::Exhaustive);
     }
 
     #[test]

@@ -1,0 +1,364 @@
+//! Exact-agreement battery for the bounded mapping searches: on
+//! randomized small platforms and graphs (assignment spaces within the
+//! full-enumeration ceiling, so the exhaustive sweep is ground truth)
+//! branch-and-bound and full-width beam must return the **identical**
+//! winning assignment with **bit-identical** cost, for any worker
+//! count. The bounds only prune — every surviving leaf goes through
+//! the same simulator entry point as the exhaustive sweep, so any
+//! divergence here is a broken (inadmissible) bound.
+
+use eenn_na::graph::BlockGraph;
+use eenn_na::hw::{presets, Link, Platform, Processor};
+use eenn_na::mapping::{
+    co_search_with, sweep_assignments_obj, MapNorm, MapSearch, Mapping, MappingObjective,
+    MAX_ASSIGNMENTS,
+};
+use eenn_na::sim::simulate;
+use eenn_na::util::rng::Rng;
+use eenn_na::util::threadpool::ThreadPool;
+
+/// Random strictly-positive platform: 2–4 processors with spread-out
+/// throughput/power/memory, chain links with varied bandwidth.
+fn random_platform(rng: &mut Rng, tight_memory: bool) -> Platform {
+    let nproc = 2 + rng.below(3); // 2..=4
+    let processors = (0..nproc)
+        .map(|i| Processor {
+            name: format!("p{i}"),
+            macs_per_sec: rng.range_f64(5e8, 2e10),
+            active_mw: rng.range_f64(200.0, 3000.0),
+            sleep_mw: rng.range_f64(0.5, 10.0),
+            // tight budgets sit near the graph's footprint (~1 MB per
+            // stage after perturbation) so memory pruning actually
+            // fires; roomy budgets never bind
+            mem_bytes: if tight_memory {
+                (256 + rng.below(2048)) as u64 * 1024
+            } else {
+                64 * 1024 * 1024
+            },
+            batch_serial_frac: rng.f64(),
+        })
+        .collect();
+    let links = (0..nproc - 1)
+        .map(|i| Link {
+            name: format!("l{i}"),
+            bandwidth_bps: rng.range_f64(1e7, 1e10),
+            latency_s: rng.range_f64(1e-5, 1e-3),
+            active_mw: rng.range_f64(5.0, 100.0),
+        })
+        .collect();
+    Platform { name: "rand".into(), processors, links, exclusive_memory: false }
+}
+
+/// Random small graph: a synthetic backbone with per-block costs
+/// perturbed so no two instances share a cost surface.
+fn random_graph(rng: &mut Rng) -> BlockGraph {
+    let mut g = BlockGraph::synthetic_resnet(10, 1 + rng.below(3)); // 4/7/10 blocks
+    for b in &mut g.blocks {
+        b.macs = (b.macs as f64 * rng.range_f64(0.3, 3.0)) as u64 + 1;
+        b.param_bytes = (b.param_bytes as f64 * rng.range_f64(0.3, 3.0)) as u64 + 1;
+        b.act_bytes = (b.act_bytes as f64 * rng.range_f64(0.3, 3.0)) as u64 + 1;
+        b.ifm_bytes = (b.ifm_bytes as f64 * rng.range_f64(0.3, 3.0)) as u64 + 1;
+    }
+    g
+}
+
+/// Random ascending exit set with at most 5 segments: even at the
+/// widest random platform (4 processors) the space tops out at
+/// 4^5 = 1024, inside the full-enumeration ceiling, so the exhaustive
+/// sweep stays exact ground truth.
+fn random_exits(rng: &mut Rng, g: &BlockGraph) -> Vec<usize> {
+    let n_exits = rng.below(5); // 0..=4 exits -> nseg <= 5
+    let mut candidates: Vec<usize> = (1..g.blocks.len() - 1).collect();
+    rng.shuffle(&mut candidates);
+    let mut exits: Vec<usize> = candidates.into_iter().take(n_exits).collect();
+    exits.sort_unstable();
+    exits
+}
+
+/// Random normalized termination distribution (strictly positive).
+fn random_term(rng: &mut Rng, nseg: usize) -> Vec<f64> {
+    let mut t: Vec<f64> = (0..nseg).map(|_| 0.05 + rng.f64()).collect();
+    let sum: f64 = t.iter().sum();
+    for x in &mut t {
+        *x /= sum;
+    }
+    t
+}
+
+/// A latency constraint between the unconstrained optimum and the
+/// chain, so the incremental feasibility prune actually bites on a
+/// fair share of instances.
+fn random_constraint(rng: &mut Rng, g: &BlockGraph, exits: &[usize], p: &Platform) -> f64 {
+    match rng.below(3) {
+        0 => f64::INFINITY,
+        1 => {
+            let chain = simulate(g, &Mapping::chain(exits.to_vec()), p);
+            chain.worst_case_s * rng.range_f64(0.3, 1.2)
+        }
+        _ => {
+            let chain = simulate(g, &Mapping::chain(exits.to_vec()), p);
+            chain.worst_case_s * 2.0
+        }
+    }
+}
+
+fn obj_with(search: MapSearch) -> MappingObjective {
+    MappingObjective { search, norm: MapNorm::Analytic, ..MappingObjective::default() }
+}
+
+#[test]
+fn bnb_sweep_matches_exhaustive_on_random_instances() {
+    let mut rng = Rng::seeded(0xB0B5_0001);
+    for case in 0..40 {
+        let tight = case % 4 == 3;
+        let platform = random_platform(&mut rng, tight);
+        let graph = random_graph(&mut rng);
+        let exits = random_exits(&mut rng, &graph);
+        let constraint = random_constraint(&mut rng, &graph, &exits, &platform);
+
+        let ex = sweep_assignments_obj(
+            &graph,
+            &exits,
+            &platform,
+            constraint,
+            &obj_with(MapSearch::Exhaustive),
+            None,
+        );
+        let bnb = sweep_assignments_obj(
+            &graph,
+            &exits,
+            &platform,
+            constraint,
+            &obj_with(MapSearch::BnB),
+            None,
+        );
+        assert_eq!(
+            ex.any_memory_ok, bnb.any_memory_ok,
+            "case {case}: memory verdict diverged"
+        );
+        match (&ex.best, &bnb.best) {
+            (None, None) => {}
+            (Some((em, er)), Some((bm, br))) => {
+                assert_eq!(em, bm, "case {case}: winning assignment diverged");
+                assert_eq!(
+                    er.worst_case_s.to_bits(),
+                    br.worst_case_s.to_bits(),
+                    "case {case}: winner cost bits diverged"
+                );
+            }
+            (e, b) => panic!("case {case}: feasibility diverged ({e:?} vs {b:?})"),
+        }
+        // pruning must never simulate more than exhaustive did, plus
+        // the one chain-seeding simulation
+        let leaves = bnb.stats.expect("bnb records stats").leaves_evaluated as usize;
+        assert!(leaves <= ex.evaluated + 1, "case {case}: {leaves} > {}", ex.evaluated + 1);
+    }
+}
+
+#[test]
+fn bnb_co_search_matches_exhaustive_on_random_instances() {
+    let mut rng = Rng::seeded(0xB0B5_0002);
+    for case in 0..40 {
+        let platform = random_platform(&mut rng, case % 5 == 4);
+        let graph = random_graph(&mut rng);
+        let exits = random_exits(&mut rng, &graph);
+        let term = random_term(&mut rng, exits.len() + 1);
+        let constraint = random_constraint(&mut rng, &graph, &exits, &platform);
+
+        // both under the analytic norm: the exhaustive co-search's
+        // legacy feasible-max norm needs the whole feasible set, which
+        // is exactly what a pruning search never materializes
+        let ex = co_search_with(
+            &graph,
+            &exits,
+            &platform,
+            &term,
+            constraint,
+            &obj_with(MapSearch::Exhaustive),
+            None,
+        );
+        let bnb = co_search_with(
+            &graph,
+            &exits,
+            &platform,
+            &term,
+            constraint,
+            &obj_with(MapSearch::BnB),
+            None,
+        );
+        match (&ex, &bnb) {
+            (None, None) => {}
+            (Some(e), Some(b)) => {
+                assert_eq!(e.mapping, b.mapping, "case {case}: chosen mapping diverged");
+                assert_eq!(
+                    e.expected_cost.to_bits(),
+                    b.expected_cost.to_bits(),
+                    "case {case}: expected cost bits diverged"
+                );
+                assert_eq!(
+                    e.chain_cost.to_bits(),
+                    b.chain_cost.to_bits(),
+                    "case {case}: chain cost bits diverged"
+                );
+                assert!(b.evaluated <= e.evaluated + 1, "case {case}: pruning cost work");
+            }
+            (e, b) => panic!("case {case}: feasibility diverged ({e:?} vs {b:?})"),
+        }
+    }
+}
+
+#[test]
+fn beam_at_full_width_is_exact_and_never_worse_than_chain_below_it() {
+    let mut rng = Rng::seeded(0xB0B5_0003);
+    for case in 0..25 {
+        let platform = random_platform(&mut rng, false);
+        let graph = random_graph(&mut rng);
+        let exits = random_exits(&mut rng, &graph);
+        let term = random_term(&mut rng, exits.len() + 1);
+        let constraint = random_constraint(&mut rng, &graph, &exits, &platform);
+
+        let ex = co_search_with(
+            &graph,
+            &exits,
+            &platform,
+            &term,
+            constraint,
+            &obj_with(MapSearch::Exhaustive),
+            None,
+        );
+        // width >= the whole space: the beam cannot truncate, so it
+        // degenerates to an exact search
+        let full = MappingObjective {
+            beam_width: MAX_ASSIGNMENTS,
+            ..obj_with(MapSearch::Beam)
+        };
+        let beam = co_search_with(&graph, &exits, &platform, &term, constraint, &full, None);
+        match (&ex, &beam) {
+            (None, None) => {}
+            (Some(e), Some(b)) => {
+                assert_eq!(e.mapping, b.mapping, "case {case}: full-width beam diverged");
+                assert_eq!(e.expected_cost.to_bits(), b.expected_cost.to_bits(), "case {case}");
+            }
+            (e, b) => panic!("case {case}: feasibility diverged ({e:?} vs {b:?})"),
+        }
+        // narrow beam: heuristic, but chain-seeded — whenever it
+        // returns a mapping, that mapping is no worse than the chain
+        let narrow = MappingObjective { beam_width: 4, ..obj_with(MapSearch::Beam) };
+        if let Some(b) = co_search_with(&graph, &exits, &platform, &term, constraint, &narrow, None)
+        {
+            assert!(
+                b.expected_cost <= b.chain_cost,
+                "case {case}: narrow beam returned worse than chain"
+            );
+        }
+    }
+}
+
+#[test]
+fn bnb_is_worker_invariant_on_random_instances() {
+    let mut rng = Rng::seeded(0xB0B5_0004);
+    for case in 0..12 {
+        let platform = random_platform(&mut rng, false);
+        let graph = random_graph(&mut rng);
+        let exits = random_exits(&mut rng, &graph);
+        let term = random_term(&mut rng, exits.len() + 1);
+        let constraint = random_constraint(&mut rng, &graph, &exits, &platform);
+        let obj = obj_with(MapSearch::BnB);
+
+        let seq = co_search_with(&graph, &exits, &platform, &term, constraint, &obj, None);
+        for workers in [2usize, 8] {
+            let pool = ThreadPool::new(workers);
+            let par =
+                co_search_with(&graph, &exits, &platform, &term, constraint, &obj, Some(&pool));
+            match (&seq, &par) {
+                (None, None) => {}
+                (Some(s), Some(p)) => {
+                    assert_eq!(s.mapping, p.mapping, "case {case} workers {workers}");
+                    assert_eq!(
+                        s.expected_cost.to_bits(),
+                        p.expected_cost.to_bits(),
+                        "case {case} workers {workers}: cost bits"
+                    );
+                    // the full deterministic counter block, not just
+                    // the winner
+                    assert_eq!(
+                        s.stats, p.stats,
+                        "case {case} workers {workers}: SearchStats diverged"
+                    );
+                    assert_eq!(s.evaluated, p.evaluated, "case {case} workers {workers}");
+                }
+                (s, p) => panic!("case {case} workers {workers}: diverged ({s:?} vs {p:?})"),
+            }
+        }
+    }
+}
+
+#[test]
+fn preset_platforms_agree_across_strategies() {
+    // every shipped preset, exits chosen so the space stays within the
+    // exhaustive ceiling — including the 16-tile mesh at nseg <= 3
+    // (16^3 = 4096), the widest exactly-comparable slice of the
+    // platform the B&B search exists for
+    let graph = BlockGraph::synthetic_resnet(10, 2);
+    let cases: Vec<(Platform, Vec<usize>)> = vec![
+        (presets::psoc6(), vec![2]),
+        (presets::rk3588_cloud(), vec![1, 4]),
+        (presets::fog_cluster(), vec![1, 3, 5]),
+        (presets::mesh_accel(), vec![2, 4]),
+        (presets::mesh_accel(), vec![1, 3, 5]),
+    ];
+    for (platform, exits) in &cases {
+        let nseg = exits.len() + 1;
+        assert!(MappingObjective::space(nseg, platform.processors.len()) <= 4096);
+        let term = vec![1.0 / nseg as f64; nseg];
+        for constraint in [f64::INFINITY, 0.050] {
+            let ex = sweep_assignments_obj(
+                &graph,
+                exits,
+                platform,
+                constraint,
+                &obj_with(MapSearch::Exhaustive),
+                None,
+            );
+            let bnb = sweep_assignments_obj(
+                &graph,
+                exits,
+                platform,
+                constraint,
+                &obj_with(MapSearch::BnB),
+                None,
+            );
+            assert_eq!(ex.any_memory_ok, bnb.any_memory_ok, "{}", platform.name);
+            assert_eq!(
+                ex.best.as_ref().map(|(m, _)| m),
+                bnb.best.as_ref().map(|(m, _)| m),
+                "{} exits {exits:?}",
+                platform.name
+            );
+            let exc = co_search_with(
+                &graph,
+                exits,
+                platform,
+                &term,
+                constraint,
+                &obj_with(MapSearch::Exhaustive),
+                None,
+            );
+            let bnc = co_search_with(
+                &graph,
+                exits,
+                platform,
+                &term,
+                constraint,
+                &obj_with(MapSearch::BnB),
+                None,
+            );
+            assert_eq!(
+                exc.as_ref().map(|c| (c.mapping.clone(), c.expected_cost.to_bits())),
+                bnc.as_ref().map(|c| (c.mapping.clone(), c.expected_cost.to_bits())),
+                "{} exits {exits:?} co-search",
+                platform.name
+            );
+        }
+    }
+}

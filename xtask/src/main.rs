@@ -54,6 +54,7 @@ const GATED_BENCHES: &[&str] = &[
     "scenarios_multi_tenant",
     "scenarios_storm",
     "scenarios_fleet",
+    "scenarios_mesh",
     "hotpath",
     "hotpath_native",
 ];
@@ -286,6 +287,7 @@ mod tests {
         sorted.dedup();
         assert_eq!(sorted.len(), GATED_BENCHES.len(), "duplicate gated bench name");
         assert!(GATED_BENCHES.contains(&"scenarios_fleet"));
+        assert!(GATED_BENCHES.contains(&"scenarios_mesh"));
         assert!(GATED_BENCHES.iter().all(|n| !n.is_empty() && !n.contains('/')));
     }
 
