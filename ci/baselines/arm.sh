@@ -30,6 +30,8 @@ cargo run --release -p eenn-na --bin repro -- scenarios --smoke \
   --only fleet_rebalance --out BENCH_scenarios_fleet.json
 cargo run --release -p eenn-na --bin repro -- scenarios --smoke \
   --only mesh_cifar --out BENCH_scenarios_mesh.json
+cargo run --release -p eenn-na --bin repro -- scenarios --smoke --joint \
+  --only mesh_cifar_joint --out BENCH_scenarios_mesh_joint.json
 
 # the bench list comes from xtask — the same GATED_BENCHES constant the
 # CI regression gate (`bench-check --all`) and arming step iterate

@@ -18,6 +18,13 @@
 //! the winner is asserted identical across counts, and the speedups
 //! land in `BENCH_search_cost.json`.
 //!
+//! Plus the **joint exits×assignment section**: the joint
+//! branch-and-bound (`na::joint`) is bit-checked against a full
+//! cross-product enumeration on the fog cluster (3,284 pairs, with
+//! `timing.joint_speedup >= 1` asserted) and gated to touch < 5% of
+//! the ~22.7M-pair mesh cross-product, with its deterministic tree
+//! counters pinned under the exact-gated `joint_search` key.
+//!
 //! Run: `cargo bench --bench search_cost [-- --threads 1,2,4] [-- --smoke]`
 //! (`--smoke`: tiny fixture for CI — skips the paper-scale assertions)
 
@@ -31,7 +38,7 @@ use std::time::Instant;
 use eenn_na::graph::BlockGraph;
 use eenn_na::hw::presets;
 use eenn_na::mapping::{
-    sweep_assignments_obj, sweep_assignments_with, MapSearch, MappingObjective,
+    co_search_with, sweep_assignments_obj, sweep_assignments_with, MapSearch, MappingObjective,
 };
 use eenn_na::na::{
     self, count_search_space, score_candidates, threshold_grid, EdgeModel, ExitMasks,
@@ -135,17 +142,23 @@ fn main() {
     let enum_s = t0.elapsed().as_secs_f64();
 
     let t0 = Instant::now();
+    let a0 = allocated_bytes();
     let best = score_candidates(
         &graph, &cands, &[], &masks_map, &final_masks, &grid, &score_cfg, None,
     )
     .expect("feasible architecture");
+    let scoring_alloc = allocated_bytes() - a0;
     let search_s = t0.elapsed().as_secs_f64();
 
     println!("\nenumeration + pruning: {enum_s:.2}s ({} kept)", stats.kept);
     println!(
-        "threshold search over {} architectures / {} configs: {search_s:.2}s",
+        "threshold search over {} architectures / {} configs: {search_s:.2}s \
+         ({} cache hits / {} misses, {:.1} MB allocated)",
         cands.len(),
-        best.evaluated_configs
+        best.evaluated_configs,
+        best.cache_hits,
+        best.cache_misses,
+        scoring_alloc as f64 / 1e6
     );
     println!("best architecture: exits {:?} (score {:.4})", best.exits, best.score);
 
@@ -364,6 +377,183 @@ fn main() {
         mesh_bnb_s * 1e3
     );
 
+    // --- joint exits×assignment branch-and-bound -------------------------
+    // a 5-EE-location graph, so the full exits×assignment cross-product
+    // is enumerable on the fog cluster (3,284 pairs — ground truth the
+    // joint winner is bit-checked against) and honestly intractable on
+    // the 16-tile mesh (~22.7M pairs — the <5% touched-fraction gate)
+    println!("\n--- joint exits x assignment search (5 EE locations) ---");
+    let jgraph = BlockGraph::synthetic_resnet(10, 2);
+    let jlocs = jgraph.ee_locations.clone();
+    let jprofiles = common::profile_family(44, jlocs.len(), 300, 0.50, 0.90);
+    let jmasks: BTreeMap<usize, ExitMasks> = jlocs
+        .iter()
+        .copied()
+        .zip(jprofiles.iter().map(|p| ExitMasks::build(p, &grid)))
+        .collect();
+    let jfinal =
+        ExitMasks::build(&common::profile_family(45, 1, 300, 0.96, 0.96).remove(0), &grid);
+    let jcfg = FlowConfig { w_eff: 0.9, w_acc: 0.1, workers: 1, ..FlowConfig::default() };
+    let jtotal = jgraph.total_macs() as f64;
+    // SearchInput of one subset, exactly as the flow's scoring stage
+    // and the joint engine build it
+    let jinput = |exits: &[usize]| SearchInput {
+        exits: exits.iter().map(|e| &jmasks[e]).collect(),
+        fin: &jfinal,
+        mac_frac: exits
+            .iter()
+            .map(|&e| jgraph.macs_to_exit(exits, e) as f64 / jtotal)
+            .collect(),
+        final_mac_frac: jgraph.macs_to_exit(exits, jgraph.blocks.len() - 1) as f64 / jtotal,
+        w_eff: jcfg.w_eff,
+        w_acc: jcfg.w_acc,
+        grid: grid.clone(),
+    };
+
+    // two-phase-exhaustive ground truth on fog: every subset scored,
+    // every assignment priced through the identical joint objective —
+    // both the correctness oracle and the wall-clock baseline
+    let fog_max_ee = fog.max_classifiers().saturating_sub(1);
+    let fog_cross = na::cross_product(jlocs.len(), fog_max_ee, fog.processors.len());
+    let t0 = Instant::now();
+    let mut ex_min = f64::INFINITY;
+    let mut ex_pairs: u128 = 0;
+    for mask_bits in 0u32..1 << jlocs.len() {
+        if mask_bits.count_ones() as usize > fog_max_ee {
+            continue;
+        }
+        let exits: Vec<usize> = jlocs
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| mask_bits >> i & 1 == 1)
+            .map(|(_, &l)| l)
+            .collect();
+        let choice = na::solve(&jinput(&exits), jcfg.solver, jcfg.edge_model);
+        let nseg = exits.len() + 1;
+        let nproc = fog.processors.len();
+        let mut assignment = vec![0usize; nseg];
+        loop {
+            ex_pairs += 1;
+            if let Some((_, _, j)) = na::joint_cost_of(
+                &jgraph,
+                &fog,
+                &jmasks,
+                &jfinal,
+                &grid,
+                &jcfg,
+                &exits,
+                &choice.indices,
+                assignment.clone(),
+            ) {
+                if j < ex_min {
+                    ex_min = j;
+                }
+            }
+            // odometer over the nproc^nseg assignment space
+            let mut d = 0;
+            while d < nseg {
+                assignment[d] += 1;
+                if assignment[d] < nproc {
+                    break;
+                }
+                assignment[d] = 0;
+                d += 1;
+            }
+            if d == nseg {
+                break;
+            }
+        }
+    }
+    let joint_ex_s = t0.elapsed().as_secs_f64();
+    assert_eq!(ex_pairs, fog_cross, "exhaustive baseline must cover the cross-product");
+
+    let t0 = Instant::now();
+    let fog_joint = na::joint_search(
+        &jgraph, &fog, &jlocs, &jmasks, &jfinal, &grid, &jcfg, Some(&sweep_pool),
+    )
+    .expect("fog joint search is feasible");
+    let joint_s = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        fog_joint.winner.cost.to_bits(),
+        ex_min.to_bits(),
+        "joint B&B must return the exhaustively-verified optimum"
+    );
+    let joint_speedup = joint_ex_s / joint_s;
+    assert!(
+        joint_speedup >= 1.0,
+        "joint B&B ({joint_s:.3}s) must not lose to the two-phase-exhaustive \
+         sweep ({joint_ex_s:.3}s)"
+    );
+    println!(
+        "fog: {fog_cross} (exits, assignment) pairs exhaustively in {:.1} ms; \
+         joint B&B touched {} in {:.1} ms — {joint_speedup:.1}x, winner bit-verified",
+        joint_ex_s * 1e3,
+        fog_joint.stats.touched(),
+        joint_s * 1e3
+    );
+
+    // mesh: the cross-product is out of reach, so the reference is the
+    // two-phase pipeline itself (scored winner + its co-searched
+    // assignment, priced through the joint objective) — the joint
+    // winner must never cost more
+    let (jcands, _) = na::enumerate(&jgraph, &mesh, f64::INFINITY);
+    let mesh_scored = score_candidates(
+        &jgraph, &jcands, &[], &jmasks, &jfinal, &grid, &jcfg, None,
+    )
+    .expect("mesh scoring is feasible");
+    let term = jinput(&mesh_scored.exits)
+        .cascade_metrics(&mesh_scored.choice.indices)
+        .term_rates;
+    let mc = co_search_with(
+        &jgraph,
+        &mesh_scored.exits,
+        &mesh,
+        &term,
+        f64::INFINITY,
+        &MappingObjective::default(),
+        Some(&sweep_pool),
+    )
+    .expect("mesh co-search is feasible");
+    let (_, _, mesh_two_phase) = na::joint_cost_of(
+        &jgraph,
+        &mesh,
+        &jmasks,
+        &jfinal,
+        &grid,
+        &jcfg,
+        &mesh_scored.exits,
+        &mesh_scored.choice.indices,
+        mc.mapping.assignment.clone(),
+    )
+    .expect("two-phase winner must price");
+    let t0 = Instant::now();
+    let mesh_joint = na::joint_search(
+        &jgraph, &mesh, &jlocs, &jmasks, &jfinal, &grid, &jcfg, Some(&sweep_pool),
+    )
+    .expect("mesh joint search is feasible");
+    let joint_mesh_s = t0.elapsed().as_secs_f64();
+    assert!(
+        mesh_joint.winner.cost <= mesh_two_phase,
+        "joint winner ({:.17}) must not cost more than two-phase ({mesh_two_phase:.17})",
+        mesh_joint.winner.cost
+    );
+    let mesh_cross =
+        na::cross_product(jlocs.len(), mesh.max_classifiers().saturating_sub(1), 16);
+    let mesh_touched = mesh_joint.stats.touched() as u128;
+    assert!(
+        mesh_touched * 20 < mesh_cross,
+        "joint B&B must touch < 5% of the mesh cross-product \
+         ({mesh_touched} of {mesh_cross})"
+    );
+    println!(
+        "mesh: {mesh_cross} pairs; joint touched {mesh_touched} ({:.4}%) in {:.1} ms — \
+         cost {:.4} vs two-phase {:.4}",
+        100.0 * mesh_touched as f64 / mesh_cross as f64,
+        joint_mesh_s * 1e3,
+        mesh_joint.winner.cost,
+        mesh_two_phase
+    );
+
     // --- BENCH_search_cost.json -----------------------------------------
     let mut results = BTreeMap::new();
     for &(w, m) in &sweep {
@@ -408,6 +598,45 @@ fn main() {
     search.insert("fog".to_string(), search_entry(fog_space, &fog_stats));
     search.insert("mesh".to_string(), search_entry(mesh_space, &mesh_stats));
     top.insert("mapping_search".to_string(), Json::Obj(search));
+    // PrefixCache traffic of the sequential scoring run (shard-layout-
+    // dependent, so only the 1-worker run is gated)
+    let mut pc = BTreeMap::new();
+    pc.insert("hits".to_string(), Json::Num(best.cache_hits as f64));
+    pc.insert("misses".to_string(), Json::Num(best.cache_misses as f64));
+    top.insert("prefix_cache_1_worker".to_string(), Json::Obj(pc));
+    // joint exits×assignment search: every counter is bit-stable for
+    // the fixture at any worker count, so the CI gate pins them exactly
+    let joint_entry = |cross: u128, s: &na::JointStats| {
+        let mut e = BTreeMap::new();
+        e.insert("cross_product".to_string(), Json::Num(cross as f64));
+        e.insert("subsets_considered".to_string(), Json::Num(s.subsets_considered as f64));
+        e.insert("subsets_pruned".to_string(), Json::Num(s.subsets_pruned as f64));
+        e.insert("map_searches".to_string(), Json::Num(s.map_searches as f64));
+        e.insert("map_skipped".to_string(), Json::Num(s.map_skipped as f64));
+        e.insert("map_nodes".to_string(), Json::Num(s.map_nodes as f64));
+        e.insert("map_leaves".to_string(), Json::Num(s.map_leaves as f64));
+        e.insert("map_pruned_bound".to_string(), Json::Num(s.map_pruned_bound as f64));
+        e.insert(
+            "map_pruned_infeasible".to_string(),
+            Json::Num(s.map_pruned_infeasible as f64),
+        );
+        e.insert("touched".to_string(), Json::Num(s.touched() as f64));
+        e.insert(
+            "touched_fraction".to_string(),
+            Json::Num(s.touched() as f64 / cross as f64),
+        );
+        e.insert("best_cost".to_string(), Json::Num(s.best_cost));
+        e
+    };
+    let mut joint_obj = BTreeMap::new();
+    joint_obj.insert(
+        "fog".to_string(),
+        Json::Obj(joint_entry(fog_cross, &fog_joint.stats)),
+    );
+    let mut mesh_entry = joint_entry(mesh_cross, &mesh_joint.stats);
+    mesh_entry.insert("two_phase_cost".to_string(), Json::Num(mesh_two_phase));
+    joint_obj.insert("mesh".to_string(), Json::Obj(mesh_entry));
+    top.insert("joint_search".to_string(), Json::Obj(joint_obj));
     // allocation traffic of the streamed assignment sweep: wall-clock
     // adjacent (allocator/platform dependent), so it lives under
     // `timing` where the CI gate applies its tolerance band — as do
@@ -419,6 +648,11 @@ fn main() {
     timing.insert("mapping_bnb_seconds".to_string(), Json::Num(fog_bnb_s));
     timing.insert("mapping_bnb_speedup".to_string(), Json::Num(fog_ex_s / fog_bnb_s));
     timing.insert("mapping_mesh_bnb_seconds".to_string(), Json::Num(mesh_bnb_s));
+    timing.insert("scoring_alloc_bytes".to_string(), Json::Num(scoring_alloc as f64));
+    timing.insert("joint_seconds".to_string(), Json::Num(joint_s));
+    timing.insert("joint_exhaustive_seconds".to_string(), Json::Num(joint_ex_s));
+    timing.insert("joint_speedup".to_string(), Json::Num(joint_speedup));
+    timing.insert("joint_mesh_seconds".to_string(), Json::Num(joint_mesh_s));
     top.insert("timing".to_string(), Json::Obj(timing));
     let path = "BENCH_search_cost.json";
     std::fs::write(path, Json::Obj(top).to_string()).expect("write bench json");

@@ -65,6 +65,10 @@ fn run() -> Result<()> {
                  \x20                              assignment-space strategy for both\n\
                  \x20                              mapping call sites; auto upgrades\n\
                  \x20                              oversized sweeps to branch-and-bound\n\
+                 \x20             [--joint]       one joint branch-and-bound over exit\n\
+                 \x20                              subsets x assignments instead of the\n\
+                 \x20                              two-phase pipeline (never worse, often\n\
+                 \x20                              cheaper than exits-then-mapping)\n\
                  \x20             [--workers N]   (search parallelism; default: all cores,\n\
                  \x20                              1 = sequential, same result either way)\n\
                  repro eval    --model dscnn --solution sol.json\n\
@@ -115,7 +119,13 @@ fn run() -> Result<()> {
                  \x20             mesh preset (writes a scenarios_mesh document):\n\
                  \x20               mesh_cifar          16-tile accelerator mesh, 16^6\n\
                  \x20                                   assignments per subset — needs the\n\
-                 \x20                                   branch-and-bound mapping search"
+                 \x20                                   branch-and-bound mapping search\n\
+                 \x20             joint preset (writes a scenarios_mesh_joint document):\n\
+                 \x20               mesh_cifar_joint    mesh_cifar under the joint exits x\n\
+                 \x20                                   assignment branch-and-bound, with\n\
+                 \x20                                   joint-vs-two-phase pricing asserted\n\
+                 \x20             [--joint] runs any selected base/mesh preset through\n\
+                 \x20             the joint search (its report gains a \"joint\" block)"
             );
             Ok(())
         }
@@ -170,6 +180,7 @@ fn flow_config(args: &Args, task: &str) -> Result<FlowConfig> {
         edge_model,
         mapping,
         refine: !args.bool("no-refine"),
+        joint: args.bool("joint"),
         finetune_epochs: args.usize("finetune", 0),
         workers: args.usize("workers", na::default_workers()),
         verbose: args.bool("verbose"),
@@ -418,11 +429,15 @@ fn serve_cmd(args: &Args) -> Result<()> {
 /// presets (`--only 'fleet_*'`) run the replicated executor and write
 /// a `scenarios_fleet` document instead; the mesh preset (`--only
 /// mesh_cifar`) exercises the branch-and-bound mapping search and
-/// writes a `scenarios_mesh` document.
+/// writes a `scenarios_mesh` document; the joint preset (`--only
+/// mesh_cifar_joint`) runs the joint exits×assignment search and
+/// writes a `scenarios_mesh_joint` document. `--joint` forces the
+/// joint search onto any selected base/mesh preset.
 fn scenarios_cmd(args: &Args) -> Result<()> {
     use eenn_na::scenarios;
 
     let smoke = args.bool("smoke");
+    let force_joint = args.bool("joint");
     let workers = args.usize("workers", na::default_workers());
     // inline by default: scenario wall timings stay comparable across
     // CI baselines (the deterministic payload is byte-identical for
@@ -445,9 +460,10 @@ fn scenarios_cmd(args: &Args) -> Result<()> {
     let base = scenarios::all();
     let fleet = scenarios::fleet_all();
     let mesh = scenarios::mesh_all();
+    let mesh_joint = scenarios::mesh_joint_all();
     let sel_base: Vec<_> = base.iter().filter(|sc| matches_only(sc.name)).collect();
     // the default run (no --only) is the base matrix, unchanged; the
-    // fleet and mesh matrices are opted into by name or glob
+    // fleet, mesh and joint matrices are opted into by name or glob
     let sel_fleet: Vec<_> = match only {
         None => Vec::new(),
         Some(_) => fleet.iter().filter(|fs| matches_only(fs.base.name)).collect(),
@@ -456,32 +472,59 @@ fn scenarios_cmd(args: &Args) -> Result<()> {
         None => Vec::new(),
         Some(_) => mesh.iter().filter(|sc| matches_only(sc.name)).collect(),
     };
-    if sel_base.is_empty() && sel_fleet.is_empty() && sel_mesh.is_empty() {
+    let sel_mesh_joint: Vec<_> = match only {
+        None => Vec::new(),
+        Some(_) => mesh_joint.iter().filter(|sc| matches_only(sc.name)).collect(),
+    };
+    if sel_base.is_empty()
+        && sel_fleet.is_empty()
+        && sel_mesh.is_empty()
+        && sel_mesh_joint.is_empty()
+    {
         let mut names: Vec<&str> = base.iter().map(|s| s.name).collect();
         names.extend(fleet.iter().map(|s| s.base.name));
         names.extend(mesh.iter().map(|s| s.name));
+        names.extend(mesh_joint.iter().map(|s| s.name));
         return Err(anyhow!(
             "no preset matches {:?}; available: {}",
             only.unwrap_or(""),
             names.join(", ")
         ));
     }
-    let classes =
-        [!sel_base.is_empty(), !sel_fleet.is_empty(), !sel_mesh.is_empty()];
+    let classes = [
+        !sel_base.is_empty(),
+        !sel_fleet.is_empty(),
+        !sel_mesh.is_empty(),
+        !sel_mesh_joint.is_empty(),
+    ];
     if classes.iter().filter(|&&c| c).count() > 1 {
         return Err(anyhow!(
-            "base, fleet and mesh presets aggregate into different bench documents \
-             (scenarios / scenarios_fleet / scenarios_mesh); run them as separate \
-             invocations"
+            "base, fleet, mesh and joint presets aggregate into different bench \
+             documents (scenarios / scenarios_fleet / scenarios_mesh / \
+             scenarios_mesh_joint); run them as separate invocations"
         ));
     }
     if !sel_fleet.is_empty() && !matches!(backend, Backend::Synthetic) {
         return Err(anyhow!("fleet presets serve on the synthetic backend only"));
     }
+    if force_joint && !sel_fleet.is_empty() {
+        return Err(anyhow!(
+            "--joint does not apply to fleet presets: the fleet layer replicates \
+             the serving plane, not the search"
+        ));
+    }
+
+    // --joint opts any selected base/mesh preset into the joint
+    // search; the mesh_cifar_joint preset carries the flag itself
+    let with_joint = |sc: &scenarios::Scenario| {
+        let mut sc = sc.clone();
+        sc.joint = sc.joint || force_joint;
+        sc
+    };
 
     println!(
         "=== scenario matrix ({} presets{}, {workers} workers, {} backend) ===\n",
-        sel_base.len() + sel_fleet.len() + sel_mesh.len(),
+        sel_base.len() + sel_fleet.len() + sel_mesh.len() + sel_mesh_joint.len(),
         if smoke { ", smoke" } else { "" },
         backend.name()
     );
@@ -494,10 +537,21 @@ fn scenarios_cmd(args: &Args) -> Result<()> {
             reports.push(r);
         }
         scenarios::fleet_bench_json(&reports, smoke, deterministic)
+    } else if !sel_mesh_joint.is_empty() {
+        let mut reports = Vec::with_capacity(sel_mesh_joint.len());
+        for sc in sel_mesh_joint {
+            let sc = with_joint(sc);
+            let r = scenarios::run_scenario_with(&sc, workers, exec_workers, smoke, backend)?;
+            r.print();
+            println!();
+            reports.push(r);
+        }
+        scenarios::mesh_joint_bench_json(&reports, smoke, deterministic)
     } else if !sel_mesh.is_empty() {
         let mut reports = Vec::with_capacity(sel_mesh.len());
         for sc in sel_mesh {
-            let r = scenarios::run_scenario_with(sc, workers, exec_workers, smoke, backend)?;
+            let sc = with_joint(sc);
+            let r = scenarios::run_scenario_with(&sc, workers, exec_workers, smoke, backend)?;
             r.print();
             println!();
             reports.push(r);
@@ -506,7 +560,8 @@ fn scenarios_cmd(args: &Args) -> Result<()> {
     } else {
         let mut reports = Vec::with_capacity(sel_base.len());
         for sc in sel_base {
-            let r = scenarios::run_scenario_with(sc, workers, exec_workers, smoke, backend)?;
+            let sc = with_joint(sc);
+            let r = scenarios::run_scenario_with(&sc, workers, exec_workers, smoke, backend)?;
             r.print();
             println!();
             reports.push(r);

@@ -34,9 +34,12 @@
 //! * [`MapSearch::Exhaustive`] — stream every assignment
 //!   ([`AssignmentIter`]) and simulate each in fixed-size chunks
 //!   ([`MappingObjective::sweep_chunk`]) fanned out over the thread
-//!   pool. Past [`MAX_ASSIGNMENTS`] the stream is restricted to
-//!   pipeline-ordered (non-decreasing) assignments as a tractable
-//!   fallback, so above that threshold exhaustion is *not* complete.
+//!   pool. Past [`MAX_ASSIGNMENTS`] the sweep entry points no longer
+//!   degrade to the pipeline-ordered subspace silently: they log
+//!   exactly how many assignments the monotone fallback would have
+//!   dropped and route through branch-and-bound instead (full space,
+//!   exact winner). The raw [`AssignmentIter`] keeps its monotone
+//!   fallback for callers that stream it directly.
 //! * [`MapSearch::BnB`] — branch-and-bound: depth-first search over
 //!   segment→processor prefixes that prunes a subtree when
 //!   `committed_prefix_cost + optimistic_remainder` cannot beat the
@@ -1300,6 +1303,30 @@ pub fn sweep_assignments_obj(
     match obj.resolved_search(nseg, nproc) {
         MapSearch::Auto => unreachable!("resolved_search returns a concrete strategy"),
         MapSearch::Exhaustive => {
+            let space = full_space(nseg, nproc);
+            if space > MAX_ASSIGNMENTS as u128 {
+                // no-silent-caps: past MAX_ASSIGNMENTS the streamed
+                // enumeration would quietly restrict itself to the
+                // pipeline-ordered subspace. Say exactly what would be
+                // dropped and run the complete bounded search instead.
+                let kept = monotone_space(nseg, nproc);
+                eprintln!(
+                    "warning: exhaustive sweep over {nproc}^{nseg} = {space} assignments \
+                     exceeds MAX_ASSIGNMENTS ({MAX_ASSIGNMENTS}); the monotone fallback \
+                     would silently drop {} non-pipeline-ordered assignments — routing \
+                     through branch-and-bound (full space, exact winner) instead",
+                    space.saturating_sub(kept)
+                );
+                return sweep_bounded(
+                    graph,
+                    exits,
+                    platform,
+                    latency_constraint_s,
+                    obj,
+                    MapSearch::BnB,
+                    pool,
+                );
+            }
             let AssignmentSweep { mut feasible, any_memory_ok, evaluated } = feasible_assignments(
                 graph,
                 exits,
@@ -1312,39 +1339,52 @@ pub fn sweep_assignments_obj(
             let best = best_idx.map(|i| feasible.swap_remove(i));
             FeasibilitySweep { best, any_memory_ok, evaluated, stats: None }
         }
-        strategy => {
-            let tables = SearchTables::build(graph, exits, platform);
-            let tails = vec![1.0; nseg];
-            let bounds = BoundModel::build(&tables, &tails, 1.0, 0.0);
-            let out = match strategy {
-                MapSearch::BnB => branch_and_bound(
-                    graph,
-                    exits,
-                    platform,
-                    tables,
-                    bounds,
-                    LeafCost::WorstCase,
-                    latency_constraint_s,
-                    pool,
-                ),
-                _ => beam_search(
-                    graph,
-                    exits,
-                    platform,
-                    tables,
-                    bounds,
-                    LeafCost::WorstCase,
-                    latency_constraint_s,
-                    obj.beam_width,
-                ),
-            };
-            FeasibilitySweep {
-                best: out.best.map(|(m, r, _)| (m, r)),
-                any_memory_ok: out.any_memory_ok,
-                evaluated: out.stats.leaves_evaluated as usize,
-                stats: Some(out.stats),
-            }
-        }
+        strategy => sweep_bounded(graph, exits, platform, latency_constraint_s, obj, strategy, pool),
+    }
+}
+
+/// Bounded-strategy body of [`sweep_assignments_obj`]: worst-case
+/// latency objective over the full space via B&B or beam.
+fn sweep_bounded(
+    graph: &BlockGraph,
+    exits: &[usize],
+    platform: &Platform,
+    latency_constraint_s: f64,
+    obj: &MappingObjective,
+    strategy: MapSearch,
+    pool: Option<&ThreadPool>,
+) -> FeasibilitySweep {
+    let nseg = exits.len() + 1;
+    let tables = SearchTables::build(graph, exits, platform);
+    let tails = vec![1.0; nseg];
+    let bounds = BoundModel::build(&tables, &tails, 1.0, 0.0);
+    let out = match strategy {
+        MapSearch::BnB => branch_and_bound(
+            graph,
+            exits,
+            platform,
+            tables,
+            bounds,
+            LeafCost::WorstCase,
+            latency_constraint_s,
+            pool,
+        ),
+        _ => beam_search(
+            graph,
+            exits,
+            platform,
+            tables,
+            bounds,
+            LeafCost::WorstCase,
+            latency_constraint_s,
+            obj.beam_width,
+        ),
+    };
+    FeasibilitySweep {
+        best: out.best.map(|(m, r, _)| (m, r)),
+        any_memory_ok: out.any_memory_ok,
+        evaluated: out.stats.leaves_evaluated as usize,
+        stats: Some(out.stats),
     }
 }
 
@@ -1389,54 +1429,70 @@ pub fn co_search_with(
             co_search_exhaustive(graph, exits, platform, term, latency_constraint_s, obj, pool)
         }
         strategy => {
-            let tables = SearchTables::build(graph, exits, platform);
-            let tails = tails_of(term);
-            let (lat_norm, e_norm) = analytic_norms(&tables, &tails);
-            let bounds = BoundModel::build(
-                &tables,
-                &tails,
-                obj.w_latency / lat_norm,
-                obj.w_energy / e_norm,
-            );
-            let leaf = LeafCost::Expected {
-                w_latency: obj.w_latency,
-                w_energy: obj.w_energy,
-                lat_norm,
-                e_norm,
-                term: term.to_vec(),
-            };
-            let out = match strategy {
-                MapSearch::BnB => branch_and_bound(
-                    graph,
-                    exits,
-                    platform,
-                    tables,
-                    bounds,
-                    leaf,
-                    latency_constraint_s,
-                    pool,
-                ),
-                _ => beam_search(
-                    graph,
-                    exits,
-                    platform,
-                    tables,
-                    bounds,
-                    leaf,
-                    latency_constraint_s,
-                    obj.beam_width,
-                ),
-            };
-            let (mapping, _, expected_cost) = out.best?;
-            Some(MappingChoice {
-                mapping,
-                expected_cost,
-                chain_cost: out.chain_cost,
-                evaluated: out.stats.leaves_evaluated as usize,
-                stats: Some(out.stats),
-            })
+            co_search_bounded(graph, exits, platform, term, latency_constraint_s, obj, strategy, pool)
         }
     }
+}
+
+/// Bounded-strategy body of [`co_search_with`]: expected-cost
+/// objective under the analytic normalization via B&B or beam.
+#[allow(clippy::too_many_arguments)]
+fn co_search_bounded(
+    graph: &BlockGraph,
+    exits: &[usize],
+    platform: &Platform,
+    term: &[f64],
+    latency_constraint_s: f64,
+    obj: &MappingObjective,
+    strategy: MapSearch,
+    pool: Option<&ThreadPool>,
+) -> Option<MappingChoice> {
+    let tables = SearchTables::build(graph, exits, platform);
+    let tails = tails_of(term);
+    let (lat_norm, e_norm) = analytic_norms(&tables, &tails);
+    let bounds = BoundModel::build(
+        &tables,
+        &tails,
+        obj.w_latency / lat_norm,
+        obj.w_energy / e_norm,
+    );
+    let leaf = LeafCost::Expected {
+        w_latency: obj.w_latency,
+        w_energy: obj.w_energy,
+        lat_norm,
+        e_norm,
+        term: term.to_vec(),
+    };
+    let out = match strategy {
+        MapSearch::BnB => branch_and_bound(
+            graph,
+            exits,
+            platform,
+            tables,
+            bounds,
+            leaf,
+            latency_constraint_s,
+            pool,
+        ),
+        _ => beam_search(
+            graph,
+            exits,
+            platform,
+            tables,
+            bounds,
+            leaf,
+            latency_constraint_s,
+            obj.beam_width,
+        ),
+    };
+    let (mapping, _, expected_cost) = out.best?;
+    Some(MappingChoice {
+        mapping,
+        expected_cost,
+        chain_cost: out.chain_cost,
+        evaluated: out.stats.leaves_evaluated as usize,
+        stats: Some(out.stats),
+    })
 }
 
 /// Legacy exhaustive co-search body: score the whole feasible set,
@@ -1451,6 +1507,33 @@ fn co_search_exhaustive(
     obj: &MappingObjective,
     pool: Option<&ThreadPool>,
 ) -> Option<MappingChoice> {
+    let nseg = exits.len() + 1;
+    let nproc = platform.processors.len();
+    let space = full_space(nseg, nproc);
+    if space > MAX_ASSIGNMENTS as u128 {
+        // same no-silent-caps rule as the feasibility sweep. The
+        // FeasibleMax normalization needs the whole feasible set scored
+        // — exactly what is intractable here — so the rerouted search
+        // runs under the analytic norm, and we say so.
+        let kept = monotone_space(nseg, nproc);
+        eprintln!(
+            "warning: exhaustive co-search over {nproc}^{nseg} = {space} assignments \
+             exceeds MAX_ASSIGNMENTS ({MAX_ASSIGNMENTS}); the monotone fallback would \
+             silently drop {} non-pipeline-ordered assignments — routing through \
+             branch-and-bound under the analytic norm instead",
+            space.saturating_sub(kept)
+        );
+        return co_search_bounded(
+            graph,
+            exits,
+            platform,
+            term,
+            latency_constraint_s,
+            obj,
+            MapSearch::BnB,
+            pool,
+        );
+    }
     let sweep =
         feasible_assignments(graph, exits, platform, latency_constraint_s, obj.sweep_chunk, pool);
     if sweep.feasible.is_empty() {
@@ -1490,6 +1573,137 @@ fn co_search_exhaustive(
         evaluated: sweep.evaluated,
         stats: None,
     })
+}
+
+// ---------------------------------------------------------------------------
+// Joint-search entry points (`na::joint`): the mapping term of the
+// joint exits×assignment objective, and a budget-seeded inner search.
+// ---------------------------------------------------------------------------
+
+/// Outcome of one budget-seeded inner assignment search.
+pub(crate) struct InnerSearch {
+    /// Cheapest feasible assignment whose cost strictly beats the
+    /// budget (`None` when the budget prunes everything or nothing is
+    /// feasible).
+    pub(crate) best: Option<(Mapping, SimReport, f64)>,
+    pub(crate) stats: SearchStats,
+}
+
+/// Scalarized expected cost of one *concrete* assignment of `exits`
+/// under the analytic normalization — the mapping term `m(E, A)` of
+/// the joint objective. `None` when the assignment violates a memory
+/// budget or the latency constraint. Bit-identical to the cost
+/// [`assignment_search_budgeted`] would assign the same leaf, because
+/// both run `simulate_assignment` + [`LeafCost::Expected`] over the
+/// same tables-derived norms.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn expected_assignment_cost(
+    graph: &BlockGraph,
+    exits: &[usize],
+    platform: &Platform,
+    term: &[f64],
+    w_latency: f64,
+    w_energy: f64,
+    latency_constraint_s: f64,
+    assignment: Vec<ProcId>,
+) -> Option<(Mapping, SimReport, f64)> {
+    let tables = SearchTables::build(graph, exits, platform);
+    let tails = tails_of(term);
+    let (lat_norm, e_norm) = analytic_norms(&tables, &tails);
+    let leaf = LeafCost::Expected {
+        w_latency,
+        w_energy,
+        lat_norm,
+        e_norm,
+        term: term.to_vec(),
+    };
+    let (mapping, report) = simulate_assignment(graph, exits, platform, assignment);
+    let memory_ok = report.memory_ok.iter().all(|&ok| ok);
+    if !memory_ok || report.worst_case_s > latency_constraint_s {
+        return None;
+    }
+    let c = leaf.eval(&report);
+    Some((mapping, report, c))
+}
+
+/// Sequential full-space assignment B&B seeded with an *external*
+/// incumbent: the joint engine calls this once per surviving exit
+/// subset with `budget = incumbent − s(E)`, so a subset whose mapping
+/// optimum cannot beat the joint incumbent prunes its whole
+/// `nproc^nseg` inner space against that budget instead of searching
+/// it from scratch. No chain seeding (the DFS itself covers the
+/// chain), no pool (the joint engine parallelizes one level up, and a
+/// sequential inner search keeps its [`SearchStats`] worker-invariant
+/// by construction). With `budget = INFINITY` this returns the exact
+/// constrained optimum of the space, lex-smallest on ties.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn assignment_search_budgeted(
+    graph: &BlockGraph,
+    exits: &[usize],
+    platform: &Platform,
+    term: &[f64],
+    w_latency: f64,
+    w_energy: f64,
+    latency_constraint_s: f64,
+    budget: f64,
+) -> InnerSearch {
+    let nseg = exits.len() + 1;
+    let nproc = platform.processors.len();
+    let tables = SearchTables::build(graph, exits, platform);
+    let tails = tails_of(term);
+    let (lat_norm, e_norm) = analytic_norms(&tables, &tails);
+    let bounds = BoundModel::build(
+        &tables,
+        &tails,
+        w_latency / lat_norm,
+        w_energy / e_norm,
+    );
+    let leaf = LeafCost::Expected {
+        w_latency,
+        w_energy,
+        lat_norm,
+        e_norm,
+        term: term.to_vec(),
+    };
+    debug_assert_eq!(term.len(), nseg, "termination distribution must have one mass per segment");
+    let ctx = SearchCtx {
+        graph: graph.clone(),
+        exits: exits.to_vec(),
+        platform: platform.clone(),
+        tables,
+        bounds,
+        leaf,
+        constraint: latency_constraint_s,
+        // the external budget plays the incumbent's role: leaves must
+        // strictly beat it, bounds prune against it
+        chain_cost: budget,
+    };
+    let mut stats = SearchStats {
+        nodes_expanded: 1,
+        root_bound: ctx.bounds.root_bound,
+        ..Default::default()
+    };
+    let mut inc = budget;
+    let mut best: Option<(Vec<ProcId>, f64)> = None;
+    for p0 in 0..nproc {
+        let (branch_best, branch_stats, _) = BranchDfs::run(&ctx, p0);
+        stats.nodes_expanded += branch_stats.nodes_expanded;
+        stats.leaves_evaluated += branch_stats.leaves_evaluated;
+        stats.pruned_bound += branch_stats.pruned_bound;
+        stats.pruned_infeasible += branch_stats.pruned_infeasible;
+        if let Some((assignment, c)) = branch_best {
+            if c < inc - COST_TIE {
+                inc = c;
+                best = Some((assignment, c));
+            }
+        }
+    }
+    let best = best.map(|(assignment, c)| {
+        let (m, r) = simulate_assignment(graph, exits, platform, assignment);
+        (m, r, c)
+    });
+    stats.best_cost = best.as_ref().map(|b| b.2).unwrap_or(f64::INFINITY);
+    InnerSearch { best, stats }
 }
 
 #[cfg(test)]

@@ -22,6 +22,11 @@
 //! thresholds by a correction factor to compensate for training-set
 //! overconfidence (the paper's §3.2 fallback).
 //!
+//! With [`FlowConfig::joint`] the phase split between architecture
+//! selection (5–6) and mapping (7) is replaced by one joint
+//! branch-and-bound over exit subsets × assignments ([`crate::na::joint`]);
+//! the two-phase pipeline stays the default and bit-frozen.
+//!
 //! # Parallel deterministic search engine
 //!
 //! The flow is split into an engine-backed front-end ([`augment`]:
@@ -63,9 +68,11 @@ use anyhow::Result;
 
 use super::candidates::{enumerate_with_obj, Candidate, PruneStats};
 use super::features::FeatureCache;
+use super::joint::{self, JointReport};
 use super::profile::{threshold_grid, ExitMasks, ExitProfile, GRID_POINTS};
 use super::threshold::{
-    exact_cost_cached, solve, Choice, EdgeModel, PrefixCache, SearchInput, Solver,
+    exact_cost_cached_in, solve, Choice, EdgeModel, PrefixCache, ReplayScratch, SearchInput,
+    Solver,
 };
 use super::trainer::{profile_exit, train_exit, TrainedExit, TrainerConfig};
 use crate::data::load_split;
@@ -112,6 +119,12 @@ pub struct FlowConfig {
     pub mapping: MappingObjective,
     /// Run the denser second threshold search on the chosen solution.
     pub refine: bool,
+    /// Run the joint exits×assignment branch-and-bound (`na::joint`)
+    /// after the two-phase scoring stage and adopt its winner — the
+    /// exact minimum of decision cost + analytic-norm mapping cost
+    /// over the full design space. The two-phase pipeline stays the
+    /// default and is bit-frozen.
+    pub joint: bool,
     /// Post-selection fine-tuning epochs for the chosen exits (the
     /// paper's optional step; 0 = off). Heads-only on the frozen
     /// backbone — see trainer::finetune_exit.
@@ -136,6 +149,7 @@ impl Default for FlowConfig {
             edge_model: EdgeModel::Pairwise,
             mapping: MappingObjective::default(),
             refine: true,
+            joint: false,
             finetune_epochs: 0,
             workers: default_workers(),
             verbose: false,
@@ -161,6 +175,14 @@ pub struct SearchReport {
     pub mapping_candidates: usize,
     /// worker threads the search ran with
     pub workers: usize,
+    /// [`PrefixCache`] traffic of the architecture-scoring stage.
+    /// Shard-layout-dependent: values vary with the worker count (the
+    /// bench gates the 1-worker run only).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Joint-search summary when [`FlowConfig::joint`] ran (`None` on
+    /// the default two-phase path).
+    pub joint: Option<JointReport>,
 }
 
 pub struct AugmentOutcome {
@@ -430,9 +452,88 @@ pub fn augment_prepared(
     };
     let mut evaluated_configs = scored.evaluated_configs;
     let mut score = scored.score;
-    let exits_chosen = scored.exits;
+    let mut exits_chosen = scored.exits;
     let mut choice = scored.choice;
     log!("chosen exits {exits_chosen:?} score {score:.4}");
+
+    // 5b. joint exits×assignment branch-and-bound: one bounded search
+    // over the full (exit subset × segment→processor assignment)
+    // design space, replacing the greedy phase split. The two-phase
+    // winner above is first priced through the joint evaluator (its
+    // own exits + the assignment the standard co-search picks for it)
+    // so both numbers are bit-comparable; the joint winner's cost is
+    // ≤ that reference by construction.
+    let mut joint_report: Option<JointReport> = None;
+    let mut joint_assignment: Option<Vec<usize>> = None;
+    if cfg.joint {
+        let si = search_input(graph, &exits_chosen, &masks, &final_masks, &grid, cfg);
+        let term = si.cascade_metrics(&choice.indices).term_rates;
+        let two_phase_cost = co_search_with(
+            graph,
+            &exits_chosen,
+            platform,
+            &term,
+            cfg.latency_constraint_s,
+            &cfg.mapping,
+            pool.as_ref(),
+        )
+        .and_then(|mc| {
+            joint::joint_cost_of(
+                graph,
+                platform,
+                &masks,
+                &final_masks,
+                &grid,
+                cfg,
+                &exits_chosen,
+                &choice.indices,
+                mc.mapping.assignment,
+            )
+        })
+        .map_or(f64::INFINITY, |(_s, _m, j)| j);
+        let viable_locs: Vec<usize> = graph
+            .ee_locations
+            .iter()
+            .copied()
+            .filter(|l| !bank.nonviable.contains(l))
+            .collect();
+        let out = joint::joint_search(
+            graph,
+            platform,
+            &viable_locs,
+            &masks,
+            &final_masks,
+            &grid,
+            cfg,
+            pool.as_ref(),
+        )
+        .ok_or_else(|| anyhow::anyhow!("joint search found no feasible (exits, assignment)"))?;
+        log!(
+            "joint winner {:?} J={:.4} (s={:.4} m={:.4}; two-phase J={:.4}; \
+             {} subsets scored, {} bound-pruned, {} map spaces skipped)",
+            out.winner.exits,
+            out.winner.cost,
+            out.winner.score,
+            out.winner.map_cost,
+            two_phase_cost,
+            out.stats.subsets_considered,
+            out.stats.subsets_pruned,
+            out.stats.map_skipped,
+        );
+        score = out.winner.score;
+        exits_chosen = out.winner.exits.clone();
+        choice = Choice {
+            indices: out.winner.indices.clone(),
+            thresholds: out.winner.thresholds.clone(),
+            cost: out.winner.score,
+        };
+        joint_assignment = Some(out.winner.mapping.assignment.clone());
+        joint_report = Some(JointReport {
+            joint_cost: out.winner.cost,
+            two_phase_cost,
+            stats: out.stats,
+        });
+    }
 
     // 6. denser second search around the found thresholds -----------------
     if cfg.refine && !exits_chosen.is_empty() {
@@ -494,28 +595,40 @@ pub fn augment_prepared(
     let identity: Vec<usize> = (0..exits_chosen.len()).collect();
     let expected = si.cascade_metrics(&identity);
 
-    // 6c. mapping co-search: with the termination distribution known,
-    // enumerate every segment→processor assignment of the chosen
-    // architecture and keep the one with the lowest scalarized
-    // expected latency/energy (the identity chain is in the search
-    // space, so this never costs more than the seed behaviour)
-    let mchoice = co_search_with(
-        graph,
-        &exits_chosen,
-        platform,
-        &expected.term_rates,
-        cfg.latency_constraint_s,
-        &cfg.mapping,
-        pool.as_ref(),
-    )
-    .ok_or_else(|| anyhow::anyhow!("no feasible mapping for chosen architecture"))?;
-    log!(
-        "mapping {:?} (cost {:.4}, chain {:.4}, {} assignments)",
-        mchoice.mapping.assignment,
-        mchoice.expected_cost,
-        mchoice.chain_cost,
-        mchoice.evaluated
-    );
+    // 6c. mapping: on the joint path the assignment dimension was
+    // already searched jointly with the exits (at coarse-grid
+    // termination rates), so the joint optimum is kept rather than
+    // re-opened against the refined distribution — the residual is
+    // documented in ROADMAP PR 10. On the default path, co-search the
+    // chosen architecture as before: every feasible assignment scored
+    // through the analytic simulator under the configured cascade's
+    // termination distribution (the identity chain is in the search
+    // space, so this never costs more than the seed behaviour).
+    let (assignment, mapping_candidates) = if let Some(assignment) = joint_assignment {
+        let evaluated =
+            joint_report.as_ref().map_or(0, |j| j.stats.map_leaves as usize);
+        log!("mapping {:?} (joint winner, {} inner leaves)", assignment, evaluated);
+        (assignment, evaluated)
+    } else {
+        let mchoice = co_search_with(
+            graph,
+            &exits_chosen,
+            platform,
+            &expected.term_rates,
+            cfg.latency_constraint_s,
+            &cfg.mapping,
+            pool.as_ref(),
+        )
+        .ok_or_else(|| anyhow::anyhow!("no feasible mapping for chosen architecture"))?;
+        log!(
+            "mapping {:?} (cost {:.4}, chain {:.4}, {} assignments)",
+            mchoice.mapping.assignment,
+            mchoice.expected_cost,
+            mchoice.chain_cost,
+            mchoice.evaluated
+        );
+        (mchoice.mapping.assignment.clone(), mchoice.evaluated)
+    };
 
     // 7. correction factor for training-set calibration -------------------
     let factor = match cfg.calibration {
@@ -542,7 +655,7 @@ pub fn augment_prepared(
         model: model_name.to_string(),
         platform: platform.name.clone(),
         exits: exits_chosen,
-        assignment: mchoice.mapping.assignment.clone(),
+        assignment,
         thresholds,
         raw_thresholds: choice.thresholds.clone(),
         correction_factor: factor,
@@ -563,8 +676,11 @@ pub fn augment_prepared(
         threshold_search_s,
         total_s: bank.feature_cache_s + bank.exit_training_s + t_core.elapsed().as_secs_f64(),
         evaluated_configs,
-        mapping_candidates: mchoice.evaluated,
+        mapping_candidates,
         workers,
+        cache_hits: scored.cache_hits,
+        cache_misses: scored.cache_misses,
+        joint: joint_report,
     };
     Ok(AugmentOutcome { solution, report })
 }
@@ -580,6 +696,10 @@ pub struct ScoredBest {
     pub score: f64,
     /// Total (architecture, threshold-vector) configurations covered.
     pub evaluated_configs: u64,
+    /// Cascade-replay [`PrefixCache`] traffic, summed over shards.
+    /// Shard-layout-dependent: stable for a fixed worker count only.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
 }
 
 /// Score every viable candidate architecture — threshold-graph search
@@ -622,7 +742,7 @@ pub fn score_candidates(
     // is only paid when the pool is actually used, keeping the
     // 1-worker baseline (which the bench's speedups are measured
     // against) allocation-free.
-    let shard_bests: Vec<Option<(f64, usize, Choice)>> = match pool {
+    let shard_results: Vec<ShardScore> = match pool {
         Some(pool) if viable.len() > 1 => {
             struct ScoreCtx {
                 graph: BlockGraph,
@@ -656,7 +776,12 @@ pub fn score_candidates(
     };
 
     let mut best: Option<(f64, usize, Choice)> = None;
-    for sb in shard_bests.into_iter().flatten() {
+    let mut cache_hits = 0u64;
+    let mut cache_misses = 0u64;
+    for shard in shard_results {
+        cache_hits += shard.cache_hits;
+        cache_misses += shard.cache_misses;
+        let Some(sb) = shard.best else { continue };
         let better = match &best {
             None => true,
             Some((bs, bi, _)) => sb.0 < *bs || (sb.0 == *bs && sb.1 < *bi),
@@ -671,7 +796,17 @@ pub fn score_candidates(
         choice,
         score,
         evaluated_configs,
+        cache_hits,
+        cache_misses,
     })
+}
+
+/// What one scoring shard reports back: its argmin plus the replay
+/// cache traffic it generated.
+struct ShardScore {
+    best: Option<(f64, usize, Choice)>,
+    cache_hits: u64,
+    cache_misses: u64,
 }
 
 /// Score one contiguous candidate shard; ties keep the first (lowest
@@ -683,20 +818,23 @@ fn score_shard(
     final_masks: &ExitMasks,
     grid: &[f64],
     cfg: &FlowConfig,
-) -> Option<(f64, usize, Choice)> {
+) -> ShardScore {
     let mut cache = PrefixCache::new();
+    // one replay scratch per shard: cache probes and replay steps
+    // reuse its bitset buffers instead of allocating per candidate
+    let mut scratch = ReplayScratch::new();
     let mut best: Option<(f64, usize, Choice)> = None;
     for (index, exits) in shard {
         let input = search_input(graph, exits, masks, final_masks, grid, cfg);
         let choice = solve(&input, cfg.solver, cfg.edge_model);
         // score the architecture with its best decision configuration,
         // by exact replay (the ranking signal across architectures)
-        let score = exact_cost_cached(&input, exits, &choice.indices, &mut cache);
+        let score = exact_cost_cached_in(&input, exits, &choice.indices, &mut cache, &mut scratch);
         if best.as_ref().map(|(s, ..)| score < *s).unwrap_or(true) {
             best = Some((score, *index, choice));
         }
     }
-    best
+    ShardScore { best, cache_hits: cache.hits, cache_misses: cache.misses }
 }
 
 /// Split `items` into at most `n` contiguous, order-preserving chunks
@@ -715,7 +853,10 @@ fn chunk<T>(items: Vec<T>, n: usize) -> Vec<Vec<T>> {
     out
 }
 
-fn search_input<'a>(
+/// Build the threshold-search input of one architecture: per-exit mask
+/// views plus its MAC-fraction vector (shared by the scoring stage and
+/// the joint engine, so both score a subset with identical bits).
+pub(crate) fn search_input<'a>(
     graph: &BlockGraph,
     exits: &[usize],
     masks: &'a BTreeMap<usize, ExitMasks>,

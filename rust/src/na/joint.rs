@@ -1,0 +1,631 @@
+//! Joint exits×assignment branch-and-bound (the flow's `--joint`
+//! mode): one bounded search over the full EENN design space instead
+//! of the two-phase exit-selection-then-mapping pipeline.
+//!
+//! The two-phase flow first picks the exit subset minimizing the
+//! decision-mechanism cost `s(E)` (exact cascade replay of the
+//! solver-chosen thresholds), then co-searches the segment→processor
+//! assignment of that one winner. But exit placement and hardware
+//! mapping are coupled: a subset with slightly worse `s` can admit a
+//! much cheaper mapping. The joint engine minimizes
+//!
+//! ```text
+//! J(E, A) = s(E) + m(E, A)
+//! ```
+//!
+//! over every exit subset `E` (viable locations, up to the platform's
+//! classifier budget) × every feasible assignment `A`, where `m` is
+//! the analytic-norm scalarized expected mapping cost (exactly the
+//! bounded co-search objective — see `mapping::MapNorm::Analytic`).
+//! Both terms are evaluated through the same entry points as the
+//! two-phase pipeline (threshold `solve` + exact replay;
+//! `simulate_assignment` + `LeafCost::Expected`), so the joint winner
+//! is bit-comparable: its `J` is ≤ the two-phase winner's `J` by
+//! construction, with equality exactly when two-phase was already
+//! globally optimal.
+//!
+//! # Search structure
+//!
+//! Top-level branches are the first (lowest) exit location; each
+//! branch DFS-enumerates the subsets rooted there in ascending prefix
+//! order, sharing one [`PrefixCache`] so cascade-replay state is
+//! reused across the exit dimension. Two bounds prune, both
+//! admissible:
+//!
+//! * **optimistic termination-distribution bound** (branch level) —
+//!   every sample must terminate at *some* classifier, at most the
+//!   widest-threshold mass of the branch's first exit can terminate
+//!   there, and every other classifier costs at least the cheapest
+//!   later MAC fraction. All accuracy terms and the whole mapping
+//!   term are non-negative, so
+//!   `w_eff·(frac_ℓ·T + frac_next·(n−T))/n ≤ s(E) ≤ J(E, ·)` for
+//!   every subset in the branch;
+//! * **score-first skip** (subset level) — `s(E)` is exact and
+//!   `m ≥ 0`, so a subset whose replayed score alone cannot beat the
+//!   incumbent skips its entire `nproc^nseg` inner space. Surviving
+//!   subsets run a *budget-seeded* sequential assignment B&B
+//!   (`mapping::assignment_search_budgeted`) whose incumbent starts
+//!   at `incumbent − s(E)` — the PR 9 suffix-DP bounds then prune the
+//!   inner space against the joint incumbent, not just against its
+//!   own chain.
+//!
+//! The incumbent is seeded before the fan-out (empty subset + a
+//! greedy max-size prefix, both searched unbounded), branches are
+//! fully independent (each starts from the seed incumbent — no
+//! cross-branch sharing), and results merge in branch order under the
+//! strict-improvement rule: winner and [`JointStats`] are
+//! byte-identical at any worker count.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use super::flow::{search_input, FlowConfig};
+use super::profile::ExitMasks;
+use super::threshold::{exact_cost_cached_in, solve, PrefixCache, ReplayScratch};
+use crate::graph::BlockGraph;
+use crate::hw::Platform;
+use crate::mapping::{assignment_search_budgeted, expected_assignment_cost, Mapping, ProcId};
+use crate::util::threadpool::{map_maybe, ThreadPool};
+
+/// Strict-improvement window, matching the mapping engines' argmin
+/// discipline.
+const COST_TIE: f64 = 1e-15;
+
+/// Relative slack on the analytic branch bound (the bound and the
+/// replayed score accumulate in different orders) — same discipline
+/// as the mapping searches: a subset the exact argmin would strictly
+/// accept can never be pruned by its bound.
+const BOUND_SLACK: f64 = 1.0 - 1e-12;
+
+/// Deterministic counters of one joint search. Every field is
+/// bit-stable for a given (bank, graph, platform, config) at any
+/// worker count; the CI bench gate pins them exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JointStats {
+    /// Exit subsets whose threshold search + exact replay ran (the
+    /// two incumbent seeds are counted, and the greedy seed's subset
+    /// is re-visited by its branch, deterministically).
+    pub subsets_considered: u64,
+    /// Exit subsets cut by the branch-level termination bound without
+    /// being scored (counted analytically per pruned branch).
+    pub subsets_pruned: u64,
+    /// Inner assignment searches actually run.
+    pub map_searches: u64,
+    /// Subsets whose exact score alone met the incumbent — their
+    /// whole `nproc^nseg` inner space was skipped.
+    pub map_skipped: u64,
+    /// Summed inner-search expansion/pruning counters.
+    pub map_nodes: u64,
+    pub map_leaves: u64,
+    pub map_pruned_bound: u64,
+    pub map_pruned_infeasible: u64,
+    /// Cascade-replay prefix cache traffic across all branches.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Joint cost of the returned winner (`INFINITY` when nothing was
+    /// feasible).
+    pub best_cost: f64,
+}
+
+impl Default for JointStats {
+    fn default() -> Self {
+        JointStats {
+            subsets_considered: 0,
+            subsets_pruned: 0,
+            map_searches: 0,
+            map_skipped: 0,
+            map_nodes: 0,
+            map_leaves: 0,
+            map_pruned_bound: 0,
+            map_pruned_infeasible: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            best_cost: f64::INFINITY,
+        }
+    }
+}
+
+impl JointStats {
+    fn absorb(&mut self, other: &JointStats) {
+        self.subsets_considered += other.subsets_considered;
+        self.subsets_pruned += other.subsets_pruned;
+        self.map_searches += other.map_searches;
+        self.map_skipped += other.map_skipped;
+        self.map_nodes += other.map_nodes;
+        self.map_leaves += other.map_leaves;
+        self.map_pruned_bound += other.map_pruned_bound;
+        self.map_pruned_infeasible += other.map_pruned_infeasible;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+    }
+
+    /// Design-space states the search actually touched: scored
+    /// subsets plus inner-search prefix nodes and simulated leaves.
+    /// The bench compares this against the full exits×assignment
+    /// cross-product.
+    pub fn touched(&self) -> u64 {
+        self.subsets_considered + self.map_nodes + self.map_leaves
+    }
+}
+
+/// The joint optimum: exit subset, its solver-chosen thresholds, and
+/// its assignment, with the cost split recorded.
+#[derive(Debug, Clone)]
+pub struct JointWinner {
+    /// EE locations, ascending (empty = unaugmented base model).
+    pub exits: Vec<usize>,
+    /// Grid index per early exit (solver-chosen for this subset).
+    pub indices: Vec<usize>,
+    /// Threshold value per early exit.
+    pub thresholds: Vec<f64>,
+    /// Exact replayed decision-mechanism cost `s(E)`.
+    pub score: f64,
+    /// Analytic-norm expected mapping cost `m(E, A)`.
+    pub map_cost: f64,
+    /// Joint objective `J = score + map_cost`.
+    pub cost: f64,
+    pub mapping: Mapping,
+}
+
+#[derive(Debug, Clone)]
+pub struct JointOutcome {
+    pub winner: JointWinner,
+    pub stats: JointStats,
+}
+
+/// Joint-search summary carried by `SearchReport` when
+/// `FlowConfig::joint` ran.
+#[derive(Debug, Clone)]
+pub struct JointReport {
+    /// Joint cost of the adopted winner.
+    pub joint_cost: f64,
+    /// Joint cost of the two-phase pipeline's coarse-grid winner
+    /// (scored subset + its co-searched assignment), evaluated through
+    /// the same arithmetic — `joint_cost ≤ two_phase_cost` always,
+    /// strictly when the phases' coupling mattered.
+    pub two_phase_cost: f64,
+    pub stats: JointStats,
+}
+
+/// Everything a branch worker needs, shared read-only.
+struct JointCtx {
+    graph: BlockGraph,
+    platform: Platform,
+    locations: Vec<usize>,
+    masks: BTreeMap<usize, ExitMasks>,
+    final_masks: ExitMasks,
+    grid: Vec<f64>,
+    cfg: FlowConfig,
+    max_ee: usize,
+    /// Incumbent after the seed stage (`INFINITY` when no seed was
+    /// feasible). Every branch starts here — never from a sibling's
+    /// progress — so branches are order-independent.
+    seed_cost: f64,
+    /// Admissible lower bound on `J` over every subset whose first
+    /// exit is `locations[i]`.
+    branch_bound: Vec<f64>,
+    /// Subset count of branch `i`'s subtree (for pruned accounting).
+    branch_subsets: Vec<u64>,
+}
+
+/// `C(n, k)` saturating — subset counts for pruned-branch accounting.
+fn binom(n: u64, k: u64) -> u64 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut c: u64 = 1;
+    for i in 1..=k {
+        c = match c.checked_mul(n - k + i) {
+            Some(v) => v / i,
+            None => return u64::MAX,
+        };
+    }
+    c
+}
+
+/// Number of subsets rooted at a branch: the first exit is fixed and
+/// up to `extra` of the `later` remaining locations extend it.
+fn subsets_rooted(later: u64, extra: u64) -> u64 {
+    let mut total = 0u64;
+    for k in 0..=extra.min(later) {
+        total = total.saturating_add(binom(later, k));
+    }
+    total
+}
+
+/// Full exits×assignment cross-product:
+/// `Σ_{k=0..max_ee} C(n_locations, k) · nproc^(k+1)`, saturating.
+/// The denominator of the bench's touched-fraction assert.
+pub fn cross_product(n_locations: usize, max_ee: usize, nproc: usize) -> u128 {
+    let mut total = 0u128;
+    for k in 0..=max_ee.min(n_locations) {
+        let subsets = binom(n_locations as u64, k as u64) as u128;
+        let assigns = (nproc as u128)
+            .checked_pow(k as u32 + 1)
+            .unwrap_or(u128::MAX);
+        total = total.saturating_add(subsets.saturating_mul(assigns));
+    }
+    total
+}
+
+/// Score one subset and, when its exact score can still beat the
+/// incumbent, run the budget-seeded inner assignment search. Returns
+/// the subset's joint winner when it strictly improves on `inc`.
+fn evaluate_subset(
+    ctx: &JointCtx,
+    exits: &[usize],
+    cache: &mut PrefixCache,
+    scratch: &mut ReplayScratch,
+    inc: f64,
+    stats: &mut JointStats,
+) -> Option<JointWinner> {
+    stats.subsets_considered += 1;
+    let input = search_input(&ctx.graph, exits, &ctx.masks, &ctx.final_masks, &ctx.grid, &ctx.cfg);
+    let choice = solve(&input, ctx.cfg.solver, ctx.cfg.edge_model);
+    let score = exact_cost_cached_in(&input, exits, &choice.indices, cache, scratch);
+    // `score` is exact and the mapping term is non-negative: when the
+    // decision cost alone cannot strictly beat the incumbent, the
+    // whole nproc^nseg inner space is skipped in O(1).
+    if score >= inc - COST_TIE {
+        stats.map_skipped += 1;
+        return None;
+    }
+    let term = input.cascade_metrics(&choice.indices).term_rates;
+    stats.map_searches += 1;
+    let inner = assignment_search_budgeted(
+        &ctx.graph,
+        exits,
+        &ctx.platform,
+        &term,
+        ctx.cfg.mapping.w_latency,
+        ctx.cfg.mapping.w_energy,
+        ctx.cfg.latency_constraint_s,
+        inc - score,
+    );
+    stats.map_nodes += inner.stats.nodes_expanded;
+    stats.map_leaves += inner.stats.leaves_evaluated;
+    stats.map_pruned_bound += inner.stats.pruned_bound;
+    stats.map_pruned_infeasible += inner.stats.pruned_infeasible;
+    let (mapping, _report, map_cost) = inner.best?;
+    Some(JointWinner {
+        exits: exits.to_vec(),
+        indices: choice.indices,
+        thresholds: choice.thresholds,
+        score,
+        map_cost,
+        cost: score + map_cost,
+        mapping,
+    })
+}
+
+/// Admissible lower bound on `J(E, ·)` over every subset whose first
+/// exit is `locations[i]`: at most the widest-threshold mass of that
+/// exit terminates there (at its exact solo MAC fraction — earlier
+/// heads cannot exist before the first exit), every remaining sample
+/// terminates at a classifier costing at least the cheapest later
+/// solo fraction (extra heads only add cost), all accuracy terms and
+/// the mapping term are dropped (non-negative).
+fn branch_lower_bound(
+    graph: &BlockGraph,
+    locations: &[usize],
+    masks: &BTreeMap<usize, ExitMasks>,
+    i: usize,
+    w_eff: f64,
+) -> f64 {
+    let total = graph.total_macs() as f64;
+    let frac_solo = |loc: usize| graph.macs_to_exit(&[], loc) as f64 / total;
+    let ell = locations[i];
+    let em = &masks[&ell];
+    let n = em.n as f64;
+    // grid is ascending, so index 0 is the widest termination mask
+    let t_max = em.ge[0].count() as f64;
+    let frac_ell = frac_solo(ell);
+    // the final classifier's solo fraction is exactly 1.0 (it *is*
+    // total_macs), so it caps the "cheapest later classifier"
+    let frac_next = locations[i + 1..]
+        .iter()
+        .map(|&l| frac_solo(l))
+        .fold(1.0f64, f64::min);
+    // minimized over the first exit's termination mass in [0, t_max]
+    // (linear in the mass, so an endpoint is the minimum) — covers
+    // graphs where a later head is cheaper than the branch's own exit
+    let at_full = frac_ell * t_max + frac_next * (n - t_max);
+    let at_zero = frac_next * n;
+    w_eff * at_full.min(at_zero) / n
+}
+
+struct BranchRun {
+    best: Option<JointWinner>,
+    stats: JointStats,
+}
+
+/// One top-level branch: all subsets whose first exit is
+/// `locations[i]`, in ascending prefix DFS order, sequential and
+/// deterministic. The branch-local incumbent starts at the seed cost.
+fn run_branch(ctx: &JointCtx, i: usize) -> BranchRun {
+    let mut stats = JointStats::default();
+    if ctx.branch_bound[i] * BOUND_SLACK >= ctx.seed_cost - COST_TIE {
+        stats.subsets_pruned = ctx.branch_subsets[i];
+        return BranchRun { best: None, stats };
+    }
+    let mut cache = PrefixCache::new();
+    let mut scratch = ReplayScratch::new();
+    let mut inc = ctx.seed_cost;
+    let mut best: Option<JointWinner> = None;
+    let mut stack = vec![ctx.locations[i]];
+    branch_dfs(ctx, i, &mut stack, &mut cache, &mut scratch, &mut inc, &mut best, &mut stats);
+    stats.cache_hits = cache.hits;
+    stats.cache_misses = cache.misses;
+    BranchRun { best, stats }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn branch_dfs(
+    ctx: &JointCtx,
+    last: usize,
+    stack: &mut Vec<usize>,
+    cache: &mut PrefixCache,
+    scratch: &mut ReplayScratch,
+    inc: &mut f64,
+    best: &mut Option<JointWinner>,
+    stats: &mut JointStats,
+) {
+    if let Some(w) = evaluate_subset(ctx, stack, cache, scratch, *inc, stats) {
+        if w.cost < *inc - COST_TIE {
+            *inc = w.cost;
+            *best = Some(w);
+        }
+    }
+    if stack.len() < ctx.max_ee {
+        for j in last + 1..ctx.locations.len() {
+            stack.push(ctx.locations[j]);
+            branch_dfs(ctx, j, stack, cache, scratch, inc, best, stats);
+            stack.pop();
+        }
+    }
+}
+
+/// Joint objective of one concrete (exits, threshold indices,
+/// assignment) triple, through exactly the arithmetic the joint
+/// engine scores its own leaves with: exact cascade replay for the
+/// decision term, analytic-norm expected cost for the mapping term.
+/// `None` when the assignment violates a memory budget or the latency
+/// constraint. Returns `(s, m, s + m)` — the flow uses this to record
+/// the two-phase pipeline's joint cost bit-comparably.
+#[allow(clippy::too_many_arguments)]
+pub fn joint_cost_of(
+    graph: &BlockGraph,
+    platform: &Platform,
+    masks: &BTreeMap<usize, ExitMasks>,
+    final_masks: &ExitMasks,
+    grid: &[f64],
+    cfg: &FlowConfig,
+    exits: &[usize],
+    indices: &[usize],
+    assignment: Vec<ProcId>,
+) -> Option<(f64, f64, f64)> {
+    let input = search_input(graph, exits, masks, final_masks, grid, cfg);
+    let score = input.exact_cost(indices);
+    let term = input.cascade_metrics(indices).term_rates;
+    let (_mapping, _report, map_cost) = expected_assignment_cost(
+        graph,
+        exits,
+        platform,
+        &term,
+        cfg.mapping.w_latency,
+        cfg.mapping.w_energy,
+        cfg.latency_constraint_s,
+        assignment,
+    )?;
+    Some((score, map_cost, score + map_cost))
+}
+
+/// The joint search: exact minimum of `J(E, A)` over every exit
+/// subset of `locations` (ascending, already filtered to viable
+/// exits) within the platform's classifier budget × every feasible
+/// assignment. `None` when no (subset, assignment) pair is feasible.
+/// Winner and stats are byte-identical at any worker count.
+#[allow(clippy::too_many_arguments)]
+pub fn joint_search(
+    graph: &BlockGraph,
+    platform: &Platform,
+    locations: &[usize],
+    masks: &BTreeMap<usize, ExitMasks>,
+    final_masks: &ExitMasks,
+    grid: &[f64],
+    cfg: &FlowConfig,
+    pool: Option<&ThreadPool>,
+) -> Option<JointOutcome> {
+    let max_ee = platform.max_classifiers().saturating_sub(1);
+    let n = locations.len();
+    debug_assert!(locations.windows(2).all(|w| w[0] < w[1]), "locations must ascend");
+    let mut ctx = JointCtx {
+        graph: graph.clone(),
+        platform: platform.clone(),
+        locations: locations.to_vec(),
+        masks: masks.clone(),
+        final_masks: final_masks.clone(),
+        grid: grid.to_vec(),
+        cfg: cfg.clone(),
+        max_ee,
+        seed_cost: f64::INFINITY,
+        branch_bound: Vec::new(),
+        branch_subsets: Vec::new(),
+    };
+
+    // Seed stage (sequential, pool-independent): the empty subset and
+    // a greedy max-size prefix, each with an unbounded inner search.
+    // A finite incumbent before the fan-out is what lets every branch
+    // skip inner spaces from its very first subset.
+    let mut stats = JointStats::default();
+    let mut cache = PrefixCache::new();
+    let mut scratch = ReplayScratch::new();
+    let mut inc = f64::INFINITY;
+    let mut best: Option<JointWinner> = None;
+    if let Some(w) = evaluate_subset(&ctx, &[], &mut cache, &mut scratch, inc, &mut stats) {
+        inc = w.cost;
+        best = Some(w);
+    }
+    let greedy: Vec<usize> = locations.iter().copied().take(max_ee.min(n)).collect();
+    if !greedy.is_empty() {
+        if let Some(w) = evaluate_subset(&ctx, &greedy, &mut cache, &mut scratch, inc, &mut stats)
+        {
+            if w.cost < inc - COST_TIE {
+                inc = w.cost;
+                best = Some(w);
+            }
+        }
+    }
+    stats.cache_hits = cache.hits;
+    stats.cache_misses = cache.misses;
+    ctx.seed_cost = inc;
+
+    // Branch fan-out: one branch per first-exit location, merged in
+    // branch order under the strict-improvement rule.
+    let branches: Vec<BranchRun> = if max_ee == 0 || n == 0 {
+        Vec::new()
+    } else {
+        ctx.branch_bound = (0..n)
+            .map(|i| branch_lower_bound(graph, locations, masks, i, cfg.w_eff))
+            .collect();
+        ctx.branch_subsets = (0..n)
+            .map(|i| subsets_rooted((n - i - 1) as u64, (max_ee - 1) as u64))
+            .collect();
+        let ctx = Arc::new(ctx);
+        let worker_ctx = Arc::clone(&ctx);
+        map_maybe(pool, (0..n).collect(), move |i| run_branch(&worker_ctx, i))
+    };
+    for b in &branches {
+        stats.absorb(&b.stats);
+    }
+    for b in branches {
+        if let Some(w) = b.best {
+            if w.cost < inc - COST_TIE {
+                inc = w.cost;
+                best = Some(w);
+            }
+        }
+    }
+    let winner = best?;
+    stats.best_cost = winner.cost;
+    Some(JointOutcome { winner, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+    use crate::na::profile::{threshold_grid, ExitProfile};
+    use crate::na::threshold::Solver;
+    use crate::util::rng::Rng;
+
+    fn fixture() -> (BlockGraph, BTreeMap<usize, ExitMasks>, ExitMasks, Vec<f64>) {
+        let graph = BlockGraph::synthetic_resnet(10, 2);
+        let grid = threshold_grid(10);
+        let mut rng = Rng::seeded(91);
+        let masks: BTreeMap<usize, ExitMasks> = graph
+            .ee_locations
+            .iter()
+            .map(|&loc| {
+                (loc, ExitMasks::build(&ExitProfile::synthetic(&mut rng, 200, 0.72), &grid))
+            })
+            .collect();
+        let final_masks = ExitMasks::build(&ExitProfile::synthetic(&mut rng, 200, 0.96), &grid);
+        (graph, masks, final_masks, grid)
+    }
+
+    #[test]
+    fn binomials_and_subtree_counts() {
+        assert_eq!(binom(5, 0), 1);
+        assert_eq!(binom(5, 2), 10);
+        assert_eq!(binom(5, 5), 1);
+        assert_eq!(binom(3, 4), 0);
+        // first exit fixed, up to 2 more from 4 later: 1 + 4 + 6
+        assert_eq!(subsets_rooted(4, 2), 11);
+        // cross-product: n=2 locations, max_ee=2, 3 procs:
+        // k=0: 1·3 + k=1: 2·9 + k=2: 1·27 = 48
+        assert_eq!(cross_product(2, 2, 3), 48);
+    }
+
+    #[test]
+    fn branch_bound_is_admissible_on_a_fixture() {
+        let (graph, masks, final_masks, grid) = fixture();
+        let platform = presets::rk3588_cloud();
+        let cfg = FlowConfig {
+            workers: 1,
+            solver: Solver::Exhaustive,
+            ..FlowConfig::default()
+        };
+        let locations = graph.ee_locations.clone();
+        // the bound of branch i must not exceed the true joint cost of
+        // any subset rooted there
+        for i in 0..locations.len() {
+            let lb = branch_lower_bound(&graph, &locations, &masks, i, cfg.w_eff);
+            let mut ctx_cache = PrefixCache::new();
+            let mut scratch = ReplayScratch::new();
+            let ctx = JointCtx {
+                graph: graph.clone(),
+                platform: platform.clone(),
+                locations: locations.clone(),
+                masks: masks.clone(),
+                final_masks: final_masks.clone(),
+                grid: grid.clone(),
+                cfg: cfg.clone(),
+                max_ee: 2,
+                seed_cost: f64::INFINITY,
+                branch_bound: Vec::new(),
+                branch_subsets: Vec::new(),
+            };
+            let mut stats = JointStats::default();
+            for j in i..locations.len() {
+                let subset =
+                    if j == i { vec![locations[i]] } else { vec![locations[i], locations[j]] };
+                if let Some(w) = evaluate_subset(
+                    &ctx,
+                    &subset,
+                    &mut ctx_cache,
+                    &mut scratch,
+                    f64::INFINITY,
+                    &mut stats,
+                ) {
+                    assert!(
+                        lb * BOUND_SLACK <= w.cost,
+                        "branch {i}: bound {lb} exceeds J({subset:?}) = {}",
+                        w.cost
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn joint_winner_is_worker_invariant_with_stats() {
+        let (graph, masks, final_masks, grid) = fixture();
+        let platform = presets::rk3588_cloud();
+        let cfg = FlowConfig { workers: 1, ..FlowConfig::default() };
+        let base = joint_search(
+            &graph, &platform, &graph.ee_locations, &masks, &final_masks, &grid, &cfg, None,
+        )
+        .expect("feasible");
+        for workers in [2, 8] {
+            let pool = ThreadPool::new(workers);
+            let got = joint_search(
+                &graph,
+                &platform,
+                &graph.ee_locations,
+                &masks,
+                &final_masks,
+                &grid,
+                &cfg,
+                Some(&pool),
+            )
+            .expect("feasible");
+            assert_eq!(base.winner.exits, got.winner.exits, "workers={workers}");
+            assert_eq!(base.winner.indices, got.winner.indices);
+            assert_eq!(base.winner.mapping, got.winner.mapping);
+            assert!(base.winner.cost.to_bits() == got.winner.cost.to_bits());
+            assert_eq!(base.stats, got.stats, "workers={workers}");
+        }
+    }
+}

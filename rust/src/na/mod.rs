@@ -8,6 +8,7 @@
 pub mod candidates;
 pub mod features;
 pub mod flow;
+pub mod joint;
 pub mod profile;
 pub mod threshold;
 pub mod trainer;
@@ -20,9 +21,14 @@ pub use flow::{
     augment, augment_prepared, default_workers, score_candidates, AugmentOutcome,
     Calibration, ExitBank, ExitRefresher, FlowConfig, ScoredBest, SearchReport,
 };
+pub use joint::{
+    cross_product, joint_cost_of, joint_search, JointOutcome, JointReport, JointStats,
+    JointWinner,
+};
 pub use profile::{threshold_grid, Bitset, ExitMasks, ExitProfile, GRID_POINTS};
 pub use threshold::{
-    bellman_ford, dijkstra, exact_cost_cached, exhaustive, solve, CascadeMetrics, Choice,
-    EdgeModel, PrefixCache, ReplayState, SearchInput, Solver,
+    bellman_ford, dijkstra, exact_cost_cached, exact_cost_cached_in, exhaustive, solve,
+    CascadeMetrics, Choice, EdgeModel, PrefixCache, ReplayScratch, ReplayState, SearchInput,
+    Solver,
 };
 pub use trainer::{profile_exit, train_exit, TrainedExit, TrainerConfig};

@@ -100,6 +100,13 @@ impl Bitset {
             *a &= !b;
         }
     }
+
+    /// Overwrite `self` with `other`, reusing the word buffer when its
+    /// capacity suffices (no allocation on the steady-state path).
+    pub fn copy_from(&mut self, other: &Bitset) {
+        self.words.clone_from(&other.words);
+        self.len = other.len;
+    }
 }
 
 /// Profile of one classifier on one dataset split.

@@ -95,6 +95,14 @@ pub struct ReplayState {
     cost: f64,
 }
 
+impl ReplayState {
+    /// Overwrite `self` with `src`, reusing the bitset allocation.
+    pub fn copy_from(&mut self, src: &ReplayState) {
+        self.remaining.copy_from(&src.remaining);
+        self.cost = src.cost;
+    }
+}
+
 impl<'a> SearchInput<'a> {
     fn n(&self) -> usize {
         self.fin.n
@@ -119,6 +127,21 @@ impl<'a> SearchInput<'a> {
             cost: st.cost
                 + (self.w_eff * self.mac_frac[i] * term / n + self.w_acc * wrong / n),
         }
+    }
+
+    /// [`Self::step`] operating in place: advance `st` past exit `i`
+    /// at threshold index `j` without allocating a fresh state. The
+    /// arithmetic (operand order included) is identical to
+    /// [`Self::step`], so in-place and allocating replays produce the
+    /// same cost bits.
+    pub fn step_in_place(&self, st: &mut ReplayState, i: usize, j: usize) {
+        let n = self.n() as f64;
+        let masks = self.exits[i];
+        let ge = &masks.ge[j];
+        let term = st.remaining.and_count(ge) as f64;
+        let wrong = masks.err.and3_count(&st.remaining, ge) as f64;
+        st.remaining.andnot_assign(ge);
+        st.cost += self.w_eff * self.mac_frac[i] * term / n + self.w_acc * wrong / n;
     }
 
     /// Terminate the replay at the final classifier.
@@ -456,6 +479,22 @@ impl PrefixCache {
     }
 }
 
+/// Reusable replay scratch for [`exact_cost_cached_in`]: the probe-key
+/// buffer and the advancing [`ReplayState`], kept alive across
+/// candidates so steady-state scoring does not allocate per replay.
+/// One scratch per scoring shard, next to its [`PrefixCache`].
+#[derive(Debug, Default)]
+pub struct ReplayScratch {
+    key: Vec<(usize, usize)>,
+    state: Option<ReplayState>,
+}
+
+impl ReplayScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Exact replay cost of `indices` for the architecture whose exit
 /// locations are `locs`, resuming from the longest cached cascade
 /// prefix and memoizing every prefix computed on the way.
@@ -466,37 +505,52 @@ pub fn exact_cost_cached(
     indices: &[usize],
     cache: &mut PrefixCache,
 ) -> f64 {
+    exact_cost_cached_in(input, locs, indices, cache, &mut ReplayScratch::default())
+}
+
+/// [`exact_cost_cached`] with caller-owned scratch buffers: cache
+/// probes hash prefix slices of one reused key buffer (no per-probe
+/// key allocation) and the replay advances a reused state in place
+/// ([`SearchInput::step_in_place`]). Hit/miss accounting, association
+/// order and cost bits are identical to the allocating flavour.
+pub fn exact_cost_cached_in(
+    input: &SearchInput,
+    locs: &[usize],
+    indices: &[usize],
+    cache: &mut PrefixCache,
+    scratch: &mut ReplayScratch,
+) -> f64 {
     let k = indices.len();
     debug_assert_eq!(locs.len(), k, "one location per early exit");
+    scratch.key.clear();
+    scratch.key.extend(locs.iter().copied().zip(indices.iter().copied()));
     let mut start = 0usize;
-    let mut st: Option<ReplayState> = None;
+    let mut hit = false;
     for d in (1..=k).rev() {
-        let key: Vec<(usize, usize)> = locs[..d]
-            .iter()
-            .copied()
-            .zip(indices[..d].iter().copied())
-            .collect();
-        if let Some(s) = cache.map.get(&key) {
-            st = Some(s.clone());
+        if let Some(s) = cache.map.get(&scratch.key[..d]) {
+            match &mut scratch.state {
+                Some(st) => st.copy_from(s),
+                None => scratch.state = Some(s.clone()),
+            }
             start = d;
+            hit = true;
             cache.hits += 1;
             break;
         }
     }
-    if st.is_none() {
+    if !hit {
         cache.misses += 1;
+        match &mut scratch.state {
+            Some(st) => st.copy_from(&input.initial_state()),
+            None => scratch.state = Some(input.initial_state()),
+        }
     }
-    let mut st = st.unwrap_or_else(|| input.initial_state());
+    let st = scratch.state.as_mut().expect("replay state initialized above");
     for d in start..k {
-        st = input.step(&st, d, indices[d]);
-        let key: Vec<(usize, usize)> = locs[..=d]
-            .iter()
-            .copied()
-            .zip(indices[..=d].iter().copied())
-            .collect();
-        cache.map.insert(key, st.clone());
+        input.step_in_place(st, d, indices[d]);
+        cache.map.insert(scratch.key[..=d].to_vec(), st.clone());
     }
-    input.finish(&st)
+    input.finish(st)
 }
 
 pub fn solve(input: &SearchInput, solver: Solver, model: EdgeModel) -> Choice {

@@ -65,6 +65,16 @@
 //! |              |               | intractable, seconds under branch-and-bound     |
 //! |              |               | (`MapSearch::Auto` upgrades automatically)      |
 //!
+//! The **joint preset** ([`mesh_joint_all`], CLI: `repro scenarios
+//! --only mesh_cifar_joint --joint`, artifact
+//! `BENCH_scenarios_mesh_joint.json`) re-runs the same mesh workload
+//! under the joint exits×assignment branch-and-bound
+//! ([`crate::na::joint`]): every search-shaping knob mirrors
+//! `mesh_cifar`, so the reports differ only by search regime, and the
+//! per-entry `"joint"` block records the joint-vs-two-phase pricing
+//! with `joint_cost <= two_phase_cost` enforced as a hard runtime
+//! assertion.
+//!
 //! # Determinism
 //!
 //! A [`ScenarioReport`] is **bit-reproducible**: running a preset
@@ -166,6 +176,12 @@ pub struct Scenario {
     /// solution (and hence the analytic sim) is known — presets can
     /// state "2x the unloaded worst case" without hard-coding seconds.
     pub deadline_slack: f64,
+    /// Run the joint exits×assignment branch-and-bound
+    /// ([`FlowConfig::joint`]) instead of the two-phase pipeline.
+    /// `false` on every base/fleet/mesh preset — those artifacts are
+    /// bit-frozen; only the `mesh_cifar_joint` preset (own artifact)
+    /// turns it on.
+    pub joint: bool,
 }
 
 impl Scenario {
@@ -209,6 +225,7 @@ pub fn kws_psoc6() -> Scenario {
         queue_cap: 0,
         qos: QosConfig::default(),
         deadline_slack: 0.0,
+        joint: false,
     }
 }
 
@@ -251,6 +268,7 @@ pub fn ecg_mcu() -> Scenario {
         queue_cap: 0,
         qos: QosConfig::default(),
         deadline_slack: 0.0,
+        joint: false,
     }
 }
 
@@ -278,6 +296,7 @@ pub fn cifar_rk3588_cloud() -> Scenario {
         queue_cap: 0,
         qos: QosConfig::default(),
         deadline_slack: 0.0,
+        joint: false,
     }
 }
 
@@ -307,6 +326,7 @@ pub fn stress_fog() -> Scenario {
         queue_cap: 0,
         qos: QosConfig::default(),
         deadline_slack: 0.0,
+        joint: false,
     }
 }
 
@@ -338,6 +358,7 @@ pub fn stress_fog_shed() -> Scenario {
         queue_cap: 64,
         qos: QosConfig::default(),
         deadline_slack: 0.0,
+        joint: false,
     }
 }
 
@@ -378,6 +399,7 @@ pub fn multi_tenant_fog() -> Scenario {
             bucket_burst: 25.0,
         },
         deadline_slack: 2.0,
+        joint: false,
     }
 }
 
@@ -421,6 +443,7 @@ pub fn overload_storm() -> Scenario {
             bucket_burst: 0.0,
         },
         deadline_slack: 0.0,
+        joint: false,
     }
 }
 
@@ -469,6 +492,7 @@ pub fn mesh_cifar() -> Scenario {
         queue_cap: 0,
         qos: QosConfig::default(),
         deadline_slack: 0.0,
+        joint: false,
     }
 }
 
@@ -503,6 +527,60 @@ pub fn mesh_bench_json(reports: &[ScenarioReport], smoke: bool, deterministic: b
         (r.scenario.clone(), j)
     });
     bench_doc("scenarios_mesh", smoke, entries.collect())
+}
+
+/// [`mesh_cifar`] with the joint exits×assignment branch-and-bound
+/// turned on: identical graph, platform, bank seed, traffic and
+/// weights, so any difference between its report and `mesh_cifar`'s
+/// is attributable to the search regime alone. The report carries the
+/// joint-vs-two-phase pricing (`joint_cost <= two_phase_cost` is a
+/// hard runtime assertion in [`run_scenario_with`]), and lives in its
+/// own artifact (`BENCH_scenarios_mesh_joint.json`) so the bit-frozen
+/// `mesh_cifar` payload is untouched.
+pub fn mesh_cifar_joint() -> Scenario {
+    Scenario {
+        name: "mesh_cifar_joint",
+        description: "mesh_cifar under the joint exits x assignment branch-and-bound",
+        joint: true,
+        ..mesh_cifar()
+    }
+}
+
+/// The joint-search scenario matrix, in reporting order.
+pub fn mesh_joint_all() -> Vec<Scenario> {
+    vec![mesh_cifar_joint()]
+}
+
+/// Run every joint preset in [`mesh_joint_all`].
+pub fn run_mesh_joint_all(
+    workers: usize,
+    exec_workers: usize,
+    smoke: bool,
+    backend: Backend,
+) -> Result<Vec<ScenarioReport>> {
+    mesh_joint_all()
+        .iter()
+        .map(|sc| run_scenario_with(sc, workers, exec_workers, smoke, backend))
+        .collect()
+}
+
+/// Aggregate joint reports into the `BENCH_scenarios_mesh_joint.json`
+/// document (same shell as [`bench_json`], `bench` name
+/// `scenarios_mesh_joint`). With `deterministic`, entries carry only
+/// the byte-reproducible payload.
+pub fn mesh_joint_bench_json(
+    reports: &[ScenarioReport],
+    smoke: bool,
+    deterministic: bool,
+) -> Json {
+    let entries = reports.iter().map(|r| {
+        let mut j = if deterministic { r.deterministic_json() } else { r.to_json() };
+        if let Json::Obj(m) = &mut j {
+            m.remove("workers");
+        }
+        (r.scenario.clone(), j)
+    });
+    bench_doc("scenarios_mesh_joint", smoke, entries.collect())
 }
 
 /// Calibration profile where every sample clears the top of the
@@ -577,6 +655,39 @@ pub fn build_bank(sc: &Scenario) -> ExitBank {
     synthetic_bank(&sc.graph, sc.bank_seed, sc.n_cal, sc.confidence)
 }
 
+/// Deterministic, worker-invariant digest of a joint-search run for
+/// the scenario artifact: the two prices being compared plus the tree
+/// counters proving how little of the cross-product the bound let the
+/// search touch. (The [`na::SearchReport`] cache counters are *not*
+/// here — they are shard-layout-dependent and belong to the bench's
+/// 1-worker run only.)
+#[derive(Debug, Clone, Copy)]
+pub struct JointDigest {
+    /// Joint winner's exact price `s(E*) + m(E*, A*)`.
+    pub joint_cost: f64,
+    /// The two-phase pipeline's winner priced through the identical
+    /// objective; `joint_cost <= two_phase_cost` is asserted at run
+    /// time.
+    pub two_phase_cost: f64,
+    pub subsets_considered: u64,
+    pub subsets_pruned: u64,
+    pub map_nodes: u64,
+    pub map_leaves: u64,
+}
+
+impl JointDigest {
+    fn to_json(self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("joint_cost".into(), Json::Num(self.joint_cost));
+        m.insert("two_phase_cost".into(), Json::Num(self.two_phase_cost));
+        m.insert("subsets_considered".into(), Json::Num(self.subsets_considered as f64));
+        m.insert("subsets_pruned".into(), Json::Num(self.subsets_pruned as f64));
+        m.insert("map_nodes".into(), Json::Num(self.map_nodes as f64));
+        m.insert("map_leaves".into(), Json::Num(self.map_leaves as f64));
+        Json::Obj(m)
+    }
+}
+
 /// Per-preset outcome of the closed loop. Everything except the
 /// `"timing"` block is bit-reproducible across runs and worker counts.
 #[derive(Debug, Clone)]
@@ -597,6 +708,11 @@ pub struct ScenarioReport {
     pub candidates_kept: usize,
     pub evaluated_configs: u64,
     pub mapping_candidates: usize,
+    /// Joint-search digest when the preset ran with
+    /// [`Scenario::joint`]. `None` on the default two-phase path —
+    /// and then absent from the JSON, so the bit-frozen default
+    /// artifacts keep their exact key set.
+    pub joint: Option<JointDigest>,
     pub expected_term_rates: Vec<f64>,
     /// Expected mean-ops reduction vs. the seed (always-full-backbone)
     /// baseline, percent: `100 * (1 - expected_mac_frac)`.
@@ -671,6 +787,9 @@ impl ScenarioReport {
         m.insert("candidates_kept".into(), Json::Num(self.candidates_kept as f64));
         m.insert("evaluated_configs".into(), Json::Num(self.evaluated_configs as f64));
         m.insert("mapping_candidates".into(), Json::Num(self.mapping_candidates as f64));
+        if let Some(j) = self.joint {
+            m.insert("joint".into(), j.to_json());
+        }
         m.insert("expected_term_rates".into(), farr(&self.expected_term_rates));
         m.insert("mean_ops_reduction_pct".into(), Json::Num(self.mean_ops_reduction_pct));
         m.insert("measured_ops_reduction_pct".into(), Json::Num(self.measured_ops_reduction_pct));
@@ -726,6 +845,12 @@ impl ScenarioReport {
             self.mapping_candidates,
             self.search_wall_s
         );
+        if let Some(j) = &self.joint {
+            println!(
+                "  joint: cost {:.4} vs two-phase {:.4} ({} subsets, {} inner nodes)",
+                j.joint_cost, j.two_phase_cost, j.subsets_considered, j.map_nodes
+            );
+        }
         println!(
             "  ops reduction vs seed: {:.2}% expected / {:.2}% measured \
              ({:.2}% early termination)",
@@ -798,6 +923,7 @@ pub fn run_scenario_with(
         w_eff: sc.w_eff,
         w_acc: sc.w_acc,
         workers,
+        joint: sc.joint,
         ..FlowConfig::default()
     };
     let t0 = Instant::now();
@@ -873,6 +999,31 @@ pub fn run_scenario_with(
         bail!("{}: nothing served (all {} offered requests shed)", sc.name, n_requests);
     }
 
+    if sc.joint != out.report.joint.is_some() {
+        bail!("{}: joint flag and joint report disagree", sc.name);
+    }
+    let joint = out.report.joint.as_ref().map(|j| JointDigest {
+        joint_cost: j.joint_cost,
+        two_phase_cost: j.two_phase_cost,
+        subsets_considered: j.stats.subsets_considered,
+        subsets_pruned: j.stats.subsets_pruned,
+        map_nodes: j.stats.map_nodes,
+        map_leaves: j.stats.map_leaves,
+    });
+    if let Some(j) = &joint {
+        // the two-phase pair lives inside the joint search space and
+        // both sides are priced through the same objective, so this
+        // holds exactly — any violation is a soundness bug, not noise
+        if j.joint_cost > j.two_phase_cost {
+            bail!(
+                "{}: joint winner ({:.17}) worse than two-phase ({:.17})",
+                sc.name,
+                j.joint_cost,
+                j.two_phase_cost
+            );
+        }
+    }
+
     let total_macs = sc.graph.total_macs() as f64;
     let completed = m.completed as f64;
     let measured_macs: f64 = m
@@ -898,6 +1049,7 @@ pub fn run_scenario_with(
         candidates_kept: out.report.prune.kept,
         evaluated_configs: out.report.evaluated_configs,
         mapping_candidates: out.report.mapping_candidates,
+        joint,
         expected_term_rates: sol.expected_term_rates.clone(),
         mean_ops_reduction_pct: 100.0 * (1.0 - sol.expected_mac_frac),
         measured_ops_reduction_pct: 100.0 * (1.0 - measured_frac),
@@ -1017,6 +1169,7 @@ fn fog_fleet_base(
         queue_cap,
         qos: QosConfig::default(),
         deadline_slack: 0.0,
+        joint: false,
     }
 }
 
@@ -1311,6 +1464,7 @@ pub fn run_fleet_scenario(
         w_eff: sc.w_eff,
         w_acc: sc.w_acc,
         workers,
+        joint: sc.joint,
         ..FlowConfig::default()
     };
     let t0 = Instant::now();
@@ -1540,6 +1694,33 @@ mod tests {
         assert_eq!(obj.resolved_search(max_nseg, 16), MapSearch::BnB);
         // …while small subsets stay on the bit-frozen exhaustive path
         assert_eq!(obj.resolved_search(3, 16), MapSearch::Exhaustive);
+    }
+
+    #[test]
+    fn joint_preset_mirrors_mesh_cifar_exactly() {
+        let base = mesh_cifar();
+        let ps = mesh_joint_all();
+        assert_eq!(ps.len(), 1);
+        let sc = &ps[0];
+        assert_eq!(sc.name, "mesh_cifar_joint");
+        assert!(sc.joint, "the joint preset must run the joint search");
+        // every search/serving knob mirrors mesh_cifar, so report
+        // differences are attributable to the search regime alone
+        assert_eq!(sc.bank_seed, base.bank_seed);
+        assert_eq!(sc.n_cal, base.n_cal);
+        assert_eq!(sc.graph.model, base.graph.model);
+        assert_eq!(sc.graph.ee_locations, base.graph.ee_locations);
+        assert_eq!(sc.platform.name, base.platform.name);
+        assert_eq!(sc.w_eff, base.w_eff);
+        assert_eq!(sc.w_acc, base.w_acc);
+        assert_eq!(sc.traffic.seed, base.traffic.seed);
+        assert_eq!(sc.traffic.n_requests, base.traffic.n_requests);
+        assert_eq!(sc.queue_cap, base.queue_cap);
+        // the bit-frozen matrices never opt in: their artifacts must
+        // keep the exact two-phase key set
+        assert!(!base.joint);
+        assert!(all().iter().all(|s| !s.joint));
+        assert!(fleet_all().iter().all(|f| !f.base.joint));
     }
 
     #[test]

@@ -1,0 +1,456 @@
+//! Exact-agreement battery for the joint exits×assignment
+//! branch-and-bound (`na::joint`): on randomized small instances
+//! (assignment spaces within the 4^5 full-enumeration ceiling, so a
+//! cross-product sweep through the identical `joint_cost_of`
+//! arithmetic is ground truth) the joint winner must carry the
+//! **bit-identical** minimum joint cost, never lose to the two-phase
+//! pipeline, collapse to the pure decision-cost argmin when the
+//! mapping term is weighted to zero, and return a byte-identical
+//! winner + stats block at any worker count.
+
+use std::collections::BTreeMap;
+
+use eenn_na::graph::BlockGraph;
+use eenn_na::hw::{presets, Link, Platform, Processor};
+use eenn_na::mapping::{co_search_with, Mapping};
+use eenn_na::na::{
+    self, score_candidates, solve, threshold_grid, ExitMasks, ExitProfile, FlowConfig,
+    SearchInput,
+};
+use eenn_na::sim::simulate;
+use eenn_na::util::rng::Rng;
+use eenn_na::util::threadpool::ThreadPool;
+
+/// Random strictly-positive platform: 2–4 processors (so the
+/// classifier budget allows at most 3 early exits and the widest
+/// assignment space is 4^4), chain links with varied bandwidth.
+fn random_platform(rng: &mut Rng, tight_memory: bool) -> Platform {
+    let nproc = 2 + rng.below(3); // 2..=4
+    let processors = (0..nproc)
+        .map(|i| Processor {
+            name: format!("p{i}"),
+            macs_per_sec: rng.range_f64(5e8, 2e10),
+            active_mw: rng.range_f64(200.0, 3000.0),
+            sleep_mw: rng.range_f64(0.5, 10.0),
+            // tight budgets sit near the graph's footprint so the
+            // memory-infeasibility path is exercised; roomy never binds
+            mem_bytes: if tight_memory {
+                (256 + rng.below(2048)) as u64 * 1024
+            } else {
+                64 * 1024 * 1024
+            },
+            batch_serial_frac: rng.f64(),
+        })
+        .collect();
+    let links = (0..nproc - 1)
+        .map(|i| Link {
+            name: format!("l{i}"),
+            bandwidth_bps: rng.range_f64(1e7, 1e10),
+            latency_s: rng.range_f64(1e-5, 1e-3),
+            active_mw: rng.range_f64(5.0, 100.0),
+        })
+        .collect();
+    Platform { name: "rand".into(), processors, links, exclusive_memory: false }
+}
+
+/// Random small graph: a synthetic backbone with per-block costs
+/// perturbed so no two instances share a cost surface. At most 5 EE
+/// locations, so the subset dimension stays fully enumerable too.
+fn random_graph(rng: &mut Rng) -> BlockGraph {
+    let mut g = BlockGraph::synthetic_resnet(10, 1 + rng.below(3));
+    for b in &mut g.blocks {
+        b.macs = (b.macs as f64 * rng.range_f64(0.3, 3.0)) as u64 + 1;
+        b.param_bytes = (b.param_bytes as f64 * rng.range_f64(0.3, 3.0)) as u64 + 1;
+        b.act_bytes = (b.act_bytes as f64 * rng.range_f64(0.3, 3.0)) as u64 + 1;
+        b.ifm_bytes = (b.ifm_bytes as f64 * rng.range_f64(0.3, 3.0)) as u64 + 1;
+    }
+    g
+}
+
+/// Random calibration bank: one synthetic profile per EE location plus
+/// the final head, over the shared coarse grid.
+fn random_masks(
+    rng: &mut Rng,
+    g: &BlockGraph,
+    grid: &[f64],
+) -> (BTreeMap<usize, ExitMasks>, ExitMasks) {
+    let masks = g
+        .ee_locations
+        .iter()
+        .map(|&loc| {
+            let acc = rng.range_f64(0.55, 0.85);
+            (loc, ExitMasks::build(&ExitProfile::synthetic(rng, 120, acc), grid))
+        })
+        .collect();
+    let final_masks = ExitMasks::build(&ExitProfile::synthetic(rng, 120, 0.95), grid);
+    (masks, final_masks)
+}
+
+/// A latency constraint between the unconstrained optimum and the
+/// chain, so the feasibility dimension of the joint space actually
+/// bites on a fair share of instances.
+fn random_constraint(rng: &mut Rng, g: &BlockGraph, p: &Platform) -> f64 {
+    if rng.below(3) == 0 {
+        return f64::INFINITY;
+    }
+    let chain = simulate(g, &Mapping::chain(vec![]), p);
+    chain.worst_case_s * rng.range_f64(0.5, 3.0)
+}
+
+fn random_cfg(rng: &mut Rng, constraint: f64) -> FlowConfig {
+    let w_eff = rng.range_f64(0.4, 0.95);
+    FlowConfig {
+        w_eff,
+        w_acc: 1.0 - w_eff,
+        workers: 1,
+        latency_constraint_s: constraint,
+        ..FlowConfig::default()
+    }
+}
+
+/// The threshold-search input of one subset, built with exactly the
+/// arithmetic of the flow's scoring stage and the joint engine (the
+/// in-crate constructor is not public; every expression here is
+/// mirrored by `na::flow::search_input`).
+fn input_of<'a>(
+    graph: &BlockGraph,
+    exits: &[usize],
+    masks: &'a BTreeMap<usize, ExitMasks>,
+    final_masks: &'a ExitMasks,
+    grid: &[f64],
+    cfg: &FlowConfig,
+) -> SearchInput<'a> {
+    let total = graph.total_macs() as f64;
+    SearchInput {
+        exits: exits.iter().map(|e| &masks[e]).collect(),
+        fin: final_masks,
+        mac_frac: exits
+            .iter()
+            .map(|&e| graph.macs_to_exit(exits, e) as f64 / total)
+            .collect(),
+        final_mac_frac: graph.macs_to_exit(exits, graph.blocks.len() - 1) as f64 / total,
+        w_eff: cfg.w_eff,
+        w_acc: cfg.w_acc,
+        grid: grid.to_vec(),
+    }
+}
+
+struct Brute {
+    /// Minimum joint cost over the full exits×assignment cross-product
+    /// (`INFINITY` when nothing is feasible).
+    best: f64,
+    /// The two-phase reference: the best-assignment joint cost of the
+    /// subset minimizing the decision score alone.
+    two_phase: f64,
+}
+
+/// Ground truth by full enumeration: every subset within the
+/// platform's classifier budget, solver-chosen thresholds, every
+/// assignment priced through `joint_cost_of` — the exact arithmetic
+/// the joint engine scores its own leaves with.
+fn brute_force(
+    graph: &BlockGraph,
+    platform: &Platform,
+    masks: &BTreeMap<usize, ExitMasks>,
+    final_masks: &ExitMasks,
+    grid: &[f64],
+    cfg: &FlowConfig,
+) -> Brute {
+    let locations = &graph.ee_locations;
+    let max_ee = platform.max_classifiers().saturating_sub(1);
+    let nproc = platform.processors.len();
+    let mut best = f64::INFINITY;
+    let mut best_score = f64::INFINITY;
+    let mut two_phase = f64::INFINITY;
+    for bits in 0u32..1 << locations.len() {
+        if bits.count_ones() as usize > max_ee {
+            continue;
+        }
+        let exits: Vec<usize> = locations
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| bits >> i & 1 == 1)
+            .map(|(_, &l)| l)
+            .collect();
+        let input = input_of(graph, &exits, masks, final_masks, grid, cfg);
+        let choice = solve(&input, cfg.solver, cfg.edge_model);
+        let score = input.exact_cost(&choice.indices);
+        let nseg = exits.len() + 1;
+        let mut subset_best = f64::INFINITY;
+        let mut assignment = vec![0usize; nseg];
+        loop {
+            if let Some((_, _, j)) = na::joint_cost_of(
+                graph,
+                platform,
+                masks,
+                final_masks,
+                grid,
+                cfg,
+                &exits,
+                &choice.indices,
+                assignment.clone(),
+            ) {
+                if j < subset_best {
+                    subset_best = j;
+                }
+            }
+            let mut k = 0;
+            while k < nseg {
+                assignment[k] += 1;
+                if assignment[k] < nproc {
+                    break;
+                }
+                assignment[k] = 0;
+                k += 1;
+            }
+            if k == nseg {
+                break;
+            }
+        }
+        best = best.min(subset_best);
+        if score < best_score {
+            best_score = score;
+            two_phase = subset_best;
+        }
+    }
+    Brute { best, two_phase }
+}
+
+#[test]
+fn joint_matches_brute_force_on_random_instances() {
+    let grid = threshold_grid(10);
+    let mut rng = Rng::seeded(0xB0B5_1001);
+    for case in 0..10 {
+        let platform = random_platform(&mut rng, case % 4 == 3);
+        let graph = random_graph(&mut rng);
+        let (masks, final_masks) = random_masks(&mut rng, &graph, &grid);
+        let constraint = random_constraint(&mut rng, &graph, &platform);
+        let cfg = random_cfg(&mut rng, constraint);
+
+        let brute = brute_force(&graph, &platform, &masks, &final_masks, &grid, &cfg);
+        let out = na::joint_search(
+            &graph,
+            &platform,
+            &graph.ee_locations,
+            &masks,
+            &final_masks,
+            &grid,
+            &cfg,
+            None,
+        );
+        match out {
+            None => assert!(
+                brute.best.is_infinite(),
+                "case {case}: joint infeasible but brute force found {}",
+                brute.best
+            ),
+            Some(out) => {
+                assert_eq!(
+                    out.winner.cost.to_bits(),
+                    brute.best.to_bits(),
+                    "case {case}: joint cost {} != brute-force minimum {}",
+                    out.winner.cost,
+                    brute.best
+                );
+                assert_eq!(
+                    (out.winner.score + out.winner.map_cost).to_bits(),
+                    out.winner.cost.to_bits(),
+                    "case {case}: winner cost split inconsistent"
+                );
+                assert_eq!(out.stats.best_cost.to_bits(), out.winner.cost.to_bits());
+                // never worse than two-phase; bit-equal exactly when
+                // the two-phase split was already globally optimal
+                assert!(
+                    out.winner.cost <= brute.two_phase,
+                    "case {case}: joint {} lost to two-phase {}",
+                    out.winner.cost,
+                    brute.two_phase
+                );
+                if brute.two_phase.to_bits() == brute.best.to_bits() {
+                    assert_eq!(out.winner.cost.to_bits(), brute.two_phase.to_bits());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn joint_never_loses_to_the_two_phase_pipeline_on_presets() {
+    let graph = BlockGraph::synthetic_resnet(10, 2);
+    let grid = threshold_grid(10);
+    let mut rng = Rng::seeded(0xB0B5_1002);
+    let (masks, final_masks) = random_masks(&mut rng, &graph, &grid);
+    for platform in [presets::rk3588_cloud(), presets::fog_cluster()] {
+        let cfg = FlowConfig { workers: 1, ..FlowConfig::default() };
+        // the real two-phase pipeline: enumerate, score by decision
+        // cost, co-search the winner's assignment — then price that
+        // (exits, thresholds, assignment) through the joint evaluator
+        // so both numbers carry identical arithmetic
+        let (cands, _) = na::enumerate(&graph, &platform, cfg.latency_constraint_s);
+        let scored =
+            score_candidates(&graph, &cands, &[], &masks, &final_masks, &grid, &cfg, None)
+                .expect("two-phase scoring is feasible");
+        let input = input_of(&graph, &scored.exits, &masks, &final_masks, &grid, &cfg);
+        let term = input.cascade_metrics(&scored.choice.indices).term_rates;
+        let two_phase = co_search_with(
+            &graph,
+            &scored.exits,
+            &platform,
+            &term,
+            cfg.latency_constraint_s,
+            &cfg.mapping,
+            None,
+        )
+        .and_then(|mc| {
+            na::joint_cost_of(
+                &graph,
+                &platform,
+                &masks,
+                &final_masks,
+                &grid,
+                &cfg,
+                &scored.exits,
+                &scored.choice.indices,
+                mc.mapping.assignment,
+            )
+        })
+        .map_or(f64::INFINITY, |(_s, _m, j)| j);
+        let out = na::joint_search(
+            &graph,
+            &platform,
+            &graph.ee_locations,
+            &masks,
+            &final_masks,
+            &grid,
+            &cfg,
+            None,
+        )
+        .expect("joint search is feasible");
+        assert!(
+            out.winner.cost <= two_phase,
+            "{}: joint {} lost to the two-phase pipeline {}",
+            platform.name,
+            out.winner.cost,
+            two_phase
+        );
+    }
+}
+
+#[test]
+fn zero_mapping_weight_collapses_joint_to_the_decision_argmin() {
+    // with w_latency = w_energy = 0 every feasible assignment prices
+    // to exactly 0.0, so J(E, A) = s(E) and the joint optimum must be
+    // the plain decision-cost argmin — a constructed instance where
+    // the two-phase split is globally optimal by design
+    let graph = BlockGraph::synthetic_resnet(10, 2);
+    let grid = threshold_grid(10);
+    let mut rng = Rng::seeded(0xB0B5_1003);
+    let (masks, final_masks) = random_masks(&mut rng, &graph, &grid);
+    let platform = presets::fog_cluster();
+    let mut cfg = FlowConfig { workers: 1, ..FlowConfig::default() };
+    cfg.mapping.w_latency = 0.0;
+    cfg.mapping.w_energy = 0.0;
+
+    let max_ee = platform.max_classifiers().saturating_sub(1);
+    let locations = &graph.ee_locations;
+    let mut min_score = f64::INFINITY;
+    for bits in 0u32..1 << locations.len() {
+        if bits.count_ones() as usize > max_ee {
+            continue;
+        }
+        let exits: Vec<usize> = locations
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| bits >> i & 1 == 1)
+            .map(|(_, &l)| l)
+            .collect();
+        let input = input_of(&graph, &exits, &masks, &final_masks, &grid, &cfg);
+        let choice = solve(&input, cfg.solver, cfg.edge_model);
+        min_score = min_score.min(input.exact_cost(&choice.indices));
+    }
+
+    let out = na::joint_search(
+        &graph,
+        &platform,
+        locations,
+        &masks,
+        &final_masks,
+        &grid,
+        &cfg,
+        None,
+    )
+    .expect("joint search is feasible");
+    assert_eq!(out.winner.map_cost, 0.0, "mapping term must vanish at zero weight");
+    assert_eq!(
+        out.winner.cost.to_bits(),
+        min_score.to_bits(),
+        "joint cost {} != decision-cost argmin {}",
+        out.winner.cost,
+        min_score
+    );
+}
+
+#[test]
+fn joint_is_worker_invariant_on_random_instances() {
+    let grid = threshold_grid(10);
+    let mut rng = Rng::seeded(0xB0B5_1004);
+    for case in 0..6 {
+        let platform = random_platform(&mut rng, false);
+        let graph = random_graph(&mut rng);
+        let (masks, final_masks) = random_masks(&mut rng, &graph, &grid);
+        let constraint = random_constraint(&mut rng, &graph, &platform);
+        let cfg = random_cfg(&mut rng, constraint);
+
+        let seq = na::joint_search(
+            &graph,
+            &platform,
+            &graph.ee_locations,
+            &masks,
+            &final_masks,
+            &grid,
+            &cfg,
+            None,
+        );
+        for workers in [2usize, 8] {
+            let pool = ThreadPool::new(workers);
+            let par = na::joint_search(
+                &graph,
+                &platform,
+                &graph.ee_locations,
+                &masks,
+                &final_masks,
+                &grid,
+                &cfg,
+                Some(&pool),
+            );
+            match (&seq, &par) {
+                (None, None) => {}
+                (Some(s), Some(p)) => {
+                    assert_eq!(s.winner.exits, p.winner.exits, "case {case} workers {workers}");
+                    assert_eq!(s.winner.indices, p.winner.indices, "case {case}");
+                    assert_eq!(s.winner.thresholds, p.winner.thresholds, "case {case}");
+                    assert_eq!(s.winner.mapping, p.winner.mapping, "case {case}");
+                    assert_eq!(
+                        s.winner.cost.to_bits(),
+                        p.winner.cost.to_bits(),
+                        "case {case} workers {workers}: cost bits"
+                    );
+                    assert_eq!(s.winner.score.to_bits(), p.winner.score.to_bits());
+                    assert_eq!(s.winner.map_cost.to_bits(), p.winner.map_cost.to_bits());
+                    // the full deterministic counter block, not just
+                    // the winner
+                    assert_eq!(
+                        s.stats, p.stats,
+                        "case {case} workers {workers}: JointStats diverged"
+                    );
+                }
+                (s, p) => panic!(
+                    "case {case} workers {workers}: feasibility diverged \
+                     ({:?} vs {:?})",
+                    s.is_some(),
+                    p.is_some()
+                ),
+            }
+        }
+    }
+}

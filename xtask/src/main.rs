@@ -55,6 +55,7 @@ const GATED_BENCHES: &[&str] = &[
     "scenarios_storm",
     "scenarios_fleet",
     "scenarios_mesh",
+    "scenarios_mesh_joint",
     "hotpath",
     "hotpath_native",
 ];
@@ -288,6 +289,7 @@ mod tests {
         assert_eq!(sorted.len(), GATED_BENCHES.len(), "duplicate gated bench name");
         assert!(GATED_BENCHES.contains(&"scenarios_fleet"));
         assert!(GATED_BENCHES.contains(&"scenarios_mesh"));
+        assert!(GATED_BENCHES.contains(&"scenarios_mesh_joint"));
         assert!(GATED_BENCHES.iter().all(|n| !n.is_empty() && !n.contains('/')));
     }
 
